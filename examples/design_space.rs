@@ -1,0 +1,43 @@
+//! Design-space exploration (paper §IV): energy, power and area of LPO,
+//! CPO and Passage scale-up designs — Tables II/III and Figures 7/8 —
+//! plus switch-package feasibility (§IV.C.b).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use lumos::hw;
+
+fn main() {
+    // Table III: pJ/bit decomposition.
+    println!("{}", lumos::sweep::table3().render());
+
+    // Fig 7: power at the 2028 GPU design point.
+    let (t7, c7) = lumos::sweep::fig7();
+    println!("{}\n{}", t7.render(), c7.render());
+
+    // Fig 8: area accounting.
+    let (t8, c8) = lumos::sweep::fig8();
+    println!("{}\n{}", t8.render(), c8.render());
+
+    // Switch design: shoreline vs area I/O (§IV.C.b).
+    let sw = hw::SwitchPackage::sls_512();
+    println!("## Switch package (200 Tb/s, 512 x 448G ports)");
+    for tech in [hw::lpo_dr8(), hw::cpo_2p5d(), hw::passage_interposer()] {
+        println!(
+            "  {:<32} -> {} reticles (shoreline need {:.0} mm), fabric power {:.2} kW",
+            tech.name,
+            sw.reticles_needed(&tech),
+            sw.required_shoreline_mm(&tech.serdes),
+            tech.power_w(sw.fabric_gbps) / 1000.0,
+        );
+    }
+    println!(
+        "  Passage saves {:.2} kW per switch vs CPO (paper: ~1.5 kW)",
+        sw.power_saving_w(&hw::cpo_2p5d(), &hw::passage_interposer()) / 1000.0
+    );
+
+    // Reach limits (§II.C.2): why copper caps the pod at a rack.
+    println!("\n## Reach");
+    for t in [hw::dac_copper(), hw::lpo_dr8(), hw::passage_interposer()] {
+        println!("  {:<32} reach {:>6.1} m", t.name, t.reach_m);
+    }
+}

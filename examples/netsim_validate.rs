@@ -1,0 +1,94 @@
+//! Netsim validation study: the paper's performance model stands on the
+//! Hockney α+β abstraction (§V.A). This example stress-tests it against
+//! the flow-level simulator:
+//!
+//! 1. collective schedules on a non-blocking SLS pod (model should match),
+//! 2. dense all-to-all crossing an oversubscribed scale-out fabric (model
+//!    needs the a2a_efficiency derate — we *measure* that derate here; it
+//!    is where the DomainSpec default of 0.6 comes from),
+//! 3. incast pathologies that no α+β model captures.
+//!
+//! Run: `cargo run --release --example netsim_validate`
+
+use lumos::collectives as coll;
+use lumos::netsim::{replay_schedule, simulate, Network};
+use lumos::topology::cluster::DomainSpec;
+use lumos::util::stats::fmt_time;
+use lumos::util::table::Table;
+
+fn main() {
+    // ---- 1. Hockney vs sim on a Passage-like SLS pod slice -------------
+    let n = 64;
+    let net = Network::sls(n, 32_000.0, 200e-9);
+    let dom = DomainSpec {
+        name: "passage".into(),
+        gbps_per_gpu: 32_000.0,
+        latency_s: 200e-9,
+        a2a_efficiency: 1.0,
+    };
+    let mut t = Table::new(
+        "Hockney model vs flow-level simulation (64-GPU SLS @ 32 Tb/s)",
+        &["collective", "bytes", "model", "simulated", "error"],
+    );
+    for mb in [16.0, 64.0, 256.0] {
+        let bytes = mb * 1e6;
+        let cases: Vec<(&str, coll::CommSchedule, f64)> = vec![
+            ("ring all-reduce", coll::ring_all_reduce_schedule(n, bytes),
+             coll::all_reduce_time(&dom, n, bytes)),
+            ("ring all-gather", coll::ring_all_gather_schedule(n, bytes),
+             coll::all_gather_time(&dom, n, bytes)),
+            ("pairwise all-to-all", coll::pairwise_a2a_schedule(n, bytes),
+             coll::all_to_all_time(&dom, n, bytes)),
+        ];
+        for (name, sched, model) in cases {
+            let sim = replay_schedule(&net, &sched);
+            t.row(&[
+                name.to_string(),
+                format!("{mb:.0} MB"),
+                fmt_time(model),
+                fmt_time(sim.makespan),
+                format!("{:+.1}%", 100.0 * (sim.makespan - model) / model),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- 2. measure the scale-out a2a derate -----------------------------
+    let mut t2 = Table::new(
+        "Cross-pod all-to-all efficiency vs oversubscription (16-GPU pods, 1.6T NICs)",
+        &["oversubscription", "effective NIC utilization"],
+    );
+    for oversub in [1.0, 1.5, 2.0, 4.0] {
+        let pods = 4;
+        let pod = 16;
+        let nn = pods * pod;
+        let bytes = 2e9;
+        let cnet = Network::cluster(nn, pod, 14_400.0, 1_600.0, oversub, 5e-6);
+        let sched = coll::pairwise_a2a_schedule(nn, bytes);
+        let sim = replay_schedule(&cnet, &sched);
+        let cross = bytes * (nn - pod) as f64 / (nn - 1) as f64;
+        let eff = cross / (1_600.0 * 1e9 / 8.0) / sim.makespan;
+        t2.row(&[format!("{oversub:.1}:1"), format!("{:.2}", eff)]);
+    }
+    println!("{}", t2.render());
+    println!(
+        "The DomainSpec scale-out a2a_efficiency default (0.6) corresponds to the\n\
+         ~1.5:1 row; heavier oversubscription degrades further — exactly the\n\
+         regime the paper's 144-pod alternative is forced into.\n"
+    );
+
+    // ---- 3. incast: the α+β blind spot ----------------------------------
+    let inc = Network::sls(9, 32_000.0, 200e-9);
+    let flows: Vec<_> = (1..9).map(|s| inc.flow(s, 0, 100e6)).collect();
+    let r = simulate(&inc, &flows);
+    let one = simulate(&inc, &[inc.flow(1, 0, 100e6)]);
+    println!(
+        "Incast (8 senders -> 1 receiver, 100 MB each): {} vs {} for one flow\n\
+         ({}x — the ejection port serializes; Hockney would predict {}x only\n\
+         with a perfect congestion derate).",
+        fmt_time(r.makespan),
+        fmt_time(one.makespan),
+        (r.makespan / one.makespan).round(),
+        8
+    );
+}

@@ -1,0 +1,52 @@
+//! Pod-scaling study: sweep scale-up pod size and per-GPU bandwidth to map
+//! where the expert-parallel spill cliff sits and where extra bandwidth
+//! stops paying — the generalization of Figures 10/11 that a system
+//! architect would actually run.
+//!
+//! Run: `cargo run --release --example pod_scaling`
+
+use lumos::perf::{evaluate_paper_config, PerfKnobs};
+use lumos::topology::cluster::Cluster;
+use lumos::util::table::Table;
+
+fn main() {
+    let knobs = PerfKnobs::default();
+
+    // 2D sweep: pod size × bandwidth, Config 4 step time (normalized).
+    let pods = [72usize, 144, 256, 512, 1024];
+    let bws = [7_200.0, 14_400.0, 32_000.0, 64_000.0];
+    let base = evaluate_paper_config(&Cluster::custom(32_768, 512, 32_000.0), 4, &knobs).step_time;
+
+    let mut header: Vec<String> = vec!["pod \\ Gb/s".into()];
+    header.extend(bws.iter().map(|b| format!("{:.1}T", b / 1000.0)));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Config 4 step time vs (pod size, scale-up bandwidth), normalized to 512@32T",
+        &header_refs,
+    );
+    for &pod in &pods {
+        let mut row = vec![format!("{pod}")];
+        for &bw in &bws {
+            let n = 32_768 / pod * pod;
+            let r = evaluate_paper_config(&Cluster::custom(n, pod, bw), 4, &knobs);
+            let marker = match r.breakdown.ep_placement {
+                lumos::perf::EpPlacement::ScaleUp => "",
+                lumos::perf::EpPlacement::Hierarchical => "*",
+            };
+            row.push(format!("{:.2}{}", r.step_time / base, marker));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    println!("(* = EP group spills across pods onto Ethernet)\n");
+
+    // Where does the cliff sit? EP group needs ep_dp_ranks × tp = 512 GPUs.
+    println!(
+        "The cliff: the paper's EP group spans 32 DP ranks x TP 16 = 512 GPUs, so any\n\
+         pod smaller than 512 pushes expert all-to-all onto the scale-out network.\n\
+         Radix (not just bandwidth) is what the 3D optics buy (paper §VI)."
+    );
+
+    // Diminishing returns of bandwidth once EP fits.
+    println!("\n{}", lumos::sweep::bandwidth_sweep(&knobs).render());
+}

@@ -1,0 +1,46 @@
+//! Quickstart: evaluate the paper's headline result in ~20 lines.
+//!
+//! Builds the two §VI systems (Passage 512-GPU pods @ 32 Tb/s vs the
+//! electrical 144-GPU pods @ 14.4 Tb/s), runs the analytical time-to-train
+//! model on MoE Config 4 (256 experts, top-8, granularity 8), and prints
+//! the speedup — the paper's 2.7×.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lumos::perf::{evaluate_paper_config, paper_clusters, PerfKnobs};
+use lumos::util::stats::fmt_time;
+
+fn main() {
+    let knobs = PerfKnobs::default();
+    let (passage, _alt512, alt144) = paper_clusters();
+
+    println!("MoE 4.7T-parameter training, 32,768 GPUs, 13T tokens (paper §VI)\n");
+    println!(
+        "{:<10} {:>22} {:>22} {:>9}",
+        "config", "Passage-512 @32T", "Electrical-144 @14.4T", "speedup"
+    );
+    for cfg in 1..=4 {
+        let p = evaluate_paper_config(&passage, cfg, &knobs);
+        let a = evaluate_paper_config(&alt144, cfg, &knobs);
+        println!(
+            "Config {:<3} {:>22} {:>22} {:>8.2}x",
+            cfg,
+            fmt_time(p.time_to_train_s),
+            fmt_time(a.time_to_train_s),
+            a.time_to_train_s / p.time_to_train_s
+        );
+    }
+
+    let p = evaluate_paper_config(&passage, 4, &knobs);
+    let a = evaluate_paper_config(&alt144, 4, &knobs);
+    println!(
+        "\nConfig 4: expert all-to-all rides the {} on Passage ({:?}) but spills \
+         to Ethernet on the electrical pod ({:?}) — {:.1}% vs {:.1}% of the step \
+         spent communicating.",
+        passage.spec.scale_up.name,
+        p.breakdown.ep_placement,
+        a.breakdown.ep_placement,
+        100.0 * p.comm_fraction,
+        100.0 * a.comm_fraction,
+    );
+}

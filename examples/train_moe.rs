@@ -1,0 +1,81 @@
+//! End-to-end validation driver (DESIGN.md deliverable (b)/§E2E): train a
+//! real MoE transformer — Pallas kernels → JAX model → AOT HLO → Rust PJRT
+//! runtime → Rust data-parallel coordinator — on a synthetic Markov corpus
+//! and log the loss curve.
+//!
+//! All three layers compose here with Python nowhere on the path.
+//!
+//! Run (CI-size):   cargo run --release --example train_moe
+//! Full E2E run:    cargo run --release --example train_moe -- e2e 300 2
+//!                  (preset, steps, dp-workers; ~105M params)
+
+use lumos::runtime::{artifacts_root, Artifact, Engine};
+use lumos::trainer::{train_dp, train_single, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("tiny").to_string();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let art = Artifact::load(artifacts_root()?.join(&preset))?;
+    let engine = Engine::cpu()?;
+    let vocab = art.cfg_usize("vocab")?;
+    let corpus = Corpus::markov(vocab, 42 ^ 0xC0FFEE);
+
+    println!(
+        "== LUMOS end-to-end MoE training ==\n\
+         preset          : {preset}\n\
+         parameters      : {:.1} M ({} arrays)\n\
+         experts         : {} (top-{})\n\
+         corpus          : Markov chain over {} tokens, entropy {:.2} nats/tok\n\
+         uniform ceiling : {:.2} nats/tok\n\
+         steps x workers : {steps} x {workers}\n",
+        art.total_param_elements as f64 / 1e6,
+        art.n_params,
+        art.cfg_usize("n_experts")?,
+        art.cfg_usize("top_k")?,
+        vocab,
+        corpus.entropy_rate(),
+        (vocab as f64).ln(),
+    );
+
+    let report = if workers <= 1 {
+        train_single(&engine, &art, steps, 42, true)?
+    } else {
+        train_dp(&engine, &art, workers, steps, 42, true)?
+    };
+
+    // Render the loss curve as a terminal sparkline.
+    let losses: Vec<f64> = report.steps.iter().map(|s| s.ce_loss).collect();
+    let lo = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = losses.iter().cloned().fold(0.0f64, f64::max);
+    let glyphs = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let spark: String = losses
+        .iter()
+        .map(|&l| glyphs[(((l - lo) / (hi - lo).max(1e-9)) * 7.0).round() as usize])
+        .collect();
+    println!("\nloss curve ({} steps): {spark}", losses.len());
+    println!(
+        "ce {:.4} -> {:.4}  (corpus entropy floor ~{:.2})",
+        report.first_loss(),
+        report.last_loss(),
+        corpus.entropy_rate()
+    );
+    println!(
+        "steady step: {:.2}s; total {:.1}s; comm/step: {:.1} MB",
+        report.steady_step_secs(),
+        report.total_secs,
+        report.steps.last().map_or(0.0, |s| s.comm_bytes as f64 / 1e6),
+    );
+
+    let csv_path = format!("train_{preset}_{}w.csv", workers);
+    std::fs::write(&csv_path, report.to_csv())?;
+    println!("loss curve CSV -> {csv_path}");
+
+    anyhow::ensure!(
+        report.last_loss() < report.first_loss(),
+        "training did not reduce the loss"
+    );
+    Ok(())
+}

@@ -1,0 +1,240 @@
+"""AOT path: lower the L2 entrypoints to HLO *text* + a manifest for Rust.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts --preset tiny
+    python -m compile.aot --out ../artifacts --preset e2e
+    python -m compile.aot --out ../artifacts --config my_model.json
+
+Artifacts written:
+    <out>/<preset>/init.hlo.txt          (seed u32[])            -> state
+    <out>/<preset>/train_step.hlo.txt    (state, tokens)         -> state, ce, aux
+    <out>/<preset>/grad_step.hlo.txt     (params, tokens)        -> grads, ce, aux
+    <out>/<preset>/apply_update.hlo.txt  (state, grads)          -> state
+    <out>/<preset>/forward.hlo.txt       (params, tokens[B,S])   -> logits, aux
+    <out>/<preset>/manifest.json         shapes/dtypes/ordering + model config
+
+State flat layout (everywhere, python and rust):
+    [params (sorted by name), m (same order), v, step(i32 scalar)]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Flat <-> pytree adapters (rust sees only flat tuples of arrays)
+# --------------------------------------------------------------------------
+
+
+def _pack(names, d):
+    return tuple(d[k] for k in names)
+
+
+def _unpack(names, flat):
+    return dict(zip(names, flat))
+
+
+def make_entrypoints(cfg: M.ModelConfig):
+    """Flat-tuple versions of the model entrypoints, ready to lower."""
+    names = M.param_names(cfg)
+    p = len(names)
+
+    def split_state(flat):
+        params = _unpack(names, flat[:p])
+        m = _unpack(names, flat[p:2 * p])
+        v = _unpack(names, flat[2 * p:3 * p])
+        step = flat[3 * p]
+        return params, m, v, step
+
+    def join_state(state):
+        params, m, v, step = state
+        return _pack(names, params) + _pack(names, m) + _pack(names, v) \
+            + (step,)
+
+    def init(seed):
+        return join_state(M.init_state(cfg, seed))
+
+    def train_step(*args):
+        state = split_state(args[:3 * p + 1])
+        tokens = args[3 * p + 1]
+        new_state, ce, aux = M.train_step(cfg, state, tokens)
+        return join_state(new_state) + (ce, aux)
+
+    def grad_step(*args):
+        params = _unpack(names, args[:p])
+        tokens = args[p]
+        grads, ce, aux = M.grad_step(cfg, params, tokens)
+        return _pack(names, grads) + (ce, aux)
+
+    def apply_update(*args):
+        state = split_state(args[:3 * p + 1])
+        grads = _unpack(names, args[3 * p + 1:4 * p + 1])
+        return join_state(M.apply_update(cfg, state, grads))
+
+    def forward(*args):
+        params = _unpack(names, args[:p])
+        tokens = args[p]
+        logits, aux = M.forward(cfg, params, tokens)
+        return logits, aux
+
+    return {"init": init, "train_step": train_step, "grad_step": grad_step,
+            "apply_update": apply_update, "forward": forward}
+
+
+def _spec(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def example_args(cfg: M.ModelConfig, entry: str):
+    """Abstract example arguments for lowering each entrypoint."""
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    f32 = jnp.float32
+
+    def arr(n):
+        return jax.ShapeDtypeStruct(shapes[n], f32)
+
+    params = [arr(n) for n in names]
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    tokens_tr = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    tokens_fw = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    state = params + params + params + [step]
+    if entry == "init":
+        return [jax.ShapeDtypeStruct((), jnp.uint32)]
+    if entry == "train_step":
+        return state + [tokens_tr]
+    if entry == "grad_step":
+        return params + [tokens_tr]
+    if entry == "apply_update":
+        return state + params
+    if entry == "forward":
+        return params + [tokens_fw]
+    raise KeyError(entry)
+
+
+def io_specs(cfg: M.ModelConfig, entry: str):
+    """(inputs, outputs) manifest specs for an entrypoint."""
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    pspecs = [_spec(n, shapes[n], "f32") for n in names]
+
+    def sect(prefix):
+        return [_spec(f"{prefix}.{n}", shapes[n], "f32") for n in names]
+
+    step = _spec("step", (), "i32")
+    scalar_f = lambda n: _spec(n, (), "f32")
+    tokens_tr = _spec("tokens", (cfg.batch, cfg.seq_len + 1), "i32")
+    tokens_fw = _spec("tokens", (cfg.batch, cfg.seq_len), "i32")
+    state = sect("param") + sect("m") + sect("v") + [step]
+    if entry == "init":
+        return [_spec("seed", (), "u32")], state
+    if entry == "train_step":
+        return state + [tokens_tr], state + [scalar_f("ce"), scalar_f("aux")]
+    if entry == "grad_step":
+        return pspecs + [tokens_tr], sect("grad") + [scalar_f("ce"),
+                                                     scalar_f("aux")]
+    if entry == "apply_update":
+        return state + sect("grad"), state
+    if entry == "forward":
+        logits = _spec("logits", (cfg.batch, cfg.seq_len, cfg.vocab), "f32")
+        return pspecs + [tokens_fw], [logits, scalar_f("aux")]
+    raise KeyError(entry)
+
+
+PRESETS = {"tiny": M.TINY, "e2e": M.E2E}
+
+DEFAULT_ENTRIES = ("init", "train_step", "grad_step", "apply_update",
+                   "forward")
+
+
+def build(cfg: M.ModelConfig, outdir: str, entries=DEFAULT_ENTRIES,
+          verbose: bool = True) -> dict:
+    cfg.validate()
+    os.makedirs(outdir, exist_ok=True)
+    eps = make_entrypoints(cfg)
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+    manifest = {
+        "format": "hlo-text-v1",
+        "config": cfg.to_dict(),
+        "n_params": len(names),
+        "total_param_elements": M.count_params(cfg),
+        "param_names": names,
+        "params": [_spec(n, shapes[n], "f32") for n in names],
+        "state_layout": ["params", "m", "v", "step"],
+        "entrypoints": {},
+    }
+    for entry in entries:
+        t0 = time.time()
+        lowered = jax.jit(eps[entry]).lower(*example_args(cfg, entry))
+        text = to_hlo_text(lowered)
+        fname = f"{entry}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as fh:
+            fh.write(text)
+        ins, outs = io_specs(cfg, entry)
+        manifest["entrypoints"][entry] = {
+            "file": fname, "inputs": ins, "outputs": outs}
+        if verbose:
+            print(f"  {entry:>13}: {len(text) / 1e6:.1f} MB HLO text "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    with open(os.path.join(outdir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
+                    action="append")
+    ap.add_argument("--config", default=None,
+                    help="JSON file with ModelConfig overrides")
+    ap.add_argument("--entries", default=",".join(DEFAULT_ENTRIES))
+    args = ap.parse_args()
+
+    entries = tuple(e for e in args.entries.split(",") if e)
+    jobs = []
+    if args.config:
+        with open(args.config) as fh:
+            overrides = json.load(fh)
+        name = overrides.pop("name", "custom")
+        jobs.append((name, dataclasses.replace(M.ModelConfig(), **overrides)))
+    for preset in (args.preset or (["tiny", "e2e"] if not args.config else [])):
+        jobs.append((preset, PRESETS[preset]))
+
+    for name, cfg in jobs:
+        outdir = os.path.join(args.out, name)
+        print(f"[aot] building '{name}' "
+              f"({M.count_params(cfg) / 1e6:.1f}M params) -> {outdir}",
+              flush=True)
+        build(cfg, outdir, entries)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

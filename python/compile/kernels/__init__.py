@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.moe_ffn import moe_ffn
+
+__all__ = ["flash_attention", "moe_ffn"]

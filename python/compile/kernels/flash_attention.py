@@ -1,0 +1,286 @@
+"""L1 Pallas kernel: blocked causal attention with online softmax (flash).
+
+The attention block is the second compute hot-spot of the paper's transformer
+workload (§II.A: "compute ... dominated by the attention block and the FFN").
+GPU flash-attention tiles Q over threadblocks and streams K/V through shared
+memory; the TPU/Pallas rethink (DESIGN.md §Hardware-Adaptation):
+
+- grid over ``(batch*heads, q_block)``; each step owns one MXU-shaped Q tile
+  in VMEM and streams K/V tiles with a ``fori_loop`` *inside* the kernel —
+  the HBM→VMEM schedule that threadblock software-pipelining does on GPU is
+  expressed by the BlockSpec + in-kernel loop;
+- the online-softmax carry (running max ``m``, normalizer ``l``, accumulator)
+  never leaves VMEM;
+- the forward kernel emits the log-sum-exp rows (FlashAttention-2 style) so
+  the backward kernels can rematerialize probabilities tile-by-tile instead
+  of storing the S×S matrix;
+- backward is two Pallas kernels: dQ (grid over q blocks, loop over kv) and
+  dK/dV (grid over kv blocks, loop over q), wired via ``custom_vjp``.
+
+Lowered with ``interpret=True`` for CPU PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_q: int,
+                block_k: int, seq_len: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    nk = seq_len // block_k
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], ki * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], ki * block_k, block_k, 0)
+        s = jnp.dot(q, k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    dh = q.shape[-1]
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    # Every causal row attends at least to itself, so l > 0.
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m + jnp.log(l)
+
+
+# --------------------------------------------------------------------------
+# Backward
+# --------------------------------------------------------------------------
+# Notation (FlashAttention-2): S = scale·QKᵀ, P = exp(S − lse),
+# delta_i = Σ_d dO_id · O_id, dS = P ∘ (dP − delta),
+# dQ = scale · dS K, dK = scale · dSᵀ Q, dV = Pᵀ dO.
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, block_q: int, block_k: int, seq_len: int, scale: float,
+                   causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    nk = seq_len // block_k
+
+    def body(ki, dq):
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], ki * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], ki * block_k, block_k, 0)
+        s = scale * jnp.dot(q, k.astype(jnp.float32).T,
+                            preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jnp.dot(do, v.astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        return dq + scale * jnp.dot(ds, k.astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
+
+    dq0 = jnp.zeros_like(q)
+    dq_ref[0] = jax.lax.fori_loop(0, nk, body, dq0).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, block_q: int, block_k: int,
+                    seq_len: int, scale: float, causal: bool):
+    ki = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    nq = seq_len // block_q
+
+    def body(qi, carry):
+        dk, dv = carry
+        q = jax.lax.dynamic_slice_in_dim(q_ref[0], qi * block_q, block_q, 0)
+        do = jax.lax.dynamic_slice_in_dim(do_ref[0], qi * block_q, block_q, 0)
+        lse = jax.lax.dynamic_slice_in_dim(lse_ref[0], qi * block_q, block_q, 0)
+        delta = jax.lax.dynamic_slice_in_dim(delta_ref[0], qi * block_q,
+                                             block_q, 0)
+        q = q.astype(jnp.float32)
+        do = do.astype(jnp.float32)
+        s = scale * jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])                    # (bq, bk)
+        dv = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        dk = dk + scale * jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+        return dk, dv
+
+    dh = k.shape[-1]
+    z = jnp.zeros((k.shape[0], dh), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, nq, body, (z, z))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wiring
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build(block_q: int, block_k: int, causal: bool, scale: float,
+           interpret: bool):
+    def fwd_call(q, k, v):
+        bh, s, dh = q.shape
+        kern = functools.partial(_fwd_kernel, block_q=block_q,
+                                 block_k=block_k, seq_len=s, scale=scale,
+                                 causal=causal)
+        return pl.pallas_call(
+            kern,
+            grid=(bh, s // block_q),
+            in_specs=[
+                pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+                pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+                jax.ShapeDtypeStruct((bh, s), jnp.float32),
+            ],
+            interpret=interpret,
+        )(q, k, v)
+
+    def bwd_call(q, k, v, o, lse, do):
+        bh, s, dh = q.shape
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+        dq_kern = functools.partial(_bwd_dq_kernel, block_q=block_q,
+                                    block_k=block_k, seq_len=s, scale=scale,
+                                    causal=causal)
+        full = lambda b, i: (b, 0, 0)
+        full1 = lambda b, i: (b, 0)
+        dq = pl.pallas_call(
+            dq_kern,
+            grid=(bh, s // block_q),
+            in_specs=[
+                pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, s, dh), full),
+                pl.BlockSpec((1, s, dh), full),
+                pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+                pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)
+
+        dkv_kern = functools.partial(_bwd_dkv_kernel, block_q=block_q,
+                                     block_k=block_k, seq_len=s, scale=scale,
+                                     causal=causal)
+        dk, dv = pl.pallas_call(
+            dkv_kern,
+            grid=(bh, s // block_k),
+            in_specs=[
+                pl.BlockSpec((1, s, dh), full),
+                pl.BlockSpec((1, block_k, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, block_k, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, s, dh), full),
+                pl.BlockSpec((1, s), full1),
+                pl.BlockSpec((1, s), full1),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_k, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec((1, block_k, dh), lambda b, i: (b, i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((bh, s, dh), k.dtype),
+                jax.ShapeDtypeStruct((bh, s, dh), v.dtype),
+            ],
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)
+        return dq, dk, dv
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        o, _ = fwd_call(q, k, v)
+        return o
+
+    def f_fwd(q, k, v):
+        o, lse = fwd_call(q, k, v)
+        return o, (q, k, v, o, lse)
+
+    def f_bwd(res, do):
+        q, k, v, o, lse = res
+        return bwd_call(q, k, v, o, lse, do)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 64,
+                    block_k: int = 64, scale: float | None = None,
+                    interpret: bool = True):
+    """Blocked attention: softmax(scale · q kᵀ + mask) v, per (batch, head).
+
+    Differentiable (custom Pallas backward kernels, FA-2 recomputation).
+
+    Args:
+      q, k, v: f32[BH, S, Dh] — batch and heads pre-flattened.
+      causal: apply lower-triangular mask.
+      block_q, block_k: tile sizes; S must be a multiple of both.
+
+    Returns f32[BH, S, Dh].
+    """
+    bh, s, dh = q.shape
+    if k.shape != (bh, s, dh) or v.shape != (bh, s, dh):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} not a multiple of blocks {block_q}/{block_k}")
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    return _build(block_q, block_k, causal, float(scale), interpret)(q, k, v)
+
+
+def vmem_bytes(block_q: int, block_k: int, s: int, dh: int,
+               dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint for one fwd grid step (perf model input)."""
+    return dtype_bytes * (
+        block_q * dh            # q tile
+        + 2 * s * dh            # k, v panels (streamed but resident here)
+        + block_q * block_k     # scores tile
+        + block_q * dh          # accumulator
+        + block_q * dh          # output
+        + 2 * block_q           # m, l carries
+    )

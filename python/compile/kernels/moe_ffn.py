@@ -1,0 +1,214 @@
+"""L1 Pallas kernel: grouped (per-expert) FFN over capacity-dispatched tokens.
+
+This is the MoE compute hot-spot of the paper's workload: every token that the
+router assigned to expert ``e`` flows through that expert's two-matmul FFN.
+On GPUs this is a grouped GEMM over threadblocks with shared-memory weight
+staging; the TPU/Pallas rethink (DESIGN.md §Hardware-Adaptation):
+
+- grid over ``(expert, token_block)`` — expert-major iteration keeps one
+  expert's weight panels VMEM-resident across all of its token blocks (the
+  scratchpad analogue of shared-memory staging);
+- both matmuls are fused in a single kernel so the ``(block, d_ff)``
+  intermediate never round-trips to HBM;
+- tiles are MXU-shaped: ``block_c`` and all feature dims should be multiples
+  of 128 on real hardware (pad upstream if needed).
+
+The backward pass is also written as a Pallas kernel (grid over the same
+(expert, token-block) schedule, with weight-gradient accumulation across
+token blocks via output-block revisiting) and wired up with ``custom_vjp``
+— JAX in this image cannot autodiff through ``pallas_call``.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls); real-TPU efficiency is estimated from `vmem_bytes` /
+`mxu_flops` in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# --------------------------------------------------------------------------
+# Forward kernel
+# --------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One (expert, token-block) step.
+
+    x: (1, bc, d)  w1: (1, d, f)  b1: (1, f)  w2: (1, f, d)  b2: (1, d)
+    o: (1, bc, d)
+    """
+    x = x_ref[0]
+    h = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32) + b1_ref[0]
+    h = jax.nn.gelu(h)
+    y = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32) + b2_ref[0]
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+# --------------------------------------------------------------------------
+# Backward kernel
+# --------------------------------------------------------------------------
+
+
+def _bwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, dy_ref,
+                dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref):
+    """Backward for one (expert, token-block) step.
+
+    Recomputes the FFN intermediate (flash-style rematerialization: the
+    (bc, f) activation never lived in HBM) and accumulates weight grads
+    across token blocks by revisiting the per-expert output block — the grid
+    is sequential in Pallas semantics, so `+=` accumulation is well-defined.
+    """
+    ci = pl.program_id(1)
+    x = x_ref[0]
+    dy = dy_ref[0]
+    w1 = w1_ref[0]
+    w2 = w2_ref[0]
+
+    s = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1_ref[0]
+    h, gelu_vjp = jax.vjp(jax.nn.gelu, s)
+    dh = jnp.dot(dy, w2.T, preferred_element_type=jnp.float32)
+    (ds,) = gelu_vjp(dh)
+
+    dx_ref[0] = jnp.dot(ds, w1.T, preferred_element_type=jnp.float32)
+
+    @pl.when(ci == 0)
+    def _init():
+        dw1_ref[0] = jnp.zeros_like(dw1_ref[0])
+        db1_ref[0] = jnp.zeros_like(db1_ref[0])
+        dw2_ref[0] = jnp.zeros_like(dw2_ref[0])
+        db2_ref[0] = jnp.zeros_like(db2_ref[0])
+
+    dw1_ref[0] += jnp.dot(x.T, ds, preferred_element_type=jnp.float32)
+    db1_ref[0] += jnp.sum(ds, axis=0)
+    dw2_ref[0] += jnp.dot(h.T, dy, preferred_element_type=jnp.float32)
+    db2_ref[0] += jnp.sum(dy, axis=0)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wiring
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build(block_c: int, interpret: bool):
+    """One differentiable grouped-FFN callable per tile configuration."""
+
+    def fwd_call(x, w1, b1, w2, b2):
+        e, c, d = x.shape
+        f = w1.shape[2]
+        grid = (e, c // block_c)
+        return pl.pallas_call(
+            _fwd_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+                pl.BlockSpec((1, d, f), lambda ei, ci: (ei, 0, 0)),
+                pl.BlockSpec((1, f), lambda ei, ci: (ei, 0)),
+                pl.BlockSpec((1, f, d), lambda ei, ci: (ei, 0, 0)),
+                pl.BlockSpec((1, d), lambda ei, ci: (ei, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+            out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+            interpret=interpret,
+        )(x, w1, b1, w2, b2)
+
+    def bwd_call(x, w1, b1, w2, dy):
+        e, c, d = x.shape
+        f = w1.shape[2]
+        grid = (e, c // block_c)
+        return pl.pallas_call(
+            _bwd_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+                pl.BlockSpec((1, d, f), lambda ei, ci: (ei, 0, 0)),
+                pl.BlockSpec((1, f), lambda ei, ci: (ei, 0)),
+                pl.BlockSpec((1, f, d), lambda ei, ci: (ei, 0, 0)),
+                pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_c, d), lambda ei, ci: (ei, ci, 0)),
+                pl.BlockSpec((1, d, f), lambda ei, ci: (ei, 0, 0)),
+                pl.BlockSpec((1, f), lambda ei, ci: (ei, 0)),
+                pl.BlockSpec((1, f, d), lambda ei, ci: (ei, 0, 0)),
+                pl.BlockSpec((1, d), lambda ei, ci: (ei, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((e, c, d), x.dtype),
+                jax.ShapeDtypeStruct(w1.shape, w1.dtype),
+                jax.ShapeDtypeStruct((e, f), w1.dtype),
+                jax.ShapeDtypeStruct(w2.shape, w2.dtype),
+                jax.ShapeDtypeStruct((e, d), w2.dtype),
+            ],
+            interpret=interpret,
+        )(x, w1, b1, w2, dy)
+
+    @jax.custom_vjp
+    def f(x, w1, b1, w2, b2):
+        return fwd_call(x, w1, b1, w2, b2)
+
+    def f_fwd(x, w1, b1, w2, b2):
+        return fwd_call(x, w1, b1, w2, b2), (x, w1, b1, w2)
+
+    def f_bwd(res, dy):
+        x, w1, b1, w2 = res
+        dx, dw1, db1, dw2, db2 = bwd_call(x, w1, b1, w2, dy)
+        return dx, dw1, db1, dw2, db2
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+
+def moe_ffn(x_dispatch, w1, b1, w2, b2, *, block_c: int = 128,
+            interpret: bool = True):
+    """Grouped expert FFN: ``y[e,c] = gelu(x[e,c] @ w1[e] + b1[e]) @ w2[e] + b2[e]``.
+
+    Differentiable (custom Pallas backward kernel).
+
+    Args:
+      x_dispatch: f32[E, C, D] capacity-dispatched tokens (zeros in unused
+        capacity slots — GShard-style dense dispatch).
+      w1: f32[E, D, F]; b1: f32[E, F]; w2: f32[E, F, D]; b2: f32[E, D].
+      block_c: token-block (capacity) tile; C must be a multiple of it.
+      interpret: lower through the Pallas interpreter (required on CPU).
+
+    Returns: f32[E, C, D].
+    """
+    e, c, d = x_dispatch.shape
+    f = w1.shape[2]
+    if w1.shape != (e, d, f):
+        raise ValueError(f"w1 shape {w1.shape} != {(e, d, f)}")
+    if w2.shape != (e, f, d):
+        raise ValueError(f"w2 shape {w2.shape} != {(e, f, d)}")
+    if b1.shape != (e, f) or b2.shape != (e, d):
+        raise ValueError(f"bias shapes {b1.shape} {b2.shape}")
+    if c % block_c != 0:
+        raise ValueError(f"capacity {c} not a multiple of block_c {block_c}")
+    return _build(block_c, interpret)(x_dispatch, w1, b1, w2, b2)
+
+
+def vmem_bytes(block_c: int, d: int, f: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one fwd grid step (perf model)."""
+    return dtype_bytes * (
+        block_c * d          # x tile
+        + d * f + f          # w1 + b1
+        + f * d + d          # w2 + b2
+        + block_c * f        # intermediate h
+        + block_c * d        # output tile
+    )
+
+
+def mxu_flops(e: int, c: int, d: int, f: int) -> int:
+    """Total MAC-flops issued to the MXU for one fwd invocation."""
+    return 2 * e * c * (d * f + f * d)

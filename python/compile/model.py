@@ -1,0 +1,370 @@
+"""L2: MoE decoder transformer (fwd/bwd/Adam) in JAX, calling the L1 kernels.
+
+This is the workload of the paper (§II.A, Fig. 1b): a GPT-style decoder
+stack where every layer's FFN is replaced by a top-k routed bank of
+fine-grained experts. The same architecture family the paper costs
+analytically at 4.7 T parameters is instantiated here at ~100 M parameters
+for the end-to-end driver (examples/train_moe.rs).
+
+Everything here is build-time Python: `aot.py` lowers the entrypoints to HLO
+text once, and the Rust coordinator executes them via PJRT. Python is never
+on the training path.
+
+Entry points (all pure, pytree-in/pytree-out; aot.py flattens them):
+  init_state(cfg)(seed)                  -> state
+  train_step(cfg)(state, tokens)        -> state', (loss, aux)
+  grad_step(cfg)(params, tokens)        -> grads, (loss, aux)
+  apply_update(cfg)(state, grads)       -> state'
+  forward(cfg)(params, tokens)          -> logits
+where state = (params, m, v, step) and tokens is i32[B, S+1].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import flash_attention, moe_ffn
+from compile.kernels import ref as kref
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """MoE transformer hyperparameters.
+
+    ``d_ff`` is the hidden dim of each (already fine-grained) expert: in the
+    paper's notation an original expert with hidden ``d_ff0`` split at
+    granularity ``m`` yields experts with ``d_ff = d_ff0 / m`` — the split is
+    applied by the caller (see presets / rust `config` module).
+    """
+
+    vocab: int = 8192
+    d_model: int = 512
+    n_layers: int = 8
+    n_heads: int = 8
+    d_ff: int = 1408
+    n_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.5
+    seq_len: int = 128
+    batch: int = 2
+    aux_weight: float = 1e-2
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    # Kernel tiling (see kernels/*.py); must divide the respective dims.
+    use_pallas: bool = True
+    block_c: int = 128
+    block_q: int = 64
+    block_k: int = 64
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_tokens(self) -> int:
+        return self.batch * self.seq_len
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert token capacity, rounded up to the kernel tile."""
+        raw = math.ceil(self.n_tokens / self.n_experts
+                        * self.top_k * self.capacity_factor)
+        return ((raw + self.block_c - 1) // self.block_c) * self.block_c
+
+    def validate(self) -> None:
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model must divide into n_heads")
+        if self.seq_len % self.block_q or self.seq_len % self.block_k:
+            raise ValueError("seq_len must be a multiple of block_q/block_k")
+        if self.top_k > self.n_experts:
+            raise ValueError("top_k > n_experts")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+TINY = ModelConfig(vocab=128, d_model=64, n_layers=2, n_heads=2, d_ff=128,
+                   n_experts=4, top_k=2, seq_len=32, batch=2,
+                   block_c=16, block_q=16, block_k=16)
+
+# ~105 M parameters: the end-to-end driver config (EXPERIMENTS.md §E2E).
+# block_q = block_k = seq_len collapses each flash grid row to a single
+# interpreter step (§Perf-L1: interpret-mode cost scales with grid steps,
+# and a 128x64 Q tile still fits VMEM comfortably on real hardware).
+E2E = ModelConfig(block_q=128, block_k=128)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Canonical (ordered) name -> shape map. The AOT manifest and the Rust
+    runtime both key off this ordering (sorted by name)."""
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    shapes: Dict[str, Tuple[int, ...]] = {
+        "tok_emb": (cfg.vocab, d),
+        "pos_emb": (cfg.seq_len, d),
+        "ln_f.g": (d,),
+        "ln_f.b": (d,),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        shapes[p + "ln1.g"] = (d,)
+        shapes[p + "ln1.b"] = (d,)
+        shapes[p + "attn.wq"] = (d, d)
+        shapes[p + "attn.wk"] = (d, d)
+        shapes[p + "attn.wv"] = (d, d)
+        shapes[p + "attn.wo"] = (d, d)
+        shapes[p + "ln2.g"] = (d,)
+        shapes[p + "ln2.b"] = (d,)
+        shapes[p + "router.w"] = (d, e)
+        shapes[p + "moe.w1"] = (e, d, f)
+        shapes[p + "moe.b1"] = (e, f)
+        shapes[p + "moe.w2"] = (e, f, d)
+        shapes[p + "moe.b2"] = (e, d)
+    return shapes
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Deterministic flattening order used everywhere (python and rust)."""
+    return sorted(param_shapes(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for s in param_shapes(cfg).values())
+
+
+def init_params(cfg: ModelConfig, seed) -> Params:
+    """Initialize parameters from a (traced or concrete) uint32 seed."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params: Params = {}
+    for i, name in enumerate(sorted(shapes)):
+        shape = shapes[name]
+        k = jax.random.fold_in(key, i)
+        if name.endswith((".g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b", ".b1", ".b2")) or name.endswith("moe.b1") \
+                or name.endswith("moe.b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(fan_in)
+            if name.endswith("attn.wo") or name.endswith("moe.w2"):
+                # GPT-2 style residual-branch scaling.
+                std /= math.sqrt(2.0 * cfg.n_layers)
+            params[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, p: Params, prefix: str, x):
+    """Multi-head causal self-attention over x: f32[B, S, D]."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(y):  # [B,S,D] -> [B*H, S, Dh]
+        return (y.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+                .reshape(b * h, s, dh))
+
+    q = split(x @ p[prefix + "attn.wq"])
+    k = split(x @ p[prefix + "attn.wk"])
+    v = split(x @ p[prefix + "attn.wv"])
+    if cfg.use_pallas:
+        o = flash_attention(q, k, v, causal=True,
+                            block_q=cfg.block_q, block_k=cfg.block_k)
+    else:
+        o = kref.attention_ref(q, k, v, causal=True)
+    o = (o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d))
+    return o @ p[prefix + "attn.wo"]
+
+
+def _topk(probs, k: int):
+    """Iterative-argmax top-k.
+
+    Equivalent to ``jax.lax.top_k`` (incl. lowest-index tie-breaking) but
+    lowers to reduce/select ops: the dedicated ``topk`` HLO instruction that
+    lax.top_k emits post-dates the xla_extension 0.5.1 parser used by the
+    Rust runtime (see aot.py header).
+    """
+    vals, idxs = [], []
+    masked = probs
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                       # [N]
+        val = jnp.take_along_axis(probs, idx[:, None], -1)[:, 0]
+        vals.append(val)
+        idxs.append(idx)
+        hit = jax.nn.one_hot(idx, probs.shape[-1], dtype=jnp.bool_)
+        masked = jnp.where(hit, -jnp.inf, masked)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def _route(cfg: ModelConfig, logits):
+    """Top-k routing with per-expert capacity (GShard-style dense dispatch).
+
+    Args:   logits f32[N, E].
+    Returns (dispatch f32[N, E, C], combine f32[N, E, C], aux f32[], stats).
+    """
+    n, e = logits.shape
+    c = cfg.capacity
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate_vals, expert_idx = _topk(probs, cfg.top_k)             # [N, k]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    dispatch = jnp.zeros((n, e, c), jnp.float32)
+    combine = jnp.zeros((n, e, c), jnp.float32)
+    counts = jnp.zeros((e,), jnp.int32)
+    dropped = jnp.zeros((), jnp.int32)
+    for slot in range(cfg.top_k):
+        mask_e = jax.nn.one_hot(expert_idx[:, slot], e, dtype=jnp.int32)
+        # Position of each token in its expert's queue (earlier slots and
+        # earlier tokens first), GShard cumsum trick.
+        pos_in_e = jnp.cumsum(mask_e, axis=0) - 1 + counts[None, :]  # [N,E]
+        loc = jnp.sum(mask_e * pos_in_e, -1)                          # [N]
+        counts = counts + jnp.sum(mask_e, 0)
+        keep = loc < c
+        dropped = dropped + jnp.sum(~keep)
+        sel = (jax.nn.one_hot(expert_idx[:, slot], e, dtype=jnp.float32)
+               [:, :, None]
+               * jax.nn.one_hot(jnp.where(keep, loc, 0), c,
+                                dtype=jnp.float32)[:, None, :]
+               * keep[:, None, None].astype(jnp.float32))
+        dispatch = dispatch + sel
+        combine = combine + sel * gate_vals[:, slot][:, None, None]
+
+    # Switch-transformer load-balance loss on first-choice assignment.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return dispatch, combine, aux, {"dropped": dropped, "counts": counts}
+
+
+def _moe_layer(cfg: ModelConfig, p: Params, prefix: str, x):
+    """Routed fine-grained expert FFN over x: f32[B, S, D]."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    logits = xf @ p[prefix + "router.w"]
+    dispatch, combine, aux, _ = _route(cfg, logits)
+    xd = jnp.einsum("nec,nd->ecd", dispatch, xf)                 # [E, C, D]
+    if cfg.use_pallas:
+        ye = moe_ffn(xd, p[prefix + "moe.w1"], p[prefix + "moe.b1"],
+                     p[prefix + "moe.w2"], p[prefix + "moe.b2"],
+                     block_c=cfg.block_c)
+    else:
+        ye = kref.moe_ffn_ref(xd, p[prefix + "moe.w1"], p[prefix + "moe.b1"],
+                              p[prefix + "moe.w2"], p[prefix + "moe.b2"])
+    y = jnp.einsum("nec,ecd->nd", combine, ye)
+    return y.reshape(b, s, d), aux
+
+
+def forward(cfg: ModelConfig, p: Params, tokens):
+    """Logits for next-token prediction. tokens: i32[B, S] -> f32[B, S, V]."""
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        pre = f"layer{i:02d}."
+        x = x + _attention(cfg, p, pre,
+                           _layer_norm(x, p[pre + "ln1.g"], p[pre + "ln1.b"]))
+        y, aux = _moe_layer(cfg, p, pre,
+                            _layer_norm(x, p[pre + "ln2.g"], p[pre + "ln2.b"]))
+        x = x + y
+        aux_total = aux_total + aux
+    x = _layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    logits = x @ p["tok_emb"].T          # weight-tied LM head
+    return logits, aux_total / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, p: Params, tokens):
+    """tokens: i32[B, S+1] -> (total_loss, (ce, aux))."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(cfg, p, inp)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], -1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + cfg.aux_weight * aux, (ce, aux)
+
+
+# --------------------------------------------------------------------------
+# Optimizer (Adam) and entry points
+# --------------------------------------------------------------------------
+
+
+def zeros_like_params(cfg: ModelConfig) -> Params:
+    return {k: jnp.zeros(s, jnp.float32)
+            for k, s in param_shapes(cfg).items()}
+
+
+def init_state(cfg: ModelConfig, seed):
+    p = init_params(cfg, seed)
+    z = {k: jnp.zeros_like(v) for k, v in p.items()}
+    zv = {k: jnp.zeros_like(v) for k, v in p.items()}
+    return p, z, zv, jnp.zeros((), jnp.int32)
+
+
+def grad_step(cfg: ModelConfig, p: Params, tokens):
+    (loss, (ce, aux)), grads = jax.value_and_grad(
+        lambda q: loss_fn(cfg, q, tokens), has_aux=True)(p)
+    return grads, ce, aux
+
+
+def apply_update(cfg: ModelConfig, state, grads):
+    p, m, v, step = state
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in p:
+        g = grads[k]
+        new_m[k] = cfg.beta1 * m[k] + (1 - cfg.beta1) * g
+        new_v[k] = cfg.beta2 * v[k] + (1 - cfg.beta2) * g * g
+        mhat = new_m[k] / bc1
+        vhat = new_v[k] / bc2
+        new_p[k] = p[k] - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    return new_p, new_m, new_v, step
+
+
+def train_step(cfg: ModelConfig, state, tokens):
+    p = state[0]
+    grads, ce, aux = grad_step(cfg, p, tokens)
+    new_state = apply_update(cfg, state, grads)
+    return new_state, ce, aux
+
+
+# Jitted pytree-level wrappers for python-side tests.
+def jit_train_step(cfg: ModelConfig):
+    return jax.jit(functools.partial(train_step, cfg))
+
+
+def jit_loss(cfg: ModelConfig):
+    return jax.jit(functools.partial(loss_fn, cfg))

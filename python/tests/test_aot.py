@@ -1,0 +1,121 @@
+"""AOT path tests: flat entrypoints == pytree entrypoints; manifest and HLO
+text artifacts are well-formed and mutually consistent."""
+
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.TINY
+
+
+def _tokens(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.randint(k, (cfg.batch, cfg.seq_len + 1), 0, cfg.vocab)
+
+
+class TestFlatEntrypoints:
+    def setup_method(self):
+        self.eps = aot.make_entrypoints(CFG)
+        self.names = M.param_names(CFG)
+        self.p = len(self.names)
+
+    def test_init_flat_matches_pytree(self):
+        flat = self.eps["init"](jnp.uint32(3))
+        assert len(flat) == 3 * self.p + 1
+        params, _, _, step = M.init_state(CFG, jnp.uint32(3))
+        np.testing.assert_array_equal(flat[0], params[self.names[0]])
+        assert int(flat[-1]) == 0
+
+    def test_train_step_flat_matches_pytree(self):
+        state = M.init_state(CFG, 0)
+        toks = _tokens(CFG)
+        flat_state = (tuple(state[0][n] for n in self.names)
+                      + tuple(state[1][n] for n in self.names)
+                      + tuple(state[2][n] for n in self.names) + (state[3],))
+        out = self.eps["train_step"](*flat_state, toks)
+        assert len(out) == 3 * self.p + 1 + 2
+        _, ce_ref, _ = M.train_step(CFG, state, toks)
+        assert float(out[-2]) == pytest.approx(float(ce_ref), rel=1e-5)
+
+    def test_grad_apply_composition(self):
+        state = M.init_state(CFG, 0)
+        toks = _tokens(CFG)
+        flat_params = tuple(state[0][n] for n in self.names)
+        gout = self.eps["grad_step"](*flat_params, toks)
+        grads, ce = gout[:self.p], gout[self.p]
+        flat_state = (flat_params
+                      + tuple(state[1][n] for n in self.names)
+                      + tuple(state[2][n] for n in self.names) + (state[3],))
+        new_state = self.eps["apply_update"](*flat_state, *grads)
+        assert len(new_state) == 3 * self.p + 1
+        s1, ce1, _ = M.train_step(CFG, state, toks)
+        np.testing.assert_allclose(new_state[0], s1[0][self.names[0]],
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_forward_flat(self):
+        params = M.init_params(CFG, 0)
+        flat_params = tuple(params[n] for n in self.names)
+        toks = _tokens(CFG)[:, :-1]
+        logits, aux = self.eps["forward"](*flat_params, toks)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+
+class TestSpecs:
+    def test_example_args_match_io_specs(self):
+        for entry in aot.DEFAULT_ENTRIES:
+            args = aot.example_args(CFG, entry)
+            ins, outs = aot.io_specs(CFG, entry)
+            assert len(args) == len(ins), entry
+            for a, s in zip(args, ins):
+                assert list(a.shape) == s["shape"], (entry, s["name"])
+
+    def test_output_spec_shapes(self):
+        _, outs = aot.io_specs(CFG, "forward")
+        assert outs[0]["shape"] == [CFG.batch, CFG.seq_len, CFG.vocab]
+
+
+class TestBuildArtifacts:
+    @pytest.fixture(scope="class")
+    def outdir(self, tmp_path_factory):
+        d = tmp_path_factory.mktemp("artifacts") / "tiny"
+        aot.build(CFG, str(d), entries=("init", "train_step"), verbose=False)
+        return str(d)
+
+    def test_files_written(self, outdir):
+        assert os.path.exists(os.path.join(outdir, "manifest.json"))
+        assert os.path.exists(os.path.join(outdir, "init.hlo.txt"))
+        assert os.path.exists(os.path.join(outdir, "train_step.hlo.txt"))
+
+    def test_hlo_text_is_hlo(self, outdir):
+        with open(os.path.join(outdir, "train_step.hlo.txt")) as fh:
+            head = fh.read(200)
+        assert head.startswith("HloModule")
+
+    def test_manifest_consistency(self, outdir):
+        with open(os.path.join(outdir, "manifest.json")) as fh:
+            man = json.load(fh)
+        assert man["format"] == "hlo-text-v1"
+        assert man["n_params"] == len(M.param_names(CFG))
+        assert man["total_param_elements"] == M.count_params(CFG)
+        assert man["param_names"] == sorted(man["param_names"])
+        ts = man["entrypoints"]["train_step"]
+        # state (3P+1) + tokens in; state + ce + aux out
+        p = man["n_params"]
+        assert len(ts["inputs"]) == 3 * p + 2
+        assert len(ts["outputs"]) == 3 * p + 3
+        total = sum(math.prod(s["shape"]) for s in man["params"])
+        assert total == man["total_param_elements"]
+
+    def test_manifest_roundtrips_config(self, outdir):
+        with open(os.path.join(outdir, "manifest.json")) as fh:
+            man = json.load(fh)
+        cfg2 = M.ModelConfig(**man["config"])
+        assert cfg2 == CFG

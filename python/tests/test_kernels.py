@@ -1,0 +1,235 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Includes hypothesis sweeps over shapes/dtypes per the reproduction brief:
+every sampled configuration is checked with assert_allclose against ref.py,
+forward AND backward (custom Pallas VJP kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, moe_ffn
+from compile.kernels import ref as kref
+from compile.kernels.moe_ffn import mxu_flops, vmem_bytes as moe_vmem_bytes
+from compile.kernels.flash_attention import vmem_bytes as fa_vmem_bytes
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def _moe_operands(key, e, c, d, f, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return (
+        _rand(ks[0], (e, c, d), dtype),
+        _rand(ks[1], (e, d, f), dtype, 0.1),
+        _rand(ks[2], (e, f), dtype, 0.01),
+        _rand(ks[3], (e, f, d), dtype, 0.1),
+        _rand(ks[4], (e, d), dtype, 0.01),
+    )
+
+
+# ---------------------------------------------------------------- moe_ffn
+
+
+class TestMoeFfnForward:
+    def test_matches_ref_basic(self):
+        ops = _moe_operands(jax.random.PRNGKey(0), 4, 64, 32, 48)
+        np.testing.assert_allclose(
+            moe_ffn(*ops, block_c=16), kref.moe_ffn_ref(*ops),
+            rtol=RTOL, atol=ATOL)
+
+    def test_single_expert(self):
+        ops = _moe_operands(jax.random.PRNGKey(1), 1, 32, 16, 16)
+        np.testing.assert_allclose(
+            moe_ffn(*ops, block_c=32), kref.moe_ffn_ref(*ops),
+            rtol=RTOL, atol=ATOL)
+
+    def test_block_equals_capacity(self):
+        ops = _moe_operands(jax.random.PRNGKey(2), 3, 48, 8, 24)
+        np.testing.assert_allclose(
+            moe_ffn(*ops, block_c=48), kref.moe_ffn_ref(*ops),
+            rtol=RTOL, atol=ATOL)
+
+    def test_zero_inputs_give_bias_path(self):
+        e, c, d, f = 2, 16, 8, 8
+        ops = _moe_operands(jax.random.PRNGKey(3), e, c, d, f)
+        x0 = jnp.zeros_like(ops[0])
+        got = moe_ffn(x0, *ops[1:], block_c=16)
+        want = kref.moe_ffn_ref(x0, *ops[1:])
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_rejects_bad_capacity_tiling(self):
+        ops = _moe_operands(jax.random.PRNGKey(4), 2, 40, 8, 8)
+        with pytest.raises(ValueError, match="multiple of block_c"):
+            moe_ffn(*ops, block_c=16)
+
+    def test_rejects_bad_weight_shapes(self):
+        x, w1, b1, w2, b2 = _moe_operands(jax.random.PRNGKey(5), 2, 16, 8, 8)
+        with pytest.raises(ValueError, match="w2 shape"):
+            moe_ffn(x, w1, b1, w2[:, :4, :], b2, block_c=16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        e=st.integers(1, 6),
+        nc=st.integers(1, 4),
+        bc=st.sampled_from([8, 16, 32]),
+        d=st.sampled_from([8, 16, 32, 64]),
+        f=st.sampled_from([8, 24, 64, 96]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, e, nc, bc, d, f, seed):
+        c = nc * bc
+        ops = _moe_operands(jax.random.PRNGKey(seed), e, c, d, f)
+        np.testing.assert_allclose(
+            moe_ffn(*ops, block_c=bc), kref.moe_ffn_ref(*ops),
+            rtol=RTOL, atol=ATOL)
+
+
+class TestMoeFfnBackward:
+    def _grads(self, fn, ops):
+        return jax.grad(lambda a: jnp.sum(jnp.sin(fn(*a))))(ops)
+
+    def test_grads_match_ref(self):
+        ops = _moe_operands(jax.random.PRNGKey(10), 3, 32, 16, 24)
+        gk = self._grads(lambda *a: moe_ffn(*a, block_c=16), ops)
+        gr = self._grads(kref.moe_ffn_ref, ops)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+    def test_weight_grad_accumulates_over_blocks(self):
+        # C spans several blocks: dw must sum contributions (revisit path).
+        ops = _moe_operands(jax.random.PRNGKey(11), 2, 64, 8, 8)
+        gk = self._grads(lambda *a: moe_ffn(*a, block_c=8), ops)
+        gr = self._grads(kref.moe_ffn_ref, ops)
+        np.testing.assert_allclose(gk[1], gr[1], rtol=5e-4, atol=5e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        e=st.integers(1, 4),
+        nc=st.integers(1, 3),
+        bc=st.sampled_from([8, 16]),
+        d=st.sampled_from([8, 16]),
+        f=st.sampled_from([8, 24]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_grad_sweep(self, e, nc, bc, d, f, seed):
+        ops = _moe_operands(jax.random.PRNGKey(seed), e, nc * bc, d, f)
+        gk = self._grads(lambda *a: moe_ffn(*a, block_c=bc), ops)
+        gr = self._grads(kref.moe_ffn_ref, ops)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------- flash_attention
+
+
+def _qkv(key, bh, s, dh, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return tuple(_rand(k, (bh, s, dh), dtype) for k in ks)
+
+
+class TestFlashAttentionForward:
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, causal):
+        q, k, v = _qkv(jax.random.PRNGKey(0), 4, 64, 16)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, causal=causal, block_q=16, block_k=16),
+            kref.attention_ref(q, k, v, causal=causal),
+            rtol=RTOL, atol=ATOL)
+
+    def test_asymmetric_blocks(self):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 2, 64, 8)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, block_q=16, block_k=32),
+            kref.attention_ref(q, k, v), rtol=RTOL, atol=ATOL)
+
+    def test_single_block(self):
+        q, k, v = _qkv(jax.random.PRNGKey(2), 1, 32, 8)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, block_q=32, block_k=32),
+            kref.attention_ref(q, k, v), rtol=RTOL, atol=ATOL)
+
+    def test_custom_scale(self):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 2, 32, 8)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, scale=0.5, block_q=16, block_k=16),
+            kref.attention_ref(q, k, v, scale=0.5), rtol=RTOL, atol=ATOL)
+
+    def test_large_magnitude_stability(self):
+        q, k, v = (50.0 * t for t in _qkv(jax.random.PRNGKey(4), 2, 32, 8))
+        got = flash_attention(q, k, v, block_q=16, block_k=16)
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+    def test_rejects_bad_seq_tiling(self):
+        q, k, v = _qkv(jax.random.PRNGKey(5), 1, 48, 8)
+        with pytest.raises(ValueError, match="not a multiple"):
+            flash_attention(q, k, v, block_q=32, block_k=32)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bh=st.integers(1, 6),
+        nblk=st.integers(1, 4),
+        blk=st.sampled_from([8, 16, 32]),
+        dh=st.sampled_from([4, 8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, bh, nblk, blk, dh, causal, seed):
+        s = nblk * blk
+        q, k, v = _qkv(jax.random.PRNGKey(seed), bh, s, dh)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, causal=causal, block_q=blk, block_k=blk),
+            kref.attention_ref(q, k, v, causal=causal),
+            rtol=5e-5, atol=5e-5)
+
+
+class TestFlashAttentionBackward:
+    def _grads(self, fn, ops):
+        return jax.grad(lambda a: jnp.sum(jnp.cos(fn(*a))))(ops)
+
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_grads_match_ref(self, causal):
+        ops = _qkv(jax.random.PRNGKey(10), 3, 64, 16)
+        gk = self._grads(lambda *a: flash_attention(
+            *a, causal=causal, block_q=16, block_k=16), ops)
+        gr = self._grads(lambda *a: kref.attention_ref(*a, causal=causal), ops)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bh=st.integers(1, 3),
+        nblk=st.integers(1, 3),
+        blk=st.sampled_from([8, 16]),
+        dh=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_grad_sweep(self, bh, nblk, blk, dh, seed):
+        ops = _qkv(jax.random.PRNGKey(seed), bh, nblk * blk, dh)
+        gk = self._grads(lambda *a: flash_attention(
+            *a, block_q=blk, block_k=blk), ops)
+        gr = self._grads(kref.attention_ref, ops)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+# --------------------------------------------------- static perf estimates
+
+
+class TestStaticEstimates:
+    def test_moe_vmem_positive_and_monotonic(self):
+        a = moe_vmem_bytes(128, 512, 1408)
+        b = moe_vmem_bytes(256, 512, 1408)
+        assert 0 < a < b
+
+    def test_moe_mxu_flops(self):
+        assert mxu_flops(2, 4, 8, 16) == 2 * 2 * 4 * (8 * 16 * 2)
+
+    def test_flash_vmem(self):
+        assert fa_vmem_bytes(64, 64, 128, 64) > 0

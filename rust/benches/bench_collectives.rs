@@ -1,0 +1,73 @@
+//! Bench: the coordinator's real collectives (ring all-reduce, all-gather,
+//! pairwise all-to-all over worker threads) — the L3 hot path of the
+//! miniature training runtime — plus the closed-form model evaluation rate.
+//!
+//! Run: `cargo bench --bench bench_collectives`
+
+use lumos::collectives as coll;
+use lumos::coordinator::run_workers;
+use lumos::topology::cluster::DomainSpec;
+use lumos::util::bench::{black_box, Bencher};
+
+fn bench_real_allreduce(b: &mut Bencher, n_workers: usize, elems: usize) {
+    let bytes = (n_workers * elems * 4) as f64;
+    b.bench_items(
+        &format!("rust ring all-reduce {}x{}KB", n_workers, elems * 4 / 1024),
+        bytes,
+        "B",
+        || {
+            let out = run_workers(n_workers, move |mut ep| {
+                let mut data = vec![ep.rank as f32; elems];
+                ep.all_reduce_sum(&mut data, 1);
+                data[0]
+            });
+            black_box(out);
+        },
+    );
+}
+
+fn bench_real_a2a(b: &mut Bencher, n_workers: usize, elems_per_peer: usize) {
+    let bytes = (n_workers * n_workers * elems_per_peer * 4) as f64;
+    b.bench_items(
+        &format!("rust pairwise a2a {}x{}KB/peer", n_workers, elems_per_peer * 4 / 1024),
+        bytes,
+        "B",
+        || {
+            let out = run_workers(n_workers, move |mut ep| {
+                let chunks: Vec<Vec<f32>> =
+                    (0..ep.n_ranks).map(|d| vec![d as f32; elems_per_peer]).collect();
+                ep.all_to_all(chunks, 1).len()
+            });
+            black_box(out);
+        },
+    );
+}
+
+fn main() {
+    println!("=== L3 collective engine (real threads, real payloads) ===");
+    let mut b = Bencher::new();
+    bench_real_allreduce(&mut b, 4, 262_144); // 1 MB per rank
+    bench_real_allreduce(&mut b, 8, 262_144);
+    bench_real_allreduce(&mut b, 4, 4_194_304); // 16 MB per rank
+    bench_real_a2a(&mut b, 4, 65_536);
+    bench_real_a2a(&mut b, 8, 65_536);
+
+    println!("\n=== Hockney model evaluation rate (sweep inner loop) ===");
+    let dom = DomainSpec {
+        name: "passage".into(),
+        gbps_per_gpu: 32_000.0,
+        latency_s: 200e-9,
+        a2a_efficiency: 0.95,
+    };
+    b.bench_items("closed-form collective costs", 4e6, "eval", || {
+        let mut acc = 0.0;
+        for i in 0..1_000_000u64 {
+            let bytes = (i % 1024) as f64 * 1e3;
+            acc += coll::all_reduce_time(&dom, 16, bytes);
+            acc += coll::all_to_all_time(&dom, 512, bytes);
+            acc += coll::all_gather_time(&dom, 144, bytes);
+            acc += coll::p2p_time(&dom, bytes);
+        }
+        black_box(acc);
+    });
+}

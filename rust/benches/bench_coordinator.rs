@@ -1,0 +1,57 @@
+//! Bench: coordinator components — expert router throughput (tokens/s),
+//! all-to-all payload packing, and 1F1B schedule generation. These are the
+//! L3 request-path operations that must never bottleneck training.
+//!
+//! Run: `cargo bench --bench bench_coordinator`
+
+use lumos::coordinator::{one_f_one_b, simulate_slots, Router, RouterConfig};
+use lumos::util::bench::{black_box, Bencher};
+use lumos::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Router throughput at the paper's Config 4 shape (256 experts, top-8).
+    let cfg = RouterConfig {
+        n_experts: 256,
+        top_k: 8,
+        experts_per_rank: 8,
+        capacity: 4096,
+        max_devices_per_token: None,
+    };
+    let router = Router::new(cfg);
+    let mut rng = Rng::new(1);
+    let n_tokens = 8192;
+    let choices = router.synthetic_choices(n_tokens, 1.1, &mut rng);
+    b.bench_items(&format!("route {} tokens, E=256 k=8", n_tokens), n_tokens as f64, "tok", || {
+        black_box(router.route(&choices));
+    });
+
+    // device-limited routing (the restricted baseline) for comparison
+    let mut cfg_lim = router.cfg.clone();
+    cfg_lim.max_devices_per_token = Some(4);
+    let router_lim = Router::new(cfg_lim);
+    b.bench_items("route (device-limited M=4)", n_tokens as f64, "tok", || {
+        black_box(router_lim.route(&choices));
+    });
+
+    // payload packing for the all-to-all
+    let routed = router.route(&choices);
+    let d = 64;
+    let feats: Vec<Vec<f32>> = (0..n_tokens).map(|t| vec![t as f32; d]).collect();
+    b.bench_items("pack a2a payloads (64-dim)", routed.assignments.len() as f64, "tok", || {
+        black_box(router.pack_a2a(&routed, &feats));
+    });
+
+    // 1F1B schedule generation + timing simulation
+    b.bench("1F1B schedule gen (pp=8, m=16) x 1000", || {
+        for _ in 0..1000 {
+            for s in 0..8 {
+                black_box(one_f_one_b(8, s, 16));
+            }
+        }
+    });
+    b.bench("1F1B slot simulation (pp=8, m=64)", || {
+        black_box(simulate_slots(8, 64));
+    });
+}

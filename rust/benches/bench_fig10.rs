@@ -1,0 +1,28 @@
+//! Bench + regeneration of Figure 10: same-radix (512) comparison,
+//! Passage 32 Tb/s vs the electrical alternative at 14.4 Tb/s, isolating
+//! the bandwidth effect. Prints the paper's series and times the
+//! analytical engine.
+//!
+//! Run: `cargo bench --bench bench_fig10`
+
+use lumos::perf::{evaluate_paper_config, paper_clusters, PerfKnobs};
+use lumos::sweep;
+use lumos::util::bench::{black_box, Bencher};
+
+fn main() {
+    let knobs = PerfKnobs::default();
+    let (t, chart) = sweep::fig10(&knobs);
+    println!("{}\n{}", t.render(), chart.render());
+    println!("paper reference: Alt/Passage = 1.4x (C1, C2) and 1.3x (C3, C4);");
+    println!("                 Passage C4 = 1.02x its own C1.\n");
+
+    println!("=== Engine timing ===");
+    let (passage, alt512, _) = paper_clusters();
+    let mut b = Bencher::new();
+    b.bench_items("fig10 full evaluation (8 model evals)", 8.0, "eval", || {
+        for i in 1..=4 {
+            black_box(evaluate_paper_config(&passage, i, &knobs));
+            black_box(evaluate_paper_config(&alt512, i, &knobs));
+        }
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench + regeneration of Figure 11: system-specific radix comparison —
+//! Passage (512 @ 32 Tb/s) vs the electrical alternative (144 @ 14.4 Tb/s).
+//! This is the paper's headline: 1.6× (Config 1) growing to 2.7× (Config 4)
+//! as expert all-to-all spills onto the scale-out network.
+//!
+//! Run: `cargo bench --bench bench_fig11`
+
+use lumos::perf::{evaluate_paper_config, paper_clusters, PerfKnobs};
+use lumos::sweep;
+use lumos::util::bench::{black_box, Bencher};
+
+fn main() {
+    let knobs = PerfKnobs::default();
+    let (t, chart) = sweep::fig11(&knobs);
+    println!("{}\n{}", t.render(), chart.render());
+    println!("{}", sweep::breakdown_table(&knobs).render());
+    println!("paper reference: 1.6x (Config 1) -> 2.7x (Config 4).\n");
+
+    println!("=== Engine timing ===");
+    let (passage, _, alt144) = paper_clusters();
+    let mut b = Bencher::new();
+    b.bench_items("fig11 full evaluation (8 model evals)", 8.0, "eval", || {
+        for i in 1..=4 {
+            black_box(evaluate_paper_config(&passage, i, &knobs));
+            black_box(evaluate_paper_config(&alt144, i, &knobs));
+        }
+    });
+    // The sweep engine's interactive workload: a full ablation suite.
+    b.bench("ablation suite (pod+bw+granularity sweeps)", || {
+        black_box(sweep::pod_size_sweep(&knobs));
+        black_box(sweep::bandwidth_sweep(&knobs));
+        black_box(sweep::granularity_sweep(&knobs));
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench + regeneration of the hardware design-space results: Table III,
+//! Figure 7 (power @ 32 Tb/s) and Figure 8 (area @ 32 Tb/s), plus the
+//! switch-package analysis of §IV.C.b.
+//!
+//! Run: `cargo bench --bench bench_hw`
+
+use lumos::hw;
+use lumos::sweep;
+use lumos::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("=== Table III / Fig 7 / Fig 8 ===\n");
+    println!("{}", sweep::table3().render());
+    let (t7, c7) = sweep::fig7();
+    println!("{}\n{}", t7.render(), c7.render());
+    let (t8, c8) = sweep::fig8();
+    println!("{}\n{}", t8.render(), c8.render());
+
+    let sw = hw::SwitchPackage::sls_512();
+    println!("## Switch feasibility (§IV.C.b)");
+    for tech in [hw::lpo_dr8(), hw::cpo_2p5d(), hw::passage_interposer()] {
+        println!(
+            "  {:<32} {} reticles, {:.2} kW fabric optics power",
+            tech.name,
+            sw.reticles_needed(&tech),
+            tech.power_w(sw.fabric_gbps) / 1000.0
+        );
+    }
+    println!();
+
+    println!("=== Timing ===");
+    let mut b = Bencher::new();
+    b.bench("full hw design-space sweep", || {
+        black_box(sweep::fig7());
+        black_box(sweep::fig8());
+        black_box(sweep::table3());
+    });
+    // design-space scan across bandwidth points (architect's inner loop)
+    b.bench_items("power model eval", 4.0 * 64.0, "eval", || {
+        for tech in hw::catalog() {
+            for i in 1..=64 {
+                black_box(hw::PowerBreakdown::compute(&tech, 1000.0 * i as f64));
+            }
+        }
+    });
+}

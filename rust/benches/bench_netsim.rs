@@ -1,0 +1,38 @@
+//! Bench: the flow-level network simulator — events/second on collective
+//! replays at pod scale, the substrate cost of validating the analytical
+//! model.
+//!
+//! Run: `cargo bench --bench bench_netsim`
+
+use lumos::collectives as coll;
+use lumos::netsim::{replay_schedule, Network};
+use lumos::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for n in [16usize, 64, 128] {
+        let net = Network::sls(n, 32_000.0, 200e-9);
+        let sched = coll::ring_all_reduce_schedule(n, 256e6);
+        let flows = sched.ops.len() as f64;
+        b.bench_items(&format!("replay ring-allreduce n={n}"), flows, "flow", || {
+            black_box(replay_schedule(&net, &sched));
+        });
+    }
+
+    for n in [16usize, 64] {
+        let net = Network::sls(n, 32_000.0, 200e-9);
+        let sched = coll::pairwise_a2a_schedule(n, 64e6);
+        let flows = sched.ops.len() as f64;
+        b.bench_items(&format!("replay pairwise-a2a n={n}"), flows, "flow", || {
+            black_box(replay_schedule(&net, &sched));
+        });
+    }
+
+    // cross-pod (the oversubscription study from examples/netsim_validate)
+    let net = Network::cluster(64, 16, 14_400.0, 1_600.0, 2.0, 5e-6);
+    let sched = coll::pairwise_a2a_schedule(64, 64e6);
+    b.bench_items("replay a2a 4x16 pods (oversubscribed)", sched.ops.len() as f64, "flow", || {
+        black_box(replay_schedule(&net, &sched));
+    });
+}

@@ -1,0 +1,67 @@
+//! Bench: the PJRT runtime hot path — real AOT-compiled training-step
+//! executions (tiny preset) and the host<->literal marshalling around them.
+//! Skipped (with a note) when artifacts are missing.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+//! (requires `make artifacts`)
+
+use lumos::runtime::{artifacts_root, Artifact, Engine, Tensor};
+use lumos::util::bench::{black_box, Bencher};
+use lumos::util::rng::Rng;
+
+fn main() {
+    let Ok(root) = artifacts_root() else {
+        println!("SKIP bench_runtime: artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let Ok(art) = Artifact::load(root.join("tiny")) else {
+        println!("SKIP bench_runtime: artifacts/tiny missing");
+        return;
+    };
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let init = engine.load(&art, "init").expect("compile init");
+    let train = engine.load(&art, "train_step").expect("compile train_step");
+    let fwd = engine.load(&art, "forward").expect("compile forward");
+
+    let batch = art.cfg_usize("batch").unwrap();
+    let seq = art.cfg_usize("seq_len").unwrap();
+    let vocab = art.cfg_usize("vocab").unwrap();
+    let mut rng = Rng::new(7);
+    let tokens = Tensor::I32(
+        (0..batch * (seq + 1)).map(|_| rng.below(vocab as u64) as i32).collect(),
+        vec![batch, seq + 1],
+    );
+    let state = init.execute(&[Tensor::scalar_u32(0)]).unwrap();
+
+    let mut b = Bencher::new();
+    let toks_per_step = (batch * seq) as f64;
+
+    let state2 = state.clone();
+    let tokens2 = tokens.clone();
+    b.bench_items("train_step (tiny, fused)", toks_per_step, "tok", move || {
+        let mut inputs = state2.clone();
+        inputs.push(tokens2.clone());
+        black_box(train.execute(&inputs).unwrap());
+    });
+
+    let params: Vec<Tensor> = state[..art.n_params].to_vec();
+    let fwd_tokens = Tensor::I32(
+        (0..batch * seq).map(|_| rng.below(vocab as u64) as i32).collect(),
+        vec![batch, seq],
+    );
+    b.bench_items("forward (tiny)", toks_per_step, "tok", move || {
+        let mut inputs = params.clone();
+        inputs.push(fwd_tokens.clone());
+        black_box(fwd.execute(&inputs).unwrap());
+    });
+
+    // marshalling cost in isolation: Tensor -> Literal -> Tensor
+    let big = Tensor::F32(vec![1.0; 1 << 20], vec![1 << 20]);
+    b.bench_items("literal roundtrip 4 MB", (4 << 20) as f64, "B", || {
+        let lit = big.to_literal().unwrap();
+        black_box(Tensor::from_literal(&lit).unwrap());
+    });
+
+    let st = init.stats();
+    println!("\ninit entry stats: {} executions, {:.3}s total", st.executions, st.total_secs);
+}

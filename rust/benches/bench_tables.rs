@@ -1,0 +1,23 @@
+//! Bench + regeneration of Tables I–IV: prints the paper's rows and times
+//! the generation path (the sweep engine must stay fast enough for
+//! interactive design-space exploration).
+//!
+//! Run: `cargo bench --bench bench_tables`
+
+use lumos::sweep;
+use lumos::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("=== Regenerated paper tables ===\n");
+    for t in [sweep::table1(), sweep::table2(), sweep::table3(), sweep::table4()] {
+        println!("{}", t.render());
+    }
+
+    println!("=== Generation timing ===");
+    let mut b = Bencher::new();
+    b.bench("table1..4 render", || {
+        for t in [sweep::table1(), sweep::table2(), sweep::table3(), sweep::table4()] {
+            black_box(t.render());
+        }
+    });
+}

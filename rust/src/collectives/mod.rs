@@ -1,0 +1,277 @@
+//! Collective communication cost models and explicit schedules.
+//!
+//! Cost side (paper §V.A): Hockney α+βn models for all-gather,
+//! reduce-scatter, all-reduce, all-to-all and point-to-point on a given
+//! [`DomainSpec`], including the hierarchical (pod-crossing) all-to-all the
+//! 144-pod system is forced into.
+//!
+//! Schedule side: the same algorithms emit explicit `(step, src, dst,
+//! bytes)` operation lists consumed by two independent validators — the
+//! [`crate::netsim`] packet simulator (checks the α/β abstraction holds
+//! under congestion) and the [`crate::coordinator`] runtime (executes them
+//! with real buffers).
+
+use crate::topology::cluster::{Cluster, Domain, DomainSpec};
+
+/// One point-to-point transfer in an explicit schedule. Steps synchronize:
+/// all ops of step `s` complete before step `s+1` starts (bulk-synchronous
+/// approximation of the algorithms' dependency structure).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommOp {
+    pub step: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// A schedule plus metadata for validation.
+#[derive(Debug, Clone)]
+pub struct CommSchedule {
+    pub name: String,
+    pub n_ranks: usize,
+    pub ops: Vec<CommOp>,
+}
+
+impl CommSchedule {
+    pub fn n_steps(&self) -> usize {
+        self.ops.iter().map(|o| o.step + 1).max().unwrap_or(0)
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+
+    /// Max bytes sent by any single rank in one step, summed over steps
+    /// (the bandwidth-bound critical path under a non-blocking fabric).
+    pub fn critical_bytes(&self) -> f64 {
+        let mut per_step_rank = std::collections::BTreeMap::<(usize, usize), f64>::new();
+        for op in &self.ops {
+            *per_step_rank.entry((op.step, op.src)).or_insert(0.0) += op.bytes;
+        }
+        let mut per_step = std::collections::BTreeMap::<usize, f64>::new();
+        for ((step, _), b) in per_step_rank {
+            let e = per_step.entry(step).or_insert(0.0);
+            if b > *e {
+                *e = b;
+            }
+        }
+        per_step.values().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hockney cost models (α + βn)
+// ---------------------------------------------------------------------------
+
+/// Point-to-point: α + n/B.
+pub fn p2p_time(dom: &DomainSpec, bytes: f64) -> f64 {
+    dom.latency_s + bytes / dom.bytes_per_sec()
+}
+
+/// Ring all-reduce of `bytes` per rank over `n` ranks:
+/// 2(n-1) steps of `bytes/n`, i.e. 2(n-1)/n · bytes / B + 2(n-1) α.
+pub fn all_reduce_time(dom: &DomainSpec, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) * dom.latency_s + 2.0 * (nf - 1.0) / nf * bytes / dom.bytes_per_sec()
+}
+
+/// Ring all-gather: each rank ends with `bytes` total gathered from shards
+/// of `bytes/n`: (n-1)/n · bytes / B + (n-1) α.
+pub fn all_gather_time(dom: &DomainSpec, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) * dom.latency_s + (nf - 1.0) / nf * bytes / dom.bytes_per_sec()
+}
+
+/// Reduce-scatter: same cost shape as all-gather.
+pub fn reduce_scatter_time(dom: &DomainSpec, n: usize, bytes: f64) -> f64 {
+    all_gather_time(dom, n, bytes)
+}
+
+/// Pairwise all-to-all where each rank contributes `bytes_per_rank` total
+/// payload (spread over the n-1 peers): (n-1)/n · bytes / (B·η) + (n-1) α,
+/// with η the domain's dense-a2a efficiency derate.
+pub fn all_to_all_time(dom: &DomainSpec, n: usize, bytes_per_rank: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) * dom.latency_s
+        + (nf - 1.0) / nf * bytes_per_rank / (dom.bytes_per_sec() * dom.a2a_efficiency)
+}
+
+/// Hierarchical all-to-all for a group of `span` GPUs on `cluster`
+/// (pod-major placement). In-pod traffic rides the scale-up network; the
+/// pod-crossing fraction rides scale-out. The two phases overlap (different
+/// NICs), so the time is the max of the phases.
+pub fn hierarchical_a2a_time(cluster: &Cluster, span: usize, bytes_per_rank: f64) -> f64 {
+    let up = cluster.domain(Domain::ScaleUp);
+    if span <= cluster.spec.pod_size {
+        return all_to_all_time(up, span, bytes_per_rank);
+    }
+    let out = cluster.domain(Domain::ScaleOut);
+    let cross = cluster.cross_pod_fraction(span);
+    let t_up = all_to_all_time(up, cluster.spec.pod_size, bytes_per_rank * (1.0 - cross));
+    let t_out = (span as f64 - 1.0) * out.latency_s
+        + bytes_per_rank * cross / (out.bytes_per_sec() * out.a2a_efficiency);
+    t_up.max(t_out)
+}
+
+/// Hierarchical all-reduce over `span` ranks: intra-pod ring reduce-scatter
+/// + inter-pod ring all-reduce on the shard + intra-pod all-gather.
+pub fn hierarchical_all_reduce_time(cluster: &Cluster, span: usize, bytes: f64) -> f64 {
+    let pod = cluster.spec.pod_size;
+    if span <= pod {
+        return all_reduce_time(cluster.domain(Domain::ScaleUp), span, bytes);
+    }
+    let up = cluster.domain(Domain::ScaleUp);
+    let out = cluster.domain(Domain::ScaleOut);
+    let n_pods = (span + pod - 1) / pod;
+    reduce_scatter_time(up, pod, bytes)
+        + all_reduce_time(out, n_pods, bytes / pod as f64)
+        + all_gather_time(up, pod, bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Explicit schedules (for netsim + coordinator validation)
+// ---------------------------------------------------------------------------
+
+/// Ring all-reduce schedule: reduce-scatter then all-gather, `bytes/n` per
+/// hop, 2(n-1) steps.
+pub fn ring_all_reduce_schedule(n: usize, bytes: f64) -> CommSchedule {
+    let mut ops = Vec::new();
+    if n > 1 {
+        let shard = bytes / n as f64;
+        for step in 0..2 * (n - 1) {
+            for rank in 0..n {
+                ops.push(CommOp { step, src: rank, dst: (rank + 1) % n, bytes: shard });
+            }
+        }
+    }
+    CommSchedule { name: format!("ring-allreduce-{n}"), n_ranks: n, ops }
+}
+
+/// Ring all-gather schedule: (n-1) steps of `bytes/n`.
+pub fn ring_all_gather_schedule(n: usize, bytes: f64) -> CommSchedule {
+    let mut ops = Vec::new();
+    if n > 1 {
+        let shard = bytes / n as f64;
+        for step in 0..(n - 1) {
+            for rank in 0..n {
+                ops.push(CommOp { step, src: rank, dst: (rank + 1) % n, bytes: shard });
+            }
+        }
+    }
+    CommSchedule { name: format!("ring-allgather-{n}"), n_ranks: n, ops }
+}
+
+/// Pairwise-exchange all-to-all: n-1 steps; at step s, rank r sends its
+/// chunk for rank (r+s) mod n (linear shift generalizes to odd n).
+pub fn pairwise_a2a_schedule(n: usize, bytes_per_rank: f64) -> CommSchedule {
+    let mut ops = Vec::new();
+    if n > 1 {
+        let chunk = bytes_per_rank / (n - 1) as f64;
+        for step in 1..n {
+            for rank in 0..n {
+                ops.push(CommOp { step: step - 1, src: rank, dst: (rank + step) % n, bytes: chunk });
+            }
+        }
+    }
+    CommSchedule { name: format!("pairwise-a2a-{n}"), n_ranks: n, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::cluster::Cluster;
+
+    fn dom(gbps: f64, lat: f64) -> DomainSpec {
+        DomainSpec { name: "t".into(), gbps_per_gpu: gbps, latency_s: lat, a2a_efficiency: 1.0 }
+    }
+
+    #[test]
+    fn hockney_limits() {
+        let d = dom(8_000.0, 1e-6); // 1 TB/s
+        // Large message: bandwidth term dominates; 2(n-1)/n -> 2.
+        let t = all_reduce_time(&d, 1024, 1e12);
+        assert!((t / 2.0 - 1.0).abs() < 0.01, "{t}");
+        // n=1 is free.
+        assert_eq!(all_reduce_time(&d, 1, 1e12), 0.0);
+        assert_eq!(all_to_all_time(&d, 1, 1e12), 0.0);
+    }
+
+    #[test]
+    fn latency_term_scales_with_ranks() {
+        let d = dom(8_000.0, 1e-6);
+        let t = all_gather_time(&d, 17, 0.0);
+        assert!((t - 16e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn a2a_efficiency_derates_bandwidth() {
+        let mut d = dom(8_000.0, 0.0);
+        let t1 = all_to_all_time(&d, 8, 1e9);
+        d.a2a_efficiency = 0.5;
+        let t2 = all_to_all_time(&d, 8, 1e9);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hierarchical_a2a_prefers_pod_when_it_fits() {
+        let c = Cluster::passage_512(1024);
+        let in_pod = hierarchical_a2a_time(&c, 512, 1e9);
+        let cross = hierarchical_a2a_time(&c, 1024, 1e9);
+        assert!(cross > 5.0 * in_pod, "in={in_pod} cross={cross}");
+    }
+
+    #[test]
+    fn hierarchical_allreduce_decomposes() {
+        let c = Cluster::passage_512(2048);
+        let t = hierarchical_all_reduce_time(&c, 1024, 1e9);
+        assert!(t > 0.0);
+        // must exceed a pure in-pod all-reduce of the same bytes
+        assert!(t > all_reduce_time(c.domain(Domain::ScaleUp), 512, 1e9));
+    }
+
+    #[test]
+    fn ring_allreduce_schedule_shape() {
+        let s = ring_all_reduce_schedule(4, 4000.0);
+        assert_eq!(s.n_steps(), 6); // 2(n-1)
+        assert_eq!(s.ops.len(), 6 * 4);
+        // every rank sends exactly bytes/n per step
+        assert!((s.critical_bytes() - 6.0 * 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a2a_schedule_volume_conservation() {
+        let n = 8;
+        let per_rank = 7_000.0;
+        let s = pairwise_a2a_schedule(n, per_rank);
+        assert_eq!(s.n_steps(), n - 1);
+        assert!((s.total_bytes() - n as f64 * per_rank).abs() < 1e-6);
+        // each (src,dst) pair appears exactly once
+        let mut pairs = std::collections::BTreeSet::new();
+        for op in &s.ops {
+            assert!(op.src != op.dst);
+            assert!(pairs.insert((op.src, op.dst)));
+        }
+        assert_eq!(pairs.len(), n * (n - 1));
+    }
+
+    #[test]
+    fn schedule_cost_matches_hockney_bandwidth_term() {
+        // critical_bytes / B should equal the Hockney β-term for the ring.
+        let d = dom(800.0, 0.0); // 100 GB/s
+        let bytes = 1e9;
+        let n = 16;
+        let sched = ring_all_reduce_schedule(n, bytes);
+        let t_sched = sched.critical_bytes() / d.bytes_per_sec();
+        let t_model = all_reduce_time(&d, n, bytes);
+        assert!((t_sched - t_model).abs() / t_model < 1e-9);
+    }
+}

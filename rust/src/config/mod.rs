@@ -1,0 +1,193 @@
+//! Experiment configuration: named presets for every entity in the paper's
+//! evaluation plus JSON round-tripping so users can define their own
+//! clusters/workloads/knobs (`lumos model --config my.json`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::{MoeConfig, Workload};
+use crate::parallel::Parallelism;
+use crate::perf::PerfKnobs;
+use crate::topology::cluster::Cluster;
+use crate::util::json::Json;
+
+/// One fully-specified evaluation point.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub name: String,
+    pub workload: Workload,
+    pub parallelism: Parallelism,
+    pub cluster: Cluster,
+    pub knobs: PerfKnobs,
+}
+
+impl Experiment {
+    /// `cfg` 1..=4 (Table IV) on one of the named clusters:
+    /// "passage-512" | "electrical-512" | "electrical-144".
+    pub fn paper(cluster: &str, cfg: usize) -> Result<Experiment> {
+        let cl = cluster_preset(cluster)?;
+        Ok(Experiment {
+            name: format!("{cluster}/config{cfg}"),
+            workload: Workload::paper_gpt_4p7t(cfg),
+            parallelism: Parallelism::paper(),
+            cluster: cl,
+            knobs: PerfKnobs::default(),
+        })
+    }
+}
+
+/// Named cluster presets (§VI).
+pub fn cluster_preset(name: &str) -> Result<Cluster> {
+    Ok(match name {
+        "passage-512" => Cluster::passage_512(32_768),
+        "electrical-512" => Cluster::electrical_512(32_768),
+        "electrical-144" => Cluster::electrical_144(32_256),
+        other => bail!(
+            "unknown cluster preset '{other}' (have passage-512, electrical-512, electrical-144)"
+        ),
+    })
+}
+
+/// Parse a workload override JSON:
+/// `{"layers":120,"d_model":12288,...,"config":3}` — any omitted field
+/// falls back to the paper workload for `config`.
+pub fn workload_from_json(j: &Json) -> Result<Workload> {
+    let cfg = j.get("config").as_usize().unwrap_or(1);
+    if !(1..=4).contains(&cfg) {
+        bail!("config must be 1..=4, got {cfg}");
+    }
+    let mut w = Workload::paper_gpt_4p7t(cfg);
+    let get = |key: &str| j.get(key).as_usize();
+    if let Some(v) = get("layers") {
+        w.n_layers = v;
+    }
+    if let Some(v) = get("d_model") {
+        w.d_model = v;
+        w.d_ff_base = 4 * v;
+    }
+    if let Some(v) = get("d_ff_base") {
+        w.d_ff_base = v;
+    }
+    if let Some(v) = get("heads") {
+        w.n_heads = v;
+    }
+    if let Some(v) = get("seq_len") {
+        w.seq_len = v;
+    }
+    if let Some(v) = get("global_batch") {
+        w.global_batch = v;
+    }
+    if let Some(v) = j.get("target_tokens").as_f64() {
+        w.target_tokens = v;
+    }
+    if let Some(m) = j.get("moe").as_obj() {
+        let g = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("moe override needs '{k}'"))
+        };
+        w.moe = MoeConfig {
+            total_experts: g("total_experts")?,
+            active_per_token: g("active_per_token")?,
+            granularity: g("granularity")?,
+            experts_per_dp_rank: g("experts_per_dp_rank")?,
+        };
+    }
+    Ok(w)
+}
+
+/// Parse a cluster override JSON:
+/// `{"preset":"passage-512"}` or
+/// `{"n_gpus":32768,"pod_size":512,"scaleup_gbps":32000}`.
+pub fn cluster_from_json(j: &Json) -> Result<Cluster> {
+    if let Some(p) = j.get("preset").as_str() {
+        return cluster_preset(p);
+    }
+    let n = j.get("n_gpus").as_usize().ok_or_else(|| anyhow!("cluster needs n_gpus"))?;
+    let pod = j.get("pod_size").as_usize().ok_or_else(|| anyhow!("cluster needs pod_size"))?;
+    let bw = j
+        .get("scaleup_gbps")
+        .as_f64()
+        .ok_or_else(|| anyhow!("cluster needs scaleup_gbps"))?;
+    Ok(Cluster::custom(n, pod, bw))
+}
+
+/// Parse perf knob overrides.
+pub fn knobs_from_json(j: &Json) -> PerfKnobs {
+    let mut k = PerfKnobs::default();
+    if let Some(v) = j.get("mfu").as_f64() {
+        k.mfu = v;
+    }
+    if let Some(v) = j.get("microbatch_seqs").as_usize() {
+        k.microbatch_seqs = v;
+    }
+    if let Some(v) = j.get("comm_dtype_bytes").as_f64() {
+        k.comm_dtype_bytes = v;
+    }
+    if let Some(v) = j.get("dp_overlap").as_f64() {
+        k.dp_overlap = v;
+    }
+    if let Some(v) = j.get("ep_overlap").as_f64() {
+        k.ep_overlap = v;
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["passage-512", "electrical-512", "electrical-144"] {
+            assert!(cluster_preset(name).is_ok(), "{name}");
+        }
+        assert!(cluster_preset("nvlink-9000").is_err());
+    }
+
+    #[test]
+    fn paper_experiment_builds() {
+        let e = Experiment::paper("passage-512", 4).unwrap();
+        assert_eq!(e.workload.moe.total_experts, 256);
+        assert_eq!(e.parallelism.n_gpus(), 32_768);
+    }
+
+    #[test]
+    fn workload_overrides_apply() {
+        let j = Json::parse(
+            r#"{"config": 2, "layers": 24, "seq_len": 2048,
+                "moe": {"total_experts": 16, "active_per_token": 2,
+                        "granularity": 2, "experts_per_dp_rank": 2}}"#,
+        )
+        .unwrap();
+        let w = workload_from_json(&j).unwrap();
+        assert_eq!(w.n_layers, 24);
+        assert_eq!(w.seq_len, 2048);
+        assert_eq!(w.moe.total_experts, 16);
+        // untouched fields keep paper values
+        assert_eq!(w.d_model, 12_288);
+    }
+
+    #[test]
+    fn cluster_json_both_forms() {
+        let a = cluster_from_json(&Json::parse(r#"{"preset": "passage-512"}"#).unwrap()).unwrap();
+        assert_eq!(a.spec.pod_size, 512);
+        let b = cluster_from_json(
+            &Json::parse(r#"{"n_gpus": 1024, "pod_size": 128, "scaleup_gbps": 9600}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(b.n_pods(), 8);
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        assert!(workload_from_json(&Json::parse(r#"{"config": 7}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn knob_overrides() {
+        let k = knobs_from_json(&Json::parse(r#"{"mfu": 0.5, "ep_overlap": 0.3}"#).unwrap());
+        assert_eq!(k.mfu, 0.5);
+        assert_eq!(k.ep_overlap, 0.3);
+        assert_eq!(k.dp_overlap, 0.9); // default retained
+    }
+}

@@ -1,0 +1,336 @@
+//! In-process communication fabric for the miniature cluster: typed
+//! mailboxes between worker threads plus real collective algorithms (ring
+//! all-reduce / all-gather, pairwise all-to-all, barrier) over them.
+//!
+//! These are the same algorithms whose Hockney costs drive the performance
+//! model and whose schedules the netsim replays — here they move real
+//! `f32` payloads (gradients, routed tokens) between the PJRT executables.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// A tagged message between ranks.
+#[derive(Debug)]
+pub struct Msg {
+    pub src: usize,
+    pub tag: u64,
+    pub data: Vec<f32>,
+}
+
+/// Per-rank endpoint of the fabric.
+pub struct Endpoint {
+    pub rank: usize,
+    pub n_ranks: usize,
+    senders: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+    /// out-of-order arrivals parked until matched
+    parked: BTreeMap<(usize, u64), VecDeque<Vec<f32>>>,
+    barrier: Arc<Barrier>,
+    /// bytes sent (metrics)
+    pub bytes_sent: u64,
+}
+
+/// Build a fully-connected fabric of `n` endpoints.
+pub fn fabric(n: usize) -> Vec<Endpoint> {
+    assert!(n > 0);
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Msg>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(n));
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, inbox)| Endpoint {
+            rank,
+            n_ranks: n,
+            senders: senders.clone(),
+            inbox,
+            parked: BTreeMap::new(),
+            barrier: barrier.clone(),
+            bytes_sent: 0,
+        })
+        .collect()
+}
+
+impl Endpoint {
+    pub fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) {
+        self.bytes_sent += (data.len() * 4) as u64;
+        self.senders[dst]
+            .send(Msg { src: self.rank, tag, data })
+            .expect("peer hung up");
+    }
+
+    /// Receive the message with (src, tag), parking unrelated arrivals.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Vec<f32> {
+        if let Some(q) = self.parked.get_mut(&(src, tag)) {
+            if let Some(m) = q.pop_front() {
+                return m;
+            }
+        }
+        loop {
+            let m = self.inbox.recv().expect("fabric closed");
+            if m.src == src && m.tag == tag {
+                return m.data;
+            }
+            self.parked.entry((m.src, m.tag)).or_default().push_back(m.data);
+        }
+    }
+
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    // ---------------------------------------------------------------------
+    // Collectives (ring algorithms over the mailboxes)
+    // ---------------------------------------------------------------------
+
+    /// In-place ring all-reduce (sum). All ranks must pass equal lengths.
+    /// Reduce-scatter phase then all-gather phase; 2(n-1) hops, exactly the
+    /// schedule `collectives::ring_all_reduce_schedule` costs.
+    pub fn all_reduce_sum(&mut self, data: &mut [f32], tag_base: u64) {
+        let n = self.n_ranks;
+        if n == 1 {
+            return;
+        }
+        let next = (self.rank + 1) % n;
+        let prev = (self.rank + n - 1) % n;
+        let chunks = chunk_ranges(data.len(), n);
+
+        // reduce-scatter: after n-1 steps, rank r owns the full sum of
+        // chunk (r+1) mod n.
+        for step in 0..n - 1 {
+            let send_idx = (self.rank + n - step) % n;
+            let recv_idx = (self.rank + n - step - 1) % n;
+            let out = data[chunks[send_idx].clone()].to_vec();
+            self.send(next, tag_base + step as u64, out);
+            let inc = self.recv(prev, tag_base + step as u64);
+            let dst = &mut data[chunks[recv_idx].clone()];
+            debug_assert_eq!(inc.len(), dst.len());
+            for (d, s) in dst.iter_mut().zip(&inc) {
+                *d += s;
+            }
+        }
+        // all-gather: circulate the finished chunks.
+        for step in 0..n - 1 {
+            let send_idx = (self.rank + 1 + n - step) % n;
+            let recv_idx = (self.rank + n - step) % n;
+            let out = data[chunks[send_idx].clone()].to_vec();
+            self.send(next, tag_base + (n + step) as u64, out);
+            let inc = self.recv(prev, tag_base + (n + step) as u64);
+            data[chunks[recv_idx].clone()].copy_from_slice(&inc);
+        }
+    }
+
+    /// Ring all-gather: each rank contributes `local`; returns all ranks'
+    /// contributions concatenated in rank order (equal lengths required).
+    pub fn all_gather(&mut self, local: &[f32], tag_base: u64) -> Vec<f32> {
+        let n = self.n_ranks;
+        let len = local.len();
+        let mut out = vec![0.0f32; len * n];
+        out[self.rank * len..(self.rank + 1) * len].copy_from_slice(local);
+        if n == 1 {
+            return out;
+        }
+        let next = (self.rank + 1) % n;
+        let prev = (self.rank + n - 1) % n;
+        for step in 0..n - 1 {
+            let send_idx = (self.rank + n - step) % n;
+            let recv_idx = (self.rank + n - step - 1) % n;
+            let buf = out[send_idx * len..(send_idx + 1) * len].to_vec();
+            self.send(next, tag_base + step as u64, buf);
+            let inc = self.recv(prev, tag_base + step as u64);
+            out[recv_idx * len..(recv_idx + 1) * len].copy_from_slice(&inc);
+        }
+        out
+    }
+
+    /// Pairwise all-to-all: `chunks[d]` goes to rank d; returns the chunks
+    /// received from every rank (index = source). Chunk lengths may vary.
+    pub fn all_to_all(&mut self, mut chunks: Vec<Vec<f32>>, tag_base: u64) -> Vec<Vec<f32>> {
+        let n = self.n_ranks;
+        assert_eq!(chunks.len(), n, "need one chunk per destination");
+        let mut out: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
+        out[self.rank] = std::mem::take(&mut chunks[self.rank]);
+        for step in 1..n {
+            let dst = (self.rank + step) % n;
+            let src = (self.rank + n - step) % n;
+            self.send(dst, tag_base + step as u64, std::mem::take(&mut chunks[dst]));
+            out[src] = self.recv(src, tag_base + step as u64);
+        }
+        out
+    }
+
+    /// Broadcast from `root` (linear; used for small control payloads).
+    pub fn broadcast(&mut self, root: usize, data: &mut Vec<f32>, tag: u64) {
+        if self.rank == root {
+            for dst in 0..self.n_ranks {
+                if dst != root {
+                    self.send(dst, tag, data.clone());
+                }
+            }
+        } else {
+            *data = self.recv(root, tag);
+        }
+    }
+}
+
+/// Split `len` into `n` contiguous ranges (first `len % n` get +1).
+pub fn chunk_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+/// Run `f(endpoint)` on `n` worker threads and collect results in rank
+/// order. Panics in workers propagate.
+pub fn run_workers<R: Send + 'static>(
+    n: usize,
+    f: impl Fn(Endpoint) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(n);
+    for ep in fabric(n) {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || f(ep)));
+    }
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (len, n) in [(10, 3), (7, 7), (5, 8), (0, 2), (16, 4)] {
+            let r = chunk_ranges(len, n);
+            assert_eq!(r.len(), n);
+            assert_eq!(r.iter().map(|c| c.len()).sum::<usize>(), len);
+            for w in r.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let results = run_workers(4, |mut ep| {
+            let mut data: Vec<f32> = (0..10).map(|i| (ep.rank * 10 + i) as f32).collect();
+            ep.all_reduce_sum(&mut data, 100);
+            data
+        });
+        // element j: sum over ranks of (r*10 + j) = 60 + 4j
+        for r in &results {
+            for (j, &v) in r.iter().enumerate() {
+                assert_eq!(v, 60.0 + 4.0 * j as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_handles_ragged_lengths() {
+        // length not divisible by n: chunk_ranges covers the remainder.
+        let results = run_workers(3, |mut ep| {
+            let mut data = vec![1.0f32; 7];
+            ep.all_reduce_sum(&mut data, 0);
+            data
+        });
+        for r in &results {
+            assert!(r.iter().all(|&v| v == 3.0), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let results = run_workers(3, |mut ep| {
+            let local = vec![ep.rank as f32; 2];
+            ep.all_gather(&local, 7)
+        });
+        for r in &results {
+            assert_eq!(r, &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let results = run_workers(4, |mut ep| {
+            // send [rank, dst] to each dst
+            let chunks: Vec<Vec<f32>> =
+                (0..4).map(|d| vec![ep.rank as f32, d as f32]).collect();
+            ep.all_to_all(chunks, 9)
+        });
+        for (rank, r) in results.iter().enumerate() {
+            for (src, chunk) in r.iter().enumerate() {
+                assert_eq!(chunk, &[src as f32, rank as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_with_ragged_chunks() {
+        let results = run_workers(3, |mut ep| {
+            let chunks: Vec<Vec<f32>> =
+                (0..3).map(|d| vec![ep.rank as f32; d]).collect(); // len = dst
+            ep.all_to_all(chunks, 3)
+        });
+        for (rank, r) in results.iter().enumerate() {
+            for (src, chunk) in r.iter().enumerate() {
+                assert_eq!(chunk.len(), rank, "src {src}");
+                assert!(chunk.iter().all(|&v| v == src as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let results = run_workers(4, |mut ep| {
+            let mut data = if ep.rank == 2 { vec![42.0, 7.0] } else { vec![] };
+            ep.broadcast(2, &mut data, 5);
+            data
+        });
+        for r in results {
+            assert_eq!(r, vec![42.0, 7.0]);
+        }
+    }
+
+    #[test]
+    fn out_of_order_tags_are_parked() {
+        let results = run_workers(2, |mut ep| {
+            if ep.rank == 0 {
+                ep.send(1, 2, vec![2.0]);
+                ep.send(1, 1, vec![1.0]);
+                vec![]
+            } else {
+                // request tag 1 first even though tag 2 arrives first
+                let a = ep.recv(0, 1);
+                let b = ep.recv(0, 2);
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(results[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn single_rank_collectives_are_noops() {
+        let results = run_workers(1, |mut ep| {
+            let mut d = vec![5.0];
+            ep.all_reduce_sum(&mut d, 0);
+            let g = ep.all_gather(&d, 1);
+            (d, g)
+        });
+        assert_eq!(results[0].0, vec![5.0]);
+        assert_eq!(results[0].1, vec![5.0]);
+    }
+}

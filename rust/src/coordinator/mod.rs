@@ -1,0 +1,24 @@
+//! The L3 coordinator: a miniature distributed-MoE-training runtime.
+//!
+//! The paper's system contribution is the *fabric* (what a bigger scale-up
+//! domain buys); the coordination patterns it accelerates are implemented
+//! here at laptop scale and moved onto real threads with real payloads:
+//!
+//! - [`comm`]: worker fabric + ring all-reduce / all-gather, pairwise
+//!   all-to-all, broadcast, barrier — the algorithms the Hockney models
+//!   cost and the netsim replays.
+//! - [`router`]: top-k expert routing with capacity, drops, device-limited
+//!   routing, and all-to-all payload packing.
+//! - [`pipeline`]: 1F1B microbatch schedule with machine-checked
+//!   invariants (the bubble model used by [`crate::perf`]).
+//!
+//! [`crate::trainer`] composes these with the PJRT runtime into real
+//! data-parallel MoE training.
+
+pub mod comm;
+pub mod pipeline;
+pub mod router;
+
+pub use comm::{chunk_ranges, fabric, run_workers, Endpoint, Msg};
+pub use pipeline::{one_f_one_b, simulate_slots, Action};
+pub use router::{Assignment, RouteResult, Router, RouterConfig};

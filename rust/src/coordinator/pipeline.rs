@@ -1,0 +1,186 @@
+//! 1F1B pipeline-parallel microbatch scheduler (paper §V.A: pipeline
+//! parallelism is one of the modeled strategies; the bubble model in
+//! [`crate::perf`] assumes this schedule — here it is constructed
+//! explicitly and its invariants are machine-checked).
+
+/// One action in a stage's schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Forward(usize),
+    Backward(usize),
+}
+
+/// Per-stage ordered action list for 1F1B with `n_micro` microbatches over
+/// `pp` stages: a warmup of `pp-1-stage` forwards, then alternating 1F1B,
+/// then drain.
+pub fn one_f_one_b(pp: usize, stage: usize, n_micro: usize) -> Vec<Action> {
+    assert!(stage < pp && n_micro >= 1);
+    let warmup = (pp - 1 - stage).min(n_micro);
+    let mut out = Vec::with_capacity(2 * n_micro);
+    let mut next_f = 0;
+    let mut next_b = 0;
+    for _ in 0..warmup {
+        out.push(Action::Forward(next_f));
+        next_f += 1;
+    }
+    while next_b < n_micro {
+        if next_f < n_micro {
+            out.push(Action::Forward(next_f));
+            next_f += 1;
+        }
+        out.push(Action::Backward(next_b));
+        next_b += 1;
+    }
+    out
+}
+
+/// Simulate the schedule's timing: every action costs one slot; an action
+/// can run only when its dependency completed (F_i on stage s needs F_i on
+/// s-1; B_i on stage s needs B_i on s+1; B_i also needs F_i locally).
+/// Returns per-stage completion time in slots.
+pub fn simulate_slots(pp: usize, n_micro: usize) -> Vec<usize> {
+    let schedules: Vec<Vec<Action>> = (0..pp).map(|s| one_f_one_b(pp, s, n_micro)).collect();
+    let mut f_done = vec![vec![usize::MAX; n_micro]; pp];
+    let mut b_done = vec![vec![usize::MAX; n_micro]; pp];
+    let mut cursor = vec![0usize; pp]; // next action index per stage
+    let mut clock = vec![0usize; pp]; // stage-local time
+    let mut progressed = true;
+    while progressed {
+        progressed = false;
+        for s in 0..pp {
+            while cursor[s] < schedules[s].len() {
+                let a = schedules[s][cursor[s]];
+                let ready_at = match a {
+                    Action::Forward(i) => {
+                        if s == 0 {
+                            0
+                        } else if f_done[s - 1][i] == usize::MAX {
+                            break;
+                        } else {
+                            f_done[s - 1][i]
+                        }
+                    }
+                    Action::Backward(i) => {
+                        let up = if s == pp - 1 {
+                            if f_done[s][i] == usize::MAX {
+                                break;
+                            }
+                            f_done[s][i]
+                        } else if b_done[s + 1][i] == usize::MAX {
+                            break;
+                        } else {
+                            b_done[s + 1][i]
+                        };
+                        if f_done[s][i] == usize::MAX {
+                            break;
+                        }
+                        up.max(f_done[s][i])
+                    }
+                };
+                let start = clock[s].max(ready_at);
+                let end = start + 1;
+                match a {
+                    Action::Forward(i) => f_done[s][i] = end,
+                    Action::Backward(i) => b_done[s][i] = end,
+                }
+                clock[s] = end;
+                cursor[s] += 1;
+                progressed = true;
+            }
+        }
+    }
+    assert!(cursor.iter().zip(&schedules).all(|(&c, s)| c == s.len()), "schedule deadlocked");
+    clock
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn every_microbatch_runs_once_each_direction() {
+        check("1f1b completeness", 128, |g| {
+            let pp = g.usize(1, 8);
+            let stage = g.usize(0, pp - 1);
+            let n_micro = g.usize(1, 32);
+            let sched = one_f_one_b(pp, stage, n_micro);
+            let mut f = vec![0; n_micro];
+            let mut b = vec![0; n_micro];
+            for a in &sched {
+                match a {
+                    Action::Forward(i) => f[*i] += 1,
+                    Action::Backward(i) => b[*i] += 1,
+                }
+            }
+            prop_assert!(f.iter().all(|&c| c == 1), "forward multiplicity");
+            prop_assert!(b.iter().all(|&c| c == 1), "backward multiplicity");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backward_never_precedes_local_forward() {
+        check("1f1b causality", 128, |g| {
+            let pp = g.usize(1, 8);
+            let stage = g.usize(0, pp - 1);
+            let n_micro = g.usize(1, 32);
+            let sched = one_f_one_b(pp, stage, n_micro);
+            let mut seen_f = vec![false; n_micro];
+            for a in &sched {
+                match a {
+                    Action::Forward(i) => seen_f[*i] = true,
+                    Action::Backward(i) => {
+                        prop_assert!(seen_f[*i], "B{} before F{}", i, i)
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn in_flight_microbatches_bounded_by_depth() {
+        // 1F1B's memory guarantee: at most pp microbatches have run F but
+        // not yet B on any stage.
+        check("1f1b activation bound", 64, |g| {
+            let pp = g.usize(1, 8);
+            let stage = g.usize(0, pp - 1);
+            let n_micro = g.usize(1, 32);
+            let sched = one_f_one_b(pp, stage, n_micro);
+            let mut inflight: i64 = 0;
+            for a in &sched {
+                match a {
+                    Action::Forward(_) => inflight += 1,
+                    Action::Backward(_) => inflight -= 1,
+                }
+                prop_assert!(
+                    inflight <= pp as i64,
+                    "stage {} holds {} activations (pp={})",
+                    stage,
+                    inflight,
+                    pp
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn makespan_matches_bubble_model() {
+        // With F and B each one slot, total = 2*(n_micro + pp - 1) slots —
+        // the (n_micro + pp - 1) factor the perf engine uses.
+        for (pp, m) in [(4, 8), (8, 16), (2, 4), (1, 5)] {
+            let clocks = simulate_slots(pp, m);
+            let makespan = *clocks.iter().max().unwrap();
+            assert_eq!(makespan, 2 * (m + pp - 1), "pp={pp} m={m}");
+        }
+    }
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        let clocks = simulate_slots(1, 10);
+        assert_eq!(clocks[0], 20);
+    }
+}

@@ -1,0 +1,295 @@
+//! Expert-parallel token router: the L3 coordination piece of MoE training
+//! (paper §II.A, §V.B). Maps each token's top-k expert choices to
+//! destination ranks, enforces per-expert capacity (GShard-style), tracks
+//! drops and per-expert load, and packs per-destination payloads for the
+//! all-to-all.
+//!
+//! The paper's closing §VI point — Passage's high-bandwidth domain
+//! "eliminates strict routing constraints" like device-limited routing —
+//! is exercised by the `max_devices_per_token` knob (DeepSeek-V2-style
+//! M-device restriction) and the `routing_restriction` ablation bench.
+
+use crate::util::rng::Rng;
+
+/// Static routing configuration for one MoE layer.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Experts hosted per EP rank.
+    pub experts_per_rank: usize,
+    /// Per-expert token capacity per routing round.
+    pub capacity: usize,
+    /// Optional device-limited routing: each token's experts must sit on
+    /// at most M distinct ranks (None = unrestricted — the Passage case).
+    pub max_devices_per_token: Option<usize>,
+}
+
+impl RouterConfig {
+    pub fn n_ranks(&self) -> usize {
+        assert_eq!(self.n_experts % self.experts_per_rank, 0);
+        self.n_experts / self.experts_per_rank
+    }
+
+    pub fn rank_of_expert(&self, e: usize) -> usize {
+        e / self.experts_per_rank
+    }
+}
+
+/// One routed token instance (token replicated per selected expert).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub token: usize,
+    pub expert: usize,
+    pub rank: usize,
+    /// Slot within the expert's capacity buffer.
+    pub slot: usize,
+}
+
+/// Result of routing one batch of tokens.
+#[derive(Debug, Clone)]
+pub struct RouteResult {
+    pub assignments: Vec<Assignment>,
+    /// (token, expert) pairs dropped by capacity overflow.
+    pub dropped: Vec<(usize, usize)>,
+    /// tokens accepted per expert.
+    pub expert_load: Vec<usize>,
+    /// token-instances destined to each rank (a2a payload sizes).
+    pub per_rank_tokens: Vec<usize>,
+}
+
+impl RouteResult {
+    /// Load-imbalance factor: max/mean expert load (1.0 = perfectly even).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.expert_load.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.expert_load.iter().sum::<usize>() as f64
+            / self.expert_load.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    pub fn drop_rate(&self, n_tokens: usize, top_k: usize) -> f64 {
+        self.dropped.len() as f64 / (n_tokens * top_k) as f64
+    }
+}
+
+/// The router itself (stateless between batches apart from config).
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        assert!(cfg.top_k <= cfg.n_experts);
+        Router { cfg }
+    }
+
+    /// Route tokens given their top-k expert preference lists (ordered by
+    /// gate score). Capacity is granted in (slot, token) order, matching
+    /// the L2 model's GShard cumsum dispatch (model.py `_route`).
+    pub fn route(&self, choices: &[Vec<usize>]) -> RouteResult {
+        let e = self.cfg.n_experts;
+        let mut load = vec![0usize; e];
+        let mut assignments = Vec::new();
+        let mut dropped = Vec::new();
+        let mut per_rank = vec![0usize; self.cfg.n_ranks()];
+
+        for slot in 0..self.cfg.top_k {
+            for (token, prefs) in choices.iter().enumerate() {
+                let Some(&expert) = prefs.get(slot) else { continue };
+                assert!(expert < e, "expert {expert} out of range");
+                if let Some(m) = self.cfg.max_devices_per_token {
+                    // count distinct ranks already used by this token
+                    let used: std::collections::BTreeSet<usize> = assignments
+                        .iter()
+                        .filter(|a: &&Assignment| a.token == token)
+                        .map(|a| a.rank)
+                        .collect();
+                    let rank = self.cfg.rank_of_expert(expert);
+                    if !used.contains(&rank) && used.len() >= m {
+                        dropped.push((token, expert));
+                        continue;
+                    }
+                }
+                if load[expert] >= self.cfg.capacity {
+                    dropped.push((token, expert));
+                    continue;
+                }
+                let rank = self.cfg.rank_of_expert(expert);
+                assignments.push(Assignment { token, expert, rank, slot: load[expert] });
+                load[expert] += 1;
+                per_rank[rank] += 1;
+            }
+        }
+        RouteResult { assignments, dropped, expert_load: load, per_rank_tokens: per_rank }
+    }
+
+    /// Pack per-destination-rank payloads for the all-to-all: each
+    /// assignment contributes the token's feature vector.
+    pub fn pack_a2a(
+        &self,
+        result: &RouteResult,
+        features: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        let d = features.first().map_or(0, Vec::len);
+        let mut out: Vec<Vec<f32>> = (0..self.cfg.n_ranks()).map(|_| Vec::new()).collect();
+        for a in &result.assignments {
+            out[a.rank].extend_from_slice(&features[a.token]);
+        }
+        for (r, buf) in out.iter().enumerate() {
+            debug_assert_eq!(buf.len(), result.per_rank_tokens[r] * d);
+        }
+        out
+    }
+
+    /// Draw top-k expert choices from a Zipf popularity distribution
+    /// (workload generator for router/bench/netsim studies).
+    pub fn synthetic_choices(
+        &self,
+        n_tokens: usize,
+        zipf_alpha: f64,
+        rng: &mut Rng,
+    ) -> Vec<Vec<usize>> {
+        let e = self.cfg.n_experts;
+        // Random expert permutation so popularity isn't tied to rank order.
+        let mut perm: Vec<usize> = (0..e).collect();
+        rng.shuffle(&mut perm);
+        (0..n_tokens)
+            .map(|_| {
+                let mut picks = Vec::with_capacity(self.cfg.top_k);
+                while picks.len() < self.cfg.top_k {
+                    let c = perm[rng.zipf(e, zipf_alpha)];
+                    if !picks.contains(&c) {
+                        picks.push(c);
+                    }
+                }
+                picks
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn cfg(e: usize, k: usize, epr: usize, cap: usize) -> RouterConfig {
+        RouterConfig {
+            n_experts: e,
+            top_k: k,
+            experts_per_rank: epr,
+            capacity: cap,
+            max_devices_per_token: None,
+        }
+    }
+
+    #[test]
+    fn routes_everything_with_headroom() {
+        let r = Router::new(cfg(4, 2, 2, 100));
+        let choices = vec![vec![0, 1], vec![2, 3], vec![1, 2]];
+        let res = r.route(&choices);
+        assert_eq!(res.assignments.len(), 6);
+        assert!(res.dropped.is_empty());
+        assert_eq!(res.expert_load, vec![1, 2, 2, 1]);
+        assert_eq!(res.per_rank_tokens, vec![3, 3]);
+    }
+
+    #[test]
+    fn capacity_overflow_drops_in_order() {
+        let r = Router::new(cfg(2, 1, 1, 2));
+        let choices: Vec<Vec<usize>> = (0..5).map(|_| vec![0]).collect();
+        let res = r.route(&choices);
+        assert_eq!(res.expert_load[0], 2);
+        assert_eq!(res.dropped.len(), 3);
+        // earliest tokens won the slots
+        assert_eq!(res.assignments[0].token, 0);
+        assert_eq!(res.assignments[1].token, 1);
+    }
+
+    #[test]
+    fn slots_are_dense_and_unique_per_expert() {
+        let r = Router::new(cfg(3, 2, 3, 8));
+        let mut rng = Rng::new(1);
+        let choices = r.synthetic_choices(20, 1.0, &mut rng);
+        let res = r.route(&choices);
+        for e in 0..3 {
+            let mut slots: Vec<usize> = res
+                .assignments
+                .iter()
+                .filter(|a| a.expert == e)
+                .map(|a| a.slot)
+                .collect();
+            slots.sort_unstable();
+            let expect: Vec<usize> = (0..slots.len()).collect();
+            assert_eq!(slots, expect);
+        }
+    }
+
+    #[test]
+    fn device_limited_routing_restricts_ranks() {
+        let mut c = cfg(8, 4, 1, 100); // 8 ranks, 1 expert each
+        c.max_devices_per_token = Some(2);
+        let r = Router::new(c);
+        let choices = vec![vec![0, 1, 2, 3]];
+        let res = r.route(&choices);
+        let ranks: std::collections::BTreeSet<usize> =
+            res.assignments.iter().map(|a| a.rank).collect();
+        assert!(ranks.len() <= 2);
+        assert_eq!(res.dropped.len(), 2);
+    }
+
+    #[test]
+    fn pack_a2a_sizes_match_loads() {
+        let r = Router::new(cfg(4, 2, 2, 10));
+        let choices = vec![vec![0, 2], vec![3, 1]];
+        let res = r.route(&choices);
+        let feats = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let packed = r.pack_a2a(&res, &feats);
+        assert_eq!(packed.len(), 2);
+        let total: usize = packed.iter().map(Vec::len).sum();
+        assert_eq!(total, res.assignments.len() * 2);
+    }
+
+    #[test]
+    fn conservation_property() {
+        check("routed + dropped == offered", 64, |g| {
+            let e = [2usize, 4, 8][g.usize(0, 2)];
+            let k = g.usize(1, e.min(3));
+            let cap = g.usize(1, 16);
+            let n = g.usize(1, 64);
+            let r = Router::new(cfg(e, k, 1, cap));
+            let mut rng = Rng::new(g.u64(1 << 30));
+            let choices = r.synthetic_choices(n, 1.0, &mut rng);
+            let res = r.route(&choices);
+            prop_assert!(
+                res.assignments.len() + res.dropped.len() == n * k,
+                "conservation violated: {} + {} != {}",
+                res.assignments.len(),
+                res.dropped.len(),
+                n * k
+            );
+            for (&l, _) in res.expert_load.iter().zip(0..) {
+                prop_assert!(l <= cap, "capacity exceeded");
+            }
+            let rank_sum: usize = res.per_rank_tokens.iter().sum();
+            prop_assert!(rank_sum == res.assignments.len(), "per-rank mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn skew_increases_imbalance_and_drops() {
+        let r = Router::new(cfg(8, 2, 1, 24));
+        let mut rng = Rng::new(7);
+        let uniform = r.route(&r.synthetic_choices(64, 0.01, &mut rng));
+        let skewed = r.route(&r.synthetic_choices(64, 2.0, &mut rng));
+        assert!(skewed.imbalance() > uniform.imbalance());
+        assert!(skewed.dropped.len() >= uniform.dropped.len());
+    }
+}

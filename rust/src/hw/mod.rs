@@ -1,0 +1,20 @@
+//! Hardware technology models (paper §II–IV): SerDes, interconnect optics,
+//! package geometry, power and area accounting. These feed both the
+//! standalone design-space figures (Tables I–III, Figs 7–8) and the network
+//! parameters of the performance model.
+
+pub mod area;
+pub mod optics;
+pub mod package;
+pub mod power;
+pub mod reliability;
+pub mod serdes;
+
+pub use area::{additional_area_ratio, AreaBreakdown};
+pub use optics::{catalog, cpo_2p5d, dac_copper, lpo_dr8, passage_interposer,
+                 pluggable_osfp, InterconnectTech, TechKind};
+pub use package::{GpuPackage, SwitchPackage};
+pub use power::{fig7_comparison, pod_optics_power_kw, PowerBreakdown};
+pub use reliability::{FitRates, LinkReliability, RackBudget, Replaceable};
+pub use serdes::{Modulation, Serdes, SERDES_112G_LR, SERDES_112G_XSR,
+                 SERDES_224G_LR, SERDES_56G_NRZ};

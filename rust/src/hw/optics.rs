@@ -1,0 +1,242 @@
+//! Interconnect technology models (paper §II.C, §III, §IV, Tables II–III).
+//!
+//! Each [`InterconnectTech`] decomposes a link's energy into in-package
+//! (host SerDes + any on-package optics) and off-package (module / external
+//! laser) components, and carries the geometry needed by the area model
+//! (Fig. 8): module footprints, OE footprints, beachfront, fiber pitch.
+
+use crate::hw::serdes::{Serdes, SERDES_224G_LR, SERDES_56G_NRZ};
+
+/// Technology families compared by the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TechKind {
+    /// Passive copper (DAC) — zero optics power, ~1 m reach.
+    Copper,
+    /// Conventional retimed pluggable module (OSFP class).
+    Pluggable,
+    /// Linear pluggable optics: DSP removed from module.
+    Lpo,
+    /// 2.5D optical engine, 2D-integrated co-packaged optics.
+    Cpo,
+    /// Lightmatter Passage: 3D optical interposer.
+    Passage,
+}
+
+/// A scale-up interconnect technology design point.
+#[derive(Debug, Clone)]
+pub struct InterconnectTech {
+    pub kind: TechKind,
+    pub name: &'static str,
+    /// Host/in-package SerDes driving the link.
+    pub serdes: Serdes,
+    /// In-package optics energy (OE PIC/EIC on package), pJ/bit.
+    pub optics_in_pkg_pj: f64,
+    /// Off-package energy (pluggable module electronics or external laser),
+    /// pJ/bit.
+    pub off_pkg_pj: f64,
+    /// Maximum reach in meters.
+    pub reach_m: f64,
+    /// Wavelengths multiplexed per fiber (1 = single-lambda).
+    pub lambdas_per_fiber: usize,
+    /// Areal bandwidth density for on-board modules, Gb/s per mm² (0 if
+    /// co-packaged). LPO/pluggable consume board area, not package area.
+    pub board_density_gbps_mm2: f64,
+    /// Package-area expansion density, Gb/s per mm² of *added* package area
+    /// (OE + beachfront for CPO; fiber-attach ring for Passage).
+    pub pkg_density_gbps_mm2: f64,
+}
+
+impl InterconnectTech {
+    /// Total energy per bit (optics + PHY + laser), Table III bottom row.
+    pub fn total_pj_per_bit(&self) -> f64 {
+        self.in_pkg_pj_per_bit() + self.off_pkg_pj
+    }
+
+    /// In-package pJ/bit (host SerDes + on-package optics), Table III row 1.
+    pub fn in_pkg_pj_per_bit(&self) -> f64 {
+        self.serdes.pj_per_bit + self.optics_in_pkg_pj
+    }
+
+    /// Link power in watts for `gbps` of (unidirectional) bandwidth.
+    pub fn power_w(&self, gbps: f64) -> f64 {
+        self.total_pj_per_bit() * gbps / 1000.0
+    }
+
+    /// In-package power only (competes with compute for the package budget).
+    pub fn in_pkg_power_w(&self, gbps: f64) -> f64 {
+        self.in_pkg_pj_per_bit() * gbps / 1000.0
+    }
+
+    /// Board area consumed by modules for `gbps`, mm² (0 for co-packaged).
+    pub fn board_area_mm2(&self, gbps: f64) -> f64 {
+        if self.board_density_gbps_mm2 == 0.0 {
+            0.0
+        } else {
+            gbps / self.board_density_gbps_mm2
+        }
+    }
+
+    /// Added package area for `gbps`, mm² (0 for board-pluggable).
+    pub fn pkg_area_mm2(&self, gbps: f64) -> f64 {
+        if self.pkg_density_gbps_mm2 == 0.0 {
+            0.0
+        } else {
+            gbps / self.pkg_density_gbps_mm2
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Catalog (paper's design points)
+// --------------------------------------------------------------------------
+
+/// Passive copper: SerDes only; reach limits pod to a rack (§II.C.2).
+pub fn dac_copper() -> InterconnectTech {
+    InterconnectTech {
+        kind: TechKind::Copper,
+        name: "DAC copper (224G)",
+        serdes: SERDES_224G_LR,
+        optics_in_pkg_pj: 0.0,
+        off_pkg_pj: 0.0,
+        reach_m: 1.0,
+        lambdas_per_fiber: 0,
+        board_density_gbps_mm2: 0.0,
+        pkg_density_gbps_mm2: 0.0,
+    }
+}
+
+/// Conventional retimed pluggable optical module: 5 (host) + 16 (module)
+/// = 21 pJ/bit (Table II), >2000 mm² per module.
+pub fn pluggable_osfp() -> InterconnectTech {
+    InterconnectTech {
+        kind: TechKind::Pluggable,
+        name: "Pluggable OSFP (retimed)",
+        serdes: SERDES_224G_LR,
+        optics_in_pkg_pj: 0.0,
+        off_pkg_pj: 16.0,
+        reach_m: 500.0,
+        lambdas_per_fiber: 1,
+        // OSFP-XD: 105.8 x 22.58 mm = 2389 mm²; 3.2T per module.
+        board_density_gbps_mm2: 3200.0 / (105.8 * 22.58),
+        pkg_density_gbps_mm2: 0.0,
+    }
+}
+
+/// 1.6T DR8 LPO, 224G/lane: 5 (host SerDes) + 8 (module) = 13 pJ/bit
+/// (Table III col 1).
+pub fn lpo_dr8() -> InterconnectTech {
+    InterconnectTech {
+        kind: TechKind::Lpo,
+        name: "1.6T DR8 LPO 224G",
+        serdes: SERDES_224G_LR,
+        optics_in_pkg_pj: 0.0,
+        off_pkg_pj: 8.0,
+        reach_m: 500.0,
+        lambdas_per_fiber: 1,
+        // §IV.B.a: OSFP-XD form factor, 3.2T extra-dense module
+        // -> 1.3 Gb/s/mm².
+        board_density_gbps_mm2: 3200.0 / (105.8 * 22.58),
+        pkg_density_gbps_mm2: 0.0,
+    }
+}
+
+/// 224G 2.5D CPO with 2D integration: host 5 + OE in-package 4.7 + laser
+/// 2.3 = 12 pJ/bit (Table III col 2, from the Bailly/Broadcom reference).
+pub fn cpo_2p5d() -> InterconnectTech {
+    InterconnectTech {
+        kind: TechKind::Cpo,
+        name: "224G 2.5D CPO (2D integrated)",
+        serdes: SERDES_224G_LR,
+        optics_in_pkg_pj: 4.7,
+        off_pkg_pj: 2.3,
+        reach_m: 500.0,
+        lambdas_per_fiber: 1,
+        board_density_gbps_mm2: 0.0,
+        // §IV.B.b: 15x25 mm OE @ 12.8T = 34 Gb/s/mm², ~24 Gb/s/mm² with
+        // beachfront. Use the with-beachfront figure — Fig 8 counts both.
+        pkg_density_gbps_mm2: 24.4,
+    }
+}
+
+/// Passage optical interposer, 56G ×8λ: SerDes 2 + PIC 1.2 + laser 1.1
+/// = 4.3 pJ/bit (Table III col 3).
+pub fn passage_interposer() -> InterconnectTech {
+    InterconnectTech {
+        kind: TechKind::Passage,
+        name: "56Gx8λ Passage interposer",
+        serdes: SERDES_56G_NRZ,
+        optics_in_pkg_pj: 1.2,
+        off_pkg_pj: 1.1, // external laser
+        reach_m: 500.0,
+        lambdas_per_fiber: 8,
+        board_density_gbps_mm2: 0.0,
+        // §IV.B.c: 127 µm fibers, 4/mm of shoreline, 2TX+2RX per 5 mm²
+        // of fiber-attach ring -> 160 Gb/s/mm² of added package area.
+        pkg_density_gbps_mm2: 160.0,
+    }
+}
+
+/// All techs compared in Fig. 7 / Fig. 8, in paper order.
+pub fn catalog() -> Vec<InterconnectTech> {
+    vec![pluggable_osfp(), lpo_dr8(), cpo_2p5d(), passage_interposer()]
+}
+
+/// Passage WDM fiber capacity (§III.a): up to 16 λ × 112G PAM-4
+/// = 1.792 Tb/s per fiber.
+pub fn passage_fiber_capacity_gbps(lambdas: usize, gbps_per_lambda: f64) -> f64 {
+    lambdas as f64 * gbps_per_lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_totals() {
+        assert!((lpo_dr8().total_pj_per_bit() - 13.0).abs() < 1e-9);
+        assert!((cpo_2p5d().total_pj_per_bit() - 12.0).abs() < 1e-9);
+        assert!((passage_interposer().total_pj_per_bit() - 4.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table3_in_vs_off_package_split() {
+        let cpo = cpo_2p5d();
+        assert!((cpo.in_pkg_pj_per_bit() - 9.7).abs() < 1e-9);
+        assert!((cpo.off_pkg_pj - 2.3).abs() < 1e-9);
+        let p = passage_interposer();
+        assert!((p.in_pkg_pj_per_bit() - 3.2).abs() < 1e-9);
+        assert!((p.off_pkg_pj - 1.1).abs() < 1e-9);
+        let lpo = lpo_dr8();
+        assert!((lpo.in_pkg_pj_per_bit() - 5.0).abs() < 1e-9);
+        assert!((lpo.off_pkg_pj - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_pluggable_is_21pj() {
+        assert!((pluggable_osfp().total_pj_per_bit() - 21.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_parity_threshold() {
+        // §II.C.3: at 5 pJ/bit optics ≈ copper parity; 14.4 Tb/s -> 72 W.
+        let hypothetical = InterconnectTech {
+            off_pkg_pj: 5.0 - SERDES_224G_LR.pj_per_bit,
+            ..dac_copper()
+        };
+        assert!((hypothetical.power_w(14_400.0) - 72.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn passage_wdm_fiber_capacity() {
+        assert!((passage_fiber_capacity_gbps(16, 112.0) - 1792.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_model_hooks() {
+        // 32 Tb/s: LPO >20,000 mm² of board; Passage ~200 mm² of package.
+        assert!(lpo_dr8().board_area_mm2(32_000.0) > 20_000.0);
+        assert!((passage_interposer().pkg_area_mm2(32_000.0) - 200.0).abs() < 1.0);
+        assert_eq!(passage_interposer().board_area_mm2(32_000.0), 0.0);
+        assert_eq!(lpo_dr8().pkg_area_mm2(32_000.0), 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! GPU-level optics power accounting (paper Fig. 7) and pod-level power
+//! (the GTC "20 kW just for the NVLink spine" framing, §II.B).
+
+use crate::hw::optics::InterconnectTech;
+
+/// Power breakdown for driving `gbps` of unidirectional scale-up I/O.
+#[derive(Debug, Clone)]
+pub struct PowerBreakdown {
+    pub tech: String,
+    pub gbps: f64,
+    pub serdes_w: f64,
+    pub optics_in_pkg_w: f64,
+    pub off_pkg_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn compute(tech: &InterconnectTech, gbps: f64) -> Self {
+        PowerBreakdown {
+            tech: tech.name.to_string(),
+            gbps,
+            serdes_w: tech.serdes.pj_per_bit * gbps / 1000.0,
+            optics_in_pkg_w: tech.optics_in_pkg_pj * gbps / 1000.0,
+            off_pkg_w: tech.off_pkg_pj * gbps / 1000.0,
+        }
+    }
+
+    pub fn in_pkg_w(&self) -> f64 {
+        self.serdes_w + self.optics_in_pkg_w
+    }
+
+    pub fn total_w(&self) -> f64 {
+        self.in_pkg_w() + self.off_pkg_w
+    }
+}
+
+/// Fig. 7 comparison at the paper's 32 Tb/s GPU design point: returns
+/// (breakdowns, passage_advantage_over_best_conventional).
+pub fn fig7_comparison(gbps: f64) -> (Vec<PowerBreakdown>, f64) {
+    use crate::hw::optics::{catalog, TechKind};
+    let breakdowns: Vec<PowerBreakdown> = catalog()
+        .iter()
+        .map(|t| PowerBreakdown::compute(t, gbps))
+        .collect();
+    let passage = breakdowns
+        .iter()
+        .find(|b| b.tech.contains("Passage"))
+        .expect("catalog has passage");
+    let best_conventional = catalog()
+        .iter()
+        .zip(&breakdowns)
+        .filter(|(t, _)| matches!(t.kind, TechKind::Lpo | TechKind::Cpo))
+        .map(|(_, b)| b.total_w())
+        .fold(f64::INFINITY, f64::min);
+    (breakdowns.clone(), best_conventional / passage.total_w())
+}
+
+/// Pod-level optics power: `n_gpus` × per-GPU I/O power plus switch-side
+/// power for the same traffic (SLS: every bit crosses one switch).
+pub fn pod_optics_power_kw(
+    tech: &InterconnectTech,
+    n_gpus: usize,
+    gbps_per_gpu: f64,
+    switch_fraction: f64,
+) -> f64 {
+    let gpu_side = tech.power_w(gbps_per_gpu) * n_gpus as f64;
+    gpu_side * (1.0 + switch_fraction) / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::optics::{cpo_2p5d, lpo_dr8, passage_interposer, pluggable_osfp};
+
+    const GBPS: f64 = 32_000.0;
+
+    #[test]
+    fn fig7_absolute_totals() {
+        assert!((PowerBreakdown::compute(&pluggable_osfp(), GBPS).total_w() - 672.0).abs() < 1e-6);
+        assert!((PowerBreakdown::compute(&lpo_dr8(), GBPS).total_w() - 416.0).abs() < 1e-6);
+        assert!((PowerBreakdown::compute(&cpo_2p5d(), GBPS).total_w() - 384.0).abs() < 1e-6);
+        assert!((PowerBreakdown::compute(&passage_interposer(), GBPS).total_w() - 137.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn fig7_passage_2p8x_advantage() {
+        let (_, adv) = fig7_comparison(GBPS);
+        // Paper: "2.8× less power of Passage interposer over conventional
+        // optics" (vs the 12 pJ/bit CPO class).
+        assert!((adv - 2.79).abs() < 0.05, "advantage {adv}");
+    }
+
+    #[test]
+    fn in_vs_off_package_split_passage() {
+        let b = PowerBreakdown::compute(&passage_interposer(), GBPS);
+        // 2 pJ/b serdes + 1.2 PIC in package; 1.1 laser off package.
+        assert!((b.in_pkg_w() - 102.4).abs() < 0.1);
+        assert!((b.off_pkg_w - 35.2).abs() < 0.1);
+    }
+
+    #[test]
+    fn twenty_pj_per_bit_is_infeasible() {
+        // §II.C.3: at 20 pJ/bit, 14.4 Tb/s costs 288 W of the GPU budget.
+        let w: f64 = 20.0 * 14_400.0 / 1000.0;
+        assert!((w - 288.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pod_power_scales_linearly() {
+        let p1 = pod_optics_power_kw(&lpo_dr8(), 72, 14_400.0, 1.0);
+        let p2 = pod_optics_power_kw(&lpo_dr8(), 144, 14_400.0, 1.0);
+        assert!((p2 / p1 - 2.0).abs() < 1e-9);
+        // 72 GPUs at 14.4 Tb/s, 13 pJ/bit, GPU+switch sides ≈ 27 kW — the
+        // right order of magnitude vs GTC's "20 kW for the spine".
+        assert!(p1 > 15.0 && p1 < 40.0, "{p1}");
+    }
+}

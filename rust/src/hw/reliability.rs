@@ -1,0 +1,204 @@
+//! Reliability & serviceability model (paper §II.C.3, §III.d).
+//!
+//! The paper's argument for external lasers: lasers dominate optics failure
+//! rates and are temperature-sensitive, so field-replaceable *external*
+//! laser modules keep the expensive GPU package serviceable, while
+//! in-package lasers (or pluggable modules with integrated lasers) turn a
+//! laser failure into a GPU-tray event. This module quantifies that with a
+//! standard FIT (failures per 1e9 device-hours) composition.
+
+/// FIT rates for link components (industry-typical orders of magnitude;
+/// the *ratios* drive the conclusions, as in the paper's qualitative
+/// argument).
+#[derive(Debug, Clone)]
+pub struct FitRates {
+    /// one laser diode
+    pub laser: f64,
+    /// photonic IC (modulators, waveguides, TIA)
+    pub pic: f64,
+    /// SerDes/retimer electrical path
+    pub electrical: f64,
+    /// fiber connector (contamination-driven)
+    pub connector: f64,
+}
+
+impl Default for FitRates {
+    fn default() -> Self {
+        // Lasers fail 1-2 orders of magnitude more often than passive
+        // photonics or silicon (§II.C.3: "failing at higher rates compared
+        // to copper connections").
+        FitRates { laser: 500.0, pic: 20.0, electrical: 10.0, connector: 50.0 }
+    }
+}
+
+/// Where the failing component sits, which determines the blast radius of
+/// a replacement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Replaceable {
+    /// Swap a pluggable module / external laser unit: minutes, link-local.
+    FieldUnit,
+    /// Re-seat or replace the GPU tray: hours, takes the GPU out.
+    GpuTray,
+}
+
+/// A link design point for reliability accounting.
+#[derive(Debug, Clone)]
+pub struct LinkReliability {
+    pub name: &'static str,
+    pub lasers_per_link: f64,
+    pub laser_location: Replaceable,
+    pub connectors_per_link: f64,
+    pub fits: FitRates,
+}
+
+impl LinkReliability {
+    /// Pluggable/LPO module: lasers inside the module (field unit).
+    pub fn pluggable(lasers: f64) -> Self {
+        LinkReliability {
+            name: "pluggable/LPO module",
+            lasers_per_link: lasers,
+            laser_location: Replaceable::FieldUnit,
+            connectors_per_link: 2.0,
+            fits: FitRates::default(),
+        }
+    }
+
+    /// In-package laser CPO: laser failure costs the package.
+    pub fn cpo_integrated_laser(lasers: f64) -> Self {
+        LinkReliability {
+            name: "CPO (integrated laser)",
+            lasers_per_link: lasers,
+            laser_location: Replaceable::GpuTray,
+            connectors_per_link: 2.0,
+            fits: FitRates::default(),
+        }
+    }
+
+    /// Passage: external laser module feeding the interposer (§III.d).
+    pub fn passage_external_laser(lasers: f64) -> Self {
+        LinkReliability {
+            name: "Passage (external laser)",
+            lasers_per_link: lasers,
+            laser_location: Replaceable::FieldUnit,
+            connectors_per_link: 2.0 + 1.0, // + laser feed fiber
+            fits: FitRates::default(),
+        }
+    }
+
+    /// Total link FIT.
+    pub fn link_fit(&self) -> f64 {
+        self.lasers_per_link * self.fits.laser
+            + self.fits.pic
+            + self.fits.electrical
+            + self.connectors_per_link * self.fits.connector
+    }
+
+    /// FIT attributable to components whose failure takes the GPU tray.
+    pub fn tray_impact_fit(&self) -> f64 {
+        let mut fit = self.fits.pic + self.fits.electrical; // co-packaged silicon
+        if self.laser_location == Replaceable::GpuTray {
+            fit += self.lasers_per_link * self.fits.laser;
+        }
+        fit
+    }
+
+    /// Expected GPU-tray-impacting failures per year for a pod.
+    pub fn tray_failures_per_year(&self, links: usize) -> f64 {
+        self.tray_impact_fit() * links as f64 * 8760.0 / 1e9
+    }
+
+    /// Mean time between *any* link failure in a pod, hours.
+    pub fn pod_mtbf_hours(&self, links: usize) -> f64 {
+        1e9 / (self.link_fit() * links as f64)
+    }
+}
+
+/// Rack-level power budget check (§II.B: 120 kW racks; GTC: 20 kW just for
+/// an optical NVLink spine would be untenable).
+#[derive(Debug, Clone)]
+pub struct RackBudget {
+    pub rack_kw: f64,
+    pub gpus_per_rack: usize,
+    pub gpu_compute_kw: f64,
+    /// non-IT overhead per rack (fans, CDU, BMC...)
+    pub overhead_kw: f64,
+}
+
+impl RackBudget {
+    pub fn frontier() -> Self {
+        RackBudget { rack_kw: 120.0, gpus_per_rack: 72, gpu_compute_kw: 1.4, overhead_kw: 10.0 }
+    }
+
+    /// kW left for scale-up interconnect after compute + overhead.
+    pub fn interconnect_headroom_kw(&self) -> f64 {
+        self.rack_kw - self.gpus_per_rack as f64 * self.gpu_compute_kw - self.overhead_kw
+    }
+
+    /// Does a tech fit the rack budget at `gbps` per GPU (GPU-side power
+    /// only; switch trays are separate)?
+    pub fn fits(&self, tech: &crate::hw::optics::InterconnectTech, gbps: f64) -> bool {
+        let optics_kw = tech.power_w(gbps) * self.gpus_per_rack as f64 / 1000.0;
+        optics_kw <= self.interconnect_headroom_kw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::optics::{cpo_2p5d, lpo_dr8, passage_interposer, pluggable_osfp};
+
+    #[test]
+    fn external_laser_minimizes_tray_impact() {
+        let cpo = LinkReliability::cpo_integrated_laser(4.0);
+        let psg = LinkReliability::passage_external_laser(4.0);
+        let plug = LinkReliability::pluggable(4.0);
+        // Integrated laser makes tray-impacting failures dominated by the
+        // laser; external/module lasers remove that term.
+        assert!(cpo.tray_impact_fit() > 10.0 * psg.tray_impact_fit());
+        assert_eq!(psg.tray_impact_fit(), plug.tray_impact_fit());
+    }
+
+    #[test]
+    fn laser_dominates_link_fit() {
+        let l = LinkReliability::passage_external_laser(4.0);
+        assert!(l.lasers_per_link * l.fits.laser > 0.5 * l.link_fit());
+    }
+
+    #[test]
+    fn pod_scale_failure_arithmetic() {
+        // 512-GPU pod, 72 links each (rails): failures are a when, not if.
+        let l = LinkReliability::cpo_integrated_laser(4.0);
+        let links = 512 * 72;
+        let per_year = l.tray_failures_per_year(links);
+        assert!(per_year > 100.0, "{per_year}"); // tray events/year: untenable
+        let psg = LinkReliability::passage_external_laser(4.0);
+        assert!(psg.tray_failures_per_year(links) < per_year / 10.0);
+        assert!(l.pod_mtbf_hours(links) < 100.0);
+    }
+
+    #[test]
+    fn rack_budget_gtc_anecdote() {
+        // §II.B: pluggable optics for a 72-GPU spine ≈ 20 kW class — does
+        // not fit; Passage at the same bandwidth does.
+        let rack = RackBudget::frontier();
+        assert!(rack.interconnect_headroom_kw() > 0.0);
+        assert!(!rack.fits(&pluggable_osfp(), 14_400.0));
+        assert!(rack.fits(&passage_interposer(), 14_400.0));
+        // 21 pJ/bit * 14.4 Tb/s * 72 GPUs ≈ 21.8 kW — the GTC number.
+        let kw = pluggable_osfp().power_w(14_400.0) * 72.0 / 1000.0;
+        assert!((kw - 21.8).abs() < 0.5, "{kw}");
+    }
+
+    #[test]
+    fn budget_ordering_matches_energy_table() {
+        let rack = RackBudget::frontier();
+        let headroom = rack.interconnect_headroom_kw();
+        let kw = |t: &crate::hw::optics::InterconnectTech| {
+            t.power_w(32_000.0) * rack.gpus_per_rack as f64 / 1000.0
+        };
+        assert!(kw(&passage_interposer()) < kw(&cpo_2p5d()));
+        assert!(kw(&cpo_2p5d()) < kw(&lpo_dr8()));
+        // At 32 Tb/s, even LPO-class racks blow most of the headroom.
+        assert!(kw(&lpo_dr8()) > 0.8 * headroom);
+    }
+}

@@ -1,0 +1,132 @@
+//! SerDes catalog (paper §III–IV).
+//!
+//! Energy numbers and shoreline geometry from the paper's cited sources:
+//! 224G-LR 5 pJ/bit (Synopsys 3 pJ/b transceiver + DSP, §IV.A.a), 112G-LR
+//! 4.5–6 pJ/bit [15][16], 112G-XSR 1 pJ/bit (Tonietto [23]), 56G-NRZ
+//! 2 pJ/bit (conservative doubling, §IV.A.d), and 3 mm of shoreline per
+//! ×8 224G macro (§IV.C.b).
+
+/// Modulation scheme of a SerDes lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Modulation {
+    Nrz,
+    Pam4,
+}
+
+/// A SerDes design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Serdes {
+    pub name: &'static str,
+    /// Per-lane raw rate in Gb/s.
+    pub gbps_per_lane: f64,
+    pub modulation: Modulation,
+    /// Energy, pJ/bit, including DSP where the design requires one.
+    pub pj_per_bit: f64,
+    /// Does the design rely on a DSP (long-reach equalization)?
+    pub has_dsp: bool,
+    /// Reach class in meters over the intended medium.
+    pub reach_m: f64,
+    /// Shoreline per ×8 macro, mm (only meaningful for perimeter SerDes).
+    pub shoreline_mm_per_macro8: f64,
+}
+
+/// 224 Gb/s PAM-4 long-reach (DSP): the electrical scale-up baseline.
+pub const SERDES_224G_LR: Serdes = Serdes {
+    name: "224G-LR PAM-4",
+    gbps_per_lane: 224.0,
+    modulation: Modulation::Pam4,
+    pj_per_bit: 5.0,
+    has_dsp: true,
+    reach_m: 1.0,
+    shoreline_mm_per_macro8: 3.0,
+};
+
+/// 112 Gb/s PAM-4 long-reach (DSP).
+pub const SERDES_112G_LR: Serdes = Serdes {
+    name: "112G-LR PAM-4",
+    gbps_per_lane: 112.0,
+    modulation: Modulation::Pam4,
+    pj_per_bit: 5.0,
+    has_dsp: true,
+    reach_m: 1.0,
+    shoreline_mm_per_macro8: 2.0,
+};
+
+/// 112 Gb/s PAM-4 extra-short-reach (no DSP; <100 µm drive in Passage).
+pub const SERDES_112G_XSR: Serdes = Serdes {
+    name: "112G-XSR PAM-4",
+    gbps_per_lane: 112.0,
+    modulation: Modulation::Pam4,
+    pj_per_bit: 1.0,
+    has_dsp: false,
+    reach_m: 0.0001,
+    shoreline_mm_per_macro8: 0.0, // area-distributed under 3D stacking
+};
+
+/// 56 Gb/s NRZ short-reach (Passage WDM lane; conservative 2 pJ/bit).
+pub const SERDES_56G_NRZ: Serdes = Serdes {
+    name: "56G-NRZ XSR",
+    gbps_per_lane: 56.0,
+    modulation: Modulation::Nrz,
+    pj_per_bit: 2.0,
+    has_dsp: false,
+    reach_m: 0.0001,
+    shoreline_mm_per_macro8: 0.0,
+};
+
+impl Serdes {
+    /// Lanes needed to carry `port_gbps` of raw bandwidth.
+    pub fn lanes_for_port(&self, port_gbps: f64) -> usize {
+        (port_gbps / self.gbps_per_lane).ceil() as usize
+    }
+
+    /// Power in watts to drive `gbps` of raw bandwidth (one direction).
+    pub fn power_w(&self, gbps: f64) -> f64 {
+        self.pj_per_bit * gbps / 1000.0 // pJ/bit * Gb/s = mW; /1000 -> W
+    }
+
+    /// Shoreline (mm) to place enough ×8 macros for `gbps` total,
+    /// with an optional stacking factor (1.5D stacking fits 1.5 macro rows
+    /// per unit shoreline, §IV.C.b).
+    pub fn shoreline_mm(&self, gbps: f64, stacking: f64) -> f64 {
+        if self.shoreline_mm_per_macro8 == 0.0 {
+            return 0.0; // 3D: SerDes distributed over the die area
+        }
+        let macro_bw = 8.0 * self.gbps_per_lane;
+        let macros = (gbps / macro_bw).ceil();
+        macros * self.shoreline_mm_per_macro8 / stacking
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_for_448g_port() {
+        assert_eq!(SERDES_224G_LR.lanes_for_port(448.0), 2);
+        assert_eq!(SERDES_112G_LR.lanes_for_port(448.0), 4);
+        assert_eq!(SERDES_56G_NRZ.lanes_for_port(448.0), 8);
+    }
+
+    #[test]
+    fn power_scales_with_bandwidth() {
+        // 32 Tb/s at 5 pJ/bit = 160 W
+        let w = SERDES_224G_LR.power_w(32_000.0);
+        assert!((w - 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_switch_shoreline_case() {
+        // §IV.C.b: 229 Tb/s raw needs 128 ×8-224G macros; at 3 mm per macro
+        // with 1.5D stacking -> 256 mm of shoreline.
+        let mm = SERDES_224G_LR.shoreline_mm(229_376.0, 1.5);
+        assert!((mm - 256.0).abs() < 1.0, "{mm}");
+    }
+
+    #[test]
+    fn xsr_has_no_shoreline_requirement() {
+        assert_eq!(SERDES_112G_XSR.shoreline_mm(32_000.0, 1.0), 0.0);
+        assert!(!SERDES_112G_XSR.has_dsp);
+    }
+}

@@ -1,0 +1,33 @@
+//! # LUMOS
+//!
+//! A co-design framework for frontier MoE training over 3D integrated
+//! optics scale-up fabrics — a full reproduction of *"Accelerating Frontier
+//! MoE Training with 3D Integrated Optics"* (Lightmatter, HOTI 2025).
+//!
+//! The crate has three groups of subsystems (see DESIGN.md):
+//!
+//! - **Analytical stack** (the paper's contribution): [`hw`] technology
+//!   models, [`topology`] fabrics, [`collectives`] Hockney schedules,
+//!   [`model`] workload costing, [`parallel`] 4D parallelism mapping and
+//!   [`perf`] the end-to-end time-to-train engine; [`sweep`] regenerates
+//!   every paper table and figure.
+//! - **Validation stack**: [`netsim`] discrete-event fabric simulation and
+//!   the [`coordinator`] miniature distributed-training runtime with real
+//!   rust collectives, plus [`trainer`] driving real AOT-compiled MoE
+//!   training steps through [`runtime`] (PJRT).
+//! - **Substrate**: [`util`] (JSON, RNG, property testing, CLI, stats,
+//!   tables, bench harness — the vendored crate set is minimal).
+
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod hw;
+pub mod model;
+pub mod netsim;
+pub mod parallel;
+pub mod perf;
+pub mod runtime;
+pub mod sweep;
+pub mod topology;
+pub mod trainer;
+pub mod util;

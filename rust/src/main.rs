@@ -1,0 +1,290 @@
+//! `lumos` — CLI entrypoint for the LUMOS co-design framework.
+//!
+//! Subcommands:
+//! - `figures`  regenerate the paper's tables/figures (+ablations)
+//! - `model`    evaluate the analytical perf model on one configuration
+//! - `sweep`    pod/bandwidth/granularity sweeps
+//! - `netsim`   validate Hockney collectives against the packet simulator
+//! - `hw`       hardware design-space numbers (energy/area/power)
+//! - `train`    run real MoE training from AOT artifacts (single or DP)
+
+use std::process::ExitCode;
+
+use lumos::config;
+use lumos::perf::{evaluate, PerfKnobs};
+use lumos::runtime::{artifacts_root, Artifact, Engine};
+use lumos::sweep;
+use lumos::trainer;
+use lumos::util::cli::{Args, Command};
+use lumos::util::json::Json;
+use lumos::util::stats::fmt_time;
+
+fn cli() -> Command {
+    Command::new("lumos", "MoE training over 3D integrated optics — HOTI'25 reproduction")
+        .sub(
+            Command::new("figures", "regenerate paper tables & figures")
+                .flag("all", "print everything")
+                .flag("table1", "Table I")
+                .flag("table2", "Table II")
+                .flag("table3", "Table III")
+                .flag("table4", "Table IV")
+                .flag("fig7", "Figure 7 (power)")
+                .flag("fig8", "Figure 8 (area)")
+                .flag("fig10", "Figure 10 (same radix)")
+                .flag("fig11", "Figure 11 (system radix)")
+                .flag("breakdown", "step-time breakdown (Config 4)")
+                .flag("ablations", "extra ablation tables"),
+        )
+        .sub(
+            Command::new("model", "evaluate the analytical model")
+                .opt_default("cluster", "passage-512 | electrical-512 | electrical-144", "passage-512")
+                .opt_default("config", "MoE config index 1..4", "4")
+                .opt("knobs", "JSON file with calibration knob overrides")
+                .opt("workload", "JSON file with workload overrides")
+                .flag("breakdown", "print the per-component breakdown"),
+        )
+        .sub(
+            Command::new("sweep", "parameter sweeps")
+                .opt_default("kind", "pod | bandwidth | granularity | topology | routing", "pod"),
+        )
+        .sub(
+            Command::new("netsim", "discrete-event fabric validation")
+                .flag("validate", "compare Hockney model vs simulation"),
+        )
+        .sub(Command::new("hw", "hardware design-space summary"))
+        .sub(
+            Command::new("train", "run real AOT-compiled MoE training")
+                .opt_default("preset", "artifact preset (tiny | e2e)", "tiny")
+                .opt_default("steps", "training steps", "50")
+                .opt_default("workers", "data-parallel workers (1 = fused single)", "1")
+                .opt_default("seed", "rng seed", "42")
+                .opt("csv", "write the loss curve to this CSV file"),
+        )
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let root = cli();
+    match root.parse(&argv) {
+        Err(help_or_err) => {
+            println!("{help_or_err}");
+            ExitCode::from(u8::from(!help_or_err.contains("USAGE")))
+        }
+        Ok((chain, args)) => match run(chain.first().map(String::as_str), &args) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                ExitCode::FAILURE
+            }
+        },
+    }
+}
+
+fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
+    match sub {
+        Some("figures") => figures(args),
+        Some("model") => model(args),
+        Some("sweep") => sweep_cmd(args),
+        Some("netsim") => netsim_cmd(),
+        Some("hw") => {
+            let (t7, _) = sweep::fig7();
+            let (t8, _) = sweep::fig8();
+            for t in [sweep::table2(), sweep::table3()] {
+                println!("{}", t.render());
+            }
+            println!("{}", t7.render());
+            println!("{}", t8.render());
+            Ok(())
+        }
+        Some("train") => train(args),
+        _ => {
+            println!("{}", cli().help_text());
+            Ok(())
+        }
+    }
+}
+
+fn figures(args: &Args) -> anyhow::Result<()> {
+    let knobs = PerfKnobs::default();
+    let all = args.flag("all")
+        || !["table1", "table2", "table3", "table4", "fig7", "fig8", "fig10", "fig11",
+             "breakdown", "ablations"]
+            .iter()
+            .any(|f| args.flag(f));
+    if all {
+        print!("{}", sweep::render_all(&knobs));
+        return Ok(());
+    }
+    if args.flag("table1") {
+        println!("{}", sweep::table1().render());
+    }
+    if args.flag("table2") {
+        println!("{}", sweep::table2().render());
+    }
+    if args.flag("table3") {
+        println!("{}", sweep::table3().render());
+    }
+    if args.flag("table4") {
+        println!("{}", sweep::table4().render());
+    }
+    if args.flag("fig7") {
+        let (t, c) = sweep::fig7();
+        println!("{}\n{}", t.render(), c.render());
+    }
+    if args.flag("fig8") {
+        let (t, c) = sweep::fig8();
+        println!("{}\n{}", t.render(), c.render());
+    }
+    if args.flag("fig10") {
+        let (t, c) = sweep::fig10(&knobs);
+        println!("{}\n{}", t.render(), c.render());
+    }
+    if args.flag("fig11") {
+        let (t, c) = sweep::fig11(&knobs);
+        println!("{}\n{}", t.render(), c.render());
+    }
+    if args.flag("breakdown") {
+        println!("{}", sweep::breakdown_table(&knobs).render());
+    }
+    if args.flag("ablations") {
+        for t in [
+            sweep::pod_size_sweep(&knobs),
+            sweep::bandwidth_sweep(&knobs),
+            sweep::granularity_sweep(&knobs),
+            sweep::topology_ablation(),
+            sweep::routing_restriction_ablation(),
+        ] {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+fn model(args: &Args) -> anyhow::Result<()> {
+    let cluster = config::cluster_preset(args.get("cluster").unwrap_or("passage-512"))?;
+    let cfg_idx = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    let knobs = match args.get("knobs") {
+        Some(path) => config::knobs_from_json(&Json::parse(&std::fs::read_to_string(path)?)
+            .map_err(anyhow::Error::msg)?),
+        None => PerfKnobs::default(),
+    };
+    let workload = match args.get("workload") {
+        Some(path) => config::workload_from_json(
+            &Json::parse(&std::fs::read_to_string(path)?).map_err(anyhow::Error::msg)?,
+        )?,
+        None => lumos::model::Workload::paper_gpt_4p7t(cfg_idx),
+    };
+    let map = lumos::parallel::Mapping::new(
+        lumos::parallel::Parallelism::paper(),
+        workload.moe,
+    );
+    let r = evaluate(&workload, &cluster, &map, &knobs);
+    println!("cluster          : {}", r.cluster);
+    println!("moe config       : {}", r.config_name);
+    println!("total params     : {:.2} T", workload.total_params() / 1e12);
+    println!("active / token   : {:.1} G", workload.active_params_per_token() / 1e9);
+    println!("EP placement     : {:?}", r.breakdown.ep_placement);
+    println!("step time        : {}", fmt_time(r.step_time));
+    println!("comm fraction    : {:.1}%", 100.0 * r.comm_fraction);
+    println!("achieved MFU     : {:.3}", r.achieved_mfu);
+    println!("time-to-train    : {}", fmt_time(r.time_to_train_s));
+    if args.flag("breakdown") {
+        let b = &r.breakdown;
+        println!("  compute/micro  : {}", fmt_time(b.compute_per_micro));
+        println!("  tp comm/micro  : {}", fmt_time(b.tp_comm_per_micro));
+        println!("  ep a2a /micro  : {}", fmt_time(b.ep_a2a_per_micro));
+        println!("  pp p2p /micro  : {}", fmt_time(b.pp_comm_per_micro));
+        println!("  dp sync/step   : {}", fmt_time(b.dp_comm_per_step));
+        println!("  bubble frac    : {:.1}%", 100.0 * b.bubble_fraction());
+    }
+    Ok(())
+}
+
+fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
+    let knobs = PerfKnobs::default();
+    let table = match args.get("kind").unwrap_or("pod") {
+        "pod" => sweep::pod_size_sweep(&knobs),
+        "bandwidth" => sweep::bandwidth_sweep(&knobs),
+        "granularity" => sweep::granularity_sweep(&knobs),
+        "topology" => sweep::topology_ablation(),
+        "routing" => sweep::routing_restriction_ablation(),
+        other => anyhow::bail!("unknown sweep kind '{other}'"),
+    };
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn netsim_cmd() -> anyhow::Result<()> {
+    use lumos::collectives as coll;
+    use lumos::netsim::{replay_schedule, Network};
+    use lumos::topology::cluster::DomainSpec;
+    println!("Hockney-vs-netsim validation (SLS, 64 GPUs, 32 Tb/s):");
+    let n = 64;
+    let net = Network::sls(n, 32_000.0, 200e-9);
+    let dom = DomainSpec {
+        name: "passage".into(),
+        gbps_per_gpu: 32_000.0,
+        latency_s: 200e-9,
+        a2a_efficiency: 1.0,
+    };
+    for (name, sched, model) in [
+        (
+            "ring all-reduce 256 MB",
+            coll::ring_all_reduce_schedule(n, 256e6),
+            coll::all_reduce_time(&dom, n, 256e6),
+        ),
+        (
+            "ring all-gather 256 MB",
+            coll::ring_all_gather_schedule(n, 256e6),
+            coll::all_gather_time(&dom, n, 256e6),
+        ),
+        (
+            "pairwise a2a 64 MB/rank",
+            coll::pairwise_a2a_schedule(n, 64e6),
+            coll::all_to_all_time(&dom, n, 64e6),
+        ),
+    ] {
+        let sim = replay_schedule(&net, &sched);
+        println!(
+            "  {name:>24}: model {:>10}  sim {:>10}  err {:+.1}%",
+            fmt_time(model),
+            fmt_time(sim.makespan),
+            100.0 * (sim.makespan - model) / model
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let preset = args.get("preset").unwrap_or("tiny");
+    let steps = args.get_usize("steps").map_err(anyhow::Error::msg)?.unwrap_or(50);
+    let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(42) as u64;
+
+    let art = Artifact::load(artifacts_root()?.join(preset))?;
+    let engine = Engine::cpu()?;
+    println!(
+        "training '{preset}' ({} arrays, {:.1}M params) for {steps} steps, {workers} worker(s)",
+        art.n_params,
+        art.total_param_elements as f64 / 1e6
+    );
+    let report = if workers <= 1 {
+        trainer::train_single(&engine, &art, steps, seed, true)?
+    } else {
+        trainer::train_dp(&engine, &art, workers, steps, seed, true)?
+    };
+    println!(
+        "loss {:.4} -> {:.4} over {} steps ({} mode, {:.2}s total, {:.2}s/step steady)",
+        report.first_loss(),
+        report.last_loss(),
+        report.steps.len(),
+        report.mode,
+        report.total_secs,
+        report.steady_step_secs(),
+    );
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.to_csv())?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,377 @@
+//! Flow-level discrete-event network simulator.
+//!
+//! Validates the Hockney α+β abstraction the paper's performance model
+//! rests on (§V.A): collective schedules from [`crate::collectives`] are
+//! replayed over an explicit link graph with max-min fair bandwidth
+//! sharing, reproducing congestion effects the closed-form model can only
+//! approximate — most importantly the derating of dense all-to-all traffic
+//! crossing an oversubscribed scale-out fabric (the `a2a_efficiency`
+//! parameter of [`crate::topology::cluster::DomainSpec`]).
+//!
+//! Model: GPUs inject into per-GPU uplinks; an SLS pod's switching core is
+//! non-blocking (§II.B — full bisection), so contention appears only at
+//! injection/ejection. The scale-out network adds per-pod uplinks with an
+//! oversubscription factor, where incast and pod-level aggregation bite.
+
+use std::collections::BTreeMap;
+
+use crate::collectives::CommSchedule;
+
+/// Directed link with finite capacity.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// Capacity in bytes/second.
+    pub capacity: f64,
+}
+
+/// A flow traverses a fixed path of links.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+    pub path: Vec<usize>,
+}
+
+/// The link graph + topology metadata.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub links: Vec<Link>,
+    /// GPU count.
+    pub n_nodes: usize,
+    /// per-node (uplink, downlink) link ids
+    up: Vec<usize>,
+    down: Vec<usize>,
+    /// pod uplink/downlink per pod (empty when single-pod)
+    pod_up: Vec<usize>,
+    pod_down: Vec<usize>,
+    pod_size: usize,
+    /// fixed per-flow latency (propagation + software), seconds
+    pub base_latency: f64,
+}
+
+impl Network {
+    /// Non-blocking SLS pod: per-GPU uplink+downlink of `gbps`.
+    pub fn sls(n: usize, gbps: f64, latency_s: f64) -> Network {
+        let mut links = Vec::with_capacity(2 * n);
+        let bps = gbps * 1e9 / 8.0;
+        let (mut up, mut down) = (Vec::new(), Vec::new());
+        for i in 0..n {
+            up.push(links.len());
+            links.push(Link { name: format!("gpu{i}-up"), capacity: bps });
+            down.push(links.len());
+            links.push(Link { name: format!("gpu{i}-down"), capacity: bps });
+        }
+        Network {
+            links,
+            n_nodes: n,
+            up,
+            down,
+            pod_up: Vec::new(),
+            pod_down: Vec::new(),
+            pod_size: n,
+            base_latency: latency_s,
+        }
+    }
+
+    /// Two-level cluster: pods with per-GPU scale-up injection `up_gbps`
+    /// plus a scale-out NIC per GPU (`out_gbps`) feeding a per-pod uplink
+    /// oversubscribed by `oversub` (≥ 1.0).
+    pub fn cluster(
+        n: usize,
+        pod_size: usize,
+        up_gbps: f64,
+        out_gbps: f64,
+        oversub: f64,
+        latency_s: f64,
+    ) -> Network {
+        assert!(pod_size <= n && oversub >= 1.0);
+        let n_pods = n.div_ceil(pod_size);
+        let mut links = Vec::new();
+        let (mut up, mut down) = (Vec::new(), Vec::new());
+        let up_bps = up_gbps * 1e9 / 8.0;
+        let out_bps = out_gbps * 1e9 / 8.0;
+        for i in 0..n {
+            up.push(links.len());
+            links.push(Link { name: format!("gpu{i}-up"), capacity: up_bps });
+            down.push(links.len());
+            links.push(Link { name: format!("gpu{i}-down"), capacity: up_bps });
+        }
+        let (mut pod_up, mut pod_down) = (Vec::new(), Vec::new());
+        for p in 0..n_pods {
+            let members = pod_size.min(n - p * pod_size) as f64;
+            let cap = members * out_bps / oversub;
+            pod_up.push(links.len());
+            links.push(Link { name: format!("pod{p}-up"), capacity: cap });
+            pod_down.push(links.len());
+            links.push(Link { name: format!("pod{p}-down"), capacity: cap });
+        }
+        Network {
+            links,
+            n_nodes: n,
+            up,
+            down,
+            pod_up,
+            pod_down,
+            pod_size,
+            base_latency: latency_s,
+        }
+    }
+
+    fn pod_of(&self, node: usize) -> usize {
+        node / self.pod_size
+    }
+
+    /// Path for a src→dst transfer. In-pod: up + down. Cross-pod: up,
+    /// pod-uplink, remote pod-downlink, down.
+    pub fn path(&self, src: usize, dst: usize) -> Vec<usize> {
+        assert!(src < self.n_nodes && dst < self.n_nodes && src != dst);
+        let (ps, pd) = (self.pod_of(src), self.pod_of(dst));
+        if ps == pd {
+            vec![self.up[src], self.down[dst]]
+        } else {
+            vec![self.up[src], self.pod_up[ps], self.pod_down[pd], self.down[dst]]
+        }
+    }
+
+    pub fn flow(&self, src: usize, dst: usize, bytes: f64) -> Flow {
+        Flow { src, dst, bytes, path: self.path(src, dst) }
+    }
+}
+
+/// Result of simulating a batch of flows.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Completion time of the whole batch, seconds.
+    pub makespan: f64,
+    /// Completion time per flow.
+    pub flow_times: Vec<f64>,
+    /// Events processed (for perf accounting).
+    pub events: usize,
+}
+
+/// Max-min fair progressive-filling fluid simulation: recompute rates at
+/// every flow completion. O(completions × links) — fine for collective
+/// schedules at pod scale.
+pub fn simulate(net: &Network, flows: &[Flow]) -> SimResult {
+    #[derive(Clone)]
+    struct Active {
+        idx: usize,
+        remaining: f64,
+        rate: f64,
+    }
+    let mut active: Vec<Active> = flows
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.bytes > 0.0)
+        .map(|(i, f)| Active { idx: i, remaining: f.bytes, rate: 0.0 })
+        .collect();
+    let mut flow_times = vec![net.base_latency; flows.len()];
+    let mut now = 0.0f64;
+    let mut events = 0usize;
+
+    while !active.is_empty() {
+        events += 1;
+        // --- progressive filling ------------------------------------------
+        let mut frozen = vec![false; active.len()];
+        let mut link_cap: Vec<f64> = net.links.iter().map(|l| l.capacity).collect();
+        let mut link_users: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (ai, a) in active.iter().enumerate() {
+            for &l in &flows[a.idx].path {
+                link_users.entry(l).or_default().push(ai);
+            }
+        }
+        let mut remaining_users: BTreeMap<usize, usize> =
+            link_users.iter().map(|(&l, v)| (l, v.len())).collect();
+        let mut unfrozen = active.len();
+        while unfrozen > 0 {
+            // bottleneck link = min fair share among links with users
+            let mut best: Option<(usize, f64)> = None;
+            for (&l, &users) in &remaining_users {
+                if users == 0 {
+                    continue;
+                }
+                let share = link_cap[l] / users as f64;
+                if best.map_or(true, |(_, s)| share < s) {
+                    best = Some((l, share));
+                }
+            }
+            let Some((bl, share)) = best else { break };
+            // freeze all unfrozen flows through the bottleneck at `share`
+            for &ai in &link_users[&bl] {
+                if frozen[ai] {
+                    continue;
+                }
+                frozen[ai] = true;
+                unfrozen -= 1;
+                active[ai].rate = share;
+                for &l in &flows[active[ai].idx].path {
+                    link_cap[l] -= share;
+                    if link_cap[l] < 0.0 {
+                        link_cap[l] = 0.0;
+                    }
+                    *remaining_users.get_mut(&l).unwrap() -= 1;
+                }
+            }
+        }
+
+        // --- advance to next completion -----------------------------------
+        let dt = active
+            .iter()
+            .map(|a| if a.rate > 0.0 { a.remaining / a.rate } else { f64::INFINITY })
+            .fold(f64::INFINITY, f64::min);
+        assert!(dt.is_finite(), "deadlocked flows (zero rate)");
+        now += dt;
+        for a in &mut active {
+            a.remaining -= a.rate * dt;
+        }
+        active.retain(|a| {
+            if a.remaining <= 1e-9 {
+                flow_times[a.idx] = now + net.base_latency;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    SimResult { makespan: now + net.base_latency, flow_times, events }
+}
+
+/// Replay a collective schedule (step barriers respected) and return the
+/// total completion time.
+pub fn replay_schedule(net: &Network, sched: &CommSchedule) -> SimResult {
+    let mut total = 0.0;
+    let mut events = 0;
+    let n_steps = sched.n_steps();
+    let mut flow_times = Vec::new();
+    for step in 0..n_steps {
+        let flows: Vec<Flow> = sched
+            .ops
+            .iter()
+            .filter(|o| o.step == step && o.src != o.dst)
+            .map(|o| net.flow(o.src, o.dst, o.bytes))
+            .collect();
+        if flows.is_empty() {
+            continue;
+        }
+        let r = simulate(net, &flows);
+        total += r.makespan;
+        events += r.events;
+        flow_times.extend(r.flow_times.iter().map(|t| t + total));
+    }
+    SimResult { makespan: total, flow_times, events }
+}
+
+/// Measured effective all-to-all efficiency: ideal injection-bandwidth-
+/// bound time / simulated time, for a group spanning `span` nodes of a
+/// *single-pod* network where each rank contributes `bytes_per_rank`.
+/// (For cross-pod traffic the right baseline is the scale-out NIC — see
+/// tests/analytical_stack.rs.)
+pub fn measure_a2a_efficiency(net: &Network, span: usize, bytes_per_rank: f64) -> f64 {
+    assert!(net.pod_up.is_empty(), "single-pod networks only");
+    let sched = crate::collectives::pairwise_a2a_schedule(span, bytes_per_rank);
+    let sim = replay_schedule(net, &sched);
+    // Ideal: every rank streams its payload at full injection bandwidth.
+    let inj = net.links[net.up[0]].capacity;
+    let ideal = (span as f64 - 1.0) / span as f64 * bytes_per_rank / inj;
+    (ideal / sim.makespan).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives as coll;
+    use crate::topology::cluster::DomainSpec;
+
+    #[test]
+    fn single_flow_is_bandwidth_bound() {
+        let net = Network::sls(4, 800.0, 0.0); // 100 GB/s
+        let r = simulate(&net, &[net.flow(0, 1, 1e9)]);
+        assert!((r.makespan - 0.01).abs() < 1e-9, "{}", r.makespan);
+    }
+
+    #[test]
+    fn incast_shares_the_downlink() {
+        let net = Network::sls(4, 800.0, 0.0);
+        // 3 senders into node 0: downlink is the bottleneck.
+        let flows: Vec<Flow> = (1..4).map(|s| net.flow(s, 0, 1e9)).collect();
+        let r = simulate(&net, &flows);
+        assert!((r.makespan - 0.03).abs() < 1e-6, "{}", r.makespan);
+    }
+
+    #[test]
+    fn disjoint_flows_run_in_parallel() {
+        let net = Network::sls(4, 800.0, 0.0);
+        let flows = vec![net.flow(0, 1, 1e9), net.flow(2, 3, 1e9)];
+        let r = simulate(&net, &flows);
+        assert!((r.makespan - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_allreduce_matches_hockney_on_sls() {
+        let n = 16;
+        let bytes = 64e6;
+        let net = Network::sls(n, 800.0, 0.0);
+        let sched = coll::ring_all_reduce_schedule(n, bytes);
+        let sim = replay_schedule(&net, &sched);
+        let dom = DomainSpec {
+            name: "t".into(),
+            gbps_per_gpu: 800.0,
+            latency_s: 0.0,
+            a2a_efficiency: 1.0,
+        };
+        let model = coll::all_reduce_time(&dom, n, bytes);
+        let err = (sim.makespan - model).abs() / model;
+        assert!(err < 0.02, "sim {} vs model {}", sim.makespan, model);
+    }
+
+    #[test]
+    fn in_pod_a2a_is_nearly_ideal() {
+        let net = Network::sls(32, 800.0, 0.0);
+        let eff = measure_a2a_efficiency(&net, 32, 32e6);
+        assert!(eff > 0.95, "{eff}");
+    }
+
+    #[test]
+    fn cross_pod_a2a_is_derated_by_oversubscription() {
+        // 4 pods of 8; scale-out NIC 100 Gb/s per GPU, 2:1 oversubscribed.
+        let net = Network::cluster(32, 8, 800.0, 100.0, 2.0, 0.0);
+        // Uniform a2a across all 32 ranks: 24/31 of traffic crosses pods
+        // through uplinks with half the aggregate NIC capacity.
+        let sched = coll::pairwise_a2a_schedule(32, 32e6);
+        let sim = replay_schedule(&net, &sched);
+        // Ideal time if scale-out NICs were uncontended: cross bytes / NIC.
+        let cross = 32e6 * 24.0 / 31.0;
+        let ideal = cross / (100.0e9 / 8.0);
+        let eff = ideal / sim.makespan;
+        assert!(eff < 0.75, "efficiency {eff} suspiciously high");
+        assert!(eff > 0.3, "efficiency {eff} suspiciously low");
+    }
+
+    #[test]
+    fn cross_pod_paths_use_pod_links() {
+        let net = Network::cluster(16, 8, 800.0, 100.0, 1.0, 0.0);
+        let p = net.path(0, 12);
+        assert_eq!(p.len(), 4);
+        let p2 = net.path(0, 3);
+        assert_eq!(p2.len(), 2);
+    }
+
+    #[test]
+    fn latency_added_per_flow() {
+        let net = Network::sls(2, 800.0, 5e-6);
+        let r = simulate(&net, &[net.flow(0, 1, 8e5)]);
+        // 8e5 B / 100 GB/s = 8 µs + 5 µs latency
+        assert!((r.makespan - (8e-6 + 5e-6)).abs() < 1e-9, "{}", r.makespan);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn zero_capacity_deadlocks_loudly() {
+        let mut net = Network::sls(2, 800.0, 0.0);
+        net.links[0].capacity = 0.0;
+        simulate(&net, &[net.flow(0, 1, 1.0)]);
+    }
+}

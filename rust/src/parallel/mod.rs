@@ -1,0 +1,224 @@
+//! 4D parallelism mapping: TP × DP × PP plus expert parallelism overlaid on
+//! DP ranks (paper §V.B, Fig. 9).
+//!
+//! Placement policy (§VI): tensor-parallel groups are placed in the
+//! high-bandwidth domain first; expert-parallel groups are placed there too
+//! if the pod has room. The GPU id layout makes both policies geometric:
+//! TP innermost (contiguous), then DP (so the `ep_dp_ranks` consecutive DP
+//! ranks forming an EP group are contiguous GPUs), then PP outermost.
+
+use crate::model::MoeConfig;
+use crate::topology::cluster::{Cluster, Domain};
+
+/// Degrees of the three base parallelism dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+}
+
+impl Parallelism {
+    /// The paper's fixed setup: TP 16 × PP 8 × DP 256 = 32,768 GPUs.
+    pub fn paper() -> Self {
+        Parallelism { tp: 16, pp: 8, dp: 256 }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+}
+
+/// Logical coordinates of one GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankCoord {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+/// The rank mapping + MoE group structure.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub par: Parallelism,
+    pub moe: MoeConfig,
+}
+
+impl Mapping {
+    pub fn new(par: Parallelism, moe: MoeConfig) -> Self {
+        assert!(par.tp % moe.experts_per_dp_rank == 0,
+                "tp {} must divide into experts_per_dp_rank {}",
+                par.tp, moe.experts_per_dp_rank);
+        assert!(par.dp % moe.ep_dp_ranks() == 0,
+                "dp {} must contain whole EP groups of {} ranks",
+                par.dp, moe.ep_dp_ranks());
+        Mapping { par, moe }
+    }
+
+    /// GPU id for a coordinate (TP innermost, DP middle, PP outermost).
+    pub fn gpu_of(&self, c: RankCoord) -> usize {
+        assert!(c.dp < self.par.dp && c.pp < self.par.pp && c.tp < self.par.tp);
+        (c.pp * self.par.dp + c.dp) * self.par.tp + c.tp
+    }
+
+    /// Inverse of `gpu_of`.
+    pub fn coord_of(&self, gpu: usize) -> RankCoord {
+        assert!(gpu < self.par.n_gpus());
+        let tp = gpu % self.par.tp;
+        let rest = gpu / self.par.tp;
+        let dp = rest % self.par.dp;
+        let pp = rest / self.par.dp;
+        RankCoord { dp, pp, tp }
+    }
+
+    // -- group geometry ------------------------------------------------------
+
+    /// GPUs of one tensor-parallel group (fixed dp, pp).
+    pub fn tp_group(&self, dp: usize, pp: usize) -> Vec<usize> {
+        (0..self.par.tp).map(|tp| self.gpu_of(RankCoord { dp, pp, tp })).collect()
+    }
+
+    /// Expert-TP subgroup size: the TP group is subdivided into
+    /// `experts_per_dp_rank` groups, one per co-located expert (Fig. 9b).
+    pub fn expert_tp(&self) -> usize {
+        self.par.tp / self.moe.experts_per_dp_rank
+    }
+
+    /// Number of DP ranks in one EP group (one complete expert set).
+    pub fn ep_dp_ranks(&self) -> usize {
+        self.moe.ep_dp_ranks()
+    }
+
+    /// GPUs of the EP group containing DP rank `dp` at stage `pp`:
+    /// `ep_dp_ranks` consecutive DP ranks × full TP width.
+    pub fn ep_group(&self, dp: usize, pp: usize) -> Vec<usize> {
+        let w = self.ep_dp_ranks();
+        let start = dp / w * w;
+        (start..start + w)
+            .flat_map(|d| self.tp_group(d, pp))
+            .collect()
+    }
+
+    /// Span of the EP group in consecutive GPU ids.
+    pub fn ep_span_gpus(&self) -> usize {
+        self.ep_dp_ranks() * self.par.tp
+    }
+
+    /// Complete expert sets in the system (gradient-sync replicas of each
+    /// expert, §V.B).
+    pub fn n_complete_expert_sets(&self) -> usize {
+        self.par.dp / self.ep_dp_ranks()
+    }
+
+    /// Span (consecutive GPU ids) of a data-parallel gradient-sync group
+    /// for the shared (attention) parameters: all DP ranks of a stage.
+    pub fn dp_span_gpus(&self) -> usize {
+        self.par.dp * self.par.tp
+    }
+
+    // -- placement / domain assignment ---------------------------------------
+
+    /// Does the full EP group fit inside one scale-up pod?
+    pub fn ep_fits_pod(&self, cluster: &Cluster) -> bool {
+        self.ep_span_gpus() <= cluster.spec.pod_size
+    }
+
+    /// Domain carrying EP all-to-all traffic under the TP-first policy.
+    pub fn ep_domain(&self, cluster: &Cluster) -> Domain {
+        cluster.domain_for_span(self.ep_span_gpus())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn paper_mapping(cfg: usize) -> Mapping {
+        Mapping::new(Parallelism::paper(), MoeConfig::paper_config(cfg))
+    }
+
+    #[test]
+    fn paper_dimensions() {
+        let m = paper_mapping(4);
+        assert_eq!(m.par.n_gpus(), 32_768);
+        assert_eq!(m.ep_span_gpus(), 512);
+        assert_eq!(m.n_complete_expert_sets(), 8);
+        assert_eq!(m.expert_tp(), 2); // 16 / 8 experts per rank
+        assert_eq!(paper_mapping(1).expert_tp(), 16);
+    }
+
+    #[test]
+    fn ep_fits_passage_not_electrical() {
+        use crate::topology::cluster::Cluster;
+        let m = paper_mapping(1);
+        assert!(m.ep_fits_pod(&Cluster::passage_512(32_768)));
+        assert!(!m.ep_fits_pod(&Cluster::electrical_144(32_256)));
+        assert_eq!(m.ep_domain(&Cluster::passage_512(32_768)), Domain::ScaleUp);
+        assert_eq!(m.ep_domain(&Cluster::electrical_144(32_256)), Domain::ScaleOut);
+    }
+
+    #[test]
+    fn mapping_is_bijective() {
+        check("gpu_of/coord_of roundtrip", 256, |g| {
+            let m = paper_mapping(*g.choose(&[1, 2, 3, 4]));
+            let gpu = g.usize(0, m.par.n_gpus() - 1);
+            let c = m.coord_of(gpu);
+            prop_assert!(m.gpu_of(c) == gpu, "roundtrip failed at {gpu}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tp_groups_are_contiguous() {
+        check("tp group contiguity", 128, |g| {
+            let m = paper_mapping(g.usize(1, 4));
+            let dp = g.usize(0, m.par.dp - 1);
+            let pp = g.usize(0, m.par.pp - 1);
+            let grp = m.tp_group(dp, pp);
+            for w in grp.windows(2) {
+                prop_assert!(w[1] == w[0] + 1, "gap in tp group");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ep_groups_partition_dp_ranks() {
+        let m = paper_mapping(2);
+        // Every GPU belongs to exactly one EP group per stage.
+        let mut seen = vec![0u32; m.par.dp * m.par.tp];
+        let w = m.ep_dp_ranks();
+        for dp_block in (0..m.par.dp).step_by(w) {
+            for gpu in m.ep_group(dp_block, 0) {
+                seen[gpu] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn ep_group_span_is_contiguous() {
+        check("ep group contiguous span", 64, |g| {
+            let m = paper_mapping(g.usize(1, 4));
+            let dp = g.usize(0, m.par.dp - 1);
+            let pp = g.usize(0, m.par.pp - 1);
+            let grp = m.ep_group(dp, pp);
+            let min = *grp.iter().min().unwrap();
+            let max = *grp.iter().max().unwrap();
+            prop_assert!(grp.len() == m.ep_span_gpus(), "bad group size");
+            prop_assert!(max - min + 1 == grp.len(), "EP group not contiguous");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn rejects_indivisible_expert_tp() {
+        Mapping::new(
+            Parallelism { tp: 4, pp: 1, dp: 32 },
+            MoeConfig { total_experts: 24, active_per_token: 3, granularity: 3, experts_per_dp_rank: 3 },
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Memory-capacity feasibility model (supports §V–VI).
+//!
+//! The analytical timing model assumes each configuration actually *fits*:
+//! parameters + optimizer state sharded over TP×PP×EP, plus 1F1B's bounded
+//! activation working set, must fit the 16-stack HBM4 capacity of the 2028
+//! GPU. This module checks that, and exposes the per-GPU breakdown the
+//! `lumos model` CLI prints.
+
+use crate::model::Workload;
+use crate::parallel::Mapping;
+
+/// HBM capacity of the paper's 2028 GPU: 16 stacks × 24 GB HBM4 (8-Hi).
+pub const HBM_BYTES_PER_GPU: f64 = 16.0 * 24.0 * 1e9;
+
+/// Per-GPU memory breakdown, bytes.
+#[derive(Debug, Clone)]
+pub struct MemoryBreakdown {
+    /// Attention/router/embedding params + grads + optimizer state.
+    pub shared_state: f64,
+    /// This GPU's expert shard's params + grads + optimizer state.
+    pub expert_state: f64,
+    /// 1F1B activation working set (≤ pp microbatches in flight).
+    pub activations: f64,
+    /// Dispatch/combine buffers for the routed tokens (k× expansion).
+    pub routing_buffers: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.shared_state + self.expert_state + self.activations + self.routing_buffers
+    }
+
+    pub fn fits(&self) -> bool {
+        self.total() <= HBM_BYTES_PER_GPU
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.total() / HBM_BYTES_PER_GPU
+    }
+}
+
+/// Compute the per-GPU breakdown for a workload/mapping at microbatch size
+/// `microbatch_seqs`.
+pub fn memory_breakdown(w: &Workload, map: &Mapping, microbatch_seqs: usize) -> MemoryBreakdown {
+    let par = map.par;
+    let layers_per_stage = w.n_layers as f64 / par.pp as f64;
+    let state_bpp = w.state_bytes_per_param();
+
+    let shared_params = (w.attn_params_per_layer() + w.router_params_per_layer())
+        * layers_per_stage
+        / par.tp as f64
+        + w.embedding_params() / (par.tp * par.pp) as f64;
+
+    // Each GPU holds experts_per_dp_rank experts per layer, each sharded
+    // over its expert-TP subgroup — i.e. E/(ep_dp_ranks·tp) of the layer's
+    // expert parameters.
+    let expert_params = w.expert_params_per_layer() * layers_per_stage
+        / (map.ep_dp_ranks() * par.tp) as f64;
+
+    // 1F1B keeps ≤ pp microbatches of activations alive per stage
+    // (coordinator::pipeline asserts this bound).
+    let mb_tokens = (microbatch_seqs * w.seq_len) as f64;
+    let act_per_micro =
+        mb_tokens * w.activation_bytes_per_token_layer() * layers_per_stage / par.tp as f64;
+    let activations = act_per_micro * par.pp as f64;
+
+    // GShard dense dispatch: E × capacity × d_model per MoE layer, with
+    // capacity ≈ tokens·k/E (unit capacity factor), live for one layer at
+    // a time (fwd) plus its saved input for bwd.
+    let routing = 2.0
+        * mb_tokens
+        * w.moe.active_per_token as f64
+        * w.token_bytes()
+        / par.tp as f64;
+
+    MemoryBreakdown {
+        shared_state: shared_params * state_bpp,
+        expert_state: expert_params * state_bpp,
+        activations,
+        routing_buffers: routing,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MoeConfig;
+    use crate::parallel::{Mapping, Parallelism};
+
+    fn mapping(cfg: usize) -> (Workload, Mapping) {
+        let w = Workload::paper_gpt_4p7t(cfg);
+        let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(cfg));
+        (w, m)
+    }
+
+    #[test]
+    fn paper_configs_fit_hbm() {
+        for cfg in 1..=4 {
+            let (w, m) = mapping(cfg);
+            let mem = memory_breakdown(&w, &m, 1);
+            assert!(
+                mem.fits(),
+                "config {cfg} needs {:.0} GB of {:.0} GB",
+                mem.total() / 1e9,
+                HBM_BYTES_PER_GPU / 1e9
+            );
+            // but not absurdly empty either — a 4.7T model is heavy
+            assert!(mem.utilization() > 0.05, "config {cfg}: {}", mem.utilization());
+        }
+    }
+
+    #[test]
+    fn expert_state_invariant_across_configs() {
+        // Total expert params are constant (E·d_ff/m invariant) and the EP
+        // sharding denominator (ep_dp_ranks·tp = 512) is too.
+        let (w1, m1) = mapping(1);
+        let (w4, m4) = mapping(4);
+        let a = memory_breakdown(&w1, &m1, 1).expert_state;
+        let b = memory_breakdown(&w4, &m4, 1).expert_state;
+        assert!((a - b).abs() / a < 1e-9);
+    }
+
+    #[test]
+    fn routing_buffers_grow_with_k() {
+        let (w1, m1) = mapping(1);
+        let (w4, m4) = mapping(4);
+        let a = memory_breakdown(&w1, &m1, 1).routing_buffers;
+        let b = memory_breakdown(&w4, &m4, 1).routing_buffers;
+        assert!((b / a - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_microbatch_costs_activation_memory() {
+        let (w, m) = mapping(2);
+        let a = memory_breakdown(&w, &m, 1);
+        let b = memory_breakdown(&w, &m, 4);
+        assert!(b.activations > 3.9 * a.activations);
+        assert_eq!(a.shared_state, b.shared_state);
+    }
+
+    #[test]
+    fn without_expert_sharding_it_would_not_fit() {
+        // Sanity: the full 4.7T model state (12 B/param) over only TP×PP
+        // (no expert sharding) needs ~441 GB/GPU — EP is load-bearing.
+        let (w, _) = mapping(1);
+        let naive = w.total_params() * w.state_bytes_per_param() / (16.0 * 8.0);
+        assert!(naive > 0.5 * HBM_BYTES_PER_GPU * 0.5, "{naive}");
+        assert!(naive / 1e9 > 400.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Analytical time-to-train engine (paper §V.A, results §VI).
+//!
+//! Decomposes one training step into compute, tensor-parallel collectives,
+//! expert all-to-all, pipeline transfers and data-parallel gradient sync,
+//! each costed with the Hockney models on the cluster's two network
+//! domains, then rolls up a 1F1B pipeline into step time and time-to-train.
+//!
+//! Calibration knobs (documented in EXPERIMENTS.md §Calibration):
+//! - `mfu`: achieved fraction of peak BF16 FLOPs (0.40 default — frontier
+//!   MoE training MFU).
+//! - `comm_dtype_bytes`: activation/gradient bytes on the wire for
+//!   collectives (4.0: fp32 accumulation for TP all-reduce, Megatron
+//!   default).
+//! - overlap fractions: how much of each communication class hides under
+//!   compute. EP dispatch blocks expert compute (0 overlap by default);
+//!   DP gradient sync overlaps the backward pass (0.9).
+
+pub mod memory;
+
+use crate::collectives as coll;
+use crate::model::Workload;
+use crate::parallel::Mapping;
+use crate::topology::cluster::{Cluster, Domain};
+
+/// Calibration knobs.
+#[derive(Debug, Clone)]
+pub struct PerfKnobs {
+    pub mfu: f64,
+    pub microbatch_seqs: usize,
+    pub comm_dtype_bytes: f64,
+    pub dp_overlap: f64,
+    pub ep_overlap: f64,
+}
+
+impl Default for PerfKnobs {
+    fn default() -> Self {
+        PerfKnobs {
+            mfu: 0.40,
+            microbatch_seqs: 1,
+            comm_dtype_bytes: 4.0,
+            dp_overlap: 0.9,
+            // The combine-direction all-to-all pipelines with expert
+            // compute (§VI: overlap keeps compute from idling); dispatch
+            // stays on the critical path.
+            ep_overlap: 0.25,
+        }
+    }
+}
+
+/// Where the EP all-to-all ran and how it was costed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpPlacement {
+    /// Whole EP group inside one pod.
+    ScaleUp,
+    /// EP group spans pods; cross-pod fraction rides Ethernet.
+    Hierarchical,
+}
+
+/// Per-step cost breakdown (seconds, per GPU critical path).
+#[derive(Debug, Clone)]
+pub struct StepBreakdown {
+    /// Matmul time per microbatch (fwd+bwd), already TP-sharded.
+    pub compute_per_micro: f64,
+    /// TP collectives per microbatch (attention + expert-TP all-reduces).
+    pub tp_comm_per_micro: f64,
+    /// EP all-to-all per microbatch (dispatch+combine, fwd+bwd).
+    pub ep_a2a_per_micro: f64,
+    /// Pipeline p2p per microbatch.
+    pub pp_comm_per_micro: f64,
+    /// DP gradient all-reduce per step (before overlap discount).
+    pub dp_comm_per_step: f64,
+    pub n_micro: usize,
+    pub pp: usize,
+    pub ep_placement: EpPlacement,
+}
+
+impl StepBreakdown {
+    pub fn micro_time(&self) -> f64 {
+        self.compute_per_micro + self.tp_comm_per_micro + self.ep_a2a_per_micro
+            + self.pp_comm_per_micro
+    }
+
+    /// 1F1B: (n_micro + pp - 1) microbatch slots on the critical stage.
+    pub fn pipeline_slots(&self) -> f64 {
+        (self.n_micro + self.pp - 1) as f64
+    }
+
+    pub fn bubble_fraction(&self) -> f64 {
+        (self.pp - 1) as f64 / self.pipeline_slots()
+    }
+}
+
+/// Full evaluation result.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub cluster: String,
+    pub config_name: String,
+    pub breakdown: StepBreakdown,
+    pub step_time: f64,
+    pub time_to_train_s: f64,
+    /// Fraction of the step spent in non-overlapped communication.
+    pub comm_fraction: f64,
+    /// Model FLOPs utilization implied by the step time.
+    pub achieved_mfu: f64,
+}
+
+/// All-to-all startup term: peers are contacted from parallel NIC queues,
+/// so latency composes logarithmically rather than serially.
+fn a2a_alpha(latency_s: f64, n: usize) -> f64 {
+    latency_s * (n.max(2) as f64).log2().ceil()
+}
+
+/// Evaluate one (workload, cluster, mapping) point.
+pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnobs) -> PerfReport {
+    let par = map.par;
+    assert!(w.global_batch % par.dp == 0);
+    let seqs_per_rank = w.global_batch / par.dp;
+    assert!(seqs_per_rank % knobs.microbatch_seqs == 0);
+    let n_micro = seqs_per_rank / knobs.microbatch_seqs;
+    let mb_tokens = (knobs.microbatch_seqs * w.seq_len) as f64;
+    let layers_per_stage = w.n_layers as f64 / par.pp as f64;
+    let up = cluster.domain(Domain::ScaleUp);
+    let out = cluster.domain(Domain::ScaleOut);
+
+    // ---- compute ----------------------------------------------------------
+    let flops_per_token_layer =
+        w.attn_flops_per_token_layer() + w.expert_flops_per_token_layer();
+    let emb_flops = 2.0 * w.embedding_params() / par.pp as f64; // spread
+    let fwd_flops_micro =
+        mb_tokens * (layers_per_stage * flops_per_token_layer + emb_flops) / par.tp as f64;
+    let compute_per_micro = 3.0 * fwd_flops_micro / (cluster.spec.gpu.flops * knobs.mfu);
+
+    // ---- TP collectives ----------------------------------------------------
+    // Megatron: one all-reduce after attention and one after the expert FFN
+    // per direction. The expert all-reduce runs in the expert-TP subgroup
+    // (size tp/m): fewer ranks => smaller (g-1)/g factor — the §VI effect
+    // where finer configs relieve bandwidth pressure on the alternative.
+    let act_bytes = mb_tokens * w.d_model as f64 * knobs.comm_dtype_bytes;
+    let tp_ar = coll::all_reduce_time(up, par.tp, act_bytes);
+    let etp_ar = coll::all_reduce_time(up, map.expert_tp(), act_bytes);
+    let tp_comm_per_micro = 2.0 * (tp_ar + etp_ar) * layers_per_stage;
+
+    // ---- EP all-to-all -----------------------------------------------------
+    // Dispatch + combine, forward and backward: 4 per layer. Per-GPU payload
+    // is the TP shard of (tokens × k × token_bytes).
+    let a2a_bytes = mb_tokens * w.moe.active_per_token as f64 * w.d_model as f64
+        * knobs.comm_dtype_bytes
+        / par.tp as f64;
+    let span = map.ep_span_gpus();
+    let (ep_one, placement) = if span <= cluster.spec.pod_size {
+        let t = (span as f64 - 1.0) / span as f64 * a2a_bytes
+            / (up.bytes_per_sec() * up.a2a_efficiency)
+            + a2a_alpha(up.latency_s, span);
+        (t, EpPlacement::ScaleUp)
+    } else {
+        let cross = cluster.cross_pod_fraction(span);
+        let t_up = (1.0 - cross) * a2a_bytes / (up.bytes_per_sec() * up.a2a_efficiency)
+            + a2a_alpha(up.latency_s, cluster.spec.pod_size);
+        let t_out = cross * a2a_bytes / (out.bytes_per_sec() * out.a2a_efficiency)
+            + a2a_alpha(out.latency_s, span);
+        (t_up.max(t_out), EpPlacement::Hierarchical)
+    };
+    let ep_a2a_per_micro =
+        4.0 * ep_one * layers_per_stage * (1.0 - knobs.ep_overlap);
+
+    // ---- pipeline p2p ------------------------------------------------------
+    // Stage boundaries sit dp×tp GPUs apart => scale-out. One activation
+    // send forward + one gradient send backward per microbatch.
+    let pp_bytes = mb_tokens * w.d_model as f64 * w.dtype_bytes / par.tp as f64;
+    let pp_comm_per_micro = if par.pp > 1 { 2.0 * coll::p2p_time(out, pp_bytes) } else { 0.0 };
+
+    // ---- DP gradient sync --------------------------------------------------
+    // Shared (attention + router) gradients sync across all DP ranks;
+    // expert gradients only across complete expert sets (§V.B).
+    let grad_bytes = 4.0; // fp32 gradient accumulation buffers
+    let shared_params_per_gpu = (w.attn_params_per_layer() + w.router_params_per_layer())
+        * layers_per_stage
+        / par.tp as f64
+        + w.embedding_params() / (par.tp * par.pp) as f64;
+    let expert_params_per_gpu = w.expert_params_per_layer() * layers_per_stage
+        / (map.ep_dp_ranks() * par.tp) as f64;
+    let shared_t = coll::hierarchical_all_reduce_time(
+        cluster,
+        map.dp_span_gpus().min(cluster.spec.n_gpus),
+        shared_params_per_gpu * grad_bytes,
+    );
+    let n_sets = map.n_complete_expert_sets();
+    let expert_t = coll::all_reduce_time(out, n_sets, expert_params_per_gpu * grad_bytes);
+    let dp_comm_per_step = shared_t + expert_t;
+
+    let breakdown = StepBreakdown {
+        compute_per_micro,
+        tp_comm_per_micro,
+        ep_a2a_per_micro,
+        pp_comm_per_micro,
+        dp_comm_per_step,
+        n_micro,
+        pp: par.pp,
+        ep_placement: placement,
+    };
+
+    let step_time = breakdown.pipeline_slots() * breakdown.micro_time()
+        + (1.0 - knobs.dp_overlap) * dp_comm_per_step;
+    let time_to_train_s = step_time * w.steps_to_target();
+
+    let comm_per_micro =
+        breakdown.tp_comm_per_micro + breakdown.ep_a2a_per_micro + breakdown.pp_comm_per_micro;
+    let comm_fraction = (breakdown.pipeline_slots() * comm_per_micro
+        + (1.0 - knobs.dp_overlap) * dp_comm_per_step)
+        / step_time;
+    let ideal_flops = 3.0 * w.fwd_flops_per_token() * w.tokens_per_batch();
+    let achieved_mfu =
+        ideal_flops / (step_time * par.n_gpus() as f64 * cluster.spec.gpu.flops);
+
+    PerfReport {
+        cluster: cluster.spec.name.clone(),
+        config_name: format!(
+            "E{}/k{}/m{}",
+            w.moe.total_experts, w.moe.active_per_token, w.moe.granularity
+        ),
+        breakdown,
+        step_time,
+        time_to_train_s,
+        comm_fraction,
+        achieved_mfu,
+    }
+}
+
+/// Evaluate the paper's Config `i` (Table IV) on `cluster`.
+pub fn evaluate_paper_config(cluster: &Cluster, i: usize, knobs: &PerfKnobs) -> PerfReport {
+    use crate::model::MoeConfig;
+    use crate::parallel::Parallelism;
+    let w = Workload::paper_gpt_4p7t(i);
+    let map = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(i));
+    evaluate(&w, cluster, &map, knobs)
+}
+
+/// The three evaluation clusters of §VI, sized to tile 32,768 GPUs
+/// (electrical pods of 144 tile 32,256 — the nearest pod-aligned size, a
+/// 1.5% cluster-size delta the relative results are insensitive to).
+pub fn paper_clusters() -> (Cluster, Cluster, Cluster) {
+    (
+        Cluster::passage_512(32_768),
+        Cluster::electrical_512(32_768),
+        Cluster::electrical_144(32_256),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn passage() -> Cluster {
+        Cluster::passage_512(32_768)
+    }
+
+    #[test]
+    fn step_time_positive_and_finite() {
+        for i in 1..=4 {
+            let r = evaluate_paper_config(&passage(), i, &PerfKnobs::default());
+            assert!(r.step_time > 0.0 && r.step_time.is_finite());
+            assert!(r.time_to_train_s > 86_400.0, "ttt suspiciously small");
+            assert!(r.achieved_mfu > 0.1 && r.achieved_mfu < 0.6);
+        }
+    }
+
+    #[test]
+    fn passage_ep_stays_in_pod_alternative_spills() {
+        let r_p = evaluate_paper_config(&passage(), 4, &PerfKnobs::default());
+        assert_eq!(r_p.breakdown.ep_placement, EpPlacement::ScaleUp);
+        let alt = Cluster::electrical_144(32_256);
+        let r_a = evaluate_paper_config(&alt, 4, &PerfKnobs::default());
+        assert_eq!(r_a.breakdown.ep_placement, EpPlacement::Hierarchical);
+        assert!(r_a.breakdown.ep_a2a_per_micro > 5.0 * r_p.breakdown.ep_a2a_per_micro);
+    }
+
+    #[test]
+    fn more_bandwidth_never_hurts() {
+        let knobs = PerfKnobs::default();
+        for i in 1..=4 {
+            let hi = evaluate_paper_config(&passage(), i, &knobs);
+            let lo = evaluate_paper_config(&Cluster::electrical_512(32_768), i, &knobs);
+            assert!(lo.step_time > hi.step_time, "config {i}");
+        }
+    }
+
+    #[test]
+    fn bubble_fraction_matches_1f1b() {
+        let r = evaluate_paper_config(&passage(), 1, &PerfKnobs::default());
+        let b = &r.breakdown;
+        assert_eq!(b.n_micro, 16);
+        assert!((b.bubble_fraction() - 7.0 / 23.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_dominates_on_passage() {
+        let r = evaluate_paper_config(&passage(), 1, &PerfKnobs::default());
+        assert!(r.comm_fraction < 0.5, "comm fraction {}", r.comm_fraction);
+    }
+
+    #[test]
+    fn finer_experts_shrink_expert_tp_allreduce() {
+        let knobs = PerfKnobs::default();
+        let c1 = evaluate_paper_config(&passage(), 1, &knobs);
+        let c4 = evaluate_paper_config(&passage(), 4, &knobs);
+        assert!(c4.breakdown.tp_comm_per_micro < c1.breakdown.tp_comm_per_micro);
+    }
+}

@@ -1,0 +1,215 @@
+//! AOT artifact bundle: `manifest.json` + per-entrypoint HLO text files, as
+//! written by `python/compile/aot.py`. This is the only contract between the
+//! build-time python stack and the runtime rust stack.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::TensorSpec;
+use crate::util::json::Json;
+
+/// One lowered entrypoint (init / train_step / ...).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest for one model variant (e.g. `artifacts/tiny`).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub n_params: usize,
+    pub total_param_elements: usize,
+    pub param_names: Vec<String>,
+    pub entrypoints: BTreeMap<String, EntrySpec>,
+    /// Raw model config echo (vocab, d_model, n_experts, ...).
+    pub config: Json,
+}
+
+impl Artifact {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifact> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        if j.get("format").as_str() != Some("hlo-text-v1") {
+            bail!("unsupported manifest format {:?}", j.get("format"));
+        }
+        let n_params = j
+            .get("n_params")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing n_params"))?;
+        let total_param_elements = j
+            .get("total_param_elements")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing total_param_elements"))?;
+        let param_names: Vec<String> = j
+            .get("param_names")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing param_names"))?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad param name")))
+            .collect::<Result<_>>()?;
+        if param_names.len() != n_params {
+            bail!("param_names len {} != n_params {}", param_names.len(), n_params);
+        }
+
+        let mut entrypoints = BTreeMap::new();
+        let eps = j
+            .get("entrypoints")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing entrypoints"))?;
+        for (name, spec) in eps {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("entry '{name}' missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let entry = EntrySpec {
+                name: name.clone(),
+                file: spec
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry '{name}' missing file"))?
+                    .to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+            };
+            let hlo = dir.join(&entry.file);
+            if !hlo.exists() {
+                bail!("entry '{name}': HLO file {} missing", hlo.display());
+            }
+            entrypoints.insert(name.clone(), entry);
+        }
+
+        Ok(Artifact {
+            dir,
+            n_params,
+            total_param_elements,
+            param_names,
+            entrypoints,
+            config: j.get("config").clone(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact has no entrypoint '{name}' (have: {:?})",
+                                   self.entrypoints.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Convenience accessors into the echoed model config.
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .as_usize()
+            .ok_or_else(|| anyhow!("model config missing '{key}'"))
+    }
+
+    /// State layout helper: the flat state is [params, m, v, step].
+    pub fn state_len(&self) -> usize {
+        3 * self.n_params + 1
+    }
+}
+
+/// Locate the artifacts root: $LUMOS_ARTIFACTS or ./artifacts relative to cwd
+/// (walking up a couple of levels so tests work from target dirs).
+pub fn artifacts_root() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("LUMOS_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    for _ in 0..4 {
+        let cand = dir.join("artifacts");
+        if cand.join("tiny").join("manifest.json").exists()
+            || cand.join("e2e").join("manifest.json").exists()
+        {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    bail!("artifacts/ not found; run `make artifacts` (or set LUMOS_ARTIFACTS)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_artifact(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("fn.hlo.txt"), "HloModule fake").unwrap();
+        let manifest = r#"{
+            "format": "hlo-text-v1",
+            "n_params": 2,
+            "total_param_elements": 10,
+            "param_names": ["a", "b"],
+            "config": {"d_model": 8},
+            "entrypoints": {
+                "fn": {
+                    "file": "fn.hlo.txt",
+                    "inputs": [{"name": "x", "shape": [2], "dtype": "f32"}],
+                    "outputs": [{"name": "y", "shape": [2], "dtype": "f32"}]
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lumos-artifact-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("ok");
+        write_fake_artifact(&d);
+        let a = Artifact::load(&d).unwrap();
+        assert_eq!(a.n_params, 2);
+        assert_eq!(a.state_len(), 7);
+        assert_eq!(a.cfg_usize("d_model").unwrap(), 8);
+        let e = a.entry("fn").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2]);
+        assert!(a.entry("nope").is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_is_error() {
+        let d = tmpdir("missing");
+        write_fake_artifact(&d);
+        std::fs::remove_file(d.join("fn.hlo.txt")).unwrap();
+        let err = Artifact::load(&d).unwrap_err();
+        assert!(err.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn bad_format_is_error() {
+        let d = tmpdir("badfmt");
+        write_fake_artifact(&d);
+        let text = std::fs::read_to_string(d.join("manifest.json"))
+            .unwrap()
+            .replace("hlo-text-v1", "hlo-text-v9");
+        std::fs::write(d.join("manifest.json"), text).unwrap();
+        assert!(Artifact::load(&d).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many
+//! times from the (Python-free) hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::{Artifact, EntrySpec};
+use crate::runtime::tensor::Tensor;
+
+/// Global lock serializing every call into the `xla` crate.
+///
+/// SAFETY CONTRACT: the crate's wrappers hold `Rc<PjRtClientInternal>`
+/// (non-atomic refcounts) and raw C pointers, so they are not thread-safe
+/// by construction even though the underlying PJRT C++ client is. All
+/// refcount mutations happen inside `Engine::load` and
+/// `CompiledEntry::execute`, which take this lock for their whole body and
+/// return only plain host data ([`Tensor`]). That makes the `unsafe impl
+/// Send/Sync` below sound: the wrapped values are never touched
+/// concurrently. (The coordinator's DP workers lose no real parallelism —
+/// XLA:CPU already parallelizes one execution across cores.)
+static XLA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Shared PJRT client + compile cache. Cheap to clone.
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
+}
+
+// SAFETY: see XLA_LOCK.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+// SAFETY: see XLA_LOCK.
+unsafe impl Send for CompiledEntry {}
+unsafe impl Sync for CompiledEntry {}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    /// entry name -> compiled executable (compilation is expensive; cache).
+    cache: Mutex<BTreeMap<String, Arc<CompiledEntry>>>,
+}
+
+/// A compiled entrypoint bound to its manifest spec.
+pub struct CompiledEntry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Execution statistics (for EXPERIMENTS.md §Perf).
+    stats: Mutex<EntryStats>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EntryStats {
+    pub executions: u64,
+    pub total_secs: f64,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            inner: Arc::new(EngineInner { client, cache: Mutex::new(BTreeMap::new()) }),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Load + compile an entrypoint (cached per engine by artifact-dir+name).
+    pub fn load(&self, artifact: &Artifact, entry_name: &str) -> Result<Arc<CompiledEntry>> {
+        let entry = artifact.entry(entry_name)?.clone();
+        let key = format!("{}::{}", artifact.dir.display(), entry_name);
+        if let Some(hit) = self.inner.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let _xla = XLA_LOCK.lock().unwrap();
+        let path = artifact.hlo_path(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling entry '{entry_name}'"))?;
+        let compiled = Arc::new(CompiledEntry {
+            spec: entry,
+            exe,
+            stats: Mutex::new(EntryStats::default()),
+        });
+        eprintln!(
+            "[runtime] compiled '{entry_name}' ({}) in {:.2}s",
+            path.file_name().unwrap_or_default().to_string_lossy(),
+            t0.elapsed().as_secs_f64()
+        );
+        self.inner.cache.lock().unwrap().insert(key, compiled.clone());
+        Ok(compiled)
+    }
+}
+
+/// Opaque host-side value kept in XLA literal form (no Vec<f32> copies).
+/// The fast path for step loops: feed the previous step's outputs straight
+/// back in. Use [`CompiledEntry::execute_literals`] to produce/consume.
+pub struct LitVal(pub(crate) xla::Literal);
+
+// SAFETY: see XLA_LOCK — literals are plain host buffers with no shared
+// refcounts; creation/consumption happens under the lock.
+unsafe impl Send for LitVal {}
+unsafe impl Sync for LitVal {}
+
+impl LitVal {
+    pub fn from_tensor(t: &Tensor) -> Result<LitVal> {
+        Ok(LitVal(t.to_literal()?))
+    }
+
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Tensor::from_literal(&self.0)
+    }
+
+    /// Scalar fast path (losses/metrics) without full conversion.
+    pub fn scalar_f32(&self) -> Result<f64> {
+        Ok(self.0.get_first_element::<f32>()? as f64)
+    }
+}
+
+impl CompiledEntry {
+    /// Execute with literal-form values: the hot-loop path. Skips the
+    /// Tensor<->Vec conversions of [`CompiledEntry::execute`] (the
+    /// remaining copies are PJRT's own host<->device transfers).
+    /// Arity is checked; shapes are trusted (they come from a previous
+    /// execution or a validated tensor).
+    pub fn execute_literals(&self, inputs: &[&LitVal]) -> Result<Vec<LitVal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "entry '{}': got {} inputs, manifest expects {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let _xla = XLA_LOCK.lock().unwrap();
+        let literals: Vec<&xla::Literal> = inputs.iter().map(|v| &v.0).collect();
+        let t0 = Instant::now();
+        let mut replicas = self.exe.execute::<&xla::Literal>(&literals)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.total_secs += elapsed;
+        }
+        if replicas.is_empty() || replicas[0].is_empty() {
+            bail!("entry '{}': empty execution result", self.spec.name);
+        }
+        let outputs = replicas.remove(0);
+        let mut out = Vec::with_capacity(self.spec.outputs.len());
+        if outputs.len() == 1 && self.spec.outputs.len() != 1 {
+            let mut root = outputs[0].to_literal_sync()?;
+            out.extend(root.decompose_tuple()?.into_iter().map(LitVal));
+        } else {
+            for buf in &outputs {
+                let mut lit = buf.to_literal_sync()?;
+                match lit.decompose_tuple() {
+                    Ok(elems) if !elems.is_empty() => out.extend(elems.into_iter().map(LitVal)),
+                    _ => out.push(LitVal(lit)),
+                }
+            }
+        }
+        if out.len() != self.spec.outputs.len() {
+            bail!(
+                "entry '{}': got {} outputs, manifest expects {}",
+                self.spec.name,
+                out.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute with host tensors, validating shapes/dtypes against the
+    /// manifest, and return host tensors (tuple outputs are flattened).
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "entry '{}': got {} inputs, manifest expects {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if !t.matches(s) {
+                bail!(
+                    "entry '{}': input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let _xla = XLA_LOCK.lock().unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let mut replicas = self.exe.execute::<xla::Literal>(&literals)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.total_secs += elapsed;
+        }
+
+        if replicas.is_empty() || replicas[0].is_empty() {
+            bail!("entry '{}': empty execution result", self.spec.name);
+        }
+        let outputs = replicas.remove(0);
+
+        // jax lowers with return_tuple=True: a single tuple buffer comes
+        // back; decompose it into the manifest's flattened outputs. If the
+        // runtime ever hands back untupled buffers, pass them through.
+        let mut literals_out: Vec<xla::Literal> = Vec::with_capacity(self.spec.outputs.len());
+        if outputs.len() == 1 && self.spec.outputs.len() != 1 {
+            let mut root = outputs[0].to_literal_sync()?;
+            literals_out.extend(root.decompose_tuple()?);
+        } else {
+            for buf in &outputs {
+                let mut lit = buf.to_literal_sync()?;
+                // A 1-output entry lowered with return_tuple=True still
+                // wraps the value in a 1-tuple.
+                match lit.decompose_tuple() {
+                    Ok(elems) if !elems.is_empty() => literals_out.extend(elems),
+                    _ => literals_out.push(lit),
+                }
+            }
+        }
+        if literals_out.len() != self.spec.outputs.len() {
+            bail!(
+                "entry '{}': got {} outputs, manifest expects {}",
+                self.spec.name,
+                literals_out.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let tensors: Vec<Tensor> = literals_out
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        for (t, s) in tensors.iter().zip(&self.spec.outputs) {
+            if !t.matches(s) {
+                bail!(
+                    "entry '{}': output '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        Ok(tensors)
+    }
+
+    pub fn stats(&self) -> EntryStats {
+        self.stats.lock().unwrap().clone()
+    }
+}

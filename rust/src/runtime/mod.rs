@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute them
+//! from the Rust hot path. Python never runs here.
+//!
+//! ```no_run
+//! use lumos::runtime::{artifacts_root, Artifact, Engine, Tensor};
+//! let root = artifacts_root().unwrap();
+//! let art = Artifact::load(root.join("tiny")).unwrap();
+//! let engine = Engine::cpu().unwrap();
+//! let init = engine.load(&art, "init").unwrap();
+//! let state = init.execute(&[Tensor::scalar_u32(0)]).unwrap();
+//! ```
+
+mod artifact;
+mod engine;
+mod tensor;
+
+pub use artifact::{artifacts_root, Artifact, EntrySpec};
+pub use engine::{CompiledEntry, Engine, EntryStats, LitVal};
+pub use tensor::{DType, Tensor, TensorSpec};

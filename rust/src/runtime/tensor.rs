@@ -1,0 +1,237 @@
+//! Host-side tensors bridged to/from `xla::Literal`.
+//!
+//! Only the dtypes the AOT manifest emits (f32, i32, u32) are supported;
+//! everything else is an explicit error rather than silent reinterpretation.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a manifest tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn from_manifest(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            other => bail!("unsupported manifest dtype '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one executable input/output, parsed from manifest.json.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec '{name}' missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim in '{name}'")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::from_manifest(
+            j.get("dtype").as_str().ok_or_else(|| anyhow!("spec '{name}' missing dtype"))?,
+        )?;
+        Ok(Self { name, shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn zeros(spec: &TensorSpec) -> Tensor {
+        let n = spec.elements();
+        match spec.dtype {
+            DType::F32 => Tensor::F32(vec![0.0; n], spec.shape.clone()),
+            DType::I32 => Tensor::I32(vec![0; n], spec.shape.clone()),
+            DType::U32 => Tensor::U32(vec![0; n], spec.shape.clone()),
+        }
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::U32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) | Tensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+            Tensor::U32(..) => DType::U32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// First element as f64 (for scalar losses/metrics).
+    pub fn scalar_value(&self) -> Result<f64> {
+        match self {
+            Tensor::F32(d, _) => Ok(*d.first().context("empty tensor")? as f64),
+            Tensor::I32(d, _) => Ok(*d.first().context("empty tensor")? as f64),
+            Tensor::U32(d, _) => Ok(*d.first().context("empty tensor")? as f64),
+        }
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d),
+            Tensor::I32(d, _) => xla::Literal::vec1(d),
+            Tensor::U32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal (copies).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType as E;
+        match shape.ty() {
+            E::F32 => Ok(Tensor::F32(lit.to_vec()?, dims)),
+            E::S32 => Ok(Tensor::I32(lit.to_vec()?, dims)),
+            E::U32 => Ok(Tensor::U32(lit.to_vec()?, dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: "t".into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn spec_parses_from_json() {
+        let j = Json::parse(r#"{"name": "w", "shape": [2, 3], "dtype": "f32"}"#).unwrap();
+        let s = TensorSpec::from_json(&j).unwrap();
+        assert_eq!(s.shape, vec![2, 3]);
+        assert_eq!(s.dtype, DType::F32);
+        assert_eq!(s.elements(), 6);
+    }
+
+    #[test]
+    fn spec_rejects_bad_dtype() {
+        let j = Json::parse(r#"{"name": "w", "shape": [], "dtype": "f64"}"#).unwrap();
+        assert!(TensorSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn zeros_matches_spec() {
+        let s = spec(&[4, 2], DType::I32);
+        let t = Tensor::zeros(&s);
+        assert!(t.matches(&s));
+        assert_eq!(t.elements(), 8);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let t = Tensor::zeros(&spec(&[2], DType::F32));
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar_u32() {
+        let t = Tensor::scalar_u32(7);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::I32(vec![-1, 0, 5], vec![3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+}

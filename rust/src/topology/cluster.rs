@@ -1,0 +1,227 @@
+//! Two-level cluster: scale-up pods (SLS) stitched by a scale-out network.
+//!
+//! Matches the paper's evaluation setup (§VI): 32,768 GPUs; pods of 144
+//! (electrical, 14.4 Tb/s/GPU) or 512 (Passage, 32 Tb/s/GPU); 1.6 Tb/s/GPU
+//! Ethernet between pods.
+
+use crate::hw::package::GpuPackage;
+
+/// Which network a communication group runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    ScaleUp,
+    ScaleOut,
+}
+
+/// Bandwidth/latency envelope of one network domain.
+#[derive(Debug, Clone)]
+pub struct DomainSpec {
+    pub name: String,
+    /// Per-GPU unidirectional injection bandwidth, Gb/s.
+    pub gbps_per_gpu: f64,
+    /// Startup latency per transfer (Hockney α), seconds.
+    pub latency_s: f64,
+    /// Effective fraction of line rate achievable by dense all-to-all
+    /// traffic (congestion/incast derate; cross-validated by netsim).
+    pub a2a_efficiency: f64,
+}
+
+impl DomainSpec {
+    /// Bytes/second usable by one GPU, for bandwidth-bound transfers.
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.gbps_per_gpu * 1e9 / 8.0
+    }
+}
+
+/// Cluster parameters (construction-time description).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub n_gpus: usize,
+    /// GPUs per scale-up pod.
+    pub pod_size: usize,
+    pub scale_up: DomainSpec,
+    pub scale_out: DomainSpec,
+    pub gpu: GpuPackage,
+}
+
+/// A realized cluster (validated spec + derived facts).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec) -> Self {
+        assert!(spec.n_gpus > 0 && spec.pod_size > 0);
+        assert!(
+            spec.n_gpus % spec.pod_size == 0,
+            "n_gpus {} not divisible by pod_size {}",
+            spec.n_gpus,
+            spec.pod_size
+        );
+        Cluster { spec }
+    }
+
+    /// The paper's Passage configuration: 512-GPU pods at 32 Tb/s.
+    pub fn passage_512(n_gpus: usize) -> Self {
+        Cluster::new(ClusterSpec {
+            name: "Passage-512".into(),
+            n_gpus,
+            pod_size: 512,
+            scale_up: DomainSpec {
+                name: "Passage SLS".into(),
+                gbps_per_gpu: 32_000.0,
+                latency_s: 200e-9, // §Table I: 100-250 ns
+                a2a_efficiency: 0.95,
+            },
+            scale_out: scale_out_ethernet(),
+            gpu: GpuPackage::frontier_2028(),
+        })
+    }
+
+    /// The paper's electrical alternative: 144-GPU pods at 14.4 Tb/s.
+    pub fn electrical_144(n_gpus: usize) -> Self {
+        Cluster::new(ClusterSpec {
+            name: "Electrical-144".into(),
+            n_gpus,
+            pod_size: 144,
+            scale_up: DomainSpec {
+                name: "Electrical SLS".into(),
+                gbps_per_gpu: 14_400.0,
+                latency_s: 200e-9,
+                a2a_efficiency: 0.95,
+            },
+            scale_out: scale_out_ethernet(),
+            gpu: GpuPackage::frontier_2028(),
+        })
+    }
+
+    /// Fig. 10's bandwidth-isolation scenario: the electrical technology
+    /// hypothetically scaled to a 512 radix.
+    pub fn electrical_512(n_gpus: usize) -> Self {
+        let mut c = Cluster::electrical_144(144); // borrow the domain specs
+        c.spec.name = "Electrical-512 (hypothetical)".into();
+        c.spec.pod_size = 512;
+        c.spec.n_gpus = n_gpus;
+        assert!(n_gpus % 512 == 0);
+        c
+    }
+
+    /// Custom pod/bandwidth point (for the pod_scaling example & ablations).
+    pub fn custom(n_gpus: usize, pod_size: usize, scaleup_gbps: f64) -> Self {
+        Cluster::new(ClusterSpec {
+            name: format!("pod{pod_size}@{:.1}T", scaleup_gbps / 1000.0),
+            n_gpus,
+            pod_size,
+            scale_up: DomainSpec {
+                name: "SLS".into(),
+                gbps_per_gpu: scaleup_gbps,
+                latency_s: 200e-9,
+                a2a_efficiency: 0.95,
+            },
+            scale_out: scale_out_ethernet(),
+            gpu: GpuPackage::frontier_2028(),
+        })
+    }
+
+    pub fn n_pods(&self) -> usize {
+        self.spec.n_gpus / self.spec.pod_size
+    }
+
+    pub fn pod_of(&self, gpu: usize) -> usize {
+        assert!(gpu < self.spec.n_gpus);
+        gpu / self.spec.pod_size
+    }
+
+    /// Domain spec for a group that spans `span` consecutive GPUs: in-pod
+    /// groups ride the scale-up network, larger groups the scale-out.
+    pub fn domain_for_span(&self, span: usize) -> Domain {
+        if span <= self.spec.pod_size {
+            Domain::ScaleUp
+        } else {
+            Domain::ScaleOut
+        }
+    }
+
+    pub fn domain(&self, d: Domain) -> &DomainSpec {
+        match d {
+            Domain::ScaleUp => &self.spec.scale_up,
+            Domain::ScaleOut => &self.spec.scale_out,
+        }
+    }
+
+    /// Fraction of uniform all-to-all traffic from a group of `span` GPUs
+    /// (pod-major placement) that crosses pod boundaries.
+    pub fn cross_pod_fraction(&self, span: usize) -> f64 {
+        if span <= self.spec.pod_size {
+            return 0.0;
+        }
+        let in_pod_peers = self.spec.pod_size.min(span);
+        1.0 - in_pod_peers as f64 / span as f64
+    }
+}
+
+/// §VI: each Ethernet link provides 1600 Gb/s unidirectional.
+pub fn scale_out_ethernet() -> DomainSpec {
+    DomainSpec {
+        name: "Ethernet scale-out".into(),
+        gbps_per_gpu: 1_600.0,
+        latency_s: 5e-6, // Table I: 2-10 µs
+        // Dense all-to-all over a multi-tier fat-tree sustains well below
+        // line rate (incast + ECMP imbalance); netsim_validate measures
+        // ~0.6 for pod-crossing a2a. Keep in sync with netsim results.
+        a2a_efficiency: 0.6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_shapes() {
+        let p = Cluster::passage_512(32_768);
+        assert_eq!(p.n_pods(), 64);
+        let e = Cluster::electrical_144(32_256); // 224 pods
+        assert_eq!(e.n_pods(), 224);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn rejects_ragged_pods() {
+        Cluster::electrical_144(32_768); // 32768 % 144 != 0
+    }
+
+    #[test]
+    fn pod_membership() {
+        let c = Cluster::passage_512(1024);
+        assert_eq!(c.pod_of(0), 0);
+        assert_eq!(c.pod_of(511), 0);
+        assert_eq!(c.pod_of(512), 1);
+    }
+
+    #[test]
+    fn domain_selection_by_span() {
+        let c = Cluster::electrical_144(1440);
+        assert_eq!(c.domain_for_span(16), Domain::ScaleUp);
+        assert_eq!(c.domain_for_span(144), Domain::ScaleUp);
+        assert_eq!(c.domain_for_span(512), Domain::ScaleOut);
+    }
+
+    #[test]
+    fn cross_pod_fraction_monotone() {
+        let c = Cluster::electrical_144(1440);
+        assert_eq!(c.cross_pod_fraction(144), 0.0);
+        let f512 = c.cross_pod_fraction(512);
+        let f1024 = c.cross_pod_fraction(1024);
+        assert!(f512 > 0.7 && f512 < 0.73, "{f512}"); // 1 - 144/512
+        assert!(f1024 > f512);
+    }
+
+    #[test]
+    fn bandwidth_units() {
+        let c = Cluster::passage_512(512);
+        assert!((c.spec.scale_up.bytes_per_sec() - 4e12).abs() < 1e6);
+    }
+}

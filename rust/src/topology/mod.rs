@@ -1,0 +1,14 @@
+//! Network topologies (paper §II.B): the scale-up SLS fabric, the Ethernet
+//! scale-out network, and the two-level cluster combining them.
+//!
+//! The performance model needs per-domain bandwidth/latency (`DomainSpec`)
+//! plus structural facts (rails, switch radix, pod membership); the netsim
+//! builds its link graph from the same structures.
+
+pub mod cluster;
+pub mod sls;
+pub mod torus;
+
+pub use cluster::{scale_out_ethernet, Cluster, ClusterSpec, Domain, DomainSpec};
+pub use sls::SlsFabric;
+pub use torus::Torus;

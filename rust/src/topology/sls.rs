@@ -1,0 +1,88 @@
+//! Single-Layer-Switch (SLS) scale-up fabric (paper §II.B, Fig. 2).
+//!
+//! Every GPU connects one port to every switch ("rail"); any GPU pair is
+//! one switch hop apart at full bandwidth. Pod size is capped by switch
+//! radix: a 512-port switch supports at most 512 GPUs.
+
+use crate::hw::package::SwitchPackage;
+
+/// An SLS pod: `n_gpus` GPUs × `n_rails` switches.
+#[derive(Debug, Clone)]
+pub struct SlsFabric {
+    pub n_gpus: usize,
+    /// Per-GPU unidirectional injection bandwidth, Gb/s.
+    pub gbps_per_gpu: f64,
+    /// Raw bandwidth of one GPU-to-switch port, Gb/s.
+    pub port_gbps: f64,
+    pub switch: SwitchPackage,
+}
+
+impl SlsFabric {
+    /// The paper's design point: 448G ports into 512-port switches.
+    pub fn new(n_gpus: usize, gbps_per_gpu: f64) -> Self {
+        SlsFabric { n_gpus, gbps_per_gpu, port_gbps: 448.0, switch: SwitchPackage::sls_512() }
+    }
+
+    /// Number of rails (switches) needed to deliver the per-GPU bandwidth.
+    pub fn n_rails(&self) -> usize {
+        (self.gbps_per_gpu / self.port_gbps).ceil() as usize
+    }
+
+    /// Radix feasibility: SLS supports at most one GPU per switch port.
+    pub fn fits_radix(&self) -> bool {
+        self.n_gpus <= self.switch.ports
+    }
+
+    /// Hop count between any two distinct GPUs (the SLS invariant).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        assert!(a < self.n_gpus && b < self.n_gpus);
+        usize::from(a != b) * 2 // GPU→switch→GPU
+    }
+
+    /// Bisection bandwidth of the pod, Gb/s (full bisection by design).
+    pub fn bisection_gbps(&self) -> f64 {
+        self.n_gpus as f64 / 2.0 * self.gbps_per_gpu
+    }
+
+    /// Total switch packages (= rails) and aggregate switch fabric Gb/s.
+    pub fn switch_count(&self) -> usize {
+        self.n_rails()
+    }
+
+    /// Whether the switch fabric capacity covers all GPU ports on a rail.
+    pub fn rail_is_nonblocking(&self) -> bool {
+        self.n_gpus as f64 * self.port_gbps <= self.switch.raw_gbps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rail_counts() {
+        // 32 Tb/s over 448G ports -> 72 rails; 14.4 Tb/s -> 33 rails.
+        assert_eq!(SlsFabric::new(512, 32_000.0).n_rails(), 72);
+        assert_eq!(SlsFabric::new(144, 14_400.0).n_rails(), 33);
+    }
+
+    #[test]
+    fn radix_caps_pod_size() {
+        assert!(SlsFabric::new(512, 32_000.0).fits_radix());
+        assert!(!SlsFabric::new(513, 32_000.0).fits_radix());
+    }
+
+    #[test]
+    fn sls_is_single_hop() {
+        let f = SlsFabric::new(512, 32_000.0);
+        assert_eq!(f.hops(3, 3), 0);
+        assert_eq!(f.hops(0, 511), 2);
+    }
+
+    #[test]
+    fn full_bisection() {
+        let f = SlsFabric::new(512, 32_000.0);
+        assert!((f.bisection_gbps() - 256.0 * 32_000.0).abs() < 1e-6);
+        assert!(f.rail_is_nonblocking());
+    }
+}

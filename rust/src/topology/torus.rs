@@ -1,0 +1,131 @@
+//! Multi-dimensional torus (paper §II.B: the TPU-style alternative).
+//!
+//! Included as the comparison topology: efficient scaling for ring
+//! collectives but large network diameter, which penalizes the
+//! non-deterministic all-to-all traffic of expert parallelism. The
+//! `torus_vs_sls` ablation bench quantifies exactly that trade.
+
+/// A d-dimensional torus with per-dimension extents.
+#[derive(Debug, Clone)]
+pub struct Torus {
+    pub dims: Vec<usize>,
+    /// Per-link unidirectional bandwidth, Gb/s (each node has 2 links per
+    /// dimension).
+    pub link_gbps: f64,
+}
+
+impl Torus {
+    pub fn new(dims: Vec<usize>, link_gbps: f64) -> Self {
+        assert!(!dims.is_empty() && dims.iter().all(|&d| d >= 2));
+        Torus { dims, link_gbps }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Coordinates of node `i` (row-major).
+    pub fn coords(&self, i: usize) -> Vec<usize> {
+        assert!(i < self.n_nodes());
+        let mut rem = i;
+        let mut out = Vec::with_capacity(self.dims.len());
+        for &d in self.dims.iter().rev() {
+            out.push(rem % d);
+            rem /= d;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Minimal hop count between two nodes (per-dimension ring distance).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ca, cb) = (self.coords(a), self.coords(b));
+        ca.iter()
+            .zip(&cb)
+            .zip(&self.dims)
+            .map(|((&x, &y), &d)| {
+                let diff = x.abs_diff(y);
+                diff.min(d - diff)
+            })
+            .sum()
+    }
+
+    /// Network diameter (worst-case hops).
+    pub fn diameter(&self) -> usize {
+        self.dims.iter().map(|&d| d / 2).sum()
+    }
+
+    /// Average hop distance of uniform traffic (exact per-dimension mean).
+    pub fn mean_hops(&self) -> f64 {
+        self.dims
+            .iter()
+            .map(|&d| {
+                let mut total = 0usize;
+                for x in 0..d {
+                    let diff = x.min(d - x);
+                    total += diff;
+                }
+                total as f64 / d as f64
+            })
+            .sum()
+    }
+
+    /// Per-node injection bandwidth, Gb/s (2 links per dimension).
+    pub fn injection_gbps(&self) -> f64 {
+        2.0 * self.dims.len() as f64 * self.link_gbps
+    }
+
+    /// Effective per-node all-to-all bandwidth: uniform traffic consumes
+    /// `mean_hops` link traversals per byte, so the usable fraction of
+    /// injection bandwidth shrinks by that factor.
+    pub fn a2a_effective_gbps(&self) -> f64 {
+        self.injection_gbps() / self.mean_hops().max(1.0)
+    }
+
+    /// Bisection bandwidth, Gb/s: cut across the largest dimension.
+    pub fn bisection_gbps(&self) -> f64 {
+        let dmax = *self.dims.iter().max().unwrap();
+        let cross_section = self.n_nodes() / dmax;
+        // 2 directed links per node pair crossing the cut, both wrap & mid.
+        2.0 * 2.0 * cross_section as f64 * self.link_gbps / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let t = Torus::new(vec![4, 4, 4], 100.0);
+        assert_eq!(t.n_nodes(), 64);
+        assert_eq!(t.coords(0), vec![0, 0, 0]);
+        assert_eq!(t.coords(63), vec![3, 3, 3]);
+        assert_eq!(t.coords(21), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn hops_wrap_around() {
+        let t = Torus::new(vec![8], 100.0);
+        assert_eq!(t.hops(0, 7), 1); // wrap link
+        assert_eq!(t.hops(0, 4), 4);
+        assert_eq!(t.diameter(), 4);
+    }
+
+    #[test]
+    fn sls_beats_torus_for_a2a() {
+        // 512 nodes: 8x8x8 torus with fat links vs SLS flat fabric.
+        let t = Torus::new(vec![8, 8, 8], 32_000.0 / 6.0);
+        assert!((t.injection_gbps() - 32_000.0).abs() < 1e-6);
+        // Uniform a2a pays mean_hops≈6 traversals: effective per-node
+        // bandwidth collapses well below injection.
+        assert!(t.a2a_effective_gbps() < 0.2 * t.injection_gbps());
+    }
+
+    #[test]
+    fn mean_hops_reasonable() {
+        let t = Torus::new(vec![4, 4], 100.0);
+        // per dim mean = (0+1+2+1)/4 = 1.0 -> total 2.0
+        assert!((t.mean_hops() - 2.0).abs() < 1e-12);
+    }
+}

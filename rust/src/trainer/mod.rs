@@ -1,0 +1,278 @@
+//! End-to-end training driver: real MoE training steps (AOT-compiled JAX +
+//! Pallas, executed via PJRT) orchestrated by the Rust coordinator.
+//!
+//! Two modes:
+//! - [`train_single`]: one worker runs the fused `train_step` executable.
+//! - [`train_dp`]: N data-parallel workers each run `grad_step` on their
+//!   own shard of the synthetic corpus, ring-all-reduce the gradients
+//!   through [`crate::coordinator::comm`] (real Rust collectives, real
+//!   f32 payloads), then apply identical Adam updates via `apply_update`
+//!   — the miniature version of the paper's DP dimension.
+//!
+//! Python never runs here: everything executes from `artifacts/`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::comm;
+use crate::runtime::{Artifact, CompiledEntry, Engine, LitVal, Tensor};
+use crate::util::rng::Rng;
+
+pub mod corpus;
+
+pub use corpus::Corpus;
+
+/// One logged training step.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub ce_loss: f64,
+    pub aux_loss: f64,
+    pub wall_secs: f64,
+    /// bytes moved through rust collectives this step (0 in single mode)
+    pub comm_bytes: u64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub mode: String,
+    pub steps: Vec<StepLog>,
+    pub total_secs: f64,
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f64 {
+        self.steps.first().map_or(f64::NAN, |s| s.ce_loss)
+    }
+
+    pub fn last_loss(&self) -> f64 {
+        self.steps.last().map_or(f64::NAN, |s| s.ce_loss)
+    }
+
+    /// Mean step wall time, excluding the first (compile-warm) step.
+    pub fn steady_step_secs(&self) -> f64 {
+        let tail: Vec<f64> = self.steps.iter().skip(1).map(|s| s.wall_secs).collect();
+        if tail.is_empty() {
+            return self.steps.first().map_or(0.0, |s| s.wall_secs);
+        }
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// CSV of the loss curve (EXPERIMENTS.md appendix).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,ce_loss,aux_loss,wall_secs,comm_bytes\n");
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.4},{}\n",
+                s.step, s.ce_loss, s.aux_loss, s.wall_secs, s.comm_bytes
+            ));
+        }
+        out
+    }
+}
+
+fn batch_tensor(art: &Artifact, corpus: &Corpus, rng: &mut Rng) -> Result<Tensor> {
+    let batch = art.cfg_usize("batch")?;
+    let seq = art.cfg_usize("seq_len")?;
+    let mut data = Vec::with_capacity(batch * (seq + 1));
+    for _ in 0..batch {
+        data.extend(corpus.sample_sequence(seq + 1, rng).into_iter().map(|t| t as i32));
+    }
+    Ok(Tensor::I32(data, vec![batch, seq + 1]))
+}
+
+/// Single-worker training with the fused `train_step` entry.
+pub fn train_single(
+    engine: &Engine,
+    art: &Artifact,
+    steps: usize,
+    seed: u64,
+    verbose: bool,
+) -> Result<TrainReport> {
+    let init = engine.load(art, "init")?;
+    let train = engine.load(art, "train_step")?;
+    let vocab = art.cfg_usize("vocab")?;
+    let corpus = Corpus::markov(vocab, seed ^ 0xC0FFEE);
+    let mut rng = Rng::new(seed);
+
+    let t_all = Instant::now();
+    // Literal-form state loop (§Perf-L3: skips Tensor<->Vec copies of the
+    // ~3P-array state every step; see EXPERIMENTS.md).
+    let mut state: Vec<LitVal> = init
+        .execute(&[Tensor::scalar_u32(seed as u32)])?
+        .iter()
+        .map(LitVal::from_tensor)
+        .collect::<Result<_>>()?;
+    let mut logs = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let t0 = Instant::now();
+        let tokens = LitVal::from_tensor(&batch_tensor(art, &corpus, &mut rng)?)?;
+        let mut inputs: Vec<&LitVal> = state.iter().collect();
+        inputs.push(&tokens);
+        let mut out = train.execute_literals(&inputs)?;
+        let aux = out.pop().context("missing aux")?.scalar_f32()?;
+        let ce = out.pop().context("missing ce")?.scalar_f32()?;
+        state = out;
+        let log = StepLog {
+            step,
+            ce_loss: ce,
+            aux_loss: aux,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            comm_bytes: 0,
+        };
+        if verbose && (step < 5 || step % 10 == 0) {
+            eprintln!(
+                "[train] step {:>4}  ce {:.4}  aux {:.4}  ({:.2}s)",
+                step, ce, aux, log.wall_secs
+            );
+        }
+        logs.push(log);
+    }
+    Ok(TrainReport {
+        mode: "single".into(),
+        steps: logs,
+        total_secs: t_all.elapsed().as_secs_f64(),
+    })
+}
+
+/// Data-parallel training: `n_workers` threads, each with its own corpus
+/// shard, gradients ring-all-reduced in rust between `grad_step` and
+/// `apply_update`. Returns rank-0's report.
+pub fn train_dp(
+    engine: &Engine,
+    art: &Artifact,
+    n_workers: usize,
+    steps: usize,
+    seed: u64,
+    verbose: bool,
+) -> Result<TrainReport> {
+    if n_workers == 0 {
+        bail!("n_workers must be >= 1");
+    }
+    let init = engine.load(art, "init")?;
+    let grad = engine.load(art, "grad_step")?;
+    let apply = engine.load(art, "apply_update")?;
+    let vocab = art.cfg_usize("vocab")?;
+    let n_params = art.n_params;
+
+    // Identical initial state on every worker (same seed through init).
+    let state0 = init.execute(&[Tensor::scalar_u32(seed as u32)])?;
+
+    let t_all = Instant::now();
+    let art = Arc::new(art.clone());
+    let grad: Arc<CompiledEntry> = grad;
+    let apply: Arc<CompiledEntry> = apply;
+    let state0 = Arc::new(state0);
+
+    let reports = comm::run_workers(n_workers, move |mut ep| -> Result<Vec<StepLog>> {
+        let rank = ep.rank;
+        let corpus = Corpus::markov(vocab, seed ^ 0xC0FFEE);
+        // distinct data shard per worker
+        let mut rng = Rng::new(seed.wrapping_add(1 + rank as u64 * 7919));
+        let mut state: Vec<Tensor> = (*state0).clone();
+        let mut logs = Vec::with_capacity(steps);
+
+        for step in 0..steps {
+            let t0 = Instant::now();
+            let bytes_before = ep.bytes_sent;
+            let tokens = batch_tensor(&art, &corpus, &mut rng)?;
+
+            // local gradients
+            let mut grad_inputs: Vec<Tensor> = state[..n_params].to_vec();
+            grad_inputs.push(tokens);
+            let mut gout = grad.execute(&grad_inputs)?;
+            let aux = gout.pop().context("aux")?.scalar_value()?;
+            let ce = gout.pop().context("ce")?.scalar_value()?;
+
+            // ring all-reduce each gradient tensor, then average
+            let nw = ep.n_ranks as f32;
+            for (gi, gt) in gout.iter_mut().enumerate() {
+                let data = gt.as_f32_mut()?;
+                ep.all_reduce_sum(data, (step as u64) << 20 | (gi as u64) << 4);
+                for v in data.iter_mut() {
+                    *v /= nw;
+                }
+            }
+
+            // identical Adam update everywhere
+            let mut apply_inputs = state.clone();
+            apply_inputs.extend(gout);
+            state = apply.execute(&apply_inputs)?;
+
+            // mean losses across workers (tiny all-reduce)
+            let mut stats = vec![ce as f32, aux as f32];
+            ep.all_reduce_sum(&mut stats, (step as u64) << 20 | 0xFFF0);
+            let log = StepLog {
+                step,
+                ce_loss: (stats[0] / nw) as f64,
+                aux_loss: (stats[1] / nw) as f64,
+                wall_secs: t0.elapsed().as_secs_f64(),
+                comm_bytes: ep.bytes_sent - bytes_before,
+            };
+            if verbose && rank == 0 && (step < 5 || step % 10 == 0) {
+                eprintln!(
+                    "[train-dp x{}] step {:>4}  ce {:.4}  aux {:.4}  ({:.2}s, {} MB comm)",
+                    ep.n_ranks,
+                    step,
+                    log.ce_loss,
+                    log.aux_loss,
+                    log.wall_secs,
+                    log.comm_bytes / 1_000_000
+                );
+            }
+            logs.push(log);
+        }
+        Ok(logs)
+    });
+
+    let mut per_rank: Vec<Vec<StepLog>> = Vec::with_capacity(n_workers);
+    for r in reports {
+        per_rank.push(r?);
+    }
+    // Workers must agree on the (averaged) loss trajectory.
+    for r in 1..per_rank.len() {
+        for (a, b) in per_rank[0].iter().zip(&per_rank[r]) {
+            if (a.ce_loss - b.ce_loss).abs() > 1e-4 * a.ce_loss.abs().max(1.0) {
+                bail!(
+                    "rank {} diverged at step {}: {} vs {}",
+                    r,
+                    a.step,
+                    a.ce_loss,
+                    b.ce_loss
+                );
+            }
+        }
+    }
+    Ok(TrainReport {
+        mode: format!("dp{n_workers}"),
+        steps: per_rank.swap_remove(0),
+        total_secs: t_all.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_helpers() {
+        let r = TrainReport {
+            mode: "single".into(),
+            steps: vec![
+                StepLog { step: 0, ce_loss: 5.0, aux_loss: 1.0, wall_secs: 2.0, comm_bytes: 0 },
+                StepLog { step: 1, ce_loss: 4.0, aux_loss: 1.0, wall_secs: 1.0, comm_bytes: 8 },
+                StepLog { step: 2, ce_loss: 3.0, aux_loss: 1.0, wall_secs: 1.2, comm_bytes: 8 },
+            ],
+            total_secs: 4.2,
+        };
+        assert_eq!(r.first_loss(), 5.0);
+        assert_eq!(r.last_loss(), 3.0);
+        assert!((r.steady_step_secs() - 1.1).abs() < 1e-12);
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("step,"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Criterion-style micro/macro bench harness (criterion is not in the
+//! vendored crate set; DESIGN.md §Environment deviations).
+//!
+//! Used by `rust/benches/*.rs` (`harness = false`): warmup, fixed sample
+//! count, mean/median/stddev/throughput reporting, and an optional
+//! `LUMOS_BENCH_FAST=1` mode so `cargo bench` stays quick in CI.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_si, fmt_time, Summary};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Summary,
+    /// items (or bytes) processed per iteration, for throughput reporting
+    pub items_per_iter: Option<f64>,
+    pub unit: &'static str,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mean = self.samples.mean();
+        let mut line = format!(
+            "{:40} {:>12} ±{:>10}  (median {:>10}, n={})",
+            self.name,
+            fmt_time(mean),
+            fmt_time(self.samples.stddev()),
+            fmt_time(self.samples.median()),
+            self.samples.len(),
+        );
+        if let Some(items) = self.items_per_iter {
+            if mean > 0.0 {
+                line.push_str(&format!("  [{}/s]", fmt_si(items / mean, self.unit)));
+            }
+        }
+        line
+    }
+}
+
+/// Bench runner with consistent warmup/sampling policy.
+pub struct Bencher {
+    warmup_iters: usize,
+    sample_count: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let fast = std::env::var("LUMOS_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Self {
+            warmup_iters: if fast { 1 } else { 3 },
+            sample_count: if fast { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.sample_count = n;
+        self
+    }
+
+    /// Time `f` (one call = one sample). Returns mean seconds.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        self.bench_throughput(name, None, "item", &mut f)
+    }
+
+    /// Time `f`, reporting `items`/second throughput.
+    pub fn bench_items(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        mut f: impl FnMut(),
+    ) -> f64 {
+        self.bench_throughput(name, Some(items), unit, &mut f)
+    }
+
+    fn bench_throughput(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        unit: &'static str,
+        f: &mut dyn FnMut(),
+    ) -> f64 {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Summary::new();
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            f();
+            samples.add(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            items_per_iter: items,
+            unit,
+        };
+        println!("{}", result.report());
+        let mean = result.samples.mean();
+        self.results.push(result);
+        mean
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("LUMOS_BENCH_FAST", "1");
+        let mut b = Bencher::new().with_samples(3);
+        let mean = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(mean >= 0.0);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].samples.len(), 3);
+    }
+
+    #[test]
+    fn report_contains_throughput() {
+        std::env::set_var("LUMOS_BENCH_FAST", "1");
+        let mut b = Bencher::new().with_samples(2);
+        b.bench_items("tp", 1e6, "B", || {
+            black_box(vec![0u8; 1024]);
+        });
+        assert!(b.results()[0].report().contains("/s]"));
+    }
+}

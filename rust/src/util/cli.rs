@@ -1,0 +1,251 @@
+//! Declarative command-line parsing (clap substitute; DESIGN.md
+//! §Environment deviations).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, repeated
+//! options, and positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One option/flag specification.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected number, got '{s}'")),
+        }
+    }
+}
+
+/// A command with options and optional subcommands.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+    pub subs: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), subs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn sub(mut self, cmd: Command) -> Self {
+        self.subs.push(cmd);
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            out.push_str("<SUBCOMMAND> ");
+        }
+        out.push_str("[OPTIONS]\n");
+        if !self.subs.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for s in &self.subs {
+                out.push_str(&format!("  {:14} {}\n", s.name, s.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let meta = if o.takes_value { " <VALUE>" } else { "" };
+                let dft = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                out.push_str(&format!("  --{}{:2}  {}{}\n", o.name, meta, o.help, dft));
+            }
+        }
+        out.push_str("  --help  print this help\n");
+        out
+    }
+
+    /// Parse argv (without the program name). Returns the subcommand chain
+    /// (empty for the root) and its Args, or an error/help text.
+    pub fn parse(&self, argv: &[String]) -> Result<(Vec<String>, Args), String> {
+        let mut i = 0;
+        // Descend into subcommands first.
+        if i < argv.len() && !argv[i].starts_with('-') && !self.subs.is_empty() {
+            let name = &argv[i];
+            let sub = self
+                .subs
+                .iter()
+                .find(|s| s.name == name.as_str())
+                .ok_or_else(|| format!("unknown subcommand '{name}'\n\n{}", self.help_text()))?;
+            let (mut chain, args) = sub.parse(&argv[i + 1..])?;
+            chain.insert(0, name.clone());
+            return Ok((chain, args));
+        }
+
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option '--{name}'\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    args.values.entry(name.to_string()).or_default().push(val);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok((Vec::new(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("lumos", "test")
+            .sub(
+                Command::new("sweep", "run sweeps")
+                    .opt_default("pod", "pod size", "512")
+                    .opt("bw", "bandwidth")
+                    .flag("verbose", "chatty"),
+            )
+            .sub(Command::new("train", "train").opt("steps", "steps"))
+    }
+
+    #[test]
+    fn parses_subcommand_options() {
+        let (chain, args) = cmd().parse(&sv(&["sweep", "--bw", "32", "--verbose"])).unwrap();
+        assert_eq!(chain, vec!["sweep"]);
+        assert_eq!(args.get("bw"), Some("32"));
+        assert_eq!(args.get("pod"), Some("512")); // default
+        assert!(args.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let (_, args) = cmd()
+            .parse(&sv(&["sweep", "--bw=14.4", "--bw=32"]))
+            .unwrap();
+        assert_eq!(args.get("bw"), Some("32"));
+        assert_eq!(args.get_all("bw"), vec!["14.4", "32"]);
+        assert_eq!(args.get_f64("bw").unwrap(), Some(32.0));
+    }
+
+    #[test]
+    fn unknown_rejected_with_help() {
+        let e = cmd().parse(&sv(&["sweep", "--nope"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+        let e = cmd().parse(&sv(&["zzz"])).unwrap_err();
+        assert!(e.contains("unknown subcommand"));
+    }
+
+    #[test]
+    fn help_is_returned_as_err() {
+        let e = cmd().parse(&sv(&["sweep", "--help"])).unwrap_err();
+        assert!(e.contains("OPTIONS"));
+    }
+
+    #[test]
+    fn positional_and_typed_errors() {
+        let (_, args) = cmd().parse(&sv(&["train", "file.json"])).unwrap();
+        assert_eq!(args.positional, vec!["file.json"]);
+        let (_, args) = cmd().parse(&sv(&["train", "--steps", "abc"])).unwrap();
+        assert!(args.get_usize("steps").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-free substrate utilities (DESIGN.md §Environment deviations):
+//! JSON, RNG, property testing, CLI parsing, statistics, table/figure
+//! rendering, and a criterion-style bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,244 @@
+//! Tiny property-based testing framework (proptest substitute — the vendored
+//! crate set has no proptest; see DESIGN.md §Environment deviations).
+//!
+//! Supports seeded generators, a fixed number of cases, and greedy shrinking
+//! for integer/vec generators. Failures print the seed and the (shrunk)
+//! counterexample so they can be reproduced deterministically.
+//!
+//! ```ignore
+//! use crate::util::prop::{check, Gen};
+//! check("sum is commutative", 256, |g| {
+//!     let a = g.usize(0, 100);
+//!     let b = g.usize(0, 100);
+//!     prop_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Result of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Generator handle passed to each property case: draws are recorded so a
+/// failing case can be replayed while shrinking numeric draws toward zero.
+pub struct Gen {
+    rng: Rng,
+    /// Forced values for the first N draws (used during shrinking).
+    forced: Vec<u64>,
+    /// Values drawn by the current case (raw, pre-range-mapping).
+    pub draws: Vec<u64>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, forced: Vec<u64>) -> Self {
+        Self { rng: Rng::new(seed), forced, draws: Vec::new(), cursor: 0 }
+    }
+
+    fn draw(&mut self, fresh: u64) -> u64 {
+        let v = if self.cursor < self.forced.len() {
+            self.forced[self.cursor]
+        } else {
+            fresh
+        };
+        self.cursor += 1;
+        self.draws.push(v);
+        v
+    }
+
+    /// usize uniform in [lo, hi] (inclusive; shrinks toward lo).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = (hi - lo) as u64 + 1;
+        let fresh = self.rng.below(span);
+        lo + (self.draw(fresh) % span) as usize
+    }
+
+    /// u64 uniform in [0, n) (shrinks toward 0).
+    pub fn u64(&mut self, n: u64) -> u64 {
+        let fresh = self.rng.below(n);
+        self.draw(fresh) % n
+    }
+
+    /// f64 uniform in [lo, hi) (shrinks toward lo).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let raw = self.u64(1 << 53);
+        lo + (hi - lo) * (raw as f64 / (1u64 << 53) as f64)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.usize(0, 1) == 1
+    }
+
+    /// Vec of length in [0, max_len] with elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of a `check` run; panics on failure by default via `check`.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub name: String,
+    pub seed: u64,
+    pub case: usize,
+    pub message: String,
+    pub shrunk_draws: Vec<u64>,
+}
+
+/// Run `cases` random cases of `prop`. Panics with reproduction info on the
+/// first failure after greedy shrinking. Seed defaults to a hash of the name
+/// so failures reproduce across runs; override with `LUMOS_PROP_SEED`.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> CaseResult) {
+    if let Err(f) = check_seeded(name, cases, default_seed(name), &prop) {
+        panic!(
+            "property '{}' failed (seed={}, case={}): {}\n  shrunk draws: {:?}",
+            f.name, f.seed, f.case, f.message, f.shrunk_draws
+        );
+    }
+}
+
+fn default_seed(name: &str) -> u64 {
+    if let Ok(s) = std::env::var("LUMOS_PROP_SEED") {
+        if let Ok(v) = s.parse() {
+            return v;
+        }
+    }
+    // FNV-1a over the name: deterministic, distinct per property.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn check_seeded(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    prop: &impl Fn(&mut Gen) -> CaseResult,
+) -> Result<(), PropFailure> {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut g = Gen::new(case_seed, Vec::new());
+        if let Err(msg) = run_case(prop, &mut g) {
+            let (draws, msg) = shrink(prop, case_seed, g.draws.clone(), msg);
+            return Err(PropFailure {
+                name: name.to_string(),
+                seed,
+                case,
+                message: msg,
+                shrunk_draws: draws,
+            });
+        }
+    }
+    Ok(())
+}
+
+fn run_case(prop: &impl Fn(&mut Gen) -> CaseResult, g: &mut Gen) -> CaseResult {
+    prop(g)
+}
+
+/// Greedy shrink: try forcing each recorded draw toward 0 (halving), keeping
+/// mutations that still fail. Bounded passes so it always terminates.
+fn shrink(
+    prop: &impl Fn(&mut Gen) -> CaseResult,
+    seed: u64,
+    mut draws: Vec<u64>,
+    mut msg: String,
+) -> (Vec<u64>, String) {
+    for _pass in 0..8 {
+        let mut improved = false;
+        for i in 0..draws.len() {
+            let mut candidate = draws[i];
+            while candidate > 0 {
+                candidate /= 2;
+                let mut attempt = draws.clone();
+                attempt[i] = candidate;
+                let mut g = Gen::new(seed, attempt.clone());
+                match run_case(prop, &mut g) {
+                    Err(new_msg) => {
+                        draws = attempt;
+                        msg = new_msg;
+                        improved = true;
+                    }
+                    Ok(()) => break,
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    (draws, msg)
+}
+
+/// Assertion macro for property bodies: returns Err(msg) instead of panicking
+/// so the shrinker can drive the case.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 128, |g| {
+            let a = g.usize(0, 1000);
+            let b = g.usize(0, 1000);
+            prop_assert!(a + b == b + a, "impossible");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        let r = check_seeded("x < 500", 512, 1234, &|g| {
+            let x = g.usize(0, 1000);
+            prop_assert!(x < 500, "x={x}");
+            Ok(())
+        });
+        let f = r.expect_err("property should fail");
+        // Shrinker halves toward the boundary: final value must still fail
+        // and be <= any original failing draw.
+        assert!(f.shrunk_draws[0] % 1001 >= 500);
+        assert!(f.shrunk_draws[0] % 1001 <= 1000);
+    }
+
+    #[test]
+    fn forced_draws_replay() {
+        let mut g = Gen::new(1, vec![42, 7]);
+        assert_eq!(g.usize(0, 100), 42);
+        assert_eq!(g.usize(0, 100), 7);
+    }
+
+    #[test]
+    fn vec_and_choose() {
+        check("vec elements in range", 64, |g| {
+            let v = g.vec(10, |g| g.usize(5, 9));
+            for &x in &v {
+                prop_assert!((5..=9).contains(&x), "x={x}");
+            }
+            if !v.is_empty() {
+                let c = *g.choose(&v);
+                prop_assert!(v.contains(&c), "choose not member");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,217 @@
+//! Summary statistics and histograms for benches, netsim and the trainer.
+
+/// Running summary of a stream of f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.add(x);
+        }
+        s
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (q / 100.0) * (xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            xs[lo] * (1.0 - frac) + xs[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Fixed-bucket histogram over [lo, hi); out-of-range clamps to edge buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Self { lo, hi, counts: vec![0; buckets] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (t.max(0.0) as usize).min(n - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Compact ASCII sparkline (for bench/trainer logs).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        self.counts
+            .iter()
+            .map(|&c| GLYPHS[(c * 7 / max) as usize])
+            .collect()
+    }
+}
+
+/// Format a byte count or rate with binary-ish engineering units.
+pub fn fmt_si(value: f64, unit: &str) -> String {
+    let prefixes = [
+        (1e15, "P"),
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+    ];
+    for (scale, p) in prefixes {
+        if value.abs() >= scale {
+            return format!("{:.2} {}{}", value / scale, p, unit);
+        }
+    }
+    format!("{:.2} {}", value, unit)
+}
+
+/// Format seconds adaptively (ns/µs/ms/s/min/h/days).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if a < 120.0 {
+        format!("{:.2} s", secs)
+    } else if a < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if a < 48.0 * 3600.0 {
+        format!("{:.1} h", secs / 3600.0)
+    } else {
+        format!("{:.1} days", secs / 86400.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.median(), 2.5);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Summary::from_slice(&[0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_on_singleton() {
+        let s = Summary::from_slice(&[7.0]);
+        assert_eq!(s.p99(), 7.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        for x in [0.5, 1.5, 9.9, -3.0, 42.0] {
+            h.add(x);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts()[0], 3); // 0.5, 1.5 (width=2), clamped -3.0
+        assert_eq!(h.counts()[4], 2); // 9.9 and clamped 42.0
+        assert_eq!(h.sparkline().chars().count(), 5);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(3.2e12, "b/s"), "3.20 Tb/s");
+        assert_eq!(fmt_si(5.0, "J"), "5.00 J");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5e-9 * 1000.0), "2.50 µs");
+        assert!(fmt_time(90.0).ends_with(" s"));
+        assert!(fmt_time(86400.0 * 40.0).ends_with("days"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Integration: the full AOT bridge — python-lowered HLO text executed from
+//! rust via PJRT, validated against the manifest and against training-
+//! dynamics expectations (loss decreases on a fixed batch).
+//!
+//! Requires `make artifacts` (artifacts/tiny). Tests that need it are
+//! skipped (with a note) when artifacts are absent so `cargo test` still
+//! passes in a fresh checkout.
+
+use lumos::runtime::{artifacts_root, Artifact, Engine, Tensor};
+use lumos::util::rng::Rng;
+
+fn tiny() -> Option<Artifact> {
+    let root = artifacts_root().ok()?;
+    Artifact::load(root.join("tiny")).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match tiny() {
+            Some(a) => a,
+            None => {
+                eprintln!("SKIP: artifacts/tiny missing; run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn random_tokens(art: &Artifact, rng: &mut Rng) -> Tensor {
+    let batch = art.cfg_usize("batch").unwrap();
+    let seq = art.cfg_usize("seq_len").unwrap();
+    let vocab = art.cfg_usize("vocab").unwrap();
+    let data: Vec<i32> = (0..batch * (seq + 1))
+        .map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    Tensor::I32(data, vec![batch, seq + 1])
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let art = require_artifacts!();
+    assert!(art.n_params > 0);
+    assert_eq!(art.param_names.len(), art.n_params);
+    for name in ["init", "train_step", "grad_step", "apply_update", "forward"] {
+        let e = art.entry(name).unwrap();
+        assert!(!e.inputs.is_empty() || name == "init");
+        assert!(!e.outputs.is_empty());
+    }
+    let ts = art.entry("train_step").unwrap();
+    assert_eq!(ts.inputs.len(), art.state_len() + 1);
+    assert_eq!(ts.outputs.len(), art.state_len() + 2);
+}
+
+#[test]
+fn init_produces_manifest_shaped_state() {
+    let art = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let init = engine.load(&art, "init").unwrap();
+    let state = init.execute(&[Tensor::scalar_u32(0)]).unwrap();
+    assert_eq!(state.len(), art.state_len());
+    // step counter is the last element and starts at 0
+    assert_eq!(state.last().unwrap().scalar_value().unwrap(), 0.0);
+    // params are not all zero
+    let norm: f64 = state[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .map(|&x| (x as f64).abs())
+        .sum();
+    assert!(norm > 0.0);
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let art = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let init = engine.load(&art, "init").unwrap();
+    let a = init.execute(&[Tensor::scalar_u32(7)]).unwrap();
+    let b = init.execute(&[Tensor::scalar_u32(7)]).unwrap();
+    let c = init.execute(&[Tensor::scalar_u32(8)]).unwrap();
+    assert_eq!(a[0], b[0]);
+    assert_ne!(a[0], c[0]);
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let art = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let init = engine.load(&art, "init").unwrap();
+    let train = engine.load(&art, "train_step").unwrap();
+
+    let mut state = init.execute(&[Tensor::scalar_u32(0)]).unwrap();
+    let mut rng = Rng::new(42);
+    let tokens = random_tokens(&art, &mut rng);
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let mut inputs = state.clone();
+        inputs.push(tokens.clone());
+        let mut out = train.execute(&inputs).unwrap();
+        let aux = out.pop().unwrap().scalar_value().unwrap();
+        let ce = out.pop().unwrap().scalar_value().unwrap();
+        assert!(ce.is_finite() && aux.is_finite());
+        state = out;
+        if first.is_none() {
+            first = Some(ce);
+        }
+        last = ce;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "loss did not decrease: first={first} last={last}"
+    );
+    // step counter advanced
+    assert_eq!(state.last().unwrap().scalar_value().unwrap(), 12.0);
+}
+
+#[test]
+fn grad_then_apply_matches_train_step() {
+    let art = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let init = engine.load(&art, "init").unwrap();
+    let train = engine.load(&art, "train_step").unwrap();
+    let grad = engine.load(&art, "grad_step").unwrap();
+    let apply = engine.load(&art, "apply_update").unwrap();
+
+    let state = init.execute(&[Tensor::scalar_u32(1)]).unwrap();
+    let mut rng = Rng::new(7);
+    let tokens = random_tokens(&art, &mut rng);
+    let p = art.n_params;
+
+    // Path A: fused train_step.
+    let mut inputs = state.clone();
+    inputs.push(tokens.clone());
+    let mut out_a = train.execute(&inputs).unwrap();
+    let _aux = out_a.pop().unwrap();
+    let ce_a = out_a.pop().unwrap().scalar_value().unwrap();
+
+    // Path B: grad_step then apply_update (the DP-coordinator path).
+    let mut grad_inputs: Vec<Tensor> = state[..p].to_vec();
+    grad_inputs.push(tokens);
+    let mut gout = grad.execute(&grad_inputs).unwrap();
+    let _aux_b = gout.pop().unwrap();
+    let ce_b = gout.pop().unwrap().scalar_value().unwrap();
+    assert!((ce_a - ce_b).abs() < 1e-5 * ce_a.abs().max(1.0));
+
+    let mut apply_inputs = state.clone();
+    apply_inputs.extend(gout);
+    let out_b = apply.execute(&apply_inputs).unwrap();
+
+    // First parameter tensor must match between the two paths.
+    let pa = out_a[0].as_f32().unwrap();
+    let pb = out_b[0].as_f32().unwrap();
+    let worst = pa
+        .iter()
+        .zip(pb)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(worst < 1e-5, "param divergence {worst}");
+}
+
+#[test]
+fn forward_emits_logits() {
+    let art = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let init = engine.load(&art, "init").unwrap();
+    let fwd = engine.load(&art, "forward").unwrap();
+
+    let state = init.execute(&[Tensor::scalar_u32(0)]).unwrap();
+    let batch = art.cfg_usize("batch").unwrap();
+    let seq = art.cfg_usize("seq_len").unwrap();
+    let vocab = art.cfg_usize("vocab").unwrap();
+    let mut rng = Rng::new(3);
+    let tokens = Tensor::I32(
+        (0..batch * seq).map(|_| rng.below(vocab as u64) as i32).collect(),
+        vec![batch, seq],
+    );
+    let mut inputs: Vec<Tensor> = state[..art.n_params].to_vec();
+    inputs.push(tokens);
+    let out = fwd.execute(&inputs).unwrap();
+    assert_eq!(out[0].shape(), &[batch, seq, vocab]);
+    let logits = out[0].as_f32().unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let art = require_artifacts!();
+    let engine = Engine::cpu().unwrap();
+    let init = engine.load(&art, "init").unwrap();
+    // wrong dtype
+    assert!(init.execute(&[Tensor::scalar_i32(0)]).is_err());
+    // wrong arity
+    assert!(init
+        .execute(&[Tensor::scalar_u32(0), Tensor::scalar_u32(0)])
+        .is_err());
+}
