@@ -25,4 +25,11 @@ fn main() {
             black_box(evaluate_paper_config(&alt512, i, &knobs));
         }
     });
+    // the sweep engine path, serial vs pooled (deterministic output either way)
+    b.bench("fig10 via sweep engine --jobs 1", || {
+        black_box(sweep::fig10_par(&knobs, 1));
+    });
+    b.bench("fig10 via sweep engine --jobs 4", || {
+        black_box(sweep::fig10_par(&knobs, 4));
+    });
 }

@@ -25,10 +25,16 @@ fn main() {
             black_box(evaluate_paper_config(&alt144, i, &knobs));
         }
     });
-    // The sweep engine's interactive workload: a full ablation suite.
-    b.bench("ablation suite (pod+bw+granularity sweeps)", || {
-        black_box(sweep::pod_size_sweep(&knobs));
-        black_box(sweep::bandwidth_sweep(&knobs));
-        black_box(sweep::granularity_sweep(&knobs));
+    // The sweep engine's interactive workload: a full ablation suite,
+    // serial vs pooled.
+    b.bench("ablation suite (pod+bw+granularity) --jobs 1", || {
+        black_box(sweep::pod_size_sweep_par(&knobs, 1));
+        black_box(sweep::bandwidth_sweep_par(&knobs, 1));
+        black_box(sweep::granularity_sweep_par(&knobs, 1));
+    });
+    b.bench("ablation suite (pod+bw+granularity) --jobs 4", || {
+        black_box(sweep::pod_size_sweep_par(&knobs, 4));
+        black_box(sweep::bandwidth_sweep_par(&knobs, 4));
+        black_box(sweep::granularity_sweep_par(&knobs, 4));
     });
 }

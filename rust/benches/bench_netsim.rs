@@ -1,12 +1,46 @@
 //! Bench: the flow-level network simulator — events/second on collective
 //! replays at pod scale, the substrate cost of validating the analytical
-//! model.
+//! model. Every case runs twice: `ref` is the original full-recompute
+//! progressive filling ([`simulate_reference`]), `inc` the incremental
+//! component-local engine behind [`simulate`]/[`replay_schedule`] — the
+//! before/after pair for the netsim fast-path optimisation.
 //!
 //! Run: `cargo bench --bench bench_netsim`
 
 use lumos::collectives as coll;
-use lumos::netsim::{replay_schedule, Network};
+use lumos::netsim::{replay_schedule, simulate, simulate_reference, Flow, Network};
 use lumos::util::bench::{black_box, Bencher};
+
+/// Replay a schedule through the reference (full-recompute) simulator.
+fn replay_reference(net: &Network, sched: &coll::CommSchedule) -> f64 {
+    let mut total = 0.0;
+    for step in 0..sched.n_steps() {
+        let flows: Vec<Flow> = sched
+            .ops
+            .iter()
+            .filter(|o| o.step == step && o.src != o.dst)
+            .map(|o| net.flow(o.src, o.dst, o.bytes))
+            .collect();
+        if !flows.is_empty() {
+            total += simulate_reference(net, &flows).makespan;
+        }
+    }
+    total
+}
+
+/// Staggered many-event batch: uneven flow sizes over shared links, so
+/// completions cascade one at a time — the worst case for full recompute.
+fn staggered_batch(net: &Network, n: usize) -> Vec<Flow> {
+    let mut flows = Vec::new();
+    for s in 0..n {
+        for d in 0..n {
+            if s != d {
+                flows.push(net.flow(s, d, 1e6 * (1 + (s * 13 + d * 7) % 17) as f64));
+            }
+        }
+    }
+    flows
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -15,7 +49,10 @@ fn main() {
         let net = Network::sls(n, 32_000.0, 200e-9);
         let sched = coll::ring_all_reduce_schedule(n, 256e6);
         let flows = sched.ops.len() as f64;
-        b.bench_items(&format!("replay ring-allreduce n={n}"), flows, "flow", || {
+        b.bench_items(&format!("replay ring-allreduce n={n} (ref)"), flows, "flow", || {
+            black_box(replay_reference(&net, &sched));
+        });
+        b.bench_items(&format!("replay ring-allreduce n={n} (inc)"), flows, "flow", || {
             black_box(replay_schedule(&net, &sched));
         });
     }
@@ -24,7 +61,10 @@ fn main() {
         let net = Network::sls(n, 32_000.0, 200e-9);
         let sched = coll::pairwise_a2a_schedule(n, 64e6);
         let flows = sched.ops.len() as f64;
-        b.bench_items(&format!("replay pairwise-a2a n={n}"), flows, "flow", || {
+        b.bench_items(&format!("replay pairwise-a2a n={n} (ref)"), flows, "flow", || {
+            black_box(replay_reference(&net, &sched));
+        });
+        b.bench_items(&format!("replay pairwise-a2a n={n} (inc)"), flows, "flow", || {
             black_box(replay_schedule(&net, &sched));
         });
     }
@@ -32,7 +72,25 @@ fn main() {
     // cross-pod (the oversubscription study from examples/netsim_validate)
     let net = Network::cluster(64, 16, 14_400.0, 1_600.0, 2.0, 5e-6);
     let sched = coll::pairwise_a2a_schedule(64, 64e6);
-    b.bench_items("replay a2a 4x16 pods (oversubscribed)", sched.ops.len() as f64, "flow", || {
+    let nflows = sched.ops.len() as f64;
+    b.bench_items("replay a2a 4x16 pods oversub (ref)", nflows, "flow", || {
+        black_box(replay_reference(&net, &sched));
+    });
+    b.bench_items("replay a2a 4x16 pods oversub (inc)", nflows, "flow", || {
         black_box(replay_schedule(&net, &sched));
     });
+
+    // staggered completions: one event per flow, the O(events × links)
+    // pathology the incremental engine removes
+    for n in [32usize, 64] {
+        let net = Network::cluster(n, 8, 14_400.0, 1_600.0, 2.0, 0.0);
+        let flows = staggered_batch(&net, n);
+        let nf = flows.len() as f64;
+        b.bench_items(&format!("staggered mesh n={n} (ref)"), nf, "flow", || {
+            black_box(simulate_reference(&net, &flows));
+        });
+        b.bench_items(&format!("staggered mesh n={n} (inc)"), nf, "flow", || {
+            black_box(simulate(&net, &flows));
+        });
+    }
 }

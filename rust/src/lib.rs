@@ -9,14 +9,21 @@
 //! - **Analytical stack** (the paper's contribution): [`hw`] technology
 //!   models, [`topology`] fabrics, [`collectives`] Hockney schedules,
 //!   [`model`] workload costing, [`parallel`] 4D parallelism mapping and
-//!   [`perf`] the end-to-end time-to-train engine; [`sweep`] regenerates
-//!   every paper table and figure.
-//! - **Validation stack**: [`netsim`] discrete-event fabric simulation and
+//!   [`perf`] the end-to-end time-to-train engine; [`sweep`] expresses
+//!   every paper table/figure (and arbitrary pod-size × bandwidth ×
+//!   granularity grids) as ordered grids of pure evaluation jobs executed
+//!   by the [`sweep::engine`] worker pool (`lumos sweep --jobs N` —
+//!   deterministic, byte-identical output for any worker count).
+//! - **Validation stack**: [`netsim`] flow-level fabric simulation — an
+//!   incremental max-min engine that re-allocates only the affected
+//!   component on each completion ([`netsim::Simulator`], with
+//!   [`netsim::simulate_reference`] as the full-recompute oracle) — and
 //!   the [`coordinator`] miniature distributed-training runtime with real
 //!   rust collectives, plus [`trainer`] driving real AOT-compiled MoE
 //!   training steps through [`runtime`] (PJRT).
 //! - **Substrate**: [`util`] (JSON, RNG, property testing, CLI, stats,
-//!   tables, bench harness — the vendored crate set is minimal).
+//!   tables, bench harness — the vendored crate set is minimal: the only
+//!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API).
 
 pub mod collectives;
 pub mod config;

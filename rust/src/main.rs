@@ -3,7 +3,8 @@
 //! Subcommands:
 //! - `figures`  regenerate the paper's tables/figures (+ablations)
 //! - `model`    evaluate the analytical perf model on one configuration
-//! - `sweep`    pod/bandwidth/granularity sweeps
+//! - `sweep`    pod/bandwidth/granularity/grid sweeps (`--jobs N` fans the
+//!   evaluation grid over a worker pool; output is identical for any N)
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
@@ -33,7 +34,8 @@ fn cli() -> Command {
                 .flag("fig10", "Figure 10 (same radix)")
                 .flag("fig11", "Figure 11 (system radix)")
                 .flag("breakdown", "step-time breakdown (Config 4)")
-                .flag("ablations", "extra ablation tables"),
+                .flag("ablations", "extra ablation tables")
+                .opt_default("jobs", "worker threads for the evaluation grids", "1"),
         )
         .sub(
             Command::new("model", "evaluate the analytical model")
@@ -44,8 +46,16 @@ fn cli() -> Command {
                 .flag("breakdown", "print the per-component breakdown"),
         )
         .sub(
-            Command::new("sweep", "parameter sweeps")
-                .opt_default("kind", "pod | bandwidth | granularity | topology | routing", "pod"),
+            Command::new("sweep", "parameter sweeps (parallel design-space exploration)")
+                .opt_default(
+                    "kind",
+                    "pod | bandwidth | granularity | grid | topology | routing",
+                    "pod",
+                )
+                .opt_default("jobs", "worker threads for the evaluation grid", "1")
+                .opt("pods", "grid kind: comma-separated pod sizes (e.g. 64,144,512)")
+                .opt("bandwidths", "grid kind: comma-separated scale-up Gb/s (e.g. 14400,32000)")
+                .opt_default("config", "grid kind: MoE config index 1..4", "4"),
         )
         .sub(
             Command::new("netsim", "discrete-event fabric validation")
@@ -106,13 +116,14 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
 
 fn figures(args: &Args) -> anyhow::Result<()> {
     let knobs = PerfKnobs::default();
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
     let all = args.flag("all")
         || !["table1", "table2", "table3", "table4", "fig7", "fig8", "fig10", "fig11",
              "breakdown", "ablations"]
             .iter()
             .any(|f| args.flag(f));
     if all {
-        print!("{}", sweep::render_all(&knobs));
+        print!("{}", sweep::render_all_par(&knobs, jobs));
         return Ok(());
     }
     if args.flag("table1") {
@@ -136,11 +147,11 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         println!("{}\n{}", t.render(), c.render());
     }
     if args.flag("fig10") {
-        let (t, c) = sweep::fig10(&knobs);
+        let (t, c) = sweep::fig10_par(&knobs, jobs);
         println!("{}\n{}", t.render(), c.render());
     }
     if args.flag("fig11") {
-        let (t, c) = sweep::fig11(&knobs);
+        let (t, c) = sweep::fig11_par(&knobs, jobs);
         println!("{}\n{}", t.render(), c.render());
     }
     if args.flag("breakdown") {
@@ -148,9 +159,9 @@ fn figures(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("ablations") {
         for t in [
-            sweep::pod_size_sweep(&knobs),
-            sweep::bandwidth_sweep(&knobs),
-            sweep::granularity_sweep(&knobs),
+            sweep::pod_size_sweep_par(&knobs, jobs),
+            sweep::bandwidth_sweep_par(&knobs, jobs),
+            sweep::granularity_sweep_par(&knobs, jobs),
             sweep::topology_ablation(),
             sweep::routing_restriction_ablation(),
         ] {
@@ -202,10 +213,36 @@ fn model(args: &Args) -> anyhow::Result<()> {
 
 fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
     let knobs = PerfKnobs::default();
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
     let table = match args.get("kind").unwrap_or("pod") {
-        "pod" => sweep::pod_size_sweep(&knobs),
-        "bandwidth" => sweep::bandwidth_sweep(&knobs),
-        "granularity" => sweep::granularity_sweep(&knobs),
+        "pod" => sweep::pod_size_sweep_par(&knobs, jobs),
+        "bandwidth" => sweep::bandwidth_sweep_par(&knobs, jobs),
+        "granularity" => sweep::granularity_sweep_par(&knobs, jobs),
+        "grid" => {
+            let pods = args
+                .get_usize_list("pods")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or_else(|| vec![64, 128, 144, 256, 512, 1024]);
+            let bws = args
+                .get_f64_list("bandwidths")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or_else(|| vec![7_200.0, 14_400.0, 32_000.0, 64_000.0]);
+            let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+            anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
+            for &pod in &pods {
+                anyhow::ensure!(
+                    (1..=32_768).contains(&pod),
+                    "--pods entries must be in 1..=32768, got {pod}"
+                );
+            }
+            for &bw in &bws {
+                anyhow::ensure!(
+                    bw.is_finite() && bw > 0.0,
+                    "--bandwidths entries must be positive Gb/s, got {bw}"
+                );
+            }
+            sweep::custom_grid(&knobs, &pods, &bws, cfg, jobs)
+        }
         "topology" => sweep::topology_ablation(),
         "routing" => sweep::routing_restriction_ablation(),
         other => anyhow::bail!("unknown sweep kind '{other}'"),

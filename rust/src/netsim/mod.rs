@@ -12,6 +12,18 @@
 //! non-blocking (§II.B — full bisection), so contention appears only at
 //! injection/ejection. The scale-out network adds per-pod uplinks with an
 //! oversubscription factor, where incast and pod-level aggregation bite.
+//!
+//! # Fast path
+//!
+//! The production entry points ([`simulate`], [`replay_schedule`]) run an
+//! *incremental* progressive-filling engine ([`Simulator`]): on each flow
+//! completion only the connected component of flows/links reachable from
+//! the completed flows is re-allocated, and all per-link/per-flow buffers
+//! are reused across events (and across schedule steps). Max-min fairness
+//! decomposes exactly over connected components of the flow–link sharing
+//! graph, so this is not an approximation; [`simulate_reference`] keeps
+//! the original full-recompute implementation and the property tests in
+//! `tests/netsim_prop.rs` assert the two agree to ≤ 1e-9 relative.
 
 use std::collections::BTreeMap;
 
@@ -151,10 +163,276 @@ pub struct SimResult {
     pub events: usize,
 }
 
-/// Max-min fair progressive-filling fluid simulation: recompute rates at
-/// every flow completion. O(completions × links) — fine for collective
-/// schedules at pod scale.
+// ---------------------------------------------------------------------------
+// Incremental max-min engine (the production fast path)
+// ---------------------------------------------------------------------------
+
+/// Reusable max-min fluid simulation state.
+///
+/// All per-flow and per-link buffers live here and are recycled across
+/// completion events and across [`Simulator::simulate`] calls (the replay
+/// loop runs one `Simulator` over every step of a schedule), so the steady
+/// state of a replay allocates nothing per event.
+///
+/// Invariants maintained between events (asserted by the property tests):
+/// - `rate` holds the exact max-min fair allocation of the current active
+///   set: the sum of rates over any link never exceeds its capacity, and
+///   every flow is bottlenecked on at least one saturated link.
+/// - On a completion, only the connected component (flows ↔ shared links)
+///   containing the completed flows is re-filled; max-min decomposes over
+///   components, so untouched flows keep exact rates.
+#[derive(Debug, Default)]
+pub struct Simulator {
+    // indexed by flow id
+    remaining: Vec<f64>,
+    rate: Vec<f64>,
+    frozen: Vec<bool>,
+    in_set: Vec<bool>,
+    /// alive flow ids, in original flow order
+    active: Vec<usize>,
+    // indexed by link id
+    link_flows: Vec<Vec<usize>>,
+    link_cap: Vec<f64>,
+    link_users: Vec<usize>,
+    link_in_set: Vec<bool>,
+    // scratch work lists
+    set_flows: Vec<usize>,
+    set_links: Vec<usize>,
+    link_stack: Vec<usize>,
+    completed: Vec<usize>,
+}
+
+impl Simulator {
+    pub fn new() -> Simulator {
+        Simulator::default()
+    }
+
+    fn reset(&mut self, net: &Network, flows: &[Flow]) {
+        let nf = flows.len();
+        let nl = net.links.len();
+        self.remaining.clear();
+        self.remaining.extend(flows.iter().map(|f| f.bytes));
+        self.rate.clear();
+        self.rate.resize(nf, 0.0);
+        self.frozen.clear();
+        self.frozen.resize(nf, false);
+        self.in_set.clear();
+        self.in_set.resize(nf, false);
+        self.active.clear();
+        for v in &mut self.link_flows {
+            v.clear();
+        }
+        if self.link_flows.len() < nl {
+            self.link_flows.resize_with(nl, Vec::new);
+        }
+        self.link_cap.clear();
+        self.link_cap.resize(nl, 0.0);
+        self.link_users.clear();
+        self.link_users.resize(nl, 0);
+        self.link_in_set.clear();
+        self.link_in_set.resize(nl, false);
+        self.set_flows.clear();
+        self.set_links.clear();
+        self.link_stack.clear();
+        self.completed.clear();
+        for (i, f) in flows.iter().enumerate() {
+            if f.bytes > 0.0 {
+                self.active.push(i);
+                for &l in &f.path {
+                    self.link_flows[l].push(i);
+                }
+            }
+        }
+    }
+
+    /// Progressive filling restricted to `set_flows` / `set_links`.
+    ///
+    /// Preconditions: `set_links` covers every link on every set flow's
+    /// path, `link_in_set[l]` is true exactly for set links (cleared here),
+    /// and every alive user of a set link is a set flow (the component
+    /// closure). Bottleneck ties break toward the lowest link id, matching
+    /// [`simulate_reference`]'s `BTreeMap` iteration order.
+    fn fill(&mut self, net: &Network, flows: &[Flow]) {
+        self.set_links.sort_unstable();
+        for &l in &self.set_links {
+            self.link_cap[l] = net.links[l].capacity;
+            self.link_users[l] = self.link_flows[l].len();
+            self.link_in_set[l] = false;
+        }
+        for &fi in &self.set_flows {
+            self.frozen[fi] = false;
+        }
+        let mut unfrozen = self.set_flows.len();
+        while unfrozen > 0 {
+            // bottleneck link = min fair share among set links with users
+            let mut best: Option<(usize, f64)> = None;
+            for &l in &self.set_links {
+                let users = self.link_users[l];
+                if users == 0 {
+                    continue;
+                }
+                let share = self.link_cap[l] / users as f64;
+                let better = match best {
+                    None => true,
+                    Some((_, s)) => share < s,
+                };
+                if better {
+                    best = Some((l, share));
+                }
+            }
+            let Some((bl, share)) = best else { break };
+            // freeze all unfrozen flows through the bottleneck at `share`
+            for &fi in &self.link_flows[bl] {
+                if self.frozen[fi] {
+                    continue;
+                }
+                self.frozen[fi] = true;
+                unfrozen -= 1;
+                self.rate[fi] = share;
+                for &l in &flows[fi].path {
+                    let c = self.link_cap[l] - share;
+                    self.link_cap[l] = if c < 0.0 { 0.0 } else { c };
+                    self.link_users[l] -= 1;
+                }
+            }
+        }
+    }
+
+    /// Seed the fill set with every alive flow (initial allocation).
+    fn seed_all(&mut self, flows: &[Flow]) {
+        self.set_flows.clear();
+        self.set_links.clear();
+        for &fi in &self.active {
+            self.set_flows.push(fi);
+            for &l in &flows[fi].path {
+                if !self.link_in_set[l] {
+                    self.link_in_set[l] = true;
+                    self.set_links.push(l);
+                }
+            }
+        }
+    }
+
+    /// Remove completed flows from the link adjacency and collect the
+    /// connected component(s) they belonged to into `set_flows`/`set_links`
+    /// (transitive closure over shared links).
+    fn seed_component_of_completed(&mut self, flows: &[Flow]) {
+        self.set_flows.clear();
+        self.set_links.clear();
+        self.link_stack.clear();
+        for &fi in &self.completed {
+            for &l in &flows[fi].path {
+                if let Some(pos) = self.link_flows[l].iter().position(|&x| x == fi) {
+                    // ordered remove keeps link user lists in flow order
+                    self.link_flows[l].remove(pos);
+                }
+                if !self.link_in_set[l] {
+                    self.link_in_set[l] = true;
+                    self.set_links.push(l);
+                    self.link_stack.push(l);
+                }
+            }
+        }
+        while let Some(l) = self.link_stack.pop() {
+            for &fi in &self.link_flows[l] {
+                if self.in_set[fi] {
+                    continue;
+                }
+                self.in_set[fi] = true;
+                self.set_flows.push(fi);
+                for &l2 in &flows[fi].path {
+                    if !self.link_in_set[l2] {
+                        self.link_in_set[l2] = true;
+                        self.set_links.push(l2);
+                        self.link_stack.push(l2);
+                    }
+                }
+            }
+        }
+        for &fi in &self.set_flows {
+            self.in_set[fi] = false;
+        }
+    }
+
+    /// Run the fluid simulation for one batch of flows.
+    pub fn simulate(&mut self, net: &Network, flows: &[Flow]) -> SimResult {
+        self.reset(net, flows);
+        let mut flow_times = vec![net.base_latency; flows.len()];
+        let mut now = 0.0f64;
+        let mut events = 0usize;
+
+        self.seed_all(flows);
+        self.fill(net, flows);
+
+        while !self.active.is_empty() {
+            events += 1;
+            // --- advance to next completion -------------------------------
+            let mut dt = f64::INFINITY;
+            for &fi in &self.active {
+                if self.rate[fi] > 0.0 {
+                    let t = self.remaining[fi] / self.rate[fi];
+                    if t < dt {
+                        dt = t;
+                    }
+                }
+            }
+            assert!(dt.is_finite(), "deadlocked flows (zero rate)");
+            now += dt;
+            self.completed.clear();
+            let mut w = 0;
+            for r in 0..self.active.len() {
+                let fi = self.active[r];
+                self.remaining[fi] -= self.rate[fi] * dt;
+                if self.remaining[fi] <= 1e-9 {
+                    flow_times[fi] = now + net.base_latency;
+                    self.completed.push(fi);
+                } else {
+                    self.active[w] = fi;
+                    w += 1;
+                }
+            }
+            self.active.truncate(w);
+            if self.active.is_empty() {
+                break;
+            }
+            // --- re-allocate only the affected component ------------------
+            self.seed_component_of_completed(flows);
+            self.fill(net, flows);
+        }
+
+        SimResult { makespan: now + net.base_latency, flow_times, events }
+    }
+
+    /// The instantaneous max-min fair allocation (bytes/s per flow) of a
+    /// flow batch before anything completes. Zero-byte flows get rate 0.
+    pub fn fair_rates(&mut self, net: &Network, flows: &[Flow]) -> Vec<f64> {
+        self.reset(net, flows);
+        self.seed_all(flows);
+        self.fill(net, flows);
+        self.rate[..flows.len()].to_vec()
+    }
+}
+
+/// Max-min fair progressive-filling fluid simulation (incremental engine;
+/// see [`Simulator`]). One-shot convenience wrapper.
 pub fn simulate(net: &Network, flows: &[Flow]) -> SimResult {
+    Simulator::new().simulate(net, flows)
+}
+
+/// Instantaneous max-min allocation — see [`Simulator::fair_rates`].
+pub fn fair_rates(net: &Network, flows: &[Flow]) -> Vec<f64> {
+    Simulator::new().fair_rates(net, flows)
+}
+
+// ---------------------------------------------------------------------------
+// Reference implementation (full recompute per completion)
+// ---------------------------------------------------------------------------
+
+/// The original O(completions × links) implementation: every completion
+/// rebuilds the whole allocation from scratch. Kept as the oracle for the
+/// incremental engine (property tests assert agreement ≤ 1e-9 relative)
+/// and for before/after benchmarking in `benches/bench_netsim.rs`.
+pub fn simulate_reference(net: &Network, flows: &[Flow]) -> SimResult {
     #[derive(Clone)]
     struct Active {
         idx: usize,
@@ -193,7 +471,11 @@ pub fn simulate(net: &Network, flows: &[Flow]) -> SimResult {
                     continue;
                 }
                 let share = link_cap[l] / users as f64;
-                if best.map_or(true, |(_, s)| share < s) {
+                let better = match best {
+                    None => true,
+                    Some((_, s)) => share < s,
+                };
+                if better {
                     best = Some((l, share));
                 }
             }
@@ -239,9 +521,15 @@ pub fn simulate(net: &Network, flows: &[Flow]) -> SimResult {
     SimResult { makespan: now + net.base_latency, flow_times, events }
 }
 
+// ---------------------------------------------------------------------------
+// Schedule replay
+// ---------------------------------------------------------------------------
+
 /// Replay a collective schedule (step barriers respected) and return the
-/// total completion time.
+/// total completion time. One [`Simulator`] is reused across steps, so the
+/// per-event buffers are allocated once per replay.
 pub fn replay_schedule(net: &Network, sched: &CommSchedule) -> SimResult {
+    let mut sim = Simulator::new();
     let mut total = 0.0;
     let mut events = 0;
     let n_steps = sched.n_steps();
@@ -256,10 +544,13 @@ pub fn replay_schedule(net: &Network, sched: &CommSchedule) -> SimResult {
         if flows.is_empty() {
             continue;
         }
-        let r = simulate(net, &flows);
+        let r = sim.simulate(net, &flows);
+        // per-flow completion times are relative to the *start* of this
+        // step: offset by the pre-step total, not the post-step one
+        let step_start = total;
         total += r.makespan;
         events += r.events;
-        flow_times.extend(r.flow_times.iter().map(|t| t + total));
+        flow_times.extend(r.flow_times.iter().map(|t| t + step_start));
     }
     SimResult { makespan: total, flow_times, events }
 }
@@ -373,5 +664,79 @@ mod tests {
         let mut net = Network::sls(2, 800.0, 0.0);
         net.links[0].capacity = 0.0;
         simulate(&net, &[net.flow(0, 1, 1.0)]);
+    }
+
+    // --------------------------------------------------- incremental engine
+
+    /// Uneven flow sizes over shared links force staggered completions, so
+    /// the incremental path has to re-fill components repeatedly.
+    fn staggered_case() -> (Network, Vec<Flow>) {
+        let net = Network::cluster(16, 4, 800.0, 100.0, 2.0, 0.0);
+        let mut flows = Vec::new();
+        for s in 0..16usize {
+            for d in 0..16usize {
+                if s != d {
+                    flows.push(net.flow(s, d, 1e6 * (1 + (s * 7 + d * 3) % 11) as f64));
+                }
+            }
+        }
+        (net, flows)
+    }
+
+    #[test]
+    fn incremental_matches_reference_on_staggered_mesh() {
+        let (net, flows) = staggered_case();
+        let fast = simulate(&net, &flows);
+        let slow = simulate_reference(&net, &flows);
+        let rel = (fast.makespan - slow.makespan).abs() / slow.makespan;
+        assert!(rel <= 1e-9, "makespan {} vs {}", fast.makespan, slow.makespan);
+        assert_eq!(fast.flow_times.len(), slow.flow_times.len());
+        for (i, (a, b)) in fast.flow_times.iter().zip(&slow.flow_times).enumerate() {
+            assert!((a - b).abs() <= 1e-9 * b.max(1e-30), "flow {i}: {a} vs {b}");
+        }
+        assert!(fast.events > 0 && slow.events > 0);
+    }
+
+    #[test]
+    fn simulator_reuse_is_stateless_across_batches() {
+        let (net, flows) = staggered_case();
+        let mut sim = Simulator::new();
+        let first = sim.simulate(&net, &flows);
+        // run an unrelated batch in between to dirty the buffers
+        let small = Network::sls(4, 800.0, 0.0);
+        sim.simulate(&small, &[small.flow(0, 1, 1e9)]);
+        let second = sim.simulate(&net, &flows);
+        assert_eq!(first.makespan, second.makespan);
+        assert_eq!(first.flow_times, second.flow_times);
+    }
+
+    #[test]
+    fn fair_rates_respect_capacity_and_saturate_bottleneck() {
+        let net = Network::sls(4, 800.0, 0.0);
+        let flows: Vec<Flow> = (1..4).map(|s| net.flow(s, 0, 1e9)).collect();
+        let rates = fair_rates(&net, &flows);
+        let down0 = net.links[net.down[0]].capacity;
+        let sum: f64 = rates.iter().sum();
+        assert!(sum <= down0 * (1.0 + 1e-12));
+        assert!((sum - down0).abs() < 1e-6 * down0, "bottleneck not saturated");
+    }
+
+    // ------------------------------------------------------ replay offsets
+
+    #[test]
+    fn replayed_flow_times_never_exceed_makespan() {
+        // Regression: per-flow completion times used to be offset by the
+        // *post*-step running total, double-counting each step's makespan.
+        let net = Network::sls(8, 800.0, 1e-6);
+        let sched = coll::ring_all_reduce_schedule(8, 64e6);
+        let r = replay_schedule(&net, &sched);
+        assert!(!r.flow_times.is_empty());
+        for (i, &t) in r.flow_times.iter().enumerate() {
+            assert!(t <= r.makespan + 1e-12, "flow {i}: {t} > makespan {}", r.makespan);
+            assert!(t > 0.0);
+        }
+        // the last step's flows must finish exactly at the makespan
+        let last_max = r.flow_times.iter().cloned().fold(0.0f64, f64::max);
+        assert!((last_max - r.makespan).abs() < 1e-12, "{last_max} vs {}", r.makespan);
     }
 }

@@ -1,0 +1,289 @@
+//! Parallel design-space exploration engine.
+//!
+//! A sweep is an ordered list of pure [`EvalJob`]s — one (workload ×
+//! cluster × mapping × knobs) point each. [`run_grid`] executes the list
+//! on a pool of `std::thread` workers (an atomic next-job counter feeds
+//! the pool; results flow back over an mpsc channel tagged with their job
+//! index) and returns the [`PerfReport`]s **in job order**, so every
+//! consumer (tables, figures, CSV) renders byte-identically for any
+//! worker count — the contract `lumos sweep --jobs N` relies on.
+//!
+//! Cluster values are memoized in a shared [`ClusterCache`] keyed by
+//! [`ClusterKey`], so a grid that touches the same cluster from hundreds
+//! of jobs builds it once. No external crates: the pool is scoped threads
+//! + channels from `std` (the vendored-minimal crate set stays minimal).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::model::{MoeConfig, Workload};
+use crate::parallel::{Mapping, Parallelism};
+use crate::perf::{evaluate, PerfKnobs, PerfReport};
+use crate::topology::cluster::Cluster;
+
+/// Orderable description of a cluster — the memoization key. Bandwidth is
+/// keyed by its exact bit pattern (no lossy rounding).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ClusterKey {
+    /// The paper's Passage system: 512-GPU pods @ 32 Tb/s, 32,768 GPUs.
+    Passage512,
+    /// Fig. 10's same-radix electrical hypothetical: 512-GPU pods @ 14.4 Tb/s.
+    Electrical512,
+    /// The paper's electrical alternative: 144-GPU pods @ 14.4 Tb/s, 32,256 GPUs.
+    Electrical144,
+    /// Arbitrary (n_gpus, pod_size, scale-up Gb/s) point.
+    Custom { n_gpus: usize, pod_size: usize, gbps_bits: u64 },
+}
+
+impl ClusterKey {
+    /// Custom point; `n_gpus` must be pod-aligned (checked at build time).
+    pub fn custom(n_gpus: usize, pod_size: usize, scaleup_gbps: f64) -> ClusterKey {
+        ClusterKey::Custom { n_gpus, pod_size, gbps_bits: scaleup_gbps.to_bits() }
+    }
+
+    /// Largest pod-aligned job size ≤ 32,768 GPUs for this pod size (how
+    /// the ablations size clusters at non-power-of-two pods).
+    pub fn custom_pod_aligned(pod_size: usize, scaleup_gbps: f64) -> ClusterKey {
+        let n = 32_768 / pod_size * pod_size;
+        ClusterKey::custom(n, pod_size, scaleup_gbps)
+    }
+
+    /// Construct the cluster this key describes.
+    pub fn build(&self) -> Cluster {
+        match *self {
+            ClusterKey::Passage512 => Cluster::passage_512(32_768),
+            ClusterKey::Electrical512 => Cluster::electrical_512(32_768),
+            ClusterKey::Electrical144 => Cluster::electrical_144(32_256),
+            ClusterKey::Custom { n_gpus, pod_size, gbps_bits } => {
+                Cluster::custom(n_gpus, pod_size, f64::from_bits(gbps_bits))
+            }
+        }
+    }
+}
+
+/// Shared memo of constructed clusters. Workers hit the lock only long
+/// enough to clone an `Arc`; construction happens outside the lock (a
+/// same-key race can build twice; the first insert wins).
+#[derive(Debug, Default)]
+pub struct ClusterCache {
+    map: Mutex<BTreeMap<ClusterKey, Arc<Cluster>>>,
+}
+
+impl ClusterCache {
+    pub fn new() -> ClusterCache {
+        ClusterCache::default()
+    }
+
+    pub fn get(&self, key: &ClusterKey) -> Arc<Cluster> {
+        if let Some(hit) = self.map.lock().unwrap().get(key) {
+            return hit.clone();
+        }
+        // Build outside the lock so concurrent first touches of distinct
+        // keys don't serialize; a racing duplicate build of the same key
+        // is possible and harmless (first insert wins).
+        let built = Arc::new(key.build());
+        self.map.lock().unwrap().entry(key.clone()).or_insert(built).clone()
+    }
+
+    /// Distinct clusters constructed so far (memoization observability).
+    pub fn built(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+/// One pure evaluation point. Running a job has no side effects, so jobs
+/// can execute on any worker in any order; only the result order matters,
+/// and [`run_grid`] restores it.
+#[derive(Debug, Clone)]
+pub struct EvalJob {
+    pub cluster: ClusterKey,
+    pub workload: Workload,
+    pub mapping: Mapping,
+    pub knobs: PerfKnobs,
+}
+
+impl EvalJob {
+    /// The paper's Config `cfg` (Table IV) on `cluster` with the paper's
+    /// fixed TP 16 × PP 8 × DP 256 mapping.
+    pub fn paper(cluster: ClusterKey, cfg: usize, knobs: &PerfKnobs) -> EvalJob {
+        EvalJob {
+            cluster,
+            workload: Workload::paper_gpt_4p7t(cfg),
+            mapping: Mapping::new(Parallelism::paper(), MoeConfig::paper_config(cfg)),
+            knobs: knobs.clone(),
+        }
+    }
+
+    /// A custom MoE shape on the paper's base architecture and mapping.
+    pub fn custom_moe(cluster: ClusterKey, moe: MoeConfig, knobs: &PerfKnobs) -> EvalJob {
+        let mut workload = Workload::paper_gpt_4p7t(1);
+        workload.moe = moe;
+        EvalJob {
+            cluster,
+            workload,
+            mapping: Mapping::new(Parallelism::paper(), moe),
+            knobs: knobs.clone(),
+        }
+    }
+
+    /// Evaluate this point (pure; cluster construction memoized in `cache`).
+    pub fn run(&self, cache: &ClusterCache) -> PerfReport {
+        let cluster = cache.get(&self.cluster);
+        evaluate(&self.workload, &cluster, &self.mapping, &self.knobs)
+    }
+}
+
+/// Execute `jobs` on `workers` threads; results are returned in job order
+/// regardless of completion order. `workers == 1` (or a single job) runs
+/// inline with no threads spawned — the reference serial path.
+pub fn run_grid(jobs: &[EvalJob], workers: usize) -> Vec<PerfReport> {
+    let cache = ClusterCache::new();
+    run_grid_with_cache(jobs, workers, &cache)
+}
+
+/// [`run_grid`] against a caller-owned cache (so several grids in one
+/// command share cluster memoization).
+pub fn run_grid_with_cache(
+    jobs: &[EvalJob],
+    workers: usize,
+    cache: &ClusterCache,
+) -> Vec<PerfReport> {
+    let workers = workers.clamp(1, jobs.len().max(1));
+    if workers == 1 {
+        return jobs.iter().map(|j| j.run(cache)).collect();
+    }
+
+    // An atomic next-job counter feeds the pool; workers tag results with
+    // the job index and send them back over a channel so the main thread
+    // can restore deterministic order.
+    let next = AtomicUsize::new(0);
+    let (res_tx, res_rx) = mpsc::channel::<(usize, PerfReport)>();
+
+    let mut out: Vec<Option<PerfReport>> = jobs.iter().map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let res_tx = res_tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let report = jobs[i].run(cache);
+                if res_tx.send((i, report)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(res_tx);
+        for (i, report) in res_rx {
+            out[i] = Some(report);
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker dropped a job")).collect()
+}
+
+/// Cartesian grid helper: clusters × paper configs, row-major in cluster
+/// order then config order, with positional lookup into `run_grid` output.
+#[derive(Debug, Clone)]
+pub struct PaperGrid {
+    pub clusters: Vec<ClusterKey>,
+    pub configs: Vec<usize>,
+}
+
+impl PaperGrid {
+    pub fn new(clusters: Vec<ClusterKey>, configs: Vec<usize>) -> PaperGrid {
+        PaperGrid { clusters, configs }
+    }
+
+    pub fn jobs(&self, knobs: &PerfKnobs) -> Vec<EvalJob> {
+        let mut jobs = Vec::with_capacity(self.clusters.len() * self.configs.len());
+        for cluster in &self.clusters {
+            for &cfg in &self.configs {
+                jobs.push(EvalJob::paper(cluster.clone(), cfg, knobs));
+            }
+        }
+        jobs
+    }
+
+    /// Index of (cluster `ci`, config `ki`) in the job/result vector.
+    pub fn index(&self, ci: usize, ki: usize) -> usize {
+        assert!(ci < self.clusters.len() && ki < self.configs.len());
+        ci * self.configs.len() + ki
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig11_jobs(knobs: &PerfKnobs) -> Vec<EvalJob> {
+        PaperGrid::new(
+            vec![ClusterKey::Passage512, ClusterKey::Electrical144],
+            vec![1, 2, 3, 4],
+        )
+        .jobs(knobs)
+    }
+
+    #[test]
+    fn parallel_results_match_serial_exactly() {
+        let knobs = PerfKnobs::default();
+        let jobs = fig11_jobs(&knobs);
+        let serial = run_grid(&jobs, 1);
+        let par = run_grid(&jobs, 4);
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            // bitwise equality: same pure function, same inputs
+            assert_eq!(s.step_time.to_bits(), p.step_time.to_bits());
+            assert_eq!(s.time_to_train_s.to_bits(), p.time_to_train_s.to_bits());
+            assert_eq!(s.cluster, p.cluster);
+            assert_eq!(s.config_name, p.config_name);
+        }
+    }
+
+    #[test]
+    fn oversized_worker_count_is_clamped() {
+        let knobs = PerfKnobs::default();
+        let jobs = vec![EvalJob::paper(ClusterKey::Passage512, 1, &knobs)];
+        let r = run_grid(&jobs, 64);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].step_time > 0.0);
+    }
+
+    #[test]
+    fn cluster_cache_memoizes() {
+        let knobs = PerfKnobs::default();
+        let cache = ClusterCache::new();
+        let jobs = fig11_jobs(&knobs);
+        let _ = run_grid_with_cache(&jobs, 4, &cache);
+        // 8 jobs over exactly 2 distinct clusters
+        assert_eq!(cache.built(), 2);
+    }
+
+    #[test]
+    fn custom_keys_are_exact() {
+        let k = ClusterKey::custom(1024, 128, 14_400.0);
+        let c = k.build();
+        assert_eq!(c.spec.pod_size, 128);
+        assert!((c.spec.scale_up.gbps_per_gpu - 14_400.0).abs() < 1e-12);
+        let aligned = ClusterKey::custom_pod_aligned(144, 32_000.0);
+        let c2 = aligned.build();
+        assert_eq!(c2.spec.n_gpus % 144, 0);
+        assert!(c2.spec.n_gpus <= 32_768);
+    }
+
+    #[test]
+    fn grid_indexing_is_row_major() {
+        let g = PaperGrid::new(
+            vec![ClusterKey::Passage512, ClusterKey::Electrical512],
+            vec![1, 4],
+        );
+        let knobs = PerfKnobs::default();
+        let jobs = g.jobs(&knobs);
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(g.index(1, 0), 2);
+        assert_eq!(jobs[g.index(1, 1)].workload.moe.total_experts, 256);
+    }
+}

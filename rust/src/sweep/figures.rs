@@ -1,0 +1,563 @@
+//! Every table/figure of the paper's evaluation (plus ablations), rendered
+//! from ordered [`engine`] job grids. Each function is pure (returns the
+//! artifact); the CLI (`lumos figures ...`, `lumos sweep ...`) and the
+//! bench harness print them. The `*_par` variants fan the underlying
+//! evaluation grid out over `jobs` worker threads; because grid results
+//! come back in job order, their output is byte-identical to the serial
+//! path for any `jobs`.
+
+use crate::hw;
+use crate::model::MoeConfig;
+use crate::perf::{evaluate_paper_config, paper_clusters, PerfKnobs};
+use crate::sweep::engine::{self, ClusterKey, EvalJob, PaperGrid};
+use crate::topology::torus::Torus;
+use crate::util::stats::fmt_time;
+use crate::util::table::{BarChart, Table};
+
+// ---------------------------------------------------------------------------
+// Tables I, II, III, IV
+// ---------------------------------------------------------------------------
+
+/// Table I: scale-up vs scale-out network characteristics.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I: scale-up vs scale-out networks",
+        &["Network Type", "no. GPUs", "latency", "Tbps/GPU", "Energy"],
+    );
+    t.row_str(&["Scale-out", ">100k", "2-10 us", "1.6 Tb/s", "16 pJ/bit"]);
+    t.row_str(&["Scale-up", "<1024", "100-250 ns", ">12.8 Tb/s", "<5 pJ/bit"]);
+    t
+}
+
+/// Table II: legacy optical technology qualities (energy column computed
+/// from the hw catalog; qualitative columns from the paper).
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table II: legacy optical technologies",
+        &["Quality", "Optical Module", "LPO", "2/2.5D CPO"],
+    );
+    let plug = hw::pluggable_osfp();
+    let lpo = hw::lpo_dr8();
+    let cpo = hw::cpo_2p5d();
+    t.row(&[
+        "Energy Efficiency".into(),
+        format!("{:.0} pJ/bit", plug.total_pj_per_bit()),
+        format!("{:.0} pJ/bit", lpo.total_pj_per_bit()),
+        format!("{:.0} pJ/bit", cpo.total_pj_per_bit()),
+    ]);
+    t.row_str(&["Bandwidth Density", "Low", "Low", "Medium"]);
+    t.row_str(&["Latency", "High (retimed)", "Medium", "Low"]);
+    t.row_str(&["Serviceability", "Yes", "Yes", "Ext. laser + coupler"]);
+    t.row_str(&["Std. Form Factor", "Yes", "Yes", "No"]);
+    t.row_str(&["Interoperability", "Yes", "Co-design w/ host", "Co-design w/ host"]);
+    t
+}
+
+/// Table III: energy efficiency decomposition of the three §IV designs.
+pub fn table3() -> Table {
+    let techs = [hw::lpo_dr8(), hw::cpo_2p5d(), hw::passage_interposer()];
+    let mut t = Table::new(
+        "Table III: energy efficiency (pJ/bit)",
+        &["", "1.6T DR8 LPO 224G", "224G 2.5D CPO", "56Gx8λ Passage"],
+    );
+    let row = |name: &str, f: &dyn Fn(&hw::InterconnectTech) -> f64| {
+        let mut cells = vec![name.to_string()];
+        cells.extend(techs.iter().map(|x| format!("{:.1}", f(x))));
+        cells
+    };
+    t.row(&row("In-package pJ/bit", &|x| x.in_pkg_pj_per_bit()));
+    t.row(&row("Off-package pJ/bit", &|x| x.off_pkg_pj));
+    t.row(&row("Total pJ/bit (optics, PHY, laser)", &|x| x.total_pj_per_bit()));
+    t
+}
+
+/// Table IV: MoE cluster configuration parameters.
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table IV: cluster configuration parameters",
+        &["Parameter", "Config 1", "Config 2", "Config 3", "Config 4"],
+    );
+    let cfgs: Vec<MoeConfig> = (1..=4).map(MoeConfig::paper_config).collect();
+    let mut active = vec!["Active / total experts".to_string()];
+    let mut gran = vec!["Expert granularity (m)".to_string()];
+    let mut per_rank = vec!["Experts per DP rank".to_string()];
+    for c in &cfgs {
+        active.push(format!("{}/{}", c.active_per_token, c.total_experts));
+        gran.push(format!("{}", c.granularity));
+        per_rank.push(format!("{}", c.experts_per_dp_rank));
+    }
+    t.row(&active);
+    t.row(&gran);
+    t.row(&per_rank);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Figures 7, 8
+// ---------------------------------------------------------------------------
+
+/// Fig. 7: optics power for a 32 Tb/s unidirectional GPU.
+pub fn fig7() -> (Table, BarChart) {
+    let gbps = 32_000.0;
+    let (rows, advantage) = hw::fig7_comparison(gbps);
+    let mut t = Table::new(
+        &format!(
+            "Fig 7: optics power @ 32 Tb/s GPU (Passage {advantage:.1}x less than best conventional)"
+        ),
+        &["Technology", "SerDes W", "In-pkg optics W", "Off-pkg W", "Total W"],
+    );
+    let mut chart = BarChart::new("Fig 7: power @ 32 Tb/s (W)", "W");
+    for b in &rows {
+        t.row(&[
+            b.tech.clone(),
+            format!("{:.0}", b.serdes_w),
+            format!("{:.0}", b.optics_in_pkg_w),
+            format!("{:.0}", b.off_pkg_w),
+            format!("{:.0}", b.total_w()),
+        ]);
+        chart.bar(&b.tech, b.total_w());
+    }
+    (t, chart)
+}
+
+/// Fig. 8: area to support 32 Tb/s on a four-reticle GPU.
+pub fn fig8() -> (Table, BarChart) {
+    let gpu = hw::GpuPackage::frontier_2028();
+    let techs = [hw::lpo_dr8(), hw::cpo_2p5d(), hw::passage_interposer()];
+    let mut t = Table::new(
+        "Fig 8: area for 32 Tb/s unidirectional on a 4-reticle GPU (mm²)",
+        &["Technology", "GPU base", "Pkg expansion", "Board expansion", "Pkg growth %"],
+    );
+    let mut chart = BarChart::new("Fig 8: additional optical area (mm², log-ish scale)", "mm²");
+    for tech in &techs {
+        let b = hw::AreaBreakdown::compute(&gpu, tech);
+        t.row(&[
+            b.tech.clone(),
+            format!("{:.0}", b.gpu_base),
+            format!("{:.0}", b.pkg_expansion),
+            format!("{:.0}", b.board_expansion),
+            format!("{:.1}%", 100.0 * gpu.pkg_growth_fraction(tech)),
+        ]);
+        chart.bar(tech.name, b.additional());
+    }
+    (t, chart)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 10, 11 (engine-backed)
+// ---------------------------------------------------------------------------
+
+fn fig10_11(knobs: &PerfKnobs, system_radix: bool, jobs: usize) -> (Table, BarChart) {
+    let alt_key = if system_radix { ClusterKey::Electrical144 } else { ClusterKey::Electrical512 };
+    let title = if system_radix {
+        "Fig 11: system-specific radix — Passage(512) vs Alternative(144)"
+    } else {
+        "Fig 10: same radix-512 — Passage(32T) vs Alternative(14.4T)"
+    };
+    let grid = PaperGrid::new(vec![ClusterKey::Passage512, alt_key], vec![1, 2, 3, 4]);
+    let reports = engine::run_grid(&grid.jobs(knobs), jobs);
+    let base = reports[grid.index(0, 0)].step_time;
+    let mut t = Table::new(
+        title,
+        &["Config", "Passage (rel)", "Alternative (rel)", "Alt/Passage", "Passage step"],
+    );
+    let mut chart = BarChart::new(title, "x (norm. to Passage C1)");
+    for (ki, &i) in grid.configs.iter().enumerate() {
+        let p = &reports[grid.index(0, ki)];
+        let a = &reports[grid.index(1, ki)];
+        t.row(&[
+            format!("Config {i}"),
+            format!("{:.3}", p.step_time / base),
+            format!("{:.3}", a.step_time / base),
+            format!("{:.2}x", a.step_time / p.step_time),
+            fmt_time(p.step_time),
+        ]);
+        chart.bar(&format!("C{i} Passage"), p.step_time / base);
+        chart.bar(&format!("C{i} Alternative"), a.step_time / base);
+    }
+    (t, chart)
+}
+
+/// Fig. 10: bandwidth isolation (both systems at radix 512).
+pub fn fig10(knobs: &PerfKnobs) -> (Table, BarChart) {
+    fig10_par(knobs, 1)
+}
+
+/// [`fig10`] with the evaluation grid spread over `jobs` workers.
+pub fn fig10_par(knobs: &PerfKnobs, jobs: usize) -> (Table, BarChart) {
+    fig10_11(knobs, false, jobs)
+}
+
+/// Fig. 11: actual system configurations (512@32T vs 144@14.4T).
+pub fn fig11(knobs: &PerfKnobs) -> (Table, BarChart) {
+    fig11_par(knobs, 1)
+}
+
+/// [`fig11`] with the evaluation grid spread over `jobs` workers.
+pub fn fig11_par(knobs: &PerfKnobs, jobs: usize) -> (Table, BarChart) {
+    fig10_11(knobs, true, jobs)
+}
+
+/// §VI narrative: per-component step breakdown for Config 4 on both
+/// systems (where the 2.7x comes from).
+pub fn breakdown_table(knobs: &PerfKnobs) -> Table {
+    let (passage, _, alt144) = paper_clusters();
+    let mut t = Table::new(
+        "Step breakdown, Config 4 (per microbatch except DP)",
+        &["Component", "Passage-512", "Electrical-144"],
+    );
+    let p = evaluate_paper_config(&passage, 4, knobs);
+    let a = evaluate_paper_config(&alt144, 4, knobs);
+    let rows: Vec<(&str, fn(&crate::perf::PerfReport) -> f64)> = vec![
+        ("compute / micro", |r| r.breakdown.compute_per_micro),
+        ("TP collectives / micro", |r| r.breakdown.tp_comm_per_micro),
+        ("EP all-to-all / micro", |r| r.breakdown.ep_a2a_per_micro),
+        ("PP p2p / micro", |r| r.breakdown.pp_comm_per_micro),
+        ("DP grad sync / step", |r| r.breakdown.dp_comm_per_step),
+        ("step time", |r| r.step_time),
+        ("time-to-train (13T tok)", |r| r.time_to_train_s),
+    ];
+    for (name, f) in rows {
+        t.row(&[name.to_string(), fmt_time(f(&p)), fmt_time(f(&a))]);
+    }
+    t.row(&[
+        "comm fraction".into(),
+        format!("{:.0}%", 100.0 * p.comm_fraction),
+        format!("{:.0}%", 100.0 * a.comm_fraction),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (beyond the paper's figures; engine-backed)
+// ---------------------------------------------------------------------------
+
+/// Pod-size sweep at fixed 32 Tb/s: where does the EP spill cliff sit?
+pub fn pod_size_sweep(knobs: &PerfKnobs) -> Table {
+    pod_size_sweep_par(knobs, 1)
+}
+
+/// [`pod_size_sweep`] over `jobs` workers.
+pub fn pod_size_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation: pod size sweep (Config 4, 32 Tb/s scale-up)",
+        &["Pod size", "EP domain", "Step time", "vs 512-pod"],
+    );
+    let pods = [64usize, 128, 144, 256, 512, 1024];
+    // job 0 is the 512-pod baseline; its key matches the pod=512 grid
+    // point, so the memo builds that cluster once.
+    let mut grid = vec![EvalJob::paper(ClusterKey::custom(32_768, 512, 32_000.0), 4, knobs)];
+    for &pod in &pods {
+        grid.push(EvalJob::paper(ClusterKey::custom_pod_aligned(pod, 32_000.0), 4, knobs));
+    }
+    let reports = engine::run_grid(&grid, jobs);
+    let base = reports[0].step_time;
+    for (pi, &pod) in pods.iter().enumerate() {
+        let r = &reports[pi + 1];
+        t.row(&[
+            format!("{pod}"),
+            format!("{:?}", r.breakdown.ep_placement),
+            fmt_time(r.step_time),
+            format!("{:.2}x", r.step_time / base),
+        ]);
+    }
+    t
+}
+
+/// Scale-up bandwidth sweep at fixed radix 512.
+pub fn bandwidth_sweep(knobs: &PerfKnobs) -> Table {
+    bandwidth_sweep_par(knobs, 1)
+}
+
+/// [`bandwidth_sweep`] over `jobs` workers.
+pub fn bandwidth_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation: scale-up bandwidth sweep (Config 4, radix 512)",
+        &["Gb/s per GPU", "Step time", "Comm fraction", "vs 32T"],
+    );
+    let bws = [7_200.0, 14_400.0, 21_600.0, 32_000.0, 64_000.0, 128_000.0];
+    let mut grid = vec![EvalJob::paper(ClusterKey::custom(32_768, 512, 32_000.0), 4, knobs)];
+    for &gbps in &bws {
+        grid.push(EvalJob::paper(ClusterKey::custom(32_768, 512, gbps), 4, knobs));
+    }
+    let reports = engine::run_grid(&grid, jobs);
+    let base = reports[0].step_time;
+    for (bi, &gbps) in bws.iter().enumerate() {
+        let r = &reports[bi + 1];
+        t.row(&[
+            format!("{:.1}T", gbps / 1000.0),
+            fmt_time(r.step_time),
+            format!("{:.0}%", 100.0 * r.comm_fraction),
+            format!("{:.2}x", r.step_time / base),
+        ]);
+    }
+    t
+}
+
+/// Expert granularity beyond the paper's Config 4 (m = 16): does the
+/// Passage advantage keep growing?
+pub fn granularity_sweep(knobs: &PerfKnobs) -> Table {
+    granularity_sweep_par(knobs, 1)
+}
+
+/// [`granularity_sweep`] over `jobs` workers.
+pub fn granularity_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation: finer granularity than Config 4",
+        &["m (=k, =experts/rank)", "Total experts", "Passage step", "Alt-144 step", "ratio"],
+    );
+    let ms = [1usize, 2, 4, 8, 16];
+    let mut grid = Vec::with_capacity(2 * ms.len());
+    for &m in &ms {
+        let moe = MoeConfig {
+            total_experts: 32 * m,
+            active_per_token: m,
+            granularity: m,
+            experts_per_dp_rank: m,
+        };
+        grid.push(EvalJob::custom_moe(ClusterKey::Passage512, moe, knobs));
+        grid.push(EvalJob::custom_moe(ClusterKey::Electrical144, moe, knobs));
+    }
+    let reports = engine::run_grid(&grid, jobs);
+    for (mi, &m) in ms.iter().enumerate() {
+        let p = &reports[2 * mi];
+        let a = &reports[2 * mi + 1];
+        t.row(&[
+            format!("{m}"),
+            format!("{}", 32 * m),
+            fmt_time(p.step_time),
+            fmt_time(a.step_time),
+            format!("{:.2}x", a.step_time / p.step_time),
+        ]);
+    }
+    t
+}
+
+/// Custom pod-size × bandwidth grid (Config `cfg` step time, normalized to
+/// the 512-pod @ 32 Tb/s reference) — the `lumos sweep --kind grid` payload.
+pub fn custom_grid(
+    knobs: &PerfKnobs,
+    pods: &[usize],
+    bandwidths_gbps: &[f64],
+    cfg: usize,
+    jobs: usize,
+) -> Table {
+    assert!(!pods.is_empty() && !bandwidths_gbps.is_empty());
+    let mut header: Vec<String> = vec!["pod \\ Gb/s".into()];
+    header.extend(bandwidths_gbps.iter().map(|b| format!("{:.1}T", b / 1000.0)));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        &format!("Config {cfg} step time vs (pod size, scale-up Gb/s), normalized to 512@32T"),
+        &header_refs,
+    );
+    let mut grid = vec![EvalJob::paper(ClusterKey::custom(32_768, 512, 32_000.0), cfg, knobs)];
+    for &pod in pods {
+        for &bw in bandwidths_gbps {
+            grid.push(EvalJob::paper(ClusterKey::custom_pod_aligned(pod, bw), cfg, knobs));
+        }
+    }
+    let reports = engine::run_grid(&grid, jobs);
+    let base = reports[0].step_time;
+    for (pi, &pod) in pods.iter().enumerate() {
+        let mut row = vec![format!("{pod}")];
+        for bi in 0..bandwidths_gbps.len() {
+            let r = &reports[1 + pi * bandwidths_gbps.len() + bi];
+            let marker = match r.breakdown.ep_placement {
+                crate::perf::EpPlacement::ScaleUp => "",
+                crate::perf::EpPlacement::Hierarchical => "*",
+            };
+            row.push(format!("{:.2}{}", r.step_time / base, marker));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Topology ablation: SLS vs torus for uniform all-to-all (why §II.B picks
+/// SLS for expert parallelism).
+pub fn topology_ablation() -> Table {
+    let mut t = Table::new(
+        "Ablation: SLS vs 3D torus for 512-GPU all-to-all",
+        &["Topology", "Injection Gb/s", "Effective a2a Gb/s", "Diameter"],
+    );
+    let sls = crate::topology::sls::SlsFabric::new(512, 32_000.0);
+    t.row(&[
+        "SLS (512-port switches)".into(),
+        "32000".into(),
+        "32000".into(),
+        "2 hops".into(),
+    ]);
+    let torus = Torus::new(vec![8, 8, 8], 32_000.0 / 6.0);
+    t.row(&[
+        "8x8x8 torus (equal injection)".into(),
+        format!("{:.0}", torus.injection_gbps()),
+        format!("{:.0}", torus.a2a_effective_gbps()),
+        format!("{} hops", torus.diameter()),
+    ]);
+    let _ = sls;
+    t
+}
+
+/// Routing-restriction ablation (§VI closing point): drop rate with and
+/// without device-limited routing at matched capacity.
+pub fn routing_restriction_ablation() -> Table {
+    use crate::coordinator::{Router, RouterConfig};
+    use crate::util::rng::Rng;
+    let mut t = Table::new(
+        "Ablation: device-limited routing (DeepSeek-V2 style) vs unrestricted",
+        &["max devices/token", "drop rate", "imbalance (max/mean)"],
+    );
+    let n_tokens = 4096;
+    for limit in [None, Some(4), Some(2), Some(1)] {
+        let cfg = RouterConfig {
+            n_experts: 64,
+            top_k: 8,
+            experts_per_rank: 2,
+            capacity: n_tokens * 8 / 64 + 64,
+            max_devices_per_token: limit,
+        };
+        let r = Router::new(cfg);
+        let mut rng = Rng::new(4242);
+        let choices = r.synthetic_choices(n_tokens, 1.1, &mut rng);
+        let res = r.route(&choices);
+        t.row(&[
+            limit.map_or("unrestricted (Passage)".to_string(), |m| format!("{m}")),
+            format!("{:.2}%", 100.0 * res.drop_rate(n_tokens, 8)),
+            format!("{:.2}", res.imbalance()),
+        ]);
+    }
+    t
+}
+
+/// Everything, rendered (the `lumos figures --all` payload).
+pub fn render_all(knobs: &PerfKnobs) -> String {
+    render_all_par(knobs, 1)
+}
+
+/// [`render_all`] with every perf-model grid spread over `jobs` workers.
+pub fn render_all_par(knobs: &PerfKnobs, jobs: usize) -> String {
+    let mut out = String::new();
+    for t in [table1(), table2(), table3(), table4()] {
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    for (t, c) in [fig7(), fig8(), fig10_par(knobs, jobs), fig11_par(knobs, jobs)] {
+        out.push_str(&t.render());
+        out.push('\n');
+        out.push_str(&c.render());
+        out.push('\n');
+    }
+    out.push_str(&breakdown_table(knobs).render());
+    out.push('\n');
+    for t in [
+        pod_size_sweep_par(knobs, jobs),
+        bandwidth_sweep_par(knobs, jobs),
+        granularity_sweep_par(knobs, jobs),
+        topology_ablation(),
+        routing_restriction_ablation(),
+    ] {
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_expected_shape() {
+        assert_eq!(table1().n_rows(), 2);
+        assert_eq!(table3().n_rows(), 3);
+        assert_eq!(table4().n_rows(), 3);
+        assert!(table2().render().contains("21 pJ/bit"));
+    }
+
+    #[test]
+    fn fig10_11_render_with_paper_ratios() {
+        let knobs = PerfKnobs::default();
+        let (t10, _) = fig10(&knobs);
+        let r10 = t10.render();
+        assert!(r10.contains("Config 4"));
+        let (t11, _) = fig11(&knobs);
+        let r11 = t11.render();
+        // headline 2.7x appears in the Fig 11 table
+        assert!(r11.contains("2.7"), "{r11}");
+    }
+
+    #[test]
+    fn parallel_figures_are_byte_identical_to_serial() {
+        // The acceptance contract of `lumos sweep --jobs N`: identical
+        // artifacts for N ∈ {1, 4}.
+        let knobs = PerfKnobs::default();
+        let jobs = 4;
+        let (t1, c1) = fig10(&knobs);
+        let (tn, cn) = fig10_par(&knobs, jobs);
+        assert_eq!(t1.render(), tn.render());
+        assert_eq!(c1.render(), cn.render());
+        let (t1, c1) = fig11(&knobs);
+        let (tn, cn) = fig11_par(&knobs, jobs);
+        assert_eq!(t1.render(), tn.render());
+        assert_eq!(c1.render(), cn.render());
+        assert_eq!(
+            pod_size_sweep(&knobs).render(),
+            pod_size_sweep_par(&knobs, jobs).render()
+        );
+        assert_eq!(
+            bandwidth_sweep(&knobs).render(),
+            bandwidth_sweep_par(&knobs, jobs).render()
+        );
+        assert_eq!(
+            granularity_sweep(&knobs).render(),
+            granularity_sweep_par(&knobs, jobs).render()
+        );
+    }
+
+    #[test]
+    fn pod_sweep_shows_spill_cliff() {
+        let t = pod_size_sweep(&PerfKnobs::default());
+        let r = t.render();
+        assert!(r.contains("Hierarchical"));
+        assert!(r.contains("ScaleUp"));
+    }
+
+    #[test]
+    fn custom_grid_sweeps_requested_points() {
+        let t = custom_grid(&PerfKnobs::default(), &[144, 512], &[14_400.0, 32_000.0], 4, 2);
+        let r = t.render();
+        assert!(r.contains("144"));
+        assert!(r.contains("14.4T"));
+        // the 512 @ 32T cell is the baseline: exactly 1.00, in-pod EP
+        assert!(r.contains("1.00"), "{r}");
+        // the 144-pod rows must be marked as spilled
+        assert!(r.contains('*'), "{r}");
+    }
+
+    #[test]
+    fn render_all_is_substantial() {
+        let out = render_all(&PerfKnobs::default());
+        assert!(out.len() > 4000, "{}", out.len());
+        for needle in ["Table I", "Table IV", "Fig 7", "Fig 8", "Fig 10", "Fig 11"] {
+            assert!(out.contains(needle), "missing {needle}");
+        }
+    }
+
+    #[test]
+    fn render_all_parallel_matches_serial() {
+        let knobs = PerfKnobs::default();
+        assert_eq!(render_all(&knobs), render_all_par(&knobs, 4));
+    }
+
+    #[test]
+    fn routing_ablation_shows_restriction_cost() {
+        let t = routing_restriction_ablation();
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        // unrestricted drop rate (row 1) <= limited to 1 device (last row)
+        let parse = |line: &str| -> f64 {
+            line.split(',').nth(1).unwrap().trim_end_matches('%').parse().unwrap()
+        };
+        assert!(parse(lines[1]) <= parse(lines[4]));
+    }
+}

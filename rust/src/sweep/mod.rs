@@ -1,429 +1,26 @@
-//! Experiment sweep engine: regenerates every table and figure of the
-//! paper's evaluation (plus the ablations DESIGN.md calls out) as rendered
-//! tables/bar-charts. Each function is pure (returns the artifact); the
-//! CLI (`lumos figures ...`) and the bench harness print them.
+//! Design-space sweep subsystem: regenerates every table and figure of the
+//! paper's evaluation (plus the ablations DESIGN.md calls out) and sweeps
+//! arbitrary pod-size/bandwidth/granularity grids.
+//!
+//! Structure:
+//!
+//! - [`engine`] — the parallel execution core. Every table/figure over the
+//!   perf model is expressed as an ordered grid of pure
+//!   [`engine::EvalJob`]s; [`engine::run_grid`] executes them on a
+//!   `std::thread` worker pool (atomic work counter + result channel, memoized
+//!   [`Cluster`](crate::topology::cluster::Cluster) construction) and
+//!   returns results in job order, so rendered output is byte-identical
+//!   for any worker count.
+//! - [`figures`] (re-exported here) — the paper's Tables I–IV, Figures
+//!   7/8/10/11, the §VI breakdown, and the ablation sweeps, each built on
+//!   the engine. `*_par` variants take an explicit worker count; the
+//!   plain names are the serial (`jobs = 1`) paths.
+//!
+//! The CLI exposes the pool through `lumos sweep --jobs N` (and
+//! `lumos figures --jobs N`); `lumos sweep --kind grid` sweeps custom
+//! pod × bandwidth grids without recompiling.
 
-use crate::hw;
-use crate::model::{MoeConfig, Workload};
-use crate::parallel::{Mapping, Parallelism};
-use crate::perf::{evaluate, evaluate_paper_config, paper_clusters, PerfKnobs};
-use crate::topology::cluster::Cluster;
-use crate::topology::torus::Torus;
-use crate::util::stats::fmt_time;
-use crate::util::table::{BarChart, Table};
+pub mod engine;
+mod figures;
 
-// ---------------------------------------------------------------------------
-// Tables I, II, III, IV
-// ---------------------------------------------------------------------------
-
-/// Table I: scale-up vs scale-out network characteristics.
-pub fn table1() -> Table {
-    let mut t = Table::new(
-        "Table I: scale-up vs scale-out networks",
-        &["Network Type", "no. GPUs", "latency", "Tbps/GPU", "Energy"],
-    );
-    t.row_str(&["Scale-out", ">100k", "2-10 us", "1.6 Tb/s", "16 pJ/bit"]);
-    t.row_str(&["Scale-up", "<1024", "100-250 ns", ">12.8 Tb/s", "<5 pJ/bit"]);
-    t
-}
-
-/// Table II: legacy optical technology qualities (energy column computed
-/// from the hw catalog; qualitative columns from the paper).
-pub fn table2() -> Table {
-    let mut t = Table::new(
-        "Table II: legacy optical technologies",
-        &["Quality", "Optical Module", "LPO", "2/2.5D CPO"],
-    );
-    let plug = hw::pluggable_osfp();
-    let lpo = hw::lpo_dr8();
-    let cpo = hw::cpo_2p5d();
-    t.row(&[
-        "Energy Efficiency".into(),
-        format!("{:.0} pJ/bit", plug.total_pj_per_bit()),
-        format!("{:.0} pJ/bit", lpo.total_pj_per_bit()),
-        format!("{:.0} pJ/bit", cpo.total_pj_per_bit()),
-    ]);
-    t.row_str(&["Bandwidth Density", "Low", "Low", "Medium"]);
-    t.row_str(&["Latency", "High (retimed)", "Medium", "Low"]);
-    t.row_str(&["Serviceability", "Yes", "Yes", "Ext. laser + coupler"]);
-    t.row_str(&["Std. Form Factor", "Yes", "Yes", "No"]);
-    t.row_str(&["Interoperability", "Yes", "Co-design w/ host", "Co-design w/ host"]);
-    t
-}
-
-/// Table III: energy efficiency decomposition of the three §IV designs.
-pub fn table3() -> Table {
-    let techs = [hw::lpo_dr8(), hw::cpo_2p5d(), hw::passage_interposer()];
-    let mut t = Table::new(
-        "Table III: energy efficiency (pJ/bit)",
-        &["", "1.6T DR8 LPO 224G", "224G 2.5D CPO", "56Gx8λ Passage"],
-    );
-    let row = |name: &str, f: &dyn Fn(&hw::InterconnectTech) -> f64| {
-        let mut cells = vec![name.to_string()];
-        cells.extend(techs.iter().map(|x| format!("{:.1}", f(x))));
-        cells
-    };
-    t.row(&row("In-package pJ/bit", &|x| x.in_pkg_pj_per_bit()));
-    t.row(&row("Off-package pJ/bit", &|x| x.off_pkg_pj));
-    t.row(&row("Total pJ/bit (optics, PHY, laser)", &|x| x.total_pj_per_bit()));
-    t
-}
-
-/// Table IV: MoE cluster configuration parameters.
-pub fn table4() -> Table {
-    let mut t = Table::new(
-        "Table IV: cluster configuration parameters",
-        &["Parameter", "Config 1", "Config 2", "Config 3", "Config 4"],
-    );
-    let cfgs: Vec<MoeConfig> = (1..=4).map(MoeConfig::paper_config).collect();
-    let mut active = vec!["Active / total experts".to_string()];
-    let mut gran = vec!["Expert granularity (m)".to_string()];
-    let mut per_rank = vec!["Experts per DP rank".to_string()];
-    for c in &cfgs {
-        active.push(format!("{}/{}", c.active_per_token, c.total_experts));
-        gran.push(format!("{}", c.granularity));
-        per_rank.push(format!("{}", c.experts_per_dp_rank));
-    }
-    t.row(&active);
-    t.row(&gran);
-    t.row(&per_rank);
-    t
-}
-
-// ---------------------------------------------------------------------------
-// Figures 7, 8
-// ---------------------------------------------------------------------------
-
-/// Fig. 7: optics power for a 32 Tb/s unidirectional GPU.
-pub fn fig7() -> (Table, BarChart) {
-    let gbps = 32_000.0;
-    let (rows, advantage) = hw::fig7_comparison(gbps);
-    let mut t = Table::new(
-        &format!(
-            "Fig 7: optics power @ 32 Tb/s GPU (Passage {advantage:.1}x less than best conventional)"
-        ),
-        &["Technology", "SerDes W", "In-pkg optics W", "Off-pkg W", "Total W"],
-    );
-    let mut chart = BarChart::new("Fig 7: power @ 32 Tb/s (W)", "W");
-    for b in &rows {
-        t.row(&[
-            b.tech.clone(),
-            format!("{:.0}", b.serdes_w),
-            format!("{:.0}", b.optics_in_pkg_w),
-            format!("{:.0}", b.off_pkg_w),
-            format!("{:.0}", b.total_w()),
-        ]);
-        chart.bar(&b.tech, b.total_w());
-    }
-    (t, chart)
-}
-
-/// Fig. 8: area to support 32 Tb/s on a four-reticle GPU.
-pub fn fig8() -> (Table, BarChart) {
-    let gpu = hw::GpuPackage::frontier_2028();
-    let techs = [hw::lpo_dr8(), hw::cpo_2p5d(), hw::passage_interposer()];
-    let mut t = Table::new(
-        "Fig 8: area for 32 Tb/s unidirectional on a 4-reticle GPU (mm²)",
-        &["Technology", "GPU base", "Pkg expansion", "Board expansion", "Pkg growth %"],
-    );
-    let mut chart = BarChart::new("Fig 8: additional optical area (mm², log-ish scale)", "mm²");
-    for tech in &techs {
-        let b = hw::AreaBreakdown::compute(&gpu, tech);
-        t.row(&[
-            b.tech.clone(),
-            format!("{:.0}", b.gpu_base),
-            format!("{:.0}", b.pkg_expansion),
-            format!("{:.0}", b.board_expansion),
-            format!("{:.1}%", 100.0 * gpu.pkg_growth_fraction(tech)),
-        ]);
-        chart.bar(tech.name, b.additional());
-    }
-    (t, chart)
-}
-
-// ---------------------------------------------------------------------------
-// Figures 10, 11
-// ---------------------------------------------------------------------------
-
-fn fig10_11(knobs: &PerfKnobs, system_radix: bool) -> (Table, BarChart) {
-    let (passage, alt512, alt144) = paper_clusters();
-    let alt = if system_radix { &alt144 } else { &alt512 };
-    let title = if system_radix {
-        "Fig 11: system-specific radix — Passage(512) vs Alternative(144)"
-    } else {
-        "Fig 10: same radix-512 — Passage(32T) vs Alternative(14.4T)"
-    };
-    let base = evaluate_paper_config(&passage, 1, knobs).step_time;
-    let mut t = Table::new(
-        title,
-        &["Config", "Passage (rel)", "Alternative (rel)", "Alt/Passage", "Passage step"],
-    );
-    let mut chart = BarChart::new(title, "x (norm. to Passage C1)");
-    for i in 1..=4 {
-        let p = evaluate_paper_config(&passage, i, knobs);
-        let a = evaluate_paper_config(alt, i, knobs);
-        t.row(&[
-            format!("Config {i}"),
-            format!("{:.3}", p.step_time / base),
-            format!("{:.3}", a.step_time / base),
-            format!("{:.2}x", a.step_time / p.step_time),
-            fmt_time(p.step_time),
-        ]);
-        chart.bar(&format!("C{i} Passage"), p.step_time / base);
-        chart.bar(&format!("C{i} Alternative"), a.step_time / base);
-    }
-    (t, chart)
-}
-
-/// Fig. 10: bandwidth isolation (both systems at radix 512).
-pub fn fig10(knobs: &PerfKnobs) -> (Table, BarChart) {
-    fig10_11(knobs, false)
-}
-
-/// Fig. 11: actual system configurations (512@32T vs 144@14.4T).
-pub fn fig11(knobs: &PerfKnobs) -> (Table, BarChart) {
-    fig10_11(knobs, true)
-}
-
-/// §VI narrative: per-component step breakdown for Config 4 on both
-/// systems (where the 2.7x comes from).
-pub fn breakdown_table(knobs: &PerfKnobs) -> Table {
-    let (passage, _, alt144) = paper_clusters();
-    let mut t = Table::new(
-        "Step breakdown, Config 4 (per microbatch except DP)",
-        &["Component", "Passage-512", "Electrical-144"],
-    );
-    let p = evaluate_paper_config(&passage, 4, knobs);
-    let a = evaluate_paper_config(&alt144, 4, knobs);
-    let rows: Vec<(&str, fn(&crate::perf::PerfReport) -> f64)> = vec![
-        ("compute / micro", |r| r.breakdown.compute_per_micro),
-        ("TP collectives / micro", |r| r.breakdown.tp_comm_per_micro),
-        ("EP all-to-all / micro", |r| r.breakdown.ep_a2a_per_micro),
-        ("PP p2p / micro", |r| r.breakdown.pp_comm_per_micro),
-        ("DP grad sync / step", |r| r.breakdown.dp_comm_per_step),
-        ("step time", |r| r.step_time),
-        ("time-to-train (13T tok)", |r| r.time_to_train_s),
-    ];
-    for (name, f) in rows {
-        t.row(&[name.to_string(), fmt_time(f(&p)), fmt_time(f(&a))]);
-    }
-    t.row(&[
-        "comm fraction".into(),
-        format!("{:.0}%", 100.0 * p.comm_fraction),
-        format!("{:.0}%", 100.0 * a.comm_fraction),
-    ]);
-    t
-}
-
-// ---------------------------------------------------------------------------
-// Ablations (beyond the paper's figures)
-// ---------------------------------------------------------------------------
-
-/// Pod-size sweep at fixed 32 Tb/s: where does the EP spill cliff sit?
-pub fn pod_size_sweep(knobs: &PerfKnobs) -> Table {
-    let mut t = Table::new(
-        "Ablation: pod size sweep (Config 4, 32 Tb/s scale-up)",
-        &["Pod size", "EP domain", "Step time", "vs 512-pod"],
-    );
-    let base = evaluate_paper_config(&Cluster::custom(32_768, 512, 32_000.0), 4, knobs).step_time;
-    for pod in [64, 128, 144, 256, 512, 1024] {
-        let n = 32_768 / pod * pod; // pod-aligned job size
-        let cluster = Cluster::custom(n, pod, 32_000.0);
-        let r = evaluate_paper_config(&cluster, 4, knobs);
-        t.row(&[
-            format!("{pod}"),
-            format!("{:?}", r.breakdown.ep_placement),
-            fmt_time(r.step_time),
-            format!("{:.2}x", r.step_time / base),
-        ]);
-    }
-    t
-}
-
-/// Scale-up bandwidth sweep at fixed radix 512.
-pub fn bandwidth_sweep(knobs: &PerfKnobs) -> Table {
-    let mut t = Table::new(
-        "Ablation: scale-up bandwidth sweep (Config 4, radix 512)",
-        &["Gb/s per GPU", "Step time", "Comm fraction", "vs 32T"],
-    );
-    let base = evaluate_paper_config(&Cluster::custom(32_768, 512, 32_000.0), 4, knobs).step_time;
-    for gbps in [7_200.0, 14_400.0, 21_600.0, 32_000.0, 64_000.0, 128_000.0] {
-        let r = evaluate_paper_config(&Cluster::custom(32_768, 512, gbps), 4, knobs);
-        t.row(&[
-            format!("{:.1}T", gbps / 1000.0),
-            fmt_time(r.step_time),
-            format!("{:.0}%", 100.0 * r.comm_fraction),
-            format!("{:.2}x", r.step_time / base),
-        ]);
-    }
-    t
-}
-
-/// Expert granularity beyond the paper's Config 4 (m = 16, 32): does the
-/// Passage advantage keep growing?
-pub fn granularity_sweep(knobs: &PerfKnobs) -> Table {
-    let (passage, _, alt144) = paper_clusters();
-    let mut t = Table::new(
-        "Ablation: finer granularity than Config 4",
-        &["m (=k, =experts/rank)", "Total experts", "Passage step", "Alt-144 step", "ratio"],
-    );
-    for m in [1usize, 2, 4, 8, 16] {
-        let moe = MoeConfig {
-            total_experts: 32 * m,
-            active_per_token: m,
-            granularity: m,
-            experts_per_dp_rank: m,
-        };
-        let mut w = Workload::paper_gpt_4p7t(1);
-        w.moe = moe;
-        let map = Mapping::new(Parallelism::paper(), moe);
-        let p = evaluate(&w, &passage, &map, knobs);
-        let a = evaluate(&w, &alt144, &map, knobs);
-        t.row(&[
-            format!("{m}"),
-            format!("{}", moe.total_experts),
-            fmt_time(p.step_time),
-            fmt_time(a.step_time),
-            format!("{:.2}x", a.step_time / p.step_time),
-        ]);
-    }
-    t
-}
-
-/// Topology ablation: SLS vs torus for uniform all-to-all (why §II.B picks
-/// SLS for expert parallelism).
-pub fn topology_ablation() -> Table {
-    let mut t = Table::new(
-        "Ablation: SLS vs 3D torus for 512-GPU all-to-all",
-        &["Topology", "Injection Gb/s", "Effective a2a Gb/s", "Diameter"],
-    );
-    let sls = crate::topology::sls::SlsFabric::new(512, 32_000.0);
-    t.row(&[
-        "SLS (512-port switches)".into(),
-        "32000".into(),
-        "32000".into(),
-        "2 hops".into(),
-    ]);
-    let torus = Torus::new(vec![8, 8, 8], 32_000.0 / 6.0);
-    t.row(&[
-        "8x8x8 torus (equal injection)".into(),
-        format!("{:.0}", torus.injection_gbps()),
-        format!("{:.0}", torus.a2a_effective_gbps()),
-        format!("{} hops", torus.diameter()),
-    ]);
-    let _ = sls;
-    t
-}
-
-/// Routing-restriction ablation (§VI closing point): drop rate with and
-/// without device-limited routing at matched capacity.
-pub fn routing_restriction_ablation() -> Table {
-    use crate::coordinator::{Router, RouterConfig};
-    use crate::util::rng::Rng;
-    let mut t = Table::new(
-        "Ablation: device-limited routing (DeepSeek-V2 style) vs unrestricted",
-        &["max devices/token", "drop rate", "imbalance (max/mean)"],
-    );
-    let n_tokens = 4096;
-    for limit in [None, Some(4), Some(2), Some(1)] {
-        let cfg = RouterConfig {
-            n_experts: 64,
-            top_k: 8,
-            experts_per_rank: 2,
-            capacity: n_tokens * 8 / 64 + 64,
-            max_devices_per_token: limit,
-        };
-        let r = Router::new(cfg);
-        let mut rng = Rng::new(4242);
-        let choices = r.synthetic_choices(n_tokens, 1.1, &mut rng);
-        let res = r.route(&choices);
-        t.row(&[
-            limit.map_or("unrestricted (Passage)".to_string(), |m| format!("{m}")),
-            format!("{:.2}%", 100.0 * res.drop_rate(n_tokens, 8)),
-            format!("{:.2}", res.imbalance()),
-        ]);
-    }
-    t
-}
-
-/// Everything, rendered (the `lumos figures --all` payload).
-pub fn render_all(knobs: &PerfKnobs) -> String {
-    let mut out = String::new();
-    for t in [table1(), table2(), table3(), table4()] {
-        out.push_str(&t.render());
-        out.push('\n');
-    }
-    for (t, c) in [fig7(), fig8(), fig10(knobs), fig11(knobs)] {
-        out.push_str(&t.render());
-        out.push('\n');
-        out.push_str(&c.render());
-        out.push('\n');
-    }
-    out.push_str(&breakdown_table(knobs).render());
-    out.push('\n');
-    for t in [
-        pod_size_sweep(knobs),
-        bandwidth_sweep(knobs),
-        granularity_sweep(knobs),
-        topology_ablation(),
-        routing_restriction_ablation(),
-    ] {
-        out.push_str(&t.render());
-        out.push('\n');
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tables_have_expected_shape() {
-        assert_eq!(table1().n_rows(), 2);
-        assert_eq!(table3().n_rows(), 3);
-        assert_eq!(table4().n_rows(), 3);
-        assert!(table2().render().contains("21 pJ/bit"));
-    }
-
-    #[test]
-    fn fig10_11_render_with_paper_ratios() {
-        let knobs = PerfKnobs::default();
-        let (t10, _) = fig10(&knobs);
-        let r10 = t10.render();
-        assert!(r10.contains("Config 4"));
-        let (t11, _) = fig11(&knobs);
-        let r11 = t11.render();
-        // headline 2.7x appears in the Fig 11 table
-        assert!(r11.contains("2.7"), "{r11}");
-    }
-
-    #[test]
-    fn pod_sweep_shows_spill_cliff() {
-        let t = pod_size_sweep(&PerfKnobs::default());
-        let r = t.render();
-        assert!(r.contains("Hierarchical"));
-        assert!(r.contains("ScaleUp"));
-    }
-
-    #[test]
-    fn render_all_is_substantial() {
-        let out = render_all(&PerfKnobs::default());
-        assert!(out.len() > 4000, "{}", out.len());
-        for needle in ["Table I", "Table IV", "Fig 7", "Fig 8", "Fig 10", "Fig 11"] {
-            assert!(out.contains(needle), "missing {needle}");
-        }
-    }
-
-    #[test]
-    fn routing_ablation_shows_restriction_cost() {
-        let t = routing_restriction_ablation();
-        let csv = t.to_csv();
-        let lines: Vec<&str> = csv.lines().collect();
-        // unrestricted drop rate (row 1) <= limited to 1 device (last row)
-        let parse = |line: &str| -> f64 {
-            line.split(',').nth(1).unwrap().trim_end_matches('%').parse().unwrap()
-        };
-        assert!(parse(lines[1]) <= parse(lines[4]));
-    }
-}
+pub use figures::*;

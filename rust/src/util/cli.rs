@@ -58,6 +58,37 @@ impl Args {
                 .map_err(|_| format!("--{name}: expected number, got '{s}'")),
         }
     }
+
+    /// Comma-separated list of any parseable type; a missing option yields
+    /// `None`, any unparseable item fails with an error naming the option.
+    fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        what: &str,
+    ) -> Result<Option<Vec<T>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|item| {
+                    item.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: expected {what} list, got '{s}'"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// Comma-separated integer list (`--pods 64,128,512`).
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, String> {
+        self.get_list(name, "integer")
+    }
+
+    /// Comma-separated number list (`--bandwidths 14400,32000`).
+    pub fn get_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>, String> {
+        self.get_list(name, "number")
+    }
 }
 
 /// A command with options and optional subcommands.
@@ -247,5 +278,15 @@ mod tests {
         assert_eq!(args.positional, vec!["file.json"]);
         let (_, args) = cmd().parse(&sv(&["train", "--steps", "abc"])).unwrap();
         assert!(args.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn list_options_parse() {
+        let (_, args) = cmd().parse(&sv(&["sweep", "--bw", "64,128, 512"])).unwrap();
+        assert_eq!(args.get_usize_list("bw").unwrap(), Some(vec![64, 128, 512]));
+        assert_eq!(args.get_f64_list("bw").unwrap(), Some(vec![64.0, 128.0, 512.0]));
+        assert_eq!(args.get_usize_list("missing-opt").unwrap(), None);
+        let (_, args) = cmd().parse(&sv(&["sweep", "--bw", "64,x"])).unwrap();
+        assert!(args.get_usize_list("bw").is_err());
     }
 }

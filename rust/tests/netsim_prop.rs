@@ -1,0 +1,163 @@
+//! Property tests for the netsim invariants (ISSUE 1): max-min allocation
+//! never exceeds link capacity, bytes are conserved against line rates,
+//! per-flow completion times stay inside the batch makespan, and the
+//! incremental fast path agrees with the full-recompute reference to
+//! ≤ 1e-9 relative. Uses the in-tree `util::prop` framework (seeded,
+//! shrinking; override with `LUMOS_PROP_SEED`).
+
+use lumos::collectives as coll;
+use lumos::netsim::{fair_rates, replay_schedule, simulate, simulate_reference, Flow, Network};
+use lumos::prop_assert;
+use lumos::util::prop::{check, Gen};
+
+/// Random single-pod or two-level network with strictly positive capacities.
+fn random_net(g: &mut Gen) -> Network {
+    let pods = g.usize(1, 4);
+    let pod = g.usize(2, 6);
+    let n = pods * pod;
+    let up = *g.choose(&[800.0, 1_600.0, 14_400.0]);
+    let out = *g.choose(&[100.0, 400.0, 1_600.0]);
+    let oversub = *g.choose(&[1.0, 1.5, 2.0, 4.0]);
+    let lat = *g.choose(&[0.0, 5e-6]);
+    if pods == 1 {
+        Network::sls(n, up, lat)
+    } else {
+        Network::cluster(n, pod, up, out, oversub, lat)
+    }
+}
+
+/// Random flow batch; mixes zero-byte flows in to exercise the skip path.
+fn random_flows(g: &mut Gen, net: &Network) -> Vec<Flow> {
+    let n = net.n_nodes;
+    let count = g.usize(1, 48);
+    (0..count)
+        .map(|_| {
+            let src = g.usize(0, n - 1);
+            let mut dst = g.usize(0, n - 1);
+            if dst == src {
+                dst = (dst + 1) % n;
+            }
+            let bytes = if g.bool() { g.f64(1e3, 1e8) } else { 0.0 };
+            net.flow(src, dst, bytes)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_max_min_rates_respect_link_capacity() {
+    check("rates never exceed link capacity", 96, |g| {
+        let net = random_net(g);
+        let flows = random_flows(g, &net);
+        let rates = fair_rates(&net, &flows);
+        let mut load = vec![0.0f64; net.links.len()];
+        for (f, r) in flows.iter().zip(&rates) {
+            for &l in &f.path {
+                load[l] += r;
+            }
+        }
+        for (l, link) in net.links.iter().enumerate() {
+            prop_assert!(
+                load[l] <= link.capacity * (1.0 + 1e-9),
+                "link {l} oversubscribed: {} > {}",
+                load[l],
+                link.capacity
+            );
+        }
+        // work conservation at the flow level: positive demand never starves
+        for (i, (f, r)) in flows.iter().zip(&rates).enumerate() {
+            if f.bytes > 0.0 {
+                prop_assert!(*r > 0.0, "flow {i} starved");
+            } else {
+                prop_assert!(*r == 0.0, "zero-byte flow {i} got rate {r}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bytes_conserved_against_line_rates() {
+    check("no link or flow beats line rate", 96, |g| {
+        let net = random_net(g);
+        let flows = random_flows(g, &net);
+        let r = simulate(&net, &flows);
+        let lat = net.base_latency;
+        let transfer = r.makespan - lat;
+        prop_assert!(transfer >= -1e-12, "negative transfer window {transfer}");
+        // per-link conservation: a link cannot move more bytes than
+        // capacity × busy-time
+        let mut through = vec![0.0f64; net.links.len()];
+        for f in &flows {
+            for &l in &f.path {
+                through[l] += f.bytes;
+            }
+        }
+        for (l, link) in net.links.iter().enumerate() {
+            prop_assert!(
+                through[l] <= link.capacity * transfer * (1.0 + 1e-9) + 1e-6,
+                "link {l} moved {} B in {transfer}s at cap {}",
+                through[l],
+                link.capacity
+            );
+        }
+        // per-flow: completion inside the makespan, and no flow beats the
+        // narrowest link on its path
+        for (i, f) in flows.iter().enumerate() {
+            let t = r.flow_times[i];
+            prop_assert!(
+                t <= r.makespan + 1e-12,
+                "flow {i} finishes at {t} after makespan {}",
+                r.makespan
+            );
+            let min_cap = f.path.iter().map(|&l| net.links[l].capacity).fold(f64::INFINITY, f64::min);
+            prop_assert!(
+                t + 1e-12 >= lat + f.bytes / min_cap,
+                "flow {i} beat line rate: {t} < {}",
+                lat + f.bytes / min_cap
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_matches_reference() {
+    check("incremental vs full recompute <= 1e-9 relative", 64, |g| {
+        let net = random_net(g);
+        let flows = random_flows(g, &net);
+        let fast = simulate(&net, &flows);
+        let slow = simulate_reference(&net, &flows);
+        let tol = |x: f64| 1e-9 * x.abs().max(1e-12);
+        prop_assert!(
+            (fast.makespan - slow.makespan).abs() <= tol(slow.makespan),
+            "makespan {} vs {}",
+            fast.makespan,
+            slow.makespan
+        );
+        for (i, (a, b)) in fast.flow_times.iter().zip(&slow.flow_times).enumerate() {
+            prop_assert!((a - b).abs() <= tol(*b), "flow {i}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replayed_schedules_keep_flow_times_in_makespan() {
+    check("replay flow times bounded by makespan", 32, |g| {
+        let n = g.usize(3, 12);
+        let bytes = g.f64(1e5, 1e8);
+        let net = Network::sls(n, 1_600.0, 1e-6);
+        let sched = if g.bool() {
+            coll::ring_all_reduce_schedule(n, bytes)
+        } else {
+            coll::pairwise_a2a_schedule(n, bytes)
+        };
+        let r = replay_schedule(&net, &sched);
+        prop_assert!(!r.flow_times.is_empty(), "empty replay");
+        for (i, &t) in r.flow_times.iter().enumerate() {
+            prop_assert!(t > 0.0, "flow {i} nonpositive time {t}");
+            prop_assert!(t <= r.makespan + 1e-12, "flow {i}: {t} > {}", r.makespan);
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,333 @@
+//! Vendored `xla` (xla_extension) API stub — see README.md.
+//!
+//! Host-side [`Literal`] values are fully functional (buffers, shapes,
+//! tuples); the PJRT client surface exists so dependent code compiles, but
+//! [`PjRtClient::cpu`] reports that no PJRT runtime is available.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (stringly, `std::error::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: built against the vendored xla API stub (no PJRT shared library); \
+             swap rust/Cargo.toml to the real `xla` crate for execution"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of the real XLA; only F32/S32/U32 carry data in the stub.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    Bf16,
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Backing storage of a literal.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> Option<ElementType> {
+        match self {
+            Data::F32(_) => Some(ElementType::F32),
+            Data::I32(_) => Some(ElementType::S32),
+            Data::U32(_) => Some(ElementType::U32),
+            Data::Tuple(_) => None,
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+}
+
+/// Rust element types that map onto stub literals.
+pub trait NativeType: Copy + sealed::Sealed {
+    #[doc(hidden)]
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn slice(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn slice(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn slice(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn wrap(v: Vec<u32>) -> Data {
+        Data::U32(v)
+    }
+    fn slice(d: &Data) -> Option<&[u32]> {
+        match d {
+            Data::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side literal: element buffer + dims, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Tuple literal (stub-side constructor, used by tests).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Data::Tuple(elements) }
+    }
+
+    /// Same buffer under new dimensions; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if dims.iter().any(|&d| d < 0) {
+            return Err(Error::new(format!("reshape: negative dim in {dims:?}")));
+        }
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("reshape: literal is a tuple"));
+        }
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Shape of an array literal (error for tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data.ty() {
+            Some(ty) => Ok(ArrayShape { dims: self.dims.clone(), ty }),
+            None => Err(Error::new("array_shape: literal is a tuple")),
+        }
+    }
+
+    /// Copy the buffer out as a host vector of the matching element type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error::new(format!("to_vec: literal is {:?}, not {:?}", self.data.ty(), T::TY)))
+    }
+
+    /// First element of the buffer (scalar fast path).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let s = T::slice(&self.data).ok_or_else(|| {
+            Error::new(format!("get_first_element: literal is {:?}, not {:?}", self.data.ty(), T::TY))
+        })?;
+        s.first().copied().ok_or_else(|| Error::new("get_first_element: empty literal"))
+    }
+
+    /// Split a tuple literal into its elements (error for arrays, matching
+    /// the real crate, whose callers treat `Err` as "not a tuple").
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match &mut self.data {
+            Data::Tuple(elems) => Ok(std::mem::take(elems)),
+            _ => Err(Error::new("decompose_tuple: literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle; in the stub it just wraps a literal.
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+/// PJRT client. Construction fails in the stub with a clear message.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (never constructible through the stub client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Replica-major execution results, like the real crate.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn scalar_reshape_to_rank0() {
+        let lit = Literal::vec1(&[7u32]).reshape(&[]).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(lit.get_first_element::<u32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let lit = Literal::vec1(&[1i32, 2]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_reshape_rejected() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+        assert!(lit.reshape(&[-3]).is_err());
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let mut t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let elems = t.decompose_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        let mut arr = Literal::vec1(&[1.0f32]);
+        assert!(arr.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
