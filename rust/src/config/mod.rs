@@ -111,14 +111,12 @@ pub fn cluster_from_json(j: &Json) -> Result<Cluster> {
     Ok(Cluster::custom(n, pod, bw))
 }
 
-/// Parse perf knob overrides.
+/// Parse perf knob overrides. (`microbatch_seqs` is not a knob — it lives
+/// on the mapping; see [`microbatch_from_json`].)
 pub fn knobs_from_json(j: &Json) -> PerfKnobs {
     let mut k = PerfKnobs::default();
     if let Some(v) = j.get("mfu").as_f64() {
         k.mfu = v;
-    }
-    if let Some(v) = j.get("microbatch_seqs").as_usize() {
-        k.microbatch_seqs = v;
     }
     if let Some(v) = j.get("comm_dtype_bytes").as_f64() {
         k.comm_dtype_bytes = v;
@@ -130,6 +128,13 @@ pub fn knobs_from_json(j: &Json) -> PerfKnobs {
         k.ep_overlap = v;
     }
     k
+}
+
+/// Optional microbatch override from the same JSON file that carries knob
+/// overrides — applied to the [`crate::parallel::Mapping`], where the
+/// microbatch grain lives since the planner refactor.
+pub fn microbatch_from_json(j: &Json) -> Option<usize> {
+    j.get("microbatch_seqs").as_usize()
 }
 
 #[cfg(test)]
@@ -185,9 +190,12 @@ mod tests {
 
     #[test]
     fn knob_overrides() {
-        let k = knobs_from_json(&Json::parse(r#"{"mfu": 0.5, "ep_overlap": 0.3}"#).unwrap());
+        let j = Json::parse(r#"{"mfu": 0.5, "ep_overlap": 0.3, "microbatch_seqs": 4}"#).unwrap();
+        let k = knobs_from_json(&j);
         assert_eq!(k.mfu, 0.5);
         assert_eq!(k.ep_overlap, 0.3);
         assert_eq!(k.dp_overlap, 0.9); // default retained
+        assert_eq!(microbatch_from_json(&j), Some(4));
+        assert_eq!(microbatch_from_json(&Json::parse("{}").unwrap()), None);
     }
 }

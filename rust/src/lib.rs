@@ -13,7 +13,10 @@
 //!   every paper table/figure (and arbitrary pod-size × bandwidth ×
 //!   granularity grids) as ordered grids of pure evaluation jobs executed
 //!   by the [`sweep::engine`] worker pool (`lumos sweep --jobs N` —
-//!   deterministic, byte-identical output for any worker count).
+//!   deterministic, byte-identical output for any worker count); and
+//!   [`planner`], which searches the full legal (TP, PP, DP, microbatch,
+//!   experts-per-rank) mapping space for any (workload, cluster) pair and
+//!   returns a deterministically ranked plan (`lumos plan`).
 //! - **Validation stack**: [`netsim`] flow-level fabric simulation — an
 //!   incremental max-min engine that re-allocates only the affected
 //!   component on each completion ([`netsim::Simulator`], with
@@ -33,6 +36,7 @@ pub mod model;
 pub mod netsim;
 pub mod parallel;
 pub mod perf;
+pub mod planner;
 pub mod runtime;
 pub mod sweep;
 pub mod topology;

@@ -5,6 +5,8 @@
 //! - `model`    evaluate the analytical perf model on one configuration
 //! - `sweep`    pod/bandwidth/granularity/grid sweeps (`--jobs N` fans the
 //!   evaluation grid over a worker pool; output is identical for any N)
+//! - `plan`     search the full (TP, PP, DP, microbatch, experts/rank)
+//!   mapping space for a cluster and rank the feasible mappings
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
@@ -12,13 +14,16 @@
 use std::process::ExitCode;
 
 use lumos::config;
-use lumos::perf::{evaluate, PerfKnobs};
+use lumos::perf::{evaluate_feasible, PerfKnobs};
+use lumos::planner;
 use lumos::runtime::{artifacts_root, Artifact, Engine};
 use lumos::sweep;
+use lumos::sweep::engine::{ClusterCache, ClusterKey};
 use lumos::trainer;
 use lumos::util::cli::{Args, Command};
 use lumos::util::json::Json;
 use lumos::util::stats::fmt_time;
+use lumos::util::table::Table;
 
 fn cli() -> Command {
     Command::new("lumos", "MoE training over 3D integrated optics — HOTI'25 reproduction")
@@ -35,6 +40,7 @@ fn cli() -> Command {
                 .flag("fig11", "Figure 11 (system radix)")
                 .flag("breakdown", "step-time breakdown (Config 4)")
                 .flag("ablations", "extra ablation tables")
+                .flag("planner", "planner artifacts (best mapping per cluster, gap ablation)")
                 .opt_default("jobs", "worker threads for the evaluation grids", "1"),
         )
         .sub(
@@ -43,6 +49,7 @@ fn cli() -> Command {
                 .opt_default("config", "MoE config index 1..4", "4")
                 .opt("knobs", "JSON file with calibration knob overrides")
                 .opt("workload", "JSON file with workload overrides")
+                .opt("microbatch", "sequences per 1F1B microbatch (default 1)")
                 .flag("breakdown", "print the per-component breakdown"),
         )
         .sub(
@@ -55,7 +62,23 @@ fn cli() -> Command {
                 .opt_default("jobs", "worker threads for the evaluation grid", "1")
                 .opt("pods", "grid kind: comma-separated pod sizes (e.g. 64,144,512)")
                 .opt("bandwidths", "grid kind: comma-separated scale-up Gb/s (e.g. 14400,32000)")
-                .opt_default("config", "grid kind: MoE config index 1..4", "4"),
+                .opt_default("config", "grid kind: MoE config index 1..4", "4")
+                .opt("csv", "also write the result grid to this CSV file"),
+        )
+        .sub(
+            Command::new("plan", "search the 4D mapping space for a cluster")
+                .opt(
+                    "cluster",
+                    "passage-512 | electrical-512 | electrical-144 (default passage-512)",
+                )
+                .opt("gpus", "custom cluster: total GPUs (with --pod-size and --gbps)")
+                .opt("pod-size", "custom cluster: GPUs per scale-up pod")
+                .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
+                .opt_default("config", "MoE config index 1..4", "4")
+                .opt_default("top", "ranked mappings to print (0 = all feasible)", "10")
+                .opt_default("jobs", "worker threads for the scoring grid", "1")
+                .opt("knobs", "JSON file with calibration knob overrides")
+                .opt("csv", "also write the ranked plan to this CSV file"),
         )
         .sub(
             Command::new("netsim", "discrete-event fabric validation")
@@ -95,6 +118,7 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
         Some("figures") => figures(args),
         Some("model") => model(args),
         Some("sweep") => sweep_cmd(args),
+        Some("plan") => plan_cmd(args),
         Some("netsim") => netsim_cmd(),
         Some("hw") => {
             let (t7, _) = sweep::fig7();
@@ -117,13 +141,16 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
 fn figures(args: &Args) -> anyhow::Result<()> {
     let knobs = PerfKnobs::default();
     let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    // One cluster cache for the whole command: every selected figure's grid
+    // shares cluster construction.
+    let cache = ClusterCache::new();
     let all = args.flag("all")
         || !["table1", "table2", "table3", "table4", "fig7", "fig8", "fig10", "fig11",
-             "breakdown", "ablations"]
+             "breakdown", "ablations", "planner"]
             .iter()
             .any(|f| args.flag(f));
     if all {
-        print!("{}", sweep::render_all_par(&knobs, jobs));
+        print!("{}", sweep::render_all_cached(&knobs, jobs, &cache));
         return Ok(());
     }
     if args.flag("table1") {
@@ -147,26 +174,31 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         println!("{}\n{}", t.render(), c.render());
     }
     if args.flag("fig10") {
-        let (t, c) = sweep::fig10_par(&knobs, jobs);
+        let (t, c) = sweep::fig10_cached(&knobs, jobs, &cache);
         println!("{}\n{}", t.render(), c.render());
     }
     if args.flag("fig11") {
-        let (t, c) = sweep::fig11_par(&knobs, jobs);
+        let (t, c) = sweep::fig11_cached(&knobs, jobs, &cache);
         println!("{}\n{}", t.render(), c.render());
     }
     if args.flag("breakdown") {
-        println!("{}", sweep::breakdown_table(&knobs).render());
+        println!("{}", sweep::breakdown_table_cached(&knobs, &cache).render());
     }
     if args.flag("ablations") {
         for t in [
-            sweep::pod_size_sweep_par(&knobs, jobs),
-            sweep::bandwidth_sweep_par(&knobs, jobs),
-            sweep::granularity_sweep_par(&knobs, jobs),
+            sweep::pod_size_sweep_cached(&knobs, jobs, &cache),
+            sweep::bandwidth_sweep_cached(&knobs, jobs, &cache),
+            sweep::granularity_sweep_cached(&knobs, jobs, &cache),
             sweep::topology_ablation(),
             sweep::routing_restriction_ablation(),
         ] {
             println!("{}", t.render());
         }
+    }
+    if args.flag("planner") {
+        let (best, gap) = sweep::planner_tables_cached(&knobs, jobs, &cache);
+        println!("{}", best.render());
+        println!("{}", gap.render());
     }
     Ok(())
 }
@@ -174,10 +206,12 @@ fn figures(args: &Args) -> anyhow::Result<()> {
 fn model(args: &Args) -> anyhow::Result<()> {
     let cluster = config::cluster_preset(args.get("cluster").unwrap_or("passage-512"))?;
     let cfg_idx = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
-    let knobs = match args.get("knobs") {
-        Some(path) => config::knobs_from_json(&Json::parse(&std::fs::read_to_string(path)?)
-            .map_err(anyhow::Error::msg)?),
-        None => PerfKnobs::default(),
+    let (knobs, json_microbatch) = match args.get("knobs") {
+        Some(path) => {
+            let j = Json::parse(&std::fs::read_to_string(path)?).map_err(anyhow::Error::msg)?;
+            (config::knobs_from_json(&j), config::microbatch_from_json(&j))
+        }
+        None => (PerfKnobs::default(), None),
     };
     let workload = match args.get("workload") {
         Some(path) => config::workload_from_json(
@@ -185,15 +219,27 @@ fn model(args: &Args) -> anyhow::Result<()> {
         )?,
         None => lumos::model::Workload::paper_gpt_4p7t(cfg_idx),
     };
-    let map = lumos::parallel::Mapping::new(
+    // CLI --microbatch wins over a JSON microbatch_seqs override.
+    let microbatch = match args.get_usize("microbatch").map_err(anyhow::Error::msg)? {
+        Some(mb) => mb,
+        None => json_microbatch.unwrap_or(1),
+    };
+    anyhow::ensure!(microbatch > 0, "--microbatch must be nonzero");
+    // Workload overrides are user-controlled: report an incompatible MoE
+    // shape as an error, not a panic.
+    let map = lumos::parallel::Mapping::try_new(
         lumos::parallel::Parallelism::paper(),
         workload.moe,
-    );
-    let r = evaluate(&workload, &cluster, &map, &knobs);
+    )
+    .map_err(|e| anyhow::anyhow!("workload incompatible with the paper mapping: {e}"))?
+    .with_microbatch(microbatch);
+    let (r, mem) = evaluate_feasible(&workload, &cluster, &map, &knobs)
+        .map_err(|e| anyhow::anyhow!("infeasible configuration: {e}"))?;
     println!("cluster          : {}", r.cluster);
     println!("moe config       : {}", r.config_name);
     println!("total params     : {:.2} T", workload.total_params() / 1e12);
     println!("active / token   : {:.1} G", workload.active_params_per_token() / 1e9);
+    println!("HBM utilization  : {:.1}%", 100.0 * mem.utilization());
     println!("EP placement     : {:?}", r.breakdown.ep_placement);
     println!("step time        : {}", fmt_time(r.step_time));
     println!("comm fraction    : {:.1}%", 100.0 * r.comm_fraction);
@@ -207,6 +253,17 @@ fn model(args: &Args) -> anyhow::Result<()> {
         println!("  pp p2p /micro  : {}", fmt_time(b.pp_comm_per_micro));
         println!("  dp sync/step   : {}", fmt_time(b.dp_comm_per_step));
         println!("  bubble frac    : {:.1}%", 100.0 * b.bubble_fraction());
+    }
+    Ok(())
+}
+
+/// Write `table` as CSV to `path` when `--csv` was given. The confirmation
+/// goes to stderr so stdout stays byte-identical across invocations (the
+/// serial == parallel diff contract).
+fn write_csv(args: &Args, table: &Table) -> anyhow::Result<()> {
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, table.to_csv())?;
+        eprintln!("result grid written to {path}");
     }
     Ok(())
 }
@@ -248,7 +305,71 @@ fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown sweep kind '{other}'"),
     };
     println!("{}", table.render());
-    Ok(())
+    write_csv(args, &table)
+}
+
+fn plan_cmd(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
+    let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(10);
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let knobs = match args.get("knobs") {
+        Some(path) => config::knobs_from_json(
+            &Json::parse(&std::fs::read_to_string(path)?).map_err(anyhow::Error::msg)?,
+        ),
+        None => PerfKnobs::default(),
+    };
+
+    // Cluster: a §VI preset, or a custom (--gpus, --pod-size, --gbps) point.
+    let custom = [args.get("gpus"), args.get("pod-size"), args.get("gbps")];
+    let key = if custom.iter().any(Option::is_some) {
+        anyhow::ensure!(
+            custom.iter().all(Option::is_some),
+            "custom clusters need all of --gpus, --pod-size and --gbps"
+        );
+        anyhow::ensure!(
+            args.get("cluster").is_none(),
+            "--cluster conflicts with --gpus/--pod-size/--gbps (pick a preset or a custom point)"
+        );
+        let n = args.get_usize("gpus").map_err(anyhow::Error::msg)?.unwrap();
+        let pod = args.get_usize("pod-size").map_err(anyhow::Error::msg)?.unwrap();
+        let gbps = args.get_f64("gbps").map_err(anyhow::Error::msg)?.unwrap();
+        anyhow::ensure!(
+            pod > 0 && n > 0 && n % pod == 0,
+            "--gpus must be a multiple of --pod-size"
+        );
+        anyhow::ensure!(gbps.is_finite() && gbps > 0.0, "--gbps must be positive");
+        ClusterKey::custom(n, pod, gbps)
+    } else {
+        match args.get("cluster").unwrap_or("passage-512") {
+            "passage-512" => ClusterKey::Passage512,
+            "electrical-512" => ClusterKey::Electrical512,
+            "electrical-144" => ClusterKey::Electrical144,
+            other => anyhow::bail!(
+                "unknown cluster preset '{other}' \
+                 (have passage-512, electrical-512, electrical-144)"
+            ),
+        }
+    };
+
+    let req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(top);
+    let outcome = planner::plan(&req, jobs);
+    anyhow::ensure!(
+        !outcome.ranked.is_empty(),
+        "no feasible mapping for this (workload, cluster) pair \
+         ({} candidates enumerated, all pruned)",
+        outcome.enumerated
+    );
+    if let Some(b) = &outcome.paper_baseline {
+        println!(
+            "paper mapping (TP16 x PP8 x DP256): step {}, TTT {}\n",
+            fmt_time(b.step_time),
+            fmt_time(b.time_to_train_s)
+        );
+    }
+    let table = planner::ranked_table(&outcome);
+    println!("{}", table.render());
+    write_csv(args, &table)
 }
 
 fn netsim_cmd() -> anyhow::Result<()> {

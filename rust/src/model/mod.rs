@@ -7,7 +7,7 @@
 //! expert capacity E × d_ff/m is invariant across Table IV's configs).
 
 /// MoE structure of one transformer layer (Table IV row).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MoeConfig {
     /// Total (fine-grained) experts per layer.
     pub total_experts: usize,

@@ -6,8 +6,13 @@
 //! if the pod has room. The GPU id layout makes both policies geometric:
 //! TP innermost (contiguous), then DP (so the `ep_dp_ranks` consecutive DP
 //! ranks forming an EP group are contiguous GPUs), then PP outermost.
+//!
+//! Mapping validity is a checkable predicate ([`Mapping::try_with_microbatch`],
+//! [`MappingError`]) rather than only a panic, and [`enumerate_candidates`]
+//! walks the full legal (TP, PP, DP, microbatch, experts-per-rank) space for
+//! a (workload, cluster) pair — the [`crate::planner`] search space.
 
-use crate::model::MoeConfig;
+use crate::model::{MoeConfig, Workload};
 use crate::topology::cluster::{Cluster, Domain};
 
 /// Degrees of the three base parallelism dimensions.
@@ -29,6 +34,48 @@ impl Parallelism {
     }
 }
 
+/// Why a (parallelism, MoE, microbatch) tuple is not a legal mapping.
+///
+/// The checkable counterpart of the panics [`Mapping::new`] raises — the
+/// planner filters candidates with [`Mapping::try_with_microbatch`] instead
+/// of crashing on the first illegal point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MappingError {
+    /// A parallelism degree (or the microbatch) is zero.
+    ZeroDegree,
+    /// `total_experts` is not a multiple of `experts_per_dp_rank`.
+    ExpertsIndivisible { total_experts: usize, experts_per_dp_rank: usize },
+    /// `tp` cannot be split into `experts_per_dp_rank` expert-TP subgroups.
+    ExpertTpIndivisible { tp: usize, experts_per_dp_rank: usize },
+    /// `dp` does not hold a whole number of EP groups.
+    IncompleteEpGroups { dp: usize, ep_dp_ranks: usize },
+}
+
+impl std::fmt::Display for MappingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            MappingError::ZeroDegree => {
+                write!(f, "parallelism degrees and microbatch must be nonzero")
+            }
+            MappingError::ExpertsIndivisible { total_experts, experts_per_dp_rank } => write!(
+                f,
+                "total_experts {total_experts} must divide into experts_per_dp_rank \
+                 {experts_per_dp_rank}"
+            ),
+            MappingError::ExpertTpIndivisible { tp, experts_per_dp_rank } => write!(
+                f,
+                "tp {tp} must divide into experts_per_dp_rank {experts_per_dp_rank}"
+            ),
+            MappingError::IncompleteEpGroups { dp, ep_dp_ranks } => write!(
+                f,
+                "dp {dp} must contain whole EP groups of {ep_dp_ranks} ranks"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MappingError {}
+
 /// Logical coordinates of one GPU.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RankCoord {
@@ -37,22 +84,70 @@ pub struct RankCoord {
     pub tp: usize,
 }
 
-/// The rank mapping + MoE group structure.
-#[derive(Debug, Clone)]
+/// The rank mapping + MoE group structure + microbatch schedule grain.
+///
+/// `microbatch_seqs` (sequences per 1F1B microbatch) lives here — not in
+/// [`crate::perf::PerfKnobs`] — because it is part of the searched mapping:
+/// it trades activation memory against pipeline bubble, per point.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Mapping {
     pub par: Parallelism,
     pub moe: MoeConfig,
+    /// Sequences per microbatch (1F1B schedule grain).
+    pub microbatch_seqs: usize,
 }
 
 impl Mapping {
+    /// Panicking constructor (microbatch 1); use [`Mapping::try_new`] to
+    /// check instead of crash.
     pub fn new(par: Parallelism, moe: MoeConfig) -> Self {
-        assert!(par.tp % moe.experts_per_dp_rank == 0,
-                "tp {} must divide into experts_per_dp_rank {}",
-                par.tp, moe.experts_per_dp_rank);
-        assert!(par.dp % moe.ep_dp_ranks() == 0,
-                "dp {} must contain whole EP groups of {} ranks",
-                par.dp, moe.ep_dp_ranks());
-        Mapping { par, moe }
+        match Self::try_new(par, moe) {
+            Ok(m) => m,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Checkable constructor (microbatch 1).
+    pub fn try_new(par: Parallelism, moe: MoeConfig) -> Result<Self, MappingError> {
+        Self::try_with_microbatch(par, moe, 1)
+    }
+
+    /// Full checkable constructor: every divisibility constraint the group
+    /// geometry relies on, as a predicate.
+    pub fn try_with_microbatch(
+        par: Parallelism,
+        moe: MoeConfig,
+        microbatch_seqs: usize,
+    ) -> Result<Self, MappingError> {
+        if par.tp == 0 || par.pp == 0 || par.dp == 0 || microbatch_seqs == 0 {
+            return Err(MappingError::ZeroDegree);
+        }
+        if moe.experts_per_dp_rank == 0 || moe.total_experts % moe.experts_per_dp_rank != 0 {
+            return Err(MappingError::ExpertsIndivisible {
+                total_experts: moe.total_experts,
+                experts_per_dp_rank: moe.experts_per_dp_rank,
+            });
+        }
+        if par.tp % moe.experts_per_dp_rank != 0 {
+            return Err(MappingError::ExpertTpIndivisible {
+                tp: par.tp,
+                experts_per_dp_rank: moe.experts_per_dp_rank,
+            });
+        }
+        if par.dp % moe.ep_dp_ranks() != 0 {
+            return Err(MappingError::IncompleteEpGroups {
+                dp: par.dp,
+                ep_dp_ranks: moe.ep_dp_ranks(),
+            });
+        }
+        Ok(Mapping { par, moe, microbatch_seqs })
+    }
+
+    /// Same mapping at a different microbatch grain.
+    pub fn with_microbatch(mut self, microbatch_seqs: usize) -> Self {
+        assert!(microbatch_seqs > 0, "microbatch must be nonzero");
+        self.microbatch_seqs = microbatch_seqs;
+        self
     }
 
     /// GPU id for a coordinate (TP innermost, DP middle, PP outermost).
@@ -127,6 +222,79 @@ impl Mapping {
     pub fn ep_domain(&self, cluster: &Cluster) -> Domain {
         cluster.domain_for_span(self.ep_span_gpus())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Candidate enumeration (the planner's search space)
+// ---------------------------------------------------------------------------
+
+/// Sorted divisors of `n` (ascending — keeps enumeration deterministic).
+fn divisors(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            out.push(i);
+            if i != n / i {
+                out.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Every structurally legal (TP, PP, DP, microbatch, experts_per_dp_rank)
+/// mapping of `w` onto `cluster`, in deterministic order (TP, then PP, then
+/// experts-per-rank, then microbatch, all ascending).
+///
+/// Legality (EXPERIMENTS.md §Planner) — everything short of HBM capacity,
+/// which is [`crate::perf`]'s job:
+///
+/// 1. `tp · pp · dp == cluster.n_gpus` — the mapping partitions every GPU;
+/// 2. `n_heads % tp == 0` — attention heads shard evenly over TP ranks;
+/// 3. `tp <= pod_size` — TP collectives ride the scale-up domain (the
+///    TP-first placement policy the perf model costs);
+/// 4. `pp <= n_layers` — every stage holds at least one layer (the
+///    analytical model permits fractional layers per stage, matching the
+///    seed's continuous approximation);
+/// 5. `global_batch % dp == 0` — whole sequences per DP rank;
+/// 6. the [`Mapping::try_with_microbatch`] divisibility predicate (expert-TP
+///    subgroups, whole EP groups);
+/// 7. `d_ff_expert % expert_tp == 0` — expert FFN shards evenly;
+/// 8. `microbatch_seqs` divides the per-rank sequence count.
+pub fn enumerate_candidates(w: &Workload, cluster: &Cluster) -> Vec<Mapping> {
+    let n = cluster.spec.n_gpus;
+    let mut out = Vec::new();
+    for &tp in &divisors(n) {
+        if tp > cluster.spec.pod_size || w.n_heads % tp != 0 {
+            continue;
+        }
+        for &pp in &divisors(n / tp) {
+            if pp > w.n_layers {
+                continue;
+            }
+            let dp = n / (tp * pp);
+            if w.global_batch % dp != 0 {
+                continue;
+            }
+            let seqs_per_rank = w.global_batch / dp;
+            for &epr in &divisors(w.moe.total_experts) {
+                if tp % epr != 0 || w.d_ff_expert() % (tp / epr) != 0 {
+                    continue;
+                }
+                let moe = MoeConfig { experts_per_dp_rank: epr, ..w.moe };
+                for &mb in &divisors(seqs_per_rank) {
+                    let par = Parallelism { tp, pp, dp };
+                    if let Ok(m) = Mapping::try_with_microbatch(par, moe, mb) {
+                        out.push(m);
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -220,5 +388,66 @@ mod tests {
             Parallelism { tp: 4, pp: 1, dp: 32 },
             MoeConfig { total_experts: 24, active_per_token: 3, granularity: 3, experts_per_dp_rank: 3 },
         );
+    }
+
+    #[test]
+    fn try_new_is_a_predicate_not_a_panic() {
+        let moe = MoeConfig {
+            total_experts: 24,
+            active_per_token: 3,
+            granularity: 3,
+            experts_per_dp_rank: 3,
+        };
+        let bad = Mapping::try_new(Parallelism { tp: 4, pp: 1, dp: 32 }, moe);
+        assert_eq!(
+            bad,
+            Err(MappingError::ExpertTpIndivisible { tp: 4, experts_per_dp_rank: 3 })
+        );
+        let short_dp = Mapping::try_new(Parallelism { tp: 6, pp: 1, dp: 12 }, moe);
+        assert_eq!(short_dp, Err(MappingError::IncompleteEpGroups { dp: 12, ep_dp_ranks: 8 }));
+        let par = Parallelism { tp: 6, pp: 1, dp: 16 };
+        assert_eq!(
+            Mapping::try_with_microbatch(par, moe, 0),
+            Err(MappingError::ZeroDegree)
+        );
+        let ok = Mapping::try_with_microbatch(par, moe, 2).unwrap();
+        assert_eq!(ok.microbatch_seqs, 2);
+        assert_eq!(ok.expert_tp(), 2);
+    }
+
+    #[test]
+    fn microbatch_defaults_to_one_and_builds() {
+        let m = paper_mapping(4);
+        assert_eq!(m.microbatch_seqs, 1);
+        assert_eq!(m.clone().with_microbatch(4).microbatch_seqs, 4);
+    }
+
+    #[test]
+    fn divisors_are_sorted_and_complete() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(144), vec![1, 2, 3, 4, 6, 8, 9, 12, 16, 18, 24, 36, 48, 72, 144]);
+    }
+
+    #[test]
+    fn candidates_partition_cluster_and_satisfy_constraints() {
+        use crate::model::Workload;
+        use crate::topology::cluster::Cluster;
+        let w = Workload::paper_gpt_4p7t(4);
+        let cluster = Cluster::passage_512(32_768);
+        let cands = enumerate_candidates(&w, &cluster);
+        assert!(cands.len() > 100, "{}", cands.len());
+        for m in &cands {
+            assert_eq!(m.par.n_gpus(), cluster.spec.n_gpus);
+            assert!(m.par.tp <= cluster.spec.pod_size);
+            assert_eq!(w.n_heads % m.par.tp, 0);
+            assert!(m.par.pp <= w.n_layers);
+            assert_eq!(w.global_batch % m.par.dp, 0);
+            assert_eq!((w.global_batch / m.par.dp) % m.microbatch_seqs, 0);
+            assert_eq!(w.d_ff_expert() % m.expert_tp(), 0);
+        }
+        // The paper's own mapping is in the set.
+        let paper = Mapping::new(Parallelism::paper(), w.moe);
+        assert!(cands.contains(&paper));
     }
 }

@@ -39,10 +39,11 @@ impl MemoryBreakdown {
     }
 }
 
-/// Compute the per-GPU breakdown for a workload/mapping at microbatch size
-/// `microbatch_seqs`.
-pub fn memory_breakdown(w: &Workload, map: &Mapping, microbatch_seqs: usize) -> MemoryBreakdown {
+/// Compute the per-GPU breakdown for a workload/mapping (the mapping's own
+/// `microbatch_seqs` sets the activation working-set grain).
+pub fn memory_breakdown(w: &Workload, map: &Mapping) -> MemoryBreakdown {
     let par = map.par;
+    let microbatch_seqs = map.microbatch_seqs;
     let layers_per_stage = w.n_layers as f64 / par.pp as f64;
     let state_bpp = w.state_bytes_per_param();
 
@@ -57,12 +58,15 @@ pub fn memory_breakdown(w: &Workload, map: &Mapping, microbatch_seqs: usize) -> 
     let expert_params = w.expert_params_per_layer() * layers_per_stage
         / (map.ep_dp_ranks() * par.tp) as f64;
 
-    // 1F1B keeps ≤ pp microbatches of activations alive per stage
-    // (coordinator::pipeline asserts this bound).
+    // 1F1B keeps at most min(pp, n_micro) microbatches of activations
+    // alive per stage (coordinator::pipeline asserts the pp bound; with
+    // fewer microbatches than stages only n_micro are ever in flight —
+    // the planner searches that regime, so the bound must be tight).
     let mb_tokens = (microbatch_seqs * w.seq_len) as f64;
+    let n_micro = (w.global_batch / par.dp / microbatch_seqs).max(1);
     let act_per_micro =
         mb_tokens * w.activation_bytes_per_token_layer() * layers_per_stage / par.tp as f64;
-    let activations = act_per_micro * par.pp as f64;
+    let activations = act_per_micro * par.pp.min(n_micro) as f64;
 
     // GShard dense dispatch: E × capacity × d_model per MoE layer, with
     // capacity ≈ tokens·k/E (unit capacity factor), live for one layer at
@@ -97,7 +101,7 @@ mod tests {
     fn paper_configs_fit_hbm() {
         for cfg in 1..=4 {
             let (w, m) = mapping(cfg);
-            let mem = memory_breakdown(&w, &m, 1);
+            let mem = memory_breakdown(&w, &m);
             assert!(
                 mem.fits(),
                 "config {cfg} needs {:.0} GB of {:.0} GB",
@@ -115,8 +119,8 @@ mod tests {
         // sharding denominator (ep_dp_ranks·tp = 512) is too.
         let (w1, m1) = mapping(1);
         let (w4, m4) = mapping(4);
-        let a = memory_breakdown(&w1, &m1, 1).expert_state;
-        let b = memory_breakdown(&w4, &m4, 1).expert_state;
+        let a = memory_breakdown(&w1, &m1).expert_state;
+        let b = memory_breakdown(&w4, &m4).expert_state;
         assert!((a - b).abs() / a < 1e-9);
     }
 
@@ -124,18 +128,32 @@ mod tests {
     fn routing_buffers_grow_with_k() {
         let (w1, m1) = mapping(1);
         let (w4, m4) = mapping(4);
-        let a = memory_breakdown(&w1, &m1, 1).routing_buffers;
-        let b = memory_breakdown(&w4, &m4, 1).routing_buffers;
+        let a = memory_breakdown(&w1, &m1).routing_buffers;
+        let b = memory_breakdown(&w4, &m4).routing_buffers;
         assert!((b / a - 8.0).abs() < 1e-9);
     }
 
     #[test]
     fn bigger_microbatch_costs_activation_memory() {
         let (w, m) = mapping(2);
-        let a = memory_breakdown(&w, &m, 1);
-        let b = memory_breakdown(&w, &m, 4);
-        assert!(b.activations > 3.9 * a.activations);
+        // mb 1: 16 microbatches, min(pp 8, 16) = 8 in flight.
+        let a = memory_breakdown(&w, &m);
+        // mb 4: 4x the tokens per micro but only min(pp 8, 4) = 4 in
+        // flight — net 2x the activation working set.
+        let b = memory_breakdown(&w, &m.clone().with_microbatch(4));
+        assert!((b.activations / a.activations - 2.0).abs() < 1e-9);
         assert_eq!(a.shared_state, b.shared_state);
+    }
+
+    #[test]
+    fn in_flight_microbatches_capped_by_their_count() {
+        // One giant microbatch (mb = all 16 seqs/rank): 1F1B has exactly
+        // one microbatch in flight, not pp of them.
+        let (w, m) = mapping(2);
+        let one = memory_breakdown(&w, &m.clone().with_microbatch(16));
+        let base = memory_breakdown(&w, &m);
+        // 16x tokens/micro x 1 in flight vs 1x tokens x 8 in flight = 2x.
+        assert!((one.activations / base.activations - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -14,19 +14,27 @@
 //! - overlap fractions: how much of each communication class hides under
 //!   compute. EP dispatch blocks expert compute (0 overlap by default);
 //!   DP gradient sync overlaps the backward pass (0.9).
+//!
+//! The microbatch grain is *not* a knob: it lives on
+//! [`Mapping::microbatch_seqs`] because the planner searches it per point
+//! (it trades activation memory against pipeline bubble).
+//!
+//! [`check_feasible`] / [`evaluate_feasible`] expose the model's
+//! preconditions (divisibility + HBM capacity) as a checkable result
+//! instead of a panic — the [`crate::planner`] prunes on it.
 
 pub mod memory;
 
 use crate::collectives as coll;
 use crate::model::Workload;
-use crate::parallel::Mapping;
+use crate::parallel::{Mapping, MappingError};
+use crate::perf::memory::{memory_breakdown, MemoryBreakdown, HBM_BYTES_PER_GPU};
 use crate::topology::cluster::{Cluster, Domain};
 
 /// Calibration knobs.
 #[derive(Debug, Clone)]
 pub struct PerfKnobs {
     pub mfu: f64,
-    pub microbatch_seqs: usize,
     pub comm_dtype_bytes: f64,
     pub dp_overlap: f64,
     pub ep_overlap: f64,
@@ -36,7 +44,6 @@ impl Default for PerfKnobs {
     fn default() -> Self {
         PerfKnobs {
             mfu: 0.40,
-            microbatch_seqs: 1,
             comm_dtype_bytes: 4.0,
             dp_overlap: 0.9,
             // The combine-direction all-to-all pipelines with expert
@@ -45,6 +52,84 @@ impl Default for PerfKnobs {
             ep_overlap: 0.25,
         }
     }
+}
+
+/// Why a (workload, mapping) point cannot be evaluated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Infeasible {
+    /// The mapping's own divisibility predicate failed.
+    Mapping(MappingError),
+    /// `global_batch` does not split evenly over the DP ranks.
+    BatchIndivisible { global_batch: usize, dp: usize },
+    /// The per-rank sequence count is not a whole number of microbatches.
+    MicrobatchIndivisible { seqs_per_rank: usize, microbatch_seqs: usize },
+    /// Parameter/optimizer state + activations exceed HBM capacity.
+    OverCapacity { needed_bytes: f64, capacity_bytes: f64 },
+}
+
+impl std::fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasible::Mapping(e) => write!(f, "{e}"),
+            Infeasible::BatchIndivisible { global_batch, dp } => {
+                write!(f, "global batch {global_batch} does not divide over dp {dp}")
+            }
+            Infeasible::MicrobatchIndivisible { seqs_per_rank, microbatch_seqs } => write!(
+                f,
+                "{seqs_per_rank} seqs/rank is not a whole number of {microbatch_seqs}-seq \
+                 microbatches"
+            ),
+            Infeasible::OverCapacity { needed_bytes, capacity_bytes } => write!(
+                f,
+                "needs {:.0} GB of {:.0} GB HBM",
+                needed_bytes / 1e9,
+                capacity_bytes / 1e9
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Infeasible {}
+
+/// Check everything [`evaluate`] asserts, plus HBM capacity, returning the
+/// memory breakdown on success. Deliberately does *not* require
+/// `mapping.n_gpus() == cluster.n_gpus` — the §VI precedent evaluates the
+/// 32,768-GPU paper mapping on the 32,256-GPU electrical cluster (a 1.5%
+/// size delta); exact partitioning is [`crate::parallel::enumerate_candidates`]'s
+/// job.
+pub fn check_feasible(w: &Workload, map: &Mapping) -> Result<MemoryBreakdown, Infeasible> {
+    Mapping::try_with_microbatch(map.par, map.moe, map.microbatch_seqs)
+        .map_err(Infeasible::Mapping)?;
+    if w.global_batch % map.par.dp != 0 {
+        return Err(Infeasible::BatchIndivisible { global_batch: w.global_batch, dp: map.par.dp });
+    }
+    let seqs_per_rank = w.global_batch / map.par.dp;
+    if seqs_per_rank % map.microbatch_seqs != 0 {
+        return Err(Infeasible::MicrobatchIndivisible {
+            seqs_per_rank,
+            microbatch_seqs: map.microbatch_seqs,
+        });
+    }
+    let mem = memory_breakdown(w, map);
+    if !mem.fits() {
+        return Err(Infeasible::OverCapacity {
+            needed_bytes: mem.total(),
+            capacity_bytes: HBM_BYTES_PER_GPU,
+        });
+    }
+    Ok(mem)
+}
+
+/// Feasibility-aware evaluation: `Err` instead of a panic on an illegal
+/// point, plus the memory breakdown that proved it fits.
+pub fn evaluate_feasible(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+) -> Result<(PerfReport, MemoryBreakdown), Infeasible> {
+    let mem = check_feasible(w, map)?;
+    Ok((evaluate(w, cluster, map, knobs), mem))
 }
 
 /// Where the EP all-to-all ran and how it was costed.
@@ -115,9 +200,9 @@ pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnob
     let par = map.par;
     assert!(w.global_batch % par.dp == 0);
     let seqs_per_rank = w.global_batch / par.dp;
-    assert!(seqs_per_rank % knobs.microbatch_seqs == 0);
-    let n_micro = seqs_per_rank / knobs.microbatch_seqs;
-    let mb_tokens = (knobs.microbatch_seqs * w.seq_len) as f64;
+    assert!(seqs_per_rank % map.microbatch_seqs == 0);
+    let n_micro = seqs_per_rank / map.microbatch_seqs;
+    let mb_tokens = (map.microbatch_seqs * w.seq_len) as f64;
     let layers_per_stage = w.n_layers as f64 / par.pp as f64;
     let up = cluster.domain(Domain::ScaleUp);
     let out = cluster.domain(Domain::ScaleOut);
@@ -304,5 +389,70 @@ mod tests {
         let c1 = evaluate_paper_config(&passage(), 1, &knobs);
         let c4 = evaluate_paper_config(&passage(), 4, &knobs);
         assert!(c4.breakdown.tp_comm_per_micro < c1.breakdown.tp_comm_per_micro);
+    }
+
+    #[test]
+    fn feasibility_is_a_result_not_a_panic() {
+        use crate::model::MoeConfig;
+        use crate::parallel::{Mapping, Parallelism};
+        let w = Workload::paper_gpt_4p7t(4);
+        let m = Mapping::new(Parallelism::paper(), w.moe);
+        assert!(check_feasible(&w, &m).is_ok());
+        // microbatch must divide the 16 seqs/rank
+        let ragged = m.clone().with_microbatch(5);
+        assert!(matches!(
+            check_feasible(&w, &ragged),
+            Err(Infeasible::MicrobatchIndivisible { seqs_per_rank: 16, microbatch_seqs: 5 })
+        ));
+        // unsharded model state (tp 1, pp 1, one expert set per 256 ranks)
+        // needs ~1 TB/GPU — must be rejected, not crash
+        let moe = MoeConfig { experts_per_dp_rank: 1, ..w.moe };
+        let huge =
+            Mapping::try_new(Parallelism { tp: 1, pp: 1, dp: 4096 }, moe).unwrap();
+        assert!(matches!(check_feasible(&w, &huge), Err(Infeasible::OverCapacity { .. })));
+        // dp that does not divide the global batch
+        let odd = Mapping::try_new(Parallelism { tp: 16, pp: 8, dp: 3 }, MoeConfig {
+            total_experts: 3,
+            active_per_token: 1,
+            granularity: 1,
+            experts_per_dp_rank: 1,
+        })
+        .unwrap();
+        assert!(matches!(
+            check_feasible(&w, &odd),
+            Err(Infeasible::BatchIndivisible { global_batch: 4096, dp: 3 })
+        ));
+    }
+
+    #[test]
+    fn evaluate_feasible_matches_evaluate_on_legal_points() {
+        let w = Workload::paper_gpt_4p7t(4);
+        let cluster = passage();
+        let knobs = PerfKnobs::default();
+        use crate::model::MoeConfig;
+        use crate::parallel::{Mapping, Parallelism};
+        let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+        let (r, mem) = evaluate_feasible(&w, &cluster, &m, &knobs).unwrap();
+        let plain = evaluate(&w, &cluster, &m, &knobs);
+        assert_eq!(r.step_time.to_bits(), plain.step_time.to_bits());
+        assert!(mem.fits());
+    }
+
+    #[test]
+    fn microbatch_grain_trades_bubble_for_per_micro_comm() {
+        // Same mapping at a coarser microbatch: fewer, fatter microbatches
+        // => fewer alpha terms but a larger pipeline bubble fraction.
+        let w = Workload::paper_gpt_4p7t(1);
+        let cluster = passage();
+        let knobs = PerfKnobs::default();
+        use crate::model::MoeConfig;
+        use crate::parallel::{Mapping, Parallelism};
+        let m1 = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(1));
+        let m4 = m1.clone().with_microbatch(4);
+        let r1 = evaluate(&w, &cluster, &m1, &knobs);
+        let r4 = evaluate(&w, &cluster, &m4, &knobs);
+        assert_eq!(r1.breakdown.n_micro, 16);
+        assert_eq!(r4.breakdown.n_micro, 4);
+        assert!(r4.breakdown.bubble_fraction() > r1.breakdown.bubble_fraction());
     }
 }

@@ -116,6 +116,19 @@ impl EvalJob {
         }
     }
 
+    /// An explicit (cluster, workload, mapping) point — unlike
+    /// [`EvalJob::paper`], the mapping is free. This is the planner's
+    /// constructor: a grid can vary TP/PP/DP/microbatch/experts-per-rank,
+    /// not just workload and cluster.
+    pub fn mapped(
+        cluster: ClusterKey,
+        workload: Workload,
+        mapping: Mapping,
+        knobs: &PerfKnobs,
+    ) -> EvalJob {
+        EvalJob { cluster, workload, mapping, knobs: knobs.clone() }
+    }
+
     /// A custom MoE shape on the paper's base architecture and mapping.
     pub fn custom_moe(cluster: ClusterKey, moe: MoeConfig, knobs: &PerfKnobs) -> EvalJob {
         let mut workload = Workload::paper_gpt_4p7t(1);
@@ -240,6 +253,26 @@ mod tests {
             assert_eq!(s.time_to_train_s.to_bits(), p.time_to_train_s.to_bits());
             assert_eq!(s.cluster, p.cluster);
             assert_eq!(s.config_name, p.config_name);
+        }
+    }
+
+    #[test]
+    fn grids_can_vary_the_mapping() {
+        // EvalJob is not tied to the paper mapping: a grid over enumerated
+        // candidates runs and stays deterministic across worker counts.
+        let knobs = PerfKnobs::default();
+        let w = Workload::paper_gpt_4p7t(2);
+        let cluster = ClusterKey::Passage512.build();
+        let jobs: Vec<EvalJob> = crate::parallel::enumerate_candidates(&w, &cluster)
+            .into_iter()
+            .step_by(97) // a spread of the space, not just the smallest tp
+            .map(|m| EvalJob::mapped(ClusterKey::Passage512, w.clone(), m, &knobs))
+            .collect();
+        assert!(jobs.len() >= 8, "{}", jobs.len());
+        let serial = run_grid(&jobs, 1);
+        let par = run_grid(&jobs, 4);
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.step_time.to_bits(), p.step_time.to_bits());
         }
     }
 

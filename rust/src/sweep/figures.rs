@@ -4,12 +4,15 @@
 //! bench harness print them. The `*_par` variants fan the underlying
 //! evaluation grid out over `jobs` worker threads; because grid results
 //! come back in job order, their output is byte-identical to the serial
-//! path for any `jobs`.
+//! path for any `jobs`. The `*_cached` variants additionally run against a
+//! caller-owned [`engine::ClusterCache`], so one command rendering many
+//! figures (e.g. `lumos figures --all`) builds each cluster exactly once.
 
 use crate::hw;
 use crate::model::MoeConfig;
-use crate::perf::{evaluate_paper_config, paper_clusters, PerfKnobs};
-use crate::sweep::engine::{self, ClusterKey, EvalJob, PaperGrid};
+use crate::perf::{evaluate_paper_config, PerfKnobs};
+use crate::planner;
+use crate::sweep::engine::{self, ClusterCache, ClusterKey, EvalJob, PaperGrid};
 use crate::topology::torus::Torus;
 use crate::util::stats::fmt_time;
 use crate::util::table::{BarChart, Table};
@@ -147,7 +150,12 @@ pub fn fig8() -> (Table, BarChart) {
 // Figures 10, 11 (engine-backed)
 // ---------------------------------------------------------------------------
 
-fn fig10_11(knobs: &PerfKnobs, system_radix: bool, jobs: usize) -> (Table, BarChart) {
+fn fig10_11(
+    knobs: &PerfKnobs,
+    system_radix: bool,
+    jobs: usize,
+    cache: &ClusterCache,
+) -> (Table, BarChart) {
     let alt_key = if system_radix { ClusterKey::Electrical144 } else { ClusterKey::Electrical512 };
     let title = if system_radix {
         "Fig 11: system-specific radix — Passage(512) vs Alternative(144)"
@@ -155,7 +163,7 @@ fn fig10_11(knobs: &PerfKnobs, system_radix: bool, jobs: usize) -> (Table, BarCh
         "Fig 10: same radix-512 — Passage(32T) vs Alternative(14.4T)"
     };
     let grid = PaperGrid::new(vec![ClusterKey::Passage512, alt_key], vec![1, 2, 3, 4]);
-    let reports = engine::run_grid(&grid.jobs(knobs), jobs);
+    let reports = engine::run_grid_with_cache(&grid.jobs(knobs), jobs, cache);
     let base = reports[grid.index(0, 0)].step_time;
     let mut t = Table::new(
         title,
@@ -185,7 +193,12 @@ pub fn fig10(knobs: &PerfKnobs) -> (Table, BarChart) {
 
 /// [`fig10`] with the evaluation grid spread over `jobs` workers.
 pub fn fig10_par(knobs: &PerfKnobs, jobs: usize) -> (Table, BarChart) {
-    fig10_11(knobs, false, jobs)
+    fig10_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`fig10_par`] against a caller-owned cluster cache.
+pub fn fig10_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> (Table, BarChart) {
+    fig10_11(knobs, false, jobs, cache)
 }
 
 /// Fig. 11: actual system configurations (512@32T vs 144@14.4T).
@@ -195,13 +208,24 @@ pub fn fig11(knobs: &PerfKnobs) -> (Table, BarChart) {
 
 /// [`fig11`] with the evaluation grid spread over `jobs` workers.
 pub fn fig11_par(knobs: &PerfKnobs, jobs: usize) -> (Table, BarChart) {
-    fig10_11(knobs, true, jobs)
+    fig11_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`fig11_par`] against a caller-owned cluster cache.
+pub fn fig11_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> (Table, BarChart) {
+    fig10_11(knobs, true, jobs, cache)
 }
 
 /// §VI narrative: per-component step breakdown for Config 4 on both
 /// systems (where the 2.7x comes from).
 pub fn breakdown_table(knobs: &PerfKnobs) -> Table {
-    let (passage, _, alt144) = paper_clusters();
+    breakdown_table_cached(knobs, &ClusterCache::new())
+}
+
+/// [`breakdown_table`] against a caller-owned cluster cache.
+pub fn breakdown_table_cached(knobs: &PerfKnobs, cache: &ClusterCache) -> Table {
+    let passage = cache.get(&ClusterKey::Passage512);
+    let alt144 = cache.get(&ClusterKey::Electrical144);
     let mut t = Table::new(
         "Step breakdown, Config 4 (per microbatch except DP)",
         &["Component", "Passage-512", "Electrical-144"],
@@ -239,6 +263,11 @@ pub fn pod_size_sweep(knobs: &PerfKnobs) -> Table {
 
 /// [`pod_size_sweep`] over `jobs` workers.
 pub fn pod_size_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    pod_size_sweep_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`pod_size_sweep_par`] against a caller-owned cluster cache.
+pub fn pod_size_sweep_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> Table {
     let mut t = Table::new(
         "Ablation: pod size sweep (Config 4, 32 Tb/s scale-up)",
         &["Pod size", "EP domain", "Step time", "vs 512-pod"],
@@ -250,7 +279,7 @@ pub fn pod_size_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
     for &pod in &pods {
         grid.push(EvalJob::paper(ClusterKey::custom_pod_aligned(pod, 32_000.0), 4, knobs));
     }
-    let reports = engine::run_grid(&grid, jobs);
+    let reports = engine::run_grid_with_cache(&grid, jobs, cache);
     let base = reports[0].step_time;
     for (pi, &pod) in pods.iter().enumerate() {
         let r = &reports[pi + 1];
@@ -271,6 +300,11 @@ pub fn bandwidth_sweep(knobs: &PerfKnobs) -> Table {
 
 /// [`bandwidth_sweep`] over `jobs` workers.
 pub fn bandwidth_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    bandwidth_sweep_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`bandwidth_sweep_par`] against a caller-owned cluster cache.
+pub fn bandwidth_sweep_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> Table {
     let mut t = Table::new(
         "Ablation: scale-up bandwidth sweep (Config 4, radix 512)",
         &["Gb/s per GPU", "Step time", "Comm fraction", "vs 32T"],
@@ -280,7 +314,7 @@ pub fn bandwidth_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
     for &gbps in &bws {
         grid.push(EvalJob::paper(ClusterKey::custom(32_768, 512, gbps), 4, knobs));
     }
-    let reports = engine::run_grid(&grid, jobs);
+    let reports = engine::run_grid_with_cache(&grid, jobs, cache);
     let base = reports[0].step_time;
     for (bi, &gbps) in bws.iter().enumerate() {
         let r = &reports[bi + 1];
@@ -302,6 +336,11 @@ pub fn granularity_sweep(knobs: &PerfKnobs) -> Table {
 
 /// [`granularity_sweep`] over `jobs` workers.
 pub fn granularity_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    granularity_sweep_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`granularity_sweep_par`] against a caller-owned cluster cache.
+pub fn granularity_sweep_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> Table {
     let mut t = Table::new(
         "Ablation: finer granularity than Config 4",
         &["m (=k, =experts/rank)", "Total experts", "Passage step", "Alt-144 step", "ratio"],
@@ -318,7 +357,7 @@ pub fn granularity_sweep_par(knobs: &PerfKnobs, jobs: usize) -> Table {
         grid.push(EvalJob::custom_moe(ClusterKey::Passage512, moe, knobs));
         grid.push(EvalJob::custom_moe(ClusterKey::Electrical144, moe, knobs));
     }
-    let reports = engine::run_grid(&grid, jobs);
+    let reports = engine::run_grid_with_cache(&grid, jobs, cache);
     for (mi, &m) in ms.iter().enumerate() {
         let p = &reports[2 * mi];
         let a = &reports[2 * mi + 1];
@@ -342,6 +381,18 @@ pub fn custom_grid(
     cfg: usize,
     jobs: usize,
 ) -> Table {
+    custom_grid_cached(knobs, pods, bandwidths_gbps, cfg, jobs, &ClusterCache::new())
+}
+
+/// [`custom_grid`] against a caller-owned cluster cache.
+pub fn custom_grid_cached(
+    knobs: &PerfKnobs,
+    pods: &[usize],
+    bandwidths_gbps: &[f64],
+    cfg: usize,
+    jobs: usize,
+    cache: &ClusterCache,
+) -> Table {
     assert!(!pods.is_empty() && !bandwidths_gbps.is_empty());
     let mut header: Vec<String> = vec!["pod \\ Gb/s".into()];
     header.extend(bandwidths_gbps.iter().map(|b| format!("{:.1}T", b / 1000.0)));
@@ -356,7 +407,7 @@ pub fn custom_grid(
             grid.push(EvalJob::paper(ClusterKey::custom_pod_aligned(pod, bw), cfg, knobs));
         }
     }
-    let reports = engine::run_grid(&grid, jobs);
+    let reports = engine::run_grid_with_cache(&grid, jobs, cache);
     let base = reports[0].step_time;
     for (pi, &pod) in pods.iter().enumerate() {
         let mut row = vec![format!("{pod}")];
@@ -370,6 +421,132 @@ pub fn custom_grid(
         }
         t.row(&row);
     }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Planner artifacts (tentpole: the mapping space, not just the paper point)
+// ---------------------------------------------------------------------------
+
+/// The three §VI cluster keys, in presentation order.
+fn section6_clusters() -> [ClusterKey; 3] {
+    [ClusterKey::Passage512, ClusterKey::Electrical512, ClusterKey::Electrical144]
+}
+
+/// Best planner-found mapping per §VI cluster (Config 4): what each fabric
+/// *would* run if the mapping were free, not fixed at TP16×PP8×DP256.
+pub fn planner_best_table(knobs: &PerfKnobs) -> Table {
+    planner_best_table_par(knobs, 1)
+}
+
+/// [`planner_best_table`] over `jobs` workers.
+pub fn planner_best_table_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    planner_best_table_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`planner_best_table_par`] against a caller-owned cluster cache.
+pub fn planner_best_table_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> Table {
+    best_table_from(&section6_plans(knobs, jobs, cache))
+}
+
+/// One round of §VI plan searches — both planner tables render from this,
+/// so `figures --all`/`--planner` runs 3 searches, not 6.
+fn section6_plans(
+    knobs: &PerfKnobs,
+    jobs: usize,
+    cache: &ClusterCache,
+) -> Vec<planner::PlanOutcome> {
+    section6_clusters()
+        .into_iter()
+        .map(|key| {
+            let req = planner::PlanRequest::paper(key, 4, knobs).with_top(1);
+            planner::plan_with_cache(&req, jobs, cache)
+        })
+        .collect()
+}
+
+/// Both planner artifacts from a single round of searches.
+pub fn planner_tables_cached(
+    knobs: &PerfKnobs,
+    jobs: usize,
+    cache: &ClusterCache,
+) -> (Table, Table) {
+    let outs = section6_plans(knobs, jobs, cache);
+    (best_table_from(&outs), gap_table_from(&outs))
+}
+
+fn best_table_from(outs: &[planner::PlanOutcome]) -> Table {
+    let mut t = Table::new(
+        "Planner: best mapping per cluster (Config 4, full 4D search)",
+        &["Cluster", "TP", "PP", "DP", "micro", "exp/rank", "EP domain", "TTT", "vs paper map"],
+    );
+    for out in outs {
+        let best = out.best().expect("paper clusters always have feasible mappings");
+        let vs_paper = match &out.paper_baseline {
+            Some(b) => format!("{:.2}x", b.time_to_train_s / best.report.time_to_train_s),
+            None => "—".to_string(),
+        };
+        t.row(&[
+            best.report.cluster.clone(),
+            format!("{}", best.mapping.par.tp),
+            format!("{}", best.mapping.par.pp),
+            format!("{}", best.mapping.par.dp),
+            format!("{}", best.mapping.microbatch_seqs),
+            format!("{}", best.mapping.moe.experts_per_dp_rank),
+            format!("{:?}", best.report.breakdown.ep_placement),
+            fmt_time(best.report.time_to_train_s),
+            vs_paper,
+        ]);
+    }
+    t
+}
+
+/// Planner-vs-paper-mapping gap ablation on all three §VI clusters
+/// (Config 4), closing with the headline comparison: the Passage advantage
+/// over the electrical alternative under the paper's fixed mapping vs with
+/// each fabric running its own best mapping.
+pub fn planner_gap_table(knobs: &PerfKnobs) -> Table {
+    planner_gap_table_par(knobs, 1)
+}
+
+/// [`planner_gap_table`] over `jobs` workers.
+pub fn planner_gap_table_par(knobs: &PerfKnobs, jobs: usize) -> Table {
+    planner_gap_table_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`planner_gap_table_par`] against a caller-owned cluster cache.
+pub fn planner_gap_table_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> Table {
+    gap_table_from(&section6_plans(knobs, jobs, cache))
+}
+
+fn gap_table_from(outs: &[planner::PlanOutcome]) -> Table {
+    let mut t = Table::new(
+        "Ablation: planner-found vs paper mapping (Config 4)",
+        &["Cluster", "Paper-map TTT", "Planner TTT", "Planner gain"],
+    );
+    let mut planned = Vec::new();
+    for out in outs {
+        let best_ttt = out.best().expect("feasible").report.time_to_train_s;
+        let paper = out.paper_baseline.as_ref().expect("§VI clusters have a baseline");
+        t.row(&[
+            out.cluster.clone(),
+            fmt_time(paper.time_to_train_s),
+            fmt_time(best_ttt),
+            format!("{:.2}x", paper.time_to_train_s / best_ttt),
+        ]);
+        planned.push((paper.time_to_train_s, best_ttt));
+    }
+    // Headline: Passage vs Electrical-144 under both mapping regimes. The
+    // planner *widens* the gap — the larger scale-up domain benefits more
+    // from mapping freedom, which is the paper's "new opportunities for
+    // multi-dimensional parallelism" claim made quantitative.
+    let (passage, alt144) = (planned[0], planned[2]);
+    t.row(&[
+        "Passage-512 vs Electrical-144".into(),
+        format!("{:.2}x", alt144.0 / passage.0),
+        format!("{:.2}x", alt144.1 / passage.1),
+        "speedup".into(),
+    ]);
     t
 }
 
@@ -436,23 +613,38 @@ pub fn render_all(knobs: &PerfKnobs) -> String {
 
 /// [`render_all`] with every perf-model grid spread over `jobs` workers.
 pub fn render_all_par(knobs: &PerfKnobs, jobs: usize) -> String {
+    render_all_cached(knobs, jobs, &ClusterCache::new())
+}
+
+/// [`render_all_par`] against a caller-owned cluster cache: every grid in
+/// the command shares one memo, so each distinct cluster is built exactly
+/// once across all figures.
+pub fn render_all_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -> String {
     let mut out = String::new();
     for t in [table1(), table2(), table3(), table4()] {
         out.push_str(&t.render());
         out.push('\n');
     }
-    for (t, c) in [fig7(), fig8(), fig10_par(knobs, jobs), fig11_par(knobs, jobs)] {
+    for (t, c) in [
+        fig7(),
+        fig8(),
+        fig10_cached(knobs, jobs, cache),
+        fig11_cached(knobs, jobs, cache),
+    ] {
         out.push_str(&t.render());
         out.push('\n');
         out.push_str(&c.render());
         out.push('\n');
     }
-    out.push_str(&breakdown_table(knobs).render());
+    out.push_str(&breakdown_table_cached(knobs, cache).render());
     out.push('\n');
+    let (planner_best, planner_gap) = planner_tables_cached(knobs, jobs, cache);
     for t in [
-        pod_size_sweep_par(knobs, jobs),
-        bandwidth_sweep_par(knobs, jobs),
-        granularity_sweep_par(knobs, jobs),
+        pod_size_sweep_cached(knobs, jobs, cache),
+        bandwidth_sweep_cached(knobs, jobs, cache),
+        granularity_sweep_cached(knobs, jobs, cache),
+        planner_best,
+        planner_gap,
         topology_ablation(),
         routing_restriction_ablation(),
     ] {
@@ -512,6 +704,38 @@ mod tests {
             granularity_sweep(&knobs).render(),
             granularity_sweep_par(&knobs, jobs).render()
         );
+    }
+
+    #[test]
+    fn all_figures_share_one_cluster_cache() {
+        let knobs = PerfKnobs::default();
+        let cache = ClusterCache::new();
+        let _ = render_all_cached(&knobs, 2, &cache);
+        // Exactly 14 distinct clusters across every grid: the 3 §VI presets
+        // (fig10/11, granularity, planner tables) + 6 pod-sweep customs +
+        // 5 more bandwidth-sweep customs (512@32T is shared between the two
+        // sweeps). Each is built once for the whole command.
+        assert_eq!(cache.built(), 14);
+    }
+
+    #[test]
+    fn planner_tables_are_byte_identical_across_worker_counts() {
+        let knobs = PerfKnobs::default();
+        assert_eq!(
+            planner_best_table(&knobs).render(),
+            planner_best_table_par(&knobs, 4).render()
+        );
+        assert_eq!(
+            planner_gap_table(&knobs).render(),
+            planner_gap_table_par(&knobs, 4).render()
+        );
+    }
+
+    #[test]
+    fn planner_gap_table_carries_the_headline_row() {
+        let r = planner_gap_table(&PerfKnobs::default()).render();
+        assert!(r.contains("Passage-512 vs Electrical-144"), "{r}");
+        assert!(r.contains("speedup"), "{r}");
     }
 
     #[test]

@@ -6,6 +6,8 @@
 use lumos::hw;
 use lumos::model::Workload;
 use lumos::perf::{evaluate_paper_config, paper_clusters, EpPlacement, PerfKnobs};
+use lumos::planner::{plan, PlanRequest};
+use lumos::sweep::engine::ClusterKey;
 
 // ---------------------------------------------------------------- Fig 10/11
 
@@ -106,6 +108,41 @@ fn headline_2p7x_time_to_train() {
     // Training 13T tokens takes days, not minutes or years.
     let days = p.time_to_train_s / 86_400.0;
     assert!(days > 1.0 && days < 60.0, "{days} days");
+}
+
+// ----------------------------------------------------------------- planner
+
+#[test]
+fn planner_found_speedup_meets_the_2p7x_headline() {
+    // The paper's 2.7x is measured with the mapping *fixed* at
+    // TP16×PP8×DP256 on both systems. Freeing the mapping on each fabric
+    // must not erode the headline: the planner-found Passage advantage
+    // stays >= 2.7x (and in fact widens — the 8x larger scale-up domain
+    // benefits more from mapping freedom, which is the paper's
+    // "new opportunities for multi-dimensional parallelism" claim).
+    let knobs = PerfKnobs::default();
+    let p = plan(&PlanRequest::paper(ClusterKey::Passage512, 4, &knobs).with_top(1), 4);
+    let e = plan(&PlanRequest::paper(ClusterKey::Electrical144, 4, &knobs).with_top(1), 4);
+    let planned = e.best().unwrap().report.time_to_train_s
+        / p.best().unwrap().report.time_to_train_s;
+    assert!(planned >= 2.7, "planner-found speedup {planned}");
+    let fixed = e.paper_baseline.as_ref().unwrap().time_to_train_s
+        / p.paper_baseline.as_ref().unwrap().time_to_train_s;
+    assert!(planned > fixed, "mapping freedom should widen the gap: {planned} vs {fixed}");
+}
+
+#[test]
+fn planner_top_mapping_beats_the_paper_mapping_on_passage() {
+    let knobs = PerfKnobs::default();
+    let out = plan(&PlanRequest::paper(ClusterKey::Passage512, 4, &knobs).with_top(1), 4);
+    let best = out.best().unwrap();
+    let paper = out.paper_baseline.as_ref().unwrap();
+    assert!(
+        best.report.time_to_train_s <= paper.time_to_train_s,
+        "planner {} vs paper {}",
+        best.report.time_to_train_s,
+        paper.time_to_train_s
+    );
 }
 
 // ------------------------------------------------------------ workload facts

@@ -1,0 +1,144 @@
+//! Planner integration: properties of the candidate enumeration (the
+//! ISSUE-2 contract — divisibility, HBM feasibility, full GPU partition,
+//! paper-mapping membership), plus planner determinism across worker
+//! counts.
+
+use lumos::model::Workload;
+use lumos::parallel::{enumerate_candidates, Mapping, Parallelism};
+use lumos::perf::memory::memory_breakdown;
+use lumos::perf::{check_feasible, PerfKnobs};
+use lumos::planner::{plan, ranked_table, PlanRequest};
+use lumos::prop_assert;
+use lumos::sweep::engine::ClusterKey;
+use lumos::topology::cluster::Cluster;
+use lumos::util::prop::check;
+
+#[test]
+fn every_candidate_satisfies_divisibility_and_partitions_all_gpus() {
+    check("candidate legality", 48, |g| {
+        let cfg = g.usize(1, 4);
+        // Power-of-two pods tile 32,768 exactly; the 144-pod case is
+        // covered at the §VI cluster size 32,256 = 2^9·3^2·7 (the naive
+        // 32,768-truncated size 32,688 contains the prime 227 and
+        // legitimately admits no legal mapping).
+        let (pod, n) = *g.choose(&[
+            (64usize, 32_768usize),
+            (128, 32_768),
+            (144, 32_256),
+            (256, 32_768),
+            (512, 32_768),
+        ]);
+        let gbps = *g.choose(&[14_400.0, 32_000.0]);
+        let cluster = ClusterKey::custom(n, pod, gbps).build();
+        let w = Workload::paper_gpt_4p7t(cfg);
+        let cands = enumerate_candidates(&w, &cluster);
+        prop_assert!(!cands.is_empty(), "empty candidate space at pod={pod}");
+        for m in &cands {
+            prop_assert!(
+                m.par.n_gpus() == cluster.spec.n_gpus,
+                "tp{} x pp{} x dp{} != {}",
+                m.par.tp,
+                m.par.pp,
+                m.par.dp,
+                cluster.spec.n_gpus
+            );
+            prop_assert!(m.par.tp <= pod, "tp {} exceeds pod {pod}", m.par.tp);
+            prop_assert!(w.n_heads % m.par.tp == 0, "heads % tp, tp={}", m.par.tp);
+            prop_assert!(m.par.pp <= w.n_layers, "pp {} > layers", m.par.pp);
+            prop_assert!(w.global_batch % m.par.dp == 0, "batch % dp, dp={}", m.par.dp);
+            prop_assert!(
+                (w.global_batch / m.par.dp) % m.microbatch_seqs == 0,
+                "microbatch {} does not divide seqs/rank",
+                m.microbatch_seqs
+            );
+            prop_assert!(
+                Mapping::try_with_microbatch(m.par, m.moe, m.microbatch_seqs).is_ok(),
+                "mapping predicate failed"
+            );
+            prop_assert!(
+                w.d_ff_expert() % m.expert_tp() == 0,
+                "expert ffn shard, expert_tp={}",
+                m.expert_tp()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn feasibility_of_candidates_reduces_to_hbm_fit() {
+    // Enumeration already guarantees every divisibility constraint, so on
+    // emitted candidates check_feasible must agree exactly with
+    // MemoryBreakdown::fits().
+    check("feasible == fits", 12, |g| {
+        let cfg = g.usize(1, 4);
+        let cluster =
+            g.choose(&[ClusterKey::Passage512, ClusterKey::Electrical144]).clone().build();
+        let w = Workload::paper_gpt_4p7t(cfg);
+        for m in enumerate_candidates(&w, &cluster) {
+            let fits = memory_breakdown(&w, &m).fits();
+            prop_assert!(
+                check_feasible(&w, &m).is_ok() == fits,
+                "feasibility/fits disagree at tp{} pp{} dp{} mb{}",
+                m.par.tp,
+                m.par.pp,
+                m.par.dp,
+                m.microbatch_seqs
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn paper_mapping_is_an_hbm_feasible_candidate_for_all_four_configs() {
+    let cluster = Cluster::passage_512(32_768);
+    for cfg in 1..=4 {
+        let w = Workload::paper_gpt_4p7t(cfg);
+        let cands = enumerate_candidates(&w, &cluster);
+        let paper = Mapping::new(Parallelism::paper(), w.moe);
+        assert!(cands.contains(&paper), "config {cfg} misses the paper mapping");
+        assert!(check_feasible(&w, &paper).is_ok(), "config {cfg} paper mapping infeasible");
+    }
+}
+
+#[test]
+fn planner_ranks_only_feasible_mappings() {
+    // Config 1 (coarse experts, heaviest per-rank expert state at small
+    // tp) is the config whose space still has HBM-infeasible points.
+    let out = plan(&PlanRequest::paper(ClusterKey::Passage512, 1, &PerfKnobs::default()), 4);
+    assert!(out.pruned > 0, "expected some HBM pruning");
+    for p in &out.ranked {
+        assert!(p.memory.fits());
+        assert!(check_feasible(&Workload::paper_gpt_4p7t(1), &p.mapping).is_ok());
+    }
+}
+
+#[test]
+fn planner_output_is_byte_identical_for_any_worker_count() {
+    // The `lumos plan --jobs N` contract, asserted at the artifact level.
+    let knobs = PerfKnobs::default();
+    for key in [ClusterKey::Passage512, ClusterKey::Electrical144] {
+        let req = PlanRequest::paper(key, 4, &knobs).with_top(10);
+        let serial = ranked_table(&plan(&req, 1)).render();
+        for jobs in [2, 4, 7] {
+            assert_eq!(serial, ranked_table(&plan(&req, jobs)).render(), "jobs={jobs}");
+        }
+    }
+}
+
+#[test]
+fn planner_never_loses_to_the_paper_mapping_on_passage() {
+    let knobs = PerfKnobs::default();
+    for cfg in 1..=4 {
+        let out = plan(&PlanRequest::paper(ClusterKey::Passage512, cfg, &knobs).with_top(1), 4);
+        let best = out.best().expect("nonempty plan");
+        let paper = out.paper_baseline.as_ref().expect("baseline on passage");
+        assert!(
+            best.report.time_to_train_s <= paper.time_to_train_s,
+            "config {cfg}: planner {} > paper {}",
+            best.report.time_to_train_s,
+            paper.time_to_train_s
+        );
+    }
+}
