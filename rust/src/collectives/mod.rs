@@ -25,14 +25,58 @@ pub struct CommOp {
 }
 
 /// A schedule plus metadata for validation.
+///
+/// `domain` and `group` tag where the schedule runs: which network domain
+/// carries it, and which global rank ids its rank-local indices map to.
+/// Untagged schedules (the plain algorithm generators) leave both `None`;
+/// [`hierarchical_a2a_schedules`] tags its two phases with the domain
+/// each one rides, and callers placing a schedule on a concrete cluster
+/// attach the rank group. (The [`crate::timeline`] lowering prices the
+/// same splits but emits aggregate flows directly — see
+/// `timeline::lower` — so replaying a tagged schedule through
+/// [`crate::netsim`] is the validation path for the tags.)
 #[derive(Debug, Clone)]
 pub struct CommSchedule {
     pub name: String,
     pub n_ranks: usize,
     pub ops: Vec<CommOp>,
+    /// Network domain this schedule's traffic rides, when known.
+    pub domain: Option<Domain>,
+    /// Global rank ids of the participating group (`ops` use indices into
+    /// this list), when the schedule is placed on a concrete cluster.
+    pub group: Option<Vec<usize>>,
 }
 
 impl CommSchedule {
+    /// Untagged schedule (algorithm only, no placement).
+    pub fn new(name: &str, n_ranks: usize, ops: Vec<CommOp>) -> CommSchedule {
+        CommSchedule { name: name.to_string(), n_ranks, ops, domain: None, group: None }
+    }
+
+    /// Tag the network domain carrying this schedule.
+    pub fn with_domain(mut self, domain: Domain) -> CommSchedule {
+        self.domain = Some(domain);
+        self
+    }
+
+    /// Tag the global rank group. The group must cover every rank index
+    /// the ops actually use (checked), so `group[op.src]` is always valid
+    /// for a consumer placing this schedule on a cluster.
+    pub fn with_group(mut self, group: Vec<usize>) -> CommSchedule {
+        assert!(group.len() >= self.n_ranks, "group smaller than n_ranks");
+        for op in &self.ops {
+            assert!(
+                op.src < group.len() && op.dst < group.len(),
+                "op ({}, {}) outside the {}-rank group",
+                op.src,
+                op.dst,
+                group.len()
+            );
+        }
+        self.group = Some(group);
+        self
+    }
+
     pub fn n_steps(&self) -> usize {
         self.ops.iter().map(|o| o.step + 1).max().unwrap_or(0)
     }
@@ -153,7 +197,7 @@ pub fn ring_all_reduce_schedule(n: usize, bytes: f64) -> CommSchedule {
             }
         }
     }
-    CommSchedule { name: format!("ring-allreduce-{n}"), n_ranks: n, ops }
+    CommSchedule::new(&format!("ring-allreduce-{n}"), n, ops)
 }
 
 /// Ring all-gather schedule: (n-1) steps of `bytes/n`.
@@ -167,7 +211,7 @@ pub fn ring_all_gather_schedule(n: usize, bytes: f64) -> CommSchedule {
             }
         }
     }
-    CommSchedule { name: format!("ring-allgather-{n}"), n_ranks: n, ops }
+    CommSchedule::new(&format!("ring-allgather-{n}"), n, ops)
 }
 
 /// Pairwise-exchange all-to-all: n-1 steps; at step s, rank r sends its
@@ -182,7 +226,77 @@ pub fn pairwise_a2a_schedule(n: usize, bytes_per_rank: f64) -> CommSchedule {
             }
         }
     }
-    CommSchedule { name: format!("pairwise-a2a-{n}"), n_ranks: n, ops }
+    CommSchedule::new(&format!("pairwise-a2a-{n}"), n, ops)
+}
+
+/// Explicit schedules for the hierarchical (pod-crossing) all-to-all that
+/// [`hierarchical_a2a_time`] costs: an in-pod phase (pairwise exchange
+/// inside each pod, tagged [`Domain::ScaleUp`]) and a pod-crossing phase
+/// (each rank cycles through its other-pod peers, tagged
+/// [`Domain::ScaleOut`]). The two phases ride different NICs and overlap,
+/// matching the cost model's `max(t_up, t_out)` composition — replay them
+/// independently, not concatenated.
+///
+/// Placement is pod-major over `span` ranks with pods of `pod_size` (the
+/// last pod may be partial). Every peer receives the uniform per-peer
+/// chunk `bytes_per_rank / (span-1)`, so the phase split reproduces the
+/// cost model's `cross_pod_fraction` up to partial-pod geometry (which the
+/// averaged Hockney fractions smooth over). For `span <= pod_size` the
+/// in-pod phase is the flat pairwise exchange and the cross phase is empty.
+pub fn hierarchical_a2a_schedules(
+    pod_size: usize,
+    span: usize,
+    bytes_per_rank: f64,
+) -> (CommSchedule, CommSchedule) {
+    assert!(pod_size > 0 && span > 0);
+    let pod_of = |r: usize| r / pod_size;
+    let members = |p: usize| pod_size.min(span - p * pod_size);
+    let chunk = if span > 1 { bytes_per_rank / (span - 1) as f64 } else { 0.0 };
+
+    // In-pod phase: pairwise exchange within each pod, all pods in
+    // lockstep on shared step ids 0..pod_members-2.
+    let mut in_ops = Vec::new();
+    for r in 0..span {
+        let p = pod_of(r);
+        let m = members(p);
+        if m <= 1 {
+            continue;
+        }
+        let base = p * pod_size;
+        for step in 1..m {
+            in_ops.push(CommOp {
+                step: step - 1,
+                src: r,
+                dst: base + ((r - base) + step) % m,
+                bytes: chunk,
+            });
+        }
+    }
+    let in_pod = CommSchedule::new(&format!("hier-a2a-inpod-{span}x{pod_size}"), span, in_ops)
+        .with_domain(Domain::ScaleUp);
+
+    // Cross phase: at step t each rank sends to its t-th other-pod peer,
+    // rotated by its in-pod index so a pod's senders fan out instead of
+    // converging on one destination.
+    let mut x_ops = Vec::new();
+    if span > pod_size {
+        for r in 0..span {
+            let p = pod_of(r);
+            let peers: Vec<usize> = (0..span).filter(|&d| pod_of(d) != p).collect();
+            let rot = r - p * pod_size;
+            for (t, _) in peers.iter().enumerate() {
+                x_ops.push(CommOp {
+                    step: t,
+                    src: r,
+                    dst: peers[(t + rot) % peers.len()],
+                    bytes: chunk,
+                });
+            }
+        }
+    }
+    let cross_pod = CommSchedule::new(&format!("hier-a2a-cross-{span}x{pod_size}"), span, x_ops)
+        .with_domain(Domain::ScaleOut);
+    (in_pod, cross_pod)
 }
 
 #[cfg(test)]
@@ -261,6 +375,76 @@ mod tests {
             assert!(pairs.insert((op.src, op.dst)));
         }
         assert_eq!(pairs.len(), n * (n - 1));
+    }
+
+    #[test]
+    fn hierarchical_a2a_schedule_consistent_with_hockney_cost() {
+        // The explicit pod-crossing a2a schedules must reproduce the terms
+        // hierarchical_a2a_time charges, on both §VI pod sizes: 144 (the
+        // paper's 512-rank EP group spans 4 pods, the last partial) and
+        // 512 (two full Passage-sized pods).
+        let bytes = 1e9;
+        for (pod, span, cluster) in [
+            (144usize, 512usize, Cluster::electrical_144(32_256)),
+            (512, 1024, Cluster::passage_512(32_768)),
+        ] {
+            let (in_pod, cross_s) = hierarchical_a2a_schedules(pod, span, bytes);
+            assert_eq!(in_pod.domain, Some(Domain::ScaleUp));
+            assert_eq!(cross_s.domain, Some(Domain::ScaleOut));
+            let cross = cluster.cross_pod_fraction(span);
+            assert!(cross > 0.0);
+            // volume conservation: the two phases together move the full
+            // uniform a2a, split near the cost model's cross fraction
+            // (exact when pods divide the span; partial pods shift a bit)
+            let total = in_pod.total_bytes() + cross_s.total_bytes();
+            let uniform = span as f64 * bytes;
+            assert!((total - uniform).abs() / uniform < 1e-9, "{total} vs {uniform}");
+            let in_total = span as f64 * (1.0 - cross) * bytes;
+            let x_total = span as f64 * cross * bytes;
+            assert!((in_pod.total_bytes() - in_total).abs() / in_total < 0.10);
+            assert!((cross_s.total_bytes() - x_total).abs() / x_total < 0.05);
+            // step counts: pod-1 in-pod barriers; the cross phase needs one
+            // step per other-pod peer (ranks in a partial pod have more)
+            assert_eq!(in_pod.n_steps(), pod - 1);
+            assert!(cross_s.n_steps() >= span - pod && cross_s.n_steps() < span);
+            // bandwidth-term consistency: critical bytes over the domain
+            // rate reproduce the Hockney β-terms of hierarchical_a2a_time
+            let up = cluster.domain(Domain::ScaleUp);
+            let out = cluster.domain(Domain::ScaleOut);
+            let beta_up = (pod as f64 - 1.0) / pod as f64 * (1.0 - cross) * bytes
+                / (up.bytes_per_sec() * up.a2a_efficiency);
+            let t_in = in_pod.critical_bytes() / (up.bytes_per_sec() * up.a2a_efficiency);
+            assert!((t_in - beta_up).abs() / beta_up < 0.02, "{t_in} vs {beta_up}");
+            let beta_out =
+                cross * bytes / (out.bytes_per_sec() * out.a2a_efficiency);
+            let t_x = cross_s.critical_bytes() / (out.bytes_per_sec() * out.a2a_efficiency);
+            // partial pods stretch the tail (their ranks spread the same
+            // payload over more, smaller steps): β ≤ critical ≤ 1.2 β
+            assert!(t_x >= beta_out * (1.0 - 1e-9), "{t_x} vs {beta_out}");
+            assert!(t_x <= beta_out * 1.2, "{t_x} vs {beta_out}");
+            // every op really crosses pods / stays in-pod
+            for op in &cross_s.ops {
+                assert_ne!(op.src / pod, op.dst / pod);
+            }
+            for op in &in_pod.ops {
+                assert_eq!(op.src / pod, op.dst / pod);
+                assert_ne!(op.src, op.dst);
+            }
+        }
+        // degenerate: span within one pod = flat pairwise, empty cross
+        let (flat, none) = hierarchical_a2a_schedules(512, 32, 1e6);
+        assert_eq!(none.ops.len(), 0);
+        assert_eq!(flat.n_steps(), 31);
+        assert!((flat.total_bytes() - 32.0 * 1e6).abs() < 1e-3);
+    }
+
+    #[test]
+    fn schedule_tags_round_trip() {
+        let s = pairwise_a2a_schedule(4, 1e6)
+            .with_domain(Domain::ScaleUp)
+            .with_group(vec![8, 9, 10, 11]);
+        assert_eq!(s.domain, Some(Domain::ScaleUp));
+        assert_eq!(s.group.as_deref(), Some(&[8, 9, 10, 11][..]));
     }
 
     #[test]

@@ -20,10 +20,15 @@
 //! - **Validation stack**: [`netsim`] flow-level fabric simulation — an
 //!   incremental max-min engine that re-allocates only the affected
 //!   component on each completion ([`netsim::Simulator`], with
-//!   [`netsim::simulate_reference`] as the full-recompute oracle) — and
-//!   the [`coordinator`] miniature distributed-training runtime with real
-//!   rust collectives, plus [`trainer`] driving real AOT-compiled MoE
-//!   training steps through [`runtime`] (PJRT).
+//!   [`netsim::simulate_reference`] as the full-recompute oracle) plus a
+//!   dependency-driven engine ([`netsim::dep`]) that admits flows the
+//!   moment their predecessors finish; [`timeline`], the discrete-event
+//!   training-step simulator that lowers a (workload, mapping, cluster)
+//!   triple to a task DAG and cross-checks the analytical step time
+//!   (`lumos validate`); and the [`coordinator`] miniature
+//!   distributed-training runtime with real rust collectives, plus
+//!   [`trainer`] driving real AOT-compiled MoE training steps through
+//!   [`runtime`] (PJRT).
 //! - **Substrate**: [`util`] (JSON, RNG, property testing, CLI, stats,
 //!   tables, bench harness — the vendored crate set is minimal: the only
 //!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API).
@@ -39,6 +44,7 @@ pub mod perf;
 pub mod planner;
 pub mod runtime;
 pub mod sweep;
+pub mod timeline;
 pub mod topology;
 pub mod trainer;
 pub mod util;

@@ -6,7 +6,11 @@
 //! - `sweep`    pod/bandwidth/granularity/grid sweeps (`--jobs N` fans the
 //!   evaluation grid over a worker pool; output is identical for any N)
 //! - `plan`     search the full (TP, PP, DP, microbatch, experts/rank)
-//!   mapping space for a cluster and rank the feasible mappings
+//!   mapping space for a cluster and rank the feasible mappings (`--json`
+//!   for machine-readable output)
+//! - `validate` discrete-event simulation of a full training step vs the
+//!   analytical model (`--plan-top K` cross-checks the planner's best
+//!   mappings; `--json` for machine-readable output)
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
@@ -41,6 +45,7 @@ fn cli() -> Command {
                 .flag("breakdown", "step-time breakdown (Config 4)")
                 .flag("ablations", "extra ablation tables")
                 .flag("planner", "planner artifacts (best mapping per cluster, gap ablation)")
+                .flag("validate", "analytical-vs-simulated step gap table (timeline)")
                 .opt_default("jobs", "worker threads for the evaluation grids", "1"),
         )
         .sub(
@@ -78,7 +83,26 @@ fn cli() -> Command {
                 .opt_default("top", "ranked mappings to print (0 = all feasible)", "10")
                 .opt_default("jobs", "worker threads for the scoring grid", "1")
                 .opt("knobs", "JSON file with calibration knob overrides")
-                .opt("csv", "also write the ranked plan to this CSV file"),
+                .opt("csv", "also write the ranked plan to this CSV file")
+                .flag("json", "machine-readable output (util::json, deterministic)"),
+        )
+        .sub(
+            Command::new(
+                "validate",
+                "discrete-event step simulation vs the analytical model",
+            )
+            .opt(
+                "cluster",
+                "passage-512 | electrical-512 | electrical-144 (default passage-512)",
+            )
+            .opt("gpus", "custom cluster: total GPUs (with --pod-size and --gbps)")
+            .opt("pod-size", "custom cluster: GPUs per scale-up pod")
+            .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
+            .opt_default("config", "MoE config index 1..4", "4")
+            .opt_default("plan-top", "also validate the planner's top K mappings", "0")
+            .opt_default("jobs", "worker threads for the planner scoring grid", "1")
+            .opt("knobs", "JSON file with calibration knob overrides")
+            .flag("json", "machine-readable output (util::json, deterministic)"),
         )
         .sub(
             Command::new("netsim", "discrete-event fabric validation")
@@ -119,6 +143,7 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
         Some("model") => model(args),
         Some("sweep") => sweep_cmd(args),
         Some("plan") => plan_cmd(args),
+        Some("validate") => validate_cmd(args),
         Some("netsim") => netsim_cmd(),
         Some("hw") => {
             let (t7, _) = sweep::fig7();
@@ -146,7 +171,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
     let cache = ClusterCache::new();
     let all = args.flag("all")
         || !["table1", "table2", "table3", "table4", "fig7", "fig8", "fig10", "fig11",
-             "breakdown", "ablations", "planner"]
+             "breakdown", "ablations", "planner", "validate"]
             .iter()
             .any(|f| args.flag(f));
     if all {
@@ -199,6 +224,9 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         let (best, gap) = sweep::planner_tables_cached(&knobs, jobs, &cache);
         println!("{}", best.render());
         println!("{}", gap.render());
+    }
+    if args.flag("validate") {
+        println!("{}", sweep::validate_gap_table_cached(&knobs, &cache).render());
     }
     Ok(())
 }
@@ -308,21 +336,21 @@ fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
     write_csv(args, &table)
 }
 
-fn plan_cmd(args: &Args) -> anyhow::Result<()> {
-    let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
-    anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
-    let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(10);
-    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
-    let knobs = match args.get("knobs") {
+/// Shared knob-file parsing for `plan` and `validate`.
+fn knobs_from_args(args: &Args) -> anyhow::Result<PerfKnobs> {
+    Ok(match args.get("knobs") {
         Some(path) => config::knobs_from_json(
             &Json::parse(&std::fs::read_to_string(path)?).map_err(anyhow::Error::msg)?,
         ),
         None => PerfKnobs::default(),
-    };
+    })
+}
 
-    // Cluster: a §VI preset, or a custom (--gpus, --pod-size, --gbps) point.
+/// Shared cluster selection for `plan` and `validate`: a §VI preset, or a
+/// custom (--gpus, --pod-size, --gbps) point.
+fn cluster_key_from_args(args: &Args) -> anyhow::Result<ClusterKey> {
     let custom = [args.get("gpus"), args.get("pod-size"), args.get("gbps")];
-    let key = if custom.iter().any(Option::is_some) {
+    if custom.iter().any(Option::is_some) {
         anyhow::ensure!(
             custom.iter().all(Option::is_some),
             "custom clusters need all of --gpus, --pod-size and --gbps"
@@ -339,9 +367,9 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
             "--gpus must be a multiple of --pod-size"
         );
         anyhow::ensure!(gbps.is_finite() && gbps > 0.0, "--gbps must be positive");
-        ClusterKey::custom(n, pod, gbps)
+        Ok(ClusterKey::custom(n, pod, gbps))
     } else {
-        match args.get("cluster").unwrap_or("passage-512") {
+        Ok(match args.get("cluster").unwrap_or("passage-512") {
             "passage-512" => ClusterKey::Passage512,
             "electrical-512" => ClusterKey::Electrical512,
             "electrical-144" => ClusterKey::Electrical144,
@@ -349,8 +377,17 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
                 "unknown cluster preset '{other}' \
                  (have passage-512, electrical-512, electrical-144)"
             ),
-        }
-    };
+        })
+    }
+}
+
+fn plan_cmd(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
+    let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(10);
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let knobs = knobs_from_args(args)?;
+    let key = cluster_key_from_args(args)?;
 
     let req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(top);
     let outcome = planner::plan(&req, jobs);
@@ -360,6 +397,10 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
          ({} candidates enumerated, all pruned)",
         outcome.enumerated
     );
+    if args.flag("json") {
+        println!("{}", planner::outcome_json(&outcome).to_string_pretty());
+        return write_csv(args, &planner::ranked_table(&outcome));
+    }
     if let Some(b) = &outcome.paper_baseline {
         println!(
             "paper mapping (TP16 x PP8 x DP256): step {}, TTT {}\n",
@@ -370,6 +411,73 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     let table = planner::ranked_table(&outcome);
     println!("{}", table.render());
     write_csv(args, &table)
+}
+
+fn validate_cmd(args: &Args) -> anyhow::Result<()> {
+    use lumos::parallel::{Mapping, Parallelism};
+    use lumos::timeline;
+
+    let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
+    let plan_top = args.get_usize("plan-top").map_err(anyhow::Error::msg)?.unwrap_or(0);
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let knobs = knobs_from_args(args)?;
+    let key = cluster_key_from_args(args)?;
+
+    let cache = ClusterCache::new();
+    let cluster = cache.get(&key);
+    let workload = lumos::model::Workload::paper_gpt_4p7t(cfg);
+    let mut rows = Vec::new();
+
+    // The paper's fixed mapping first, when it is comparable on this
+    // cluster (same gate as the planner baseline).
+    if planner::paper_baseline(&workload, &cluster, &knobs).is_some() {
+        let map = Mapping::try_new(Parallelism::paper(), workload.moe)
+            .expect("baseline implies a legal mapping");
+        rows.push(
+            timeline::validate_mapping(&workload, &cluster, &map, &knobs)
+                .map_err(|e| anyhow::anyhow!("paper mapping: {e}"))?,
+        );
+    }
+
+    // Cross-check the planner's best mappings on the same cluster.
+    if plan_top > 0 {
+        let req = planner::PlanRequest::paper(key.clone(), cfg, &knobs).with_top(plan_top);
+        let outcome = planner::plan_with_cache(&req, jobs, &cache);
+        for p in &outcome.ranked {
+            if rows.iter().any(|v: &timeline::Validation| v.mapping == p.mapping) {
+                continue;
+            }
+            match timeline::validate_mapping(&workload, &cluster, &p.mapping, &knobs) {
+                Ok(v) => rows.push(v),
+                // stderr keeps stdout byte-identical across job counts
+                Err(timeline::TimelineError::TooLarge(msg)) => eprintln!(
+                    "skipping TP{}xPP{}xDP{}: {msg}",
+                    p.mapping.par.tp, p.mapping.par.pp, p.mapping.par.dp
+                ),
+                Err(e) => anyhow::bail!("planner mapping failed to validate: {e}"),
+            }
+        }
+    }
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "nothing to validate: the paper mapping does not fit this cluster; \
+         use --plan-top K to validate planner-found mappings"
+    );
+    let config_name = rows[0].analytical.config_name.clone();
+    if args.flag("json") {
+        println!(
+            "{}",
+            timeline::validation_json(&cluster.spec.name, &config_name, &rows)
+                .to_string_pretty()
+        );
+    } else {
+        println!(
+            "{}",
+            timeline::validation_table(&cluster.spec.name, &config_name, &rows).render()
+        );
+    }
+    Ok(())
 }
 
 fn netsim_cmd() -> anyhow::Result<()> {

@@ -1,0 +1,453 @@
+//! Dependency-driven discrete-event engine: flows (and fixed-duration
+//! delays) are admitted the moment their predecessors finish, instead of at
+//! bulk-synchronous step barriers.
+//!
+//! This is the execution substrate of [`crate::timeline`]: a training step
+//! lowers to a DAG of compute [`DagWork::Delay`]s and communication
+//! [`DagWork::Flow`]s, and compute/comm overlap *emerges* from the
+//! dependency structure rather than from an overlap knob. It also gives the
+//! schedule replayer step-level pipelining ([`replay_schedule_dependent`]):
+//! a rank starts its next-step transfer as soon as *its own* current-step
+//! transfers finish, so steps with disjoint flows overlap.
+//!
+//! Semantics (kept aligned with the bulk-synchronous oracle):
+//!
+//! - A node is *ready* when every dependency has finished; ready flows join
+//!   the max-min fair fluid allocation immediately.
+//! - A flow finishes `base_latency` after its last byte (implemented as a
+//!   completion pseudo-delay), exactly like [`super::simulate`]'s per-flow
+//!   `+ base_latency`.
+//! - With full step barriers as dependencies ([`schedule_chain_dag`] — the
+//!   degenerate chain case) the engine reproduces [`super::replay_schedule`]
+//!   to ≤ 1e-9 relative; `tests/netsim_prop.rs` pins this property.
+//!
+//! The per-event allocation is a full progressive-filling recompute over the
+//! active flow set (the shape of [`super::simulate_reference`], which the
+//! incremental engine is property-tested against). Timeline DAGs lower
+//! collectives to a handful of aggregate flows per task, so active sets stay
+//! small and the recompute is not the bottleneck; making this engine
+//! component-incremental like [`super::Simulator`] is listed in ROADMAP.
+
+use std::collections::BTreeMap;
+
+use crate::collectives::CommSchedule;
+
+use super::Network;
+
+/// What a DAG node does once admitted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DagWork {
+    /// Local work of fixed duration (compute, software latency). Occupies
+    /// no links.
+    Delay(f64),
+    /// A network transfer along `Network::path(src, dst)`.
+    Flow { src: usize, dst: usize, bytes: f64 },
+}
+
+/// One node of a task DAG. Dependencies must point at earlier nodes (the
+/// builder emits nodes in a topological order), which rules out cycles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagNode {
+    pub work: DagWork,
+    pub deps: Vec<usize>,
+}
+
+impl DagNode {
+    pub fn delay(duration_s: f64, deps: Vec<usize>) -> DagNode {
+        DagNode { work: DagWork::Delay(duration_s), deps }
+    }
+
+    pub fn flow(src: usize, dst: usize, bytes: f64, deps: Vec<usize>) -> DagNode {
+        DagNode { work: DagWork::Flow { src, dst, bytes }, deps }
+    }
+}
+
+/// Result of executing a DAG.
+#[derive(Debug, Clone)]
+pub struct DagResult {
+    /// Completion time of the last node, seconds.
+    pub makespan: f64,
+    /// Per-node finish time (latency included for flows).
+    pub finish: Vec<f64>,
+    /// Fluid events processed (completions/admissions batched per instant).
+    pub events: usize,
+}
+
+/// Execute `nodes` on `net`: dependency-driven admission over a max-min
+/// fair fluid network. Panics on an unsatisfiable DAG (forward dependency)
+/// or a zero-rate deadlock, mirroring [`super::simulate`].
+pub fn simulate_dag(net: &Network, nodes: &[DagNode]) -> DagResult {
+    let n = nodes.len();
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in nodes.iter().enumerate() {
+        indeg[i] = node.deps.len();
+        for &d in &node.deps {
+            assert!(d < i, "node {i} depends on later/own node {d}: emit in topological order");
+            succ[d].push(i);
+        }
+    }
+
+    let mut remaining: Vec<f64> = nodes
+        .iter()
+        .map(|nd| match nd.work {
+            DagWork::Delay(d) => d,
+            DagWork::Flow { bytes, .. } => bytes,
+        })
+        .collect();
+    let mut paths: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut finish = vec![0.0f64; n];
+
+    let mut active_flows: Vec<usize> = Vec::new();
+    let mut active_delays: Vec<usize> = Vec::new();
+    // Admission/completion order at one instant never affects the fluid
+    // math (rates are recomputed after the ready set fully drains), so the
+    // ready stack needs no ordering discipline.
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut now = 0.0f64;
+    let mut done = 0usize;
+    let mut events = 0usize;
+
+    // Completion helper: records finish, unlocks successors into `ready`.
+    macro_rules! complete {
+        ($i:expr) => {{
+            let i = $i;
+            finish[i] = now;
+            done += 1;
+            for &s in &succ[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }};
+    }
+
+    loop {
+        // Admit everything ready; zero-work nodes complete instantly and
+        // may cascade more ready nodes.
+        while let Some(i) = ready.pop() {
+            match nodes[i].work {
+                DagWork::Delay(d) => {
+                    if d <= 0.0 {
+                        complete!(i);
+                    } else {
+                        active_delays.push(i);
+                    }
+                }
+                DagWork::Flow { src, dst, bytes } => {
+                    if bytes <= 0.0 || src == dst {
+                        // a zero-byte "flow" still pays the base latency,
+                        // matching `simulate`'s per-flow `+ base_latency`
+                        if net.base_latency > 0.0 {
+                            remaining[i] = net.base_latency;
+                            active_delays.push(i);
+                        } else {
+                            complete!(i);
+                        }
+                    } else {
+                        paths[i] = net.path(src, dst);
+                        active_flows.push(i);
+                    }
+                }
+            }
+        }
+        if done == n {
+            break;
+        }
+        assert!(
+            !active_flows.is_empty() || !active_delays.is_empty(),
+            "dag deadlocked: {} of {n} nodes stuck",
+            n - done
+        );
+        events += 1;
+
+        // --- max-min rates over the active flows (full progressive fill,
+        // the deterministic shape of `simulate_reference`) ----------------
+        let mut rate: BTreeMap<usize, f64> = BTreeMap::new();
+        if !active_flows.is_empty() {
+            let mut link_users: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for &i in &active_flows {
+                for &l in &paths[i] {
+                    link_users.entry(l).or_default().push(i);
+                }
+            }
+            let mut link_cap: BTreeMap<usize, f64> =
+                link_users.keys().map(|&l| (l, net.links[l].capacity)).collect();
+            let mut users: BTreeMap<usize, usize> =
+                link_users.iter().map(|(&l, v)| (l, v.len())).collect();
+            let mut unfrozen = active_flows.len();
+            let mut tied: Vec<usize> = Vec::new();
+            while unfrozen > 0 {
+                let mut best: Option<f64> = None;
+                for (&l, &u) in &users {
+                    if u == 0 {
+                        continue;
+                    }
+                    let share = link_cap[&l] / u as f64;
+                    let better = match best {
+                        None => true,
+                        Some(s) => share < s,
+                    };
+                    if better {
+                        best = Some(share);
+                    }
+                }
+                let Some(share) = best else { break };
+                // Freeze every link whose share ties the bottleneck
+                // *exactly* (bit-equal). Max-min is unique, and freezing a
+                // tied link's flows at `share` leaves the other tied
+                // links' shares at `share` too, so batching is equivalent
+                // to the reference's one-link-per-round order — but
+                // collapses the symmetric rounds DAG workloads produce
+                // (hundreds of equal per-GPU links) into one pass.
+                tied.clear();
+                tied.extend(
+                    users
+                        .iter()
+                        .filter(|&(&l, &u)| u > 0 && link_cap[&l] / u as f64 == share)
+                        .map(|(&l, _)| l),
+                );
+                for &bl in &tied {
+                    for &fi in &link_users[&bl] {
+                        if rate.contains_key(&fi) {
+                            continue;
+                        }
+                        rate.insert(fi, share);
+                        unfrozen -= 1;
+                        for &l in &paths[fi] {
+                            let c = link_cap.get_mut(&l).unwrap();
+                            *c = (*c - share).max(0.0);
+                            *users.get_mut(&l).unwrap() -= 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- advance to the next completion -------------------------------
+        let mut dt = f64::INFINITY;
+        for &i in &active_flows {
+            if let Some(&r) = rate.get(&i) {
+                if r > 0.0 {
+                    dt = dt.min(remaining[i] / r);
+                }
+            }
+        }
+        for &i in &active_delays {
+            dt = dt.min(remaining[i]);
+        }
+        assert!(dt.is_finite(), "deadlocked flows (zero rate)");
+        now += dt;
+
+        // Flow completions first; a completed flow owing latency becomes a
+        // *newborn* delay that must not absorb this event's dt.
+        let mut born: Vec<usize> = Vec::new();
+        let mut w = 0;
+        for r in 0..active_flows.len() {
+            let i = active_flows[r];
+            remaining[i] -= rate.get(&i).copied().unwrap_or(0.0) * dt;
+            if remaining[i] <= 1e-9 {
+                if net.base_latency > 0.0 {
+                    remaining[i] = net.base_latency;
+                    born.push(i);
+                } else {
+                    complete!(i);
+                }
+            } else {
+                active_flows[w] = i;
+                w += 1;
+            }
+        }
+        active_flows.truncate(w);
+        let mut w = 0;
+        for r in 0..active_delays.len() {
+            let i = active_delays[r];
+            remaining[i] -= dt;
+            if remaining[i] <= 1e-9 {
+                complete!(i);
+            } else {
+                active_delays[w] = i;
+                w += 1;
+            }
+        }
+        active_delays.truncate(w);
+        active_delays.extend(born);
+    }
+
+    let makespan = finish.iter().cloned().fold(0.0f64, f64::max);
+    DagResult { makespan, finish, events }
+}
+
+// ---------------------------------------------------------------------------
+// CommSchedule lowerings
+// ---------------------------------------------------------------------------
+
+/// Lower a schedule to the *degenerate chain* DAG: every flow of step `s+1`
+/// depends on every flow of the previous non-empty step — exactly the bulk-
+/// synchronous barrier [`super::replay_schedule`] imposes. Nodes appear in
+/// step-major op order (the same order `replay_schedule` reports flow
+/// times), so `DagResult::finish` aligns 1:1 with `SimResult::flow_times`.
+pub fn schedule_chain_dag(sched: &CommSchedule) -> Vec<DagNode> {
+    let mut nodes = Vec::new();
+    let mut prev: Vec<usize> = Vec::new();
+    for step in 0..sched.n_steps() {
+        let mut cur = Vec::new();
+        for op in sched.ops.iter().filter(|o| o.step == step && o.src != o.dst) {
+            nodes.push(DagNode::flow(op.src, op.dst, op.bytes, prev.clone()));
+            cur.push(nodes.len() - 1);
+        }
+        if !cur.is_empty() {
+            prev = cur;
+        }
+    }
+    nodes
+}
+
+/// Lower a schedule to the *rank-local* dependency DAG: a flow waits only
+/// for the most recent earlier-step flows touching its own src or dst rank.
+/// Steps whose flows are disjoint overlap — the schedule-level pipelining
+/// the bulk-synchronous replayer cannot express.
+///
+/// Note that rank-local admission is not universally faster under max-min
+/// sharing: an early-admitted flow can contend with a previous step's
+/// stragglers. On disjoint-step schedules it is a pure win (pinned by the
+/// netsim property tests).
+pub fn schedule_rank_dag(sched: &CommSchedule) -> Vec<DagNode> {
+    let mut nodes = Vec::new();
+    // rank -> node ids of the most recent step that touched it
+    let mut last: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for step in 0..sched.n_steps() {
+        let mut cur: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for op in sched.ops.iter().filter(|o| o.step == step && o.src != o.dst) {
+            let mut deps: Vec<usize> = Vec::new();
+            for r in [op.src, op.dst] {
+                if let Some(ids) = last.get(&r) {
+                    deps.extend(ids.iter().copied());
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            nodes.push(DagNode::flow(op.src, op.dst, op.bytes, deps));
+            let id = nodes.len() - 1;
+            cur.entry(op.src).or_default().push(id);
+            cur.entry(op.dst).or_default().push(id);
+        }
+        for (r, ids) in cur {
+            last.insert(r, ids);
+        }
+    }
+    nodes
+}
+
+/// Replay `sched` with rank-local dependencies instead of step barriers.
+pub fn replay_schedule_dependent(net: &Network, sched: &CommSchedule) -> DagResult {
+    simulate_dag(net, &schedule_rank_dag(sched))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives as coll;
+    use crate::netsim::replay_schedule;
+
+    #[test]
+    fn single_flow_matches_batch_sim() {
+        let net = Network::sls(4, 800.0, 5e-6);
+        let dag = vec![DagNode::flow(0, 1, 1e9, vec![])];
+        let r = simulate_dag(&net, &dag);
+        // 1e9 B at 100 GB/s + 5 µs latency
+        assert!((r.makespan - (0.01 + 5e-6)).abs() < 1e-12, "{}", r.makespan);
+        assert_eq!(r.finish.len(), 1);
+    }
+
+    #[test]
+    fn chain_dag_equals_bulk_synchronous_replay() {
+        for (net, sched) in [
+            (Network::sls(8, 800.0, 1e-6), coll::ring_all_reduce_schedule(8, 64e6)),
+            (Network::sls(6, 1_600.0, 0.0), coll::pairwise_a2a_schedule(6, 16e6)),
+            (
+                Network::cluster(12, 4, 800.0, 100.0, 2.0, 5e-6),
+                coll::pairwise_a2a_schedule(12, 8e6),
+            ),
+        ] {
+            let bulk = replay_schedule(&net, &sched);
+            let dag = simulate_dag(&net, &schedule_chain_dag(&sched));
+            let rel = (dag.makespan - bulk.makespan).abs() / bulk.makespan;
+            assert!(rel <= 1e-9, "{} vs {}", dag.makespan, bulk.makespan);
+            assert_eq!(dag.finish.len(), bulk.flow_times.len());
+            for (a, b) in dag.finish.iter().zip(&bulk.flow_times) {
+                assert!((a - b).abs() <= 1e-9 * b.max(1e-30), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_steps_overlap_under_rank_deps() {
+        // 4 steps that share no ranks: bulk-sync serializes them, the
+        // dependency engine runs them all at t=0.
+        let net = Network::sls(8, 800.0, 0.0);
+        let ops: Vec<coll::CommOp> = (0..4)
+            .map(|s| coll::CommOp { step: s, src: 2 * s, dst: 2 * s + 1, bytes: 1e9 })
+            .collect();
+        let sched = coll::CommSchedule::new("disjoint", 8, ops);
+        let bulk = replay_schedule(&net, &sched);
+        let dep = replay_schedule_dependent(&net, &sched);
+        assert!((bulk.makespan - 0.04).abs() < 1e-9, "{}", bulk.makespan);
+        assert!((dep.makespan - 0.01).abs() < 1e-9, "{}", dep.makespan);
+    }
+
+    #[test]
+    fn delays_chain_and_mix_with_flows() {
+        let net = Network::sls(2, 800.0, 0.0);
+        // delay 1 ms -> flow 1e9 (10 ms) -> delay 2 ms, vs an independent
+        // 5 ms delay: makespan = 13 ms.
+        let dag = vec![
+            DagNode::delay(1e-3, vec![]),
+            DagNode::flow(0, 1, 1e9, vec![0]),
+            DagNode::delay(2e-3, vec![1]),
+            DagNode::delay(5e-3, vec![]),
+        ];
+        let r = simulate_dag(&net, &dag);
+        assert!((r.makespan - 13e-3).abs() < 1e-12, "{}", r.makespan);
+        assert!((r.finish[3] - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_work_nodes_complete_instantly() {
+        let net = Network::sls(2, 800.0, 0.0);
+        let dag = vec![
+            DagNode::delay(0.0, vec![]),
+            DagNode::flow(0, 1, 0.0, vec![0]),
+            DagNode::delay(1e-3, vec![1]),
+        ];
+        let r = simulate_dag(&net, &dag);
+        assert!((r.makespan - 1e-3).abs() < 1e-12);
+        assert_eq!(r.finish[0], 0.0);
+        assert_eq!(r.finish[1], 0.0);
+    }
+
+    #[test]
+    fn contending_admissions_share_links() {
+        // Two flows into the same downlink admitted at different times: the
+        // second is admitted when the first is half done; they then share.
+        let net = Network::sls(4, 800.0, 0.0);
+        let dag = vec![
+            DagNode::flow(1, 0, 1e9, vec![]),              // starts at 0
+            DagNode::delay(0.005, vec![]),                 // gate at 5 ms
+            DagNode::flow(2, 0, 1e9, vec![1]),             // joins mid-flight
+        ];
+        let r = simulate_dag(&net, &dag);
+        // flow 0: 5 ms alone (half done) + 10 ms shared = 15 ms.
+        assert!((r.finish[0] - 0.015).abs() < 1e-9, "{}", r.finish[0]);
+        // flow 2: 10 ms shared + 5 ms alone = ends at 20 ms.
+        assert!((r.makespan - 0.020).abs() < 1e-9, "{}", r.makespan);
+    }
+
+    #[test]
+    #[should_panic(expected = "topological")]
+    fn forward_deps_are_rejected() {
+        let net = Network::sls(2, 800.0, 0.0);
+        simulate_dag(&net, &[DagNode::delay(1.0, vec![1]), DagNode::delay(1.0, vec![])]);
+    }
+}

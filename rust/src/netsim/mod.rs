@@ -25,9 +25,16 @@
 //! the original full-recompute implementation and the property tests in
 //! `tests/netsim_prop.rs` assert the two agree to ≤ 1e-9 relative.
 
+pub mod dep;
+
 use std::collections::BTreeMap;
 
 use crate::collectives::CommSchedule;
+
+pub use dep::{
+    replay_schedule_dependent, schedule_chain_dag, schedule_rank_dag, simulate_dag, DagNode,
+    DagResult, DagWork,
+};
 
 /// Directed link with finite capacity.
 #[derive(Debug, Clone)]
@@ -55,6 +62,11 @@ pub struct Network {
     /// per-node (uplink, downlink) link ids
     up: Vec<usize>,
     down: Vec<usize>,
+    /// per-node scale-out NIC link ids (empty unless built by
+    /// [`Network::two_level`]); when present, cross-pod paths ride the NICs
+    /// instead of the scale-up injection links
+    nic_up: Vec<usize>,
+    nic_down: Vec<usize>,
     /// pod uplink/downlink per pod (empty when single-pod)
     pod_up: Vec<usize>,
     pod_down: Vec<usize>,
@@ -80,6 +92,8 @@ impl Network {
             n_nodes: n,
             up,
             down,
+            nic_up: Vec::new(),
+            nic_down: Vec::new(),
             pod_up: Vec::new(),
             pod_down: Vec::new(),
             pod_size: n,
@@ -124,6 +138,61 @@ impl Network {
             n_nodes: n,
             up,
             down,
+            nic_up: Vec::new(),
+            nic_down: Vec::new(),
+            pod_up,
+            pod_down,
+            pod_size,
+            base_latency: latency_s,
+        }
+    }
+
+    /// Two-level cluster with *explicit per-GPU scale-out NICs*: scale-up
+    /// injection of `up_gbps` inside a pod, a `nic_gbps` NIC per GPU for
+    /// pod-crossing traffic, and per-pod uplinks sized to the members'
+    /// aggregate NIC bandwidth (no oversubscription — the NICs are where
+    /// sparse cross-pod traffic like pipeline p2p must be rate-limited,
+    /// which [`Network::cluster`]'s shared-uplink-only model cannot do).
+    /// This is the fabric model [`crate::timeline`] executes on.
+    pub fn two_level(
+        n: usize,
+        pod_size: usize,
+        up_gbps: f64,
+        nic_gbps: f64,
+        latency_s: f64,
+    ) -> Network {
+        assert!(pod_size > 0 && n > 0);
+        let n_pods = n.div_ceil(pod_size);
+        let up_bps = up_gbps * 1e9 / 8.0;
+        let nic_bps = nic_gbps * 1e9 / 8.0;
+        let mut links = Vec::with_capacity(4 * n + 2 * n_pods);
+        let (mut up, mut down) = (Vec::new(), Vec::new());
+        let (mut nic_up, mut nic_down) = (Vec::new(), Vec::new());
+        for i in 0..n {
+            up.push(links.len());
+            links.push(Link { name: format!("gpu{i}-up"), capacity: up_bps });
+            down.push(links.len());
+            links.push(Link { name: format!("gpu{i}-down"), capacity: up_bps });
+            nic_up.push(links.len());
+            links.push(Link { name: format!("gpu{i}-nic-up"), capacity: nic_bps });
+            nic_down.push(links.len());
+            links.push(Link { name: format!("gpu{i}-nic-down"), capacity: nic_bps });
+        }
+        let (mut pod_up, mut pod_down) = (Vec::new(), Vec::new());
+        for p in 0..n_pods {
+            let members = pod_size.min(n - p * pod_size) as f64;
+            pod_up.push(links.len());
+            links.push(Link { name: format!("pod{p}-up"), capacity: members * nic_bps });
+            pod_down.push(links.len());
+            links.push(Link { name: format!("pod{p}-down"), capacity: members * nic_bps });
+        }
+        Network {
+            links,
+            n_nodes: n,
+            up,
+            down,
+            nic_up,
+            nic_down,
             pod_up,
             pod_down,
             pod_size,
@@ -136,14 +205,18 @@ impl Network {
     }
 
     /// Path for a src→dst transfer. In-pod: up + down. Cross-pod: up,
-    /// pod-uplink, remote pod-downlink, down.
+    /// pod-uplink, remote pod-downlink, down — via the per-GPU NICs instead
+    /// of the scale-up injection links when the network has them
+    /// ([`Network::two_level`]).
     pub fn path(&self, src: usize, dst: usize) -> Vec<usize> {
         assert!(src < self.n_nodes && dst < self.n_nodes && src != dst);
         let (ps, pd) = (self.pod_of(src), self.pod_of(dst));
         if ps == pd {
             vec![self.up[src], self.down[dst]]
-        } else {
+        } else if self.nic_up.is_empty() {
             vec![self.up[src], self.pod_up[ps], self.pod_down[pd], self.down[dst]]
+        } else {
+            vec![self.nic_up[src], self.pod_up[ps], self.pod_down[pd], self.nic_down[dst]]
         }
     }
 
@@ -648,6 +721,21 @@ mod tests {
         assert_eq!(p.len(), 4);
         let p2 = net.path(0, 3);
         assert_eq!(p2.len(), 2);
+    }
+
+    #[test]
+    fn two_level_cross_pod_rides_the_nics() {
+        let net = Network::two_level(16, 8, 800.0, 100.0, 0.0);
+        // in-pod: scale-up rate (100 GB/s)
+        let r = simulate(&net, &[net.flow(0, 1, 1e9)]);
+        assert!((r.makespan - 0.01).abs() < 1e-9, "{}", r.makespan);
+        // cross-pod: a single flow is NIC-bound (12.5 GB/s), not
+        // pod-uplink-bound (the uplink has the members' aggregate capacity)
+        let r = simulate(&net, &[net.flow(0, 12, 1e9)]);
+        assert!((r.makespan - 0.08).abs() < 1e-9, "{}", r.makespan);
+        let p = net.path(0, 12);
+        assert_eq!(p.len(), 4);
+        assert!(net.links[p[0]].name.contains("nic"), "{}", net.links[p[0]].name);
     }
 
     #[test]

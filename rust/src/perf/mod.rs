@@ -191,12 +191,44 @@ pub struct PerfReport {
 
 /// All-to-all startup term: peers are contacted from parallel NIC queues,
 /// so latency composes logarithmically rather than serially.
-fn a2a_alpha(latency_s: f64, n: usize) -> f64 {
+pub(crate) fn a2a_alpha(latency_s: f64, n: usize) -> f64 {
     latency_s * (n.max(2) as f64).log2().ceil()
 }
 
-/// Evaluate one (workload, cluster, mapping) point.
-pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnobs) -> PerfReport {
+/// The per-step work and wire volumes one (workload, cluster, mapping)
+/// point generates — the quantities both [`evaluate`] and the
+/// [`crate::timeline`] lowering price, factored out so the analytical
+/// model and the discrete-event simulator cannot drift apart.
+#[derive(Debug, Clone)]
+pub struct StepVolumes {
+    /// 1F1B microbatches per step per DP rank.
+    pub n_micro: usize,
+    /// Tokens per microbatch.
+    pub mb_tokens: f64,
+    /// (Possibly fractional) transformer layers per pipeline stage.
+    pub layers_per_stage: f64,
+    /// Matmul time per microbatch (fwd+bwd), TP-sharded, at `mfu`.
+    pub compute_per_micro: f64,
+    /// Payload of one TP (or expert-TP) all-reduce.
+    pub act_bytes: f64,
+    /// Per-GPU payload of one EP all-to-all (dispatch or combine).
+    pub a2a_bytes: f64,
+    /// Pipeline activation/gradient transfer per microbatch per boundary.
+    pub pp_bytes: f64,
+    /// Per-GPU shared (attention+router+embedding) gradient bytes.
+    pub shared_grad_bytes: f64,
+    /// Per-GPU expert gradient bytes.
+    pub expert_grad_bytes: f64,
+}
+
+/// Compute [`StepVolumes`] for a point. Callers must have checked the
+/// divisibility preconditions ([`check_feasible`]); this asserts them.
+pub fn step_volumes(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+) -> StepVolumes {
     let par = map.par;
     assert!(w.global_batch % par.dp == 0);
     let seqs_per_rank = w.global_batch / par.dp;
@@ -204,10 +236,7 @@ pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnob
     let n_micro = seqs_per_rank / map.microbatch_seqs;
     let mb_tokens = (map.microbatch_seqs * w.seq_len) as f64;
     let layers_per_stage = w.n_layers as f64 / par.pp as f64;
-    let up = cluster.domain(Domain::ScaleUp);
-    let out = cluster.domain(Domain::ScaleOut);
 
-    // ---- compute ----------------------------------------------------------
     let flops_per_token_layer =
         w.attn_flops_per_token_layer() + w.expert_flops_per_token_layer();
     let emb_flops = 2.0 * w.embedding_params() / par.pp as f64; // spread
@@ -215,12 +244,49 @@ pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnob
         mb_tokens * (layers_per_stage * flops_per_token_layer + emb_flops) / par.tp as f64;
     let compute_per_micro = 3.0 * fwd_flops_micro / (cluster.spec.gpu.flops * knobs.mfu);
 
+    let act_bytes = mb_tokens * w.d_model as f64 * knobs.comm_dtype_bytes;
+    let a2a_bytes = mb_tokens * w.moe.active_per_token as f64 * w.d_model as f64
+        * knobs.comm_dtype_bytes
+        / par.tp as f64;
+    let pp_bytes = mb_tokens * w.d_model as f64 * w.dtype_bytes / par.tp as f64;
+
+    let grad_bytes = 4.0; // fp32 gradient accumulation buffers
+    let shared_params_per_gpu = (w.attn_params_per_layer() + w.router_params_per_layer())
+        * layers_per_stage
+        / par.tp as f64
+        + w.embedding_params() / (par.tp * par.pp) as f64;
+    let expert_params_per_gpu = w.expert_params_per_layer() * layers_per_stage
+        / (map.ep_dp_ranks() * par.tp) as f64;
+
+    StepVolumes {
+        n_micro,
+        mb_tokens,
+        layers_per_stage,
+        compute_per_micro,
+        act_bytes,
+        a2a_bytes,
+        pp_bytes,
+        shared_grad_bytes: shared_params_per_gpu * grad_bytes,
+        expert_grad_bytes: expert_params_per_gpu * grad_bytes,
+    }
+}
+
+/// Evaluate one (workload, cluster, mapping) point.
+pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnobs) -> PerfReport {
+    let par = map.par;
+    let vols = step_volumes(w, cluster, map, knobs);
+    let n_micro = vols.n_micro;
+    let layers_per_stage = vols.layers_per_stage;
+    let compute_per_micro = vols.compute_per_micro;
+    let up = cluster.domain(Domain::ScaleUp);
+    let out = cluster.domain(Domain::ScaleOut);
+
     // ---- TP collectives ----------------------------------------------------
     // Megatron: one all-reduce after attention and one after the expert FFN
     // per direction. The expert all-reduce runs in the expert-TP subgroup
     // (size tp/m): fewer ranks => smaller (g-1)/g factor — the §VI effect
     // where finer configs relieve bandwidth pressure on the alternative.
-    let act_bytes = mb_tokens * w.d_model as f64 * knobs.comm_dtype_bytes;
+    let act_bytes = vols.act_bytes;
     let tp_ar = coll::all_reduce_time(up, par.tp, act_bytes);
     let etp_ar = coll::all_reduce_time(up, map.expert_tp(), act_bytes);
     let tp_comm_per_micro = 2.0 * (tp_ar + etp_ar) * layers_per_stage;
@@ -228,9 +294,7 @@ pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnob
     // ---- EP all-to-all -----------------------------------------------------
     // Dispatch + combine, forward and backward: 4 per layer. Per-GPU payload
     // is the TP shard of (tokens × k × token_bytes).
-    let a2a_bytes = mb_tokens * w.moe.active_per_token as f64 * w.d_model as f64
-        * knobs.comm_dtype_bytes
-        / par.tp as f64;
+    let a2a_bytes = vols.a2a_bytes;
     let span = map.ep_span_gpus();
     let (ep_one, placement) = if span <= cluster.spec.pod_size {
         let t = (span as f64 - 1.0) / span as f64 * a2a_bytes
@@ -251,26 +315,19 @@ pub fn evaluate(w: &Workload, cluster: &Cluster, map: &Mapping, knobs: &PerfKnob
     // ---- pipeline p2p ------------------------------------------------------
     // Stage boundaries sit dp×tp GPUs apart => scale-out. One activation
     // send forward + one gradient send backward per microbatch.
-    let pp_bytes = mb_tokens * w.d_model as f64 * w.dtype_bytes / par.tp as f64;
-    let pp_comm_per_micro = if par.pp > 1 { 2.0 * coll::p2p_time(out, pp_bytes) } else { 0.0 };
+    let pp_comm_per_micro =
+        if par.pp > 1 { 2.0 * coll::p2p_time(out, vols.pp_bytes) } else { 0.0 };
 
     // ---- DP gradient sync --------------------------------------------------
     // Shared (attention + router) gradients sync across all DP ranks;
     // expert gradients only across complete expert sets (§V.B).
-    let grad_bytes = 4.0; // fp32 gradient accumulation buffers
-    let shared_params_per_gpu = (w.attn_params_per_layer() + w.router_params_per_layer())
-        * layers_per_stage
-        / par.tp as f64
-        + w.embedding_params() / (par.tp * par.pp) as f64;
-    let expert_params_per_gpu = w.expert_params_per_layer() * layers_per_stage
-        / (map.ep_dp_ranks() * par.tp) as f64;
     let shared_t = coll::hierarchical_all_reduce_time(
         cluster,
         map.dp_span_gpus().min(cluster.spec.n_gpus),
-        shared_params_per_gpu * grad_bytes,
+        vols.shared_grad_bytes,
     );
     let n_sets = map.n_complete_expert_sets();
-    let expert_t = coll::all_reduce_time(out, n_sets, expert_params_per_gpu * grad_bytes);
+    let expert_t = coll::all_reduce_time(out, n_sets, vols.expert_grad_bytes);
     let dp_comm_per_step = shared_t + expert_t;
 
     let breakdown = StepBreakdown {

@@ -26,6 +26,7 @@ use crate::parallel::{enumerate_candidates, Mapping, Parallelism};
 use crate::perf::memory::MemoryBreakdown;
 use crate::perf::{check_feasible, evaluate, PerfKnobs, PerfReport};
 use crate::sweep::engine::{run_grid_with_cache, ClusterCache, ClusterKey, EvalJob};
+use crate::util::json::Json;
 use crate::util::stats::fmt_time;
 use crate::util::table::Table;
 
@@ -231,6 +232,60 @@ pub fn ranked_table(outcome: &PlanOutcome) -> Table {
     t
 }
 
+/// Machine-readable form of a plan outcome (`lumos plan --json`):
+/// mapping + timing per ranked plan, plus the search accounting
+/// (enumerated / pruned / feasible) and the paper baseline when present.
+/// Keys are sorted (BTreeMap), so serialization is deterministic and
+/// byte-identical for any worker count.
+pub fn outcome_json(outcome: &PlanOutcome) -> Json {
+    let ranked: Vec<Json> = outcome
+        .ranked
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                (
+                    "mapping",
+                    Json::obj(vec![
+                        ("tp", Json::num(p.mapping.par.tp as f64)),
+                        ("pp", Json::num(p.mapping.par.pp as f64)),
+                        ("dp", Json::num(p.mapping.par.dp as f64)),
+                        ("microbatch_seqs", Json::num(p.mapping.microbatch_seqs as f64)),
+                        (
+                            "experts_per_dp_rank",
+                            Json::num(p.mapping.moe.experts_per_dp_rank as f64),
+                        ),
+                    ]),
+                ),
+                ("step_time_s", Json::num(p.report.step_time)),
+                ("time_to_train_s", Json::num(p.report.time_to_train_s)),
+                ("comm_fraction", Json::num(p.report.comm_fraction)),
+                ("achieved_mfu", Json::num(p.report.achieved_mfu)),
+                ("hbm_utilization", Json::num(p.memory.utilization())),
+                (
+                    "ep_placement",
+                    Json::str(&format!("{:?}", p.report.breakdown.ep_placement)),
+                ),
+            ])
+        })
+        .collect();
+    let baseline = match &outcome.paper_baseline {
+        Some(b) => Json::obj(vec![
+            ("step_time_s", Json::num(b.step_time)),
+            ("time_to_train_s", Json::num(b.time_to_train_s)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("cluster", Json::str(&outcome.cluster)),
+        ("config", Json::str(&outcome.config_name)),
+        ("enumerated", Json::num(outcome.enumerated as f64)),
+        ("pruned", Json::num(outcome.pruned as f64)),
+        ("feasible", Json::num((outcome.enumerated - outcome.pruned) as f64)),
+        ("paper_baseline", baseline),
+        ("ranked", Json::Arr(ranked)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +349,24 @@ mod tests {
         // a cluster a quarter the size: the fixed mapping is not comparable
         let small = ClusterKey::custom(8_192, 512, 32_000.0).build();
         assert!(paper_baseline(&w, &small, &knobs).is_none());
+    }
+
+    #[test]
+    fn outcome_json_is_deterministic_and_complete() {
+        let r = req(ClusterKey::Passage512, 4).with_top(3);
+        let a = outcome_json(&plan(&r, 1)).to_string_pretty();
+        let b = outcome_json(&plan(&r, 4)).to_string_pretty();
+        assert_eq!(a, b, "plan --json must be byte-identical across job counts");
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(j.get("ranked").as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("feasible").as_usize().unwrap(),
+            j.get("enumerated").as_usize().unwrap() - j.get("pruned").as_usize().unwrap()
+        );
+        let top = j.get("ranked").at(0);
+        assert!(top.get("time_to_train_s").as_f64().unwrap() > 0.0);
+        assert!(top.get("mapping").get("tp").as_usize().unwrap() > 0);
+        assert!(j.get("paper_baseline").get("step_time_s").as_f64().is_some());
     }
 
     #[test]

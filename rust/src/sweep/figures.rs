@@ -9,10 +9,12 @@
 //! figures (e.g. `lumos figures --all`) builds each cluster exactly once.
 
 use crate::hw;
-use crate::model::MoeConfig;
+use crate::model::{MoeConfig, Workload};
+use crate::parallel::{Mapping, Parallelism};
 use crate::perf::{evaluate_paper_config, PerfKnobs};
 use crate::planner;
 use crate::sweep::engine::{self, ClusterCache, ClusterKey, EvalJob, PaperGrid};
+use crate::timeline;
 use crate::topology::torus::Torus;
 use crate::util::stats::fmt_time;
 use crate::util::table::{BarChart, Table};
@@ -550,6 +552,39 @@ fn gap_table_from(outs: &[planner::PlanOutcome]) -> Table {
     t
 }
 
+/// Analytical-vs-simulated step-time gap on the §VI clusters (Config 4,
+/// paper mapping): every closed-form headline number next to its
+/// discrete-event counterpart — the `lumos figures --validate` artifact.
+pub fn validate_gap_table(knobs: &PerfKnobs) -> Table {
+    validate_gap_table_cached(knobs, &ClusterCache::new())
+}
+
+/// [`validate_gap_table`] against a caller-owned cluster cache.
+pub fn validate_gap_table_cached(knobs: &PerfKnobs, cache: &ClusterCache) -> Table {
+    let w = Workload::paper_gpt_4p7t(4);
+    let map = Mapping::new(Parallelism::paper(), w.moe);
+    let mut t = Table::new(
+        "Validate: analytical vs simulated step time (Config 4, paper mapping)",
+        &["Cluster", "ana step", "sim step", "gap", "bubble", "exposed comm"],
+    );
+    for key in section6_clusters() {
+        let cluster = cache.get(&key);
+        let v = timeline::validate_mapping(&w, &cluster, &map, knobs)
+            .expect("paper mapping is simulable on the §VI clusters");
+        let p = &v.simulated.phases;
+        let comm = p.tp_comm + p.ep_comm + p.pp_comm + p.dp_comm;
+        t.row(&[
+            v.analytical.cluster.clone(),
+            fmt_time(v.analytical.step_time),
+            fmt_time(v.simulated.step_time),
+            format!("{:+.1}%", 100.0 * v.gap()),
+            format!("{:.0}%", 100.0 * p.bubble / v.simulated.step_time),
+            format!("{:.0}%", 100.0 * comm / v.simulated.step_time),
+        ]);
+    }
+    t
+}
+
 /// Topology ablation: SLS vs torus for uniform all-to-all (why §II.B picks
 /// SLS for expert parallelism).
 pub fn topology_ablation() -> Table {
@@ -645,6 +680,7 @@ pub fn render_all_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -
         granularity_sweep_cached(knobs, jobs, cache),
         planner_best,
         planner_gap,
+        validate_gap_table_cached(knobs, cache),
         topology_ablation(),
         routing_restriction_ablation(),
     ] {
@@ -736,6 +772,17 @@ mod tests {
         let r = planner_gap_table(&PerfKnobs::default()).render();
         assert!(r.contains("Passage-512 vs Electrical-144"), "{r}");
         assert!(r.contains("speedup"), "{r}");
+    }
+
+    #[test]
+    fn validate_gap_table_covers_all_section6_clusters() {
+        let r = validate_gap_table(&PerfKnobs::default()).render();
+        for needle in ["Passage-512", "Electrical-512", "Electrical-144"] {
+            assert!(r.contains(needle), "missing {needle}: {r}");
+        }
+        // gaps are rendered as signed percentages
+        assert!(r.contains('%'), "{r}");
+        assert_eq!(r.lines().count(), 3 + 3); // title + header + sep + 3 rows
     }
 
     #[test]

@@ -12,13 +12,14 @@
 //!   returns results in job order, so rendered output is byte-identical
 //!   for any worker count.
 //! - [`figures`] (re-exported here) — the paper's Tables I–IV, Figures
-//!   7/8/10/11, the §VI breakdown, the ablation sweeps, and the
+//!   7/8/10/11, the §VI breakdown, the ablation sweeps, the
 //!   [`crate::planner`] artifacts (best-mapping-per-cluster,
-//!   planner-vs-paper-mapping gap), each built on the engine. `*_par`
-//!   variants take an explicit worker count; the plain names are the serial
-//!   (`jobs = 1`) paths; `*_cached` variants additionally share a
-//!   caller-owned [`engine::ClusterCache`] so one command builds each
-//!   cluster exactly once across all of its grids.
+//!   planner-vs-paper-mapping gap), and the [`crate::timeline`]
+//!   analytical-vs-simulated gap table (`figures --validate`), each built
+//!   on the engine. `*_par` variants take an explicit worker count; the
+//!   plain names are the serial (`jobs = 1`) paths; `*_cached` variants
+//!   additionally share a caller-owned [`engine::ClusterCache`] so one
+//!   command builds each cluster exactly once across all of its grids.
 //!
 //! The CLI exposes the pool through `lumos sweep --jobs N` (and
 //! `lumos figures --jobs N`); `lumos sweep --kind grid` sweeps custom

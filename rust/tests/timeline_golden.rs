@@ -1,0 +1,110 @@
+//! Goldens for the `timeline` discrete-event step simulator (ISSUE 3
+//! acceptance): the analytical-vs-simulated gap stays within a pinned
+//! tolerance on the paper's configurations, the per-phase breakdown
+//! partitions the simulated step exactly, and the cross-check preserves
+//! the paper's cluster ranking.
+
+use lumos::model::MoeConfig;
+use lumos::model::Workload;
+use lumos::parallel::{Mapping, Parallelism};
+use lumos::perf::PerfKnobs;
+use lumos::timeline::{simulate_step, validate_mapping, Validation};
+use lumos::topology::cluster::Cluster;
+
+fn validate(cluster: &Cluster, cfg: usize) -> Validation {
+    let w = Workload::paper_gpt_4p7t(cfg);
+    let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(cfg));
+    validate_mapping(&w, cluster, &m, &PerfKnobs::default()).unwrap()
+}
+
+#[test]
+fn passage512_paper_mapping_gap_within_15_percent() {
+    // Acceptance: `lumos validate` on Passage-512 reports an
+    // analytical-vs-simulated step gap ≤ 15% for the paper mapping.
+    // (Measured ≈ +6.4%: the DAG exposes the 25% EP-overlap credit and the
+    // 90% DP-overlap credit the closed form grants; everything else lines
+    // up within a percent.)
+    let v = validate(&Cluster::passage_512(32_768), 4);
+    let gap = v.gap();
+    assert!(gap.abs() <= 0.15, "gap {gap}");
+    // The simulator grants no overlap for free, so it must be the slower
+    // (conservative) side of the comparison.
+    assert!(gap > 0.0, "gap {gap}");
+}
+
+#[test]
+fn all_paper_configs_stay_within_tolerance_on_passage() {
+    let cluster = Cluster::passage_512(32_768);
+    for cfg in 1..=4 {
+        let v = validate(&cluster, cfg);
+        let gap = v.gap();
+        assert!(gap > 0.0 && gap <= 0.15, "config {cfg}: gap {gap}");
+    }
+}
+
+#[test]
+fn phase_breakdown_partitions_the_simulated_step() {
+    // Acceptance: the per-phase breakdown sums to the simulated total.
+    for cluster in [Cluster::passage_512(32_768), Cluster::electrical_144(32_256)] {
+        let v = validate(&cluster, 4);
+        let total = v.simulated.phases.total();
+        let rel = (total - v.simulated.step_time).abs() / v.simulated.step_time;
+        assert!(rel <= 1e-9, "{}: {} vs {}", cluster.spec.name, total, v.simulated.step_time);
+    }
+}
+
+#[test]
+fn simulation_preserves_the_section6_cluster_ranking() {
+    // The whole point of the cross-check: the simulated step times must
+    // tell the same story as the analytical ones — Passage fastest, the
+    // same-radix electrical slower, the 144-pod alternative slowest.
+    let p = validate(&Cluster::passage_512(32_768), 4);
+    let e512 = validate(&Cluster::electrical_512(32_768), 4);
+    let e144 = validate(&Cluster::electrical_144(32_256), 4);
+    assert!(p.simulated.step_time < e512.simulated.step_time);
+    assert!(e512.simulated.step_time < e144.simulated.step_time);
+    // and the simulated headline speedup stays in the paper's ballpark
+    let speedup = e144.simulated.time_to_train_s / p.simulated.time_to_train_s;
+    assert!(speedup > 2.3, "simulated speedup {speedup}");
+}
+
+#[test]
+fn electrical144_gap_exposes_the_ep_overlap_credit() {
+    // On the 144-pod alternative the EP all-to-all dominates the step, so
+    // the closed form's 25% EP-overlap assumption is load-bearing there:
+    // the simulator (which hides nothing) runs measurably slower. This is
+    // a *finding*, pinned here: the gap is real but bounded.
+    let v = validate(&Cluster::electrical_144(32_256), 4);
+    let gap = v.gap();
+    assert!(gap > 0.05 && gap < 0.35, "gap {gap}");
+    // EP is the biggest exposed communication phase there
+    let p = &v.simulated.phases;
+    assert!(p.ep_comm > p.tp_comm && p.ep_comm > p.dp_comm, "{p:?}");
+}
+
+#[test]
+fn dp_overlap_emerges_from_the_dag() {
+    // The analytical model exposes only (1-dp_overlap) = 10% of the DP
+    // sync; the DAG exposes what the dependency structure forces: stage
+    // 0's sync cannot start before the last backward, so its full duration
+    // is exposed — and it should be close to the analytical dp_comm.
+    let v = validate(&Cluster::passage_512(32_768), 4);
+    let sim_dp = v.simulated.phases.dp_comm;
+    let ana_dp = v.analytical.breakdown.dp_comm_per_step;
+    assert!((sim_dp - ana_dp).abs() / ana_dp < 0.05, "sim {sim_dp} vs ana {ana_dp}");
+}
+
+#[test]
+fn microbatch_grain_shifts_bubble_in_the_simulator_too() {
+    // Coarser microbatches => fewer slots => bigger bubble fraction, in
+    // the simulator just as in the closed form.
+    let w = Workload::paper_gpt_4p7t(1);
+    let cluster = Cluster::passage_512(32_768);
+    let knobs = PerfKnobs::default();
+    let m1 = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(1));
+    let m4 = m1.clone().with_microbatch(4);
+    let r1 = simulate_step(&w, &cluster, &m1, &knobs).unwrap();
+    let r4 = simulate_step(&w, &cluster, &m4, &knobs).unwrap();
+    let frac = |r: &lumos::timeline::TimelineReport| r.phases.bubble / r.step_time;
+    assert!(frac(&r4) > frac(&r1), "{} vs {}", frac(&r4), frac(&r1));
+}
