@@ -121,6 +121,30 @@ fn main() {
         bulk / dep
     );
 
+    // degraded-fabric replay (resilience fail-in-place): the same
+    // collective on a healthy fabric vs one with a single GPU's uplinks at
+    // half capacity (~1% of the 128-GPU fabric) — pins the cost of
+    // degraded re-simulation and prints the simulated slowdown the
+    // max-min barrier structure produces.
+    let n = 128;
+    let healthy = Network::sls(n, 32_000.0, 200e-9);
+    let mut degraded = healthy.clone();
+    degraded.scale_node_links(0, 0.5, 1.0);
+    let sched = coll::ring_all_reduce_schedule(n, 256e6);
+    let nflows = sched.ops.len() as f64;
+    b.bench_items("replay ring-allreduce n=128 (healthy)", nflows, "flow", || {
+        black_box(replay_schedule(&healthy, &sched));
+    });
+    b.bench_items("replay ring-allreduce n=128 (1 GPU degraded)", nflows, "flow", || {
+        black_box(replay_schedule(&degraded, &sched));
+    });
+    let h = replay_schedule(&healthy, &sched).makespan;
+    let d = replay_schedule(&degraded, &sched).makespan;
+    println!(
+        "  simulated makespan: healthy {h:.6}s vs degraded {d:.6}s ({:.2}x slowdown)",
+        d / h
+    );
+
     // staggered completions: one event per flow, the O(events × links)
     // pathology the incremental engine removes
     for n in [32usize, 64] {

@@ -85,6 +85,19 @@ impl LinkReliability {
         }
     }
 
+    /// Copper scale-up cabling (the electrical alternative's in-pod links):
+    /// no optics at all — SerDes plus connectors only. The SerDes sits on
+    /// the tray; cable/connector reseats are field service.
+    pub fn copper() -> Self {
+        LinkReliability {
+            name: "copper scale-up",
+            lasers_per_link: 0.0,
+            laser_location: Replaceable::FieldUnit, // vacuous: no lasers
+            connectors_per_link: 2.0,
+            fits: FitRates { pic: 0.0, ..FitRates::default() },
+        }
+    }
+
     /// Total link FIT.
     pub fn link_fit(&self) -> f64 {
         self.lasers_per_link * self.fits.laser
@@ -100,6 +113,13 @@ impl LinkReliability {
             fit += self.lasers_per_link * self.fits.laser;
         }
         fit
+    }
+
+    /// FIT attributable to field-replaceable components (swap a module or
+    /// reseat a connector without touching the tray): the complement of
+    /// [`LinkReliability::tray_impact_fit`].
+    pub fn field_impact_fit(&self) -> f64 {
+        self.link_fit() - self.tray_impact_fit()
     }
 
     /// Expected GPU-tray-impacting failures per year for a pod.
@@ -174,6 +194,24 @@ mod tests {
         let psg = LinkReliability::passage_external_laser(4.0);
         assert!(psg.tray_failures_per_year(links) < per_year / 10.0);
         assert!(l.pod_mtbf_hours(links) < 100.0);
+    }
+
+    #[test]
+    fn copper_has_no_optics_and_minimal_tray_impact() {
+        let cu = LinkReliability::copper();
+        assert_eq!(cu.lasers_per_link, 0.0);
+        assert!((cu.link_fit() - 110.0).abs() < 1e-9);
+        assert!((cu.tray_impact_fit() - 10.0).abs() < 1e-9);
+        // field + tray partition the link FIT exactly
+        for l in [
+            LinkReliability::copper(),
+            LinkReliability::passage_external_laser(4.0),
+            LinkReliability::cpo_integrated_laser(4.0),
+        ] {
+            assert!((l.field_impact_fit() + l.tray_impact_fit() - l.link_fit()).abs() < 1e-9);
+        }
+        // copper fails an order of magnitude less often than any optics
+        assert!(cu.link_fit() * 10.0 < LinkReliability::passage_external_laser(4.0).link_fit());
     }
 
     #[test]

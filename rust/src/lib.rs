@@ -25,9 +25,13 @@
 //!   moment their predecessors finish; [`timeline`], the discrete-event
 //!   training-step simulator that lowers a (workload, mapping, cluster)
 //!   triple to a task DAG and cross-checks the analytical step time
-//!   (`lumos validate`); and the [`coordinator`] miniature
-//!   distributed-training runtime with real rust collectives, plus
-//!   [`trainer`] driving real AOT-compiled MoE training steps through
+//!   (`lumos validate`); [`resilience`], which converts the
+//!   [`hw::reliability`] FIT composition into availability-adjusted
+//!   effective time-to-train — seeded failure traces, fail-in-place
+//!   degraded fabrics re-priced by both models, Young/Daly
+//!   checkpoint-restart (`lumos resilience`); and the [`coordinator`]
+//!   miniature distributed-training runtime with real rust collectives,
+//!   plus [`trainer`] driving real AOT-compiled MoE training steps through
 //!   [`runtime`] (PJRT).
 //! - **Substrate**: [`util`] (JSON, RNG, property testing, CLI, stats,
 //!   tables, bench harness — the vendored crate set is minimal: the only
@@ -42,6 +46,7 @@ pub mod netsim;
 pub mod parallel;
 pub mod perf;
 pub mod planner;
+pub mod resilience;
 pub mod runtime;
 pub mod sweep;
 pub mod timeline;

@@ -11,6 +11,10 @@
 //! - `validate` discrete-event simulation of a full training step vs the
 //!   analytical model (`--plan-top K` cross-checks the planner's best
 //!   mappings; `--json` for machine-readable output)
+//! - `resilience` failure-aware effective time-to-train: FIT rates →
+//!   failure traces → degraded fabrics → availability-adjusted goodput
+//!   (`--seed`/`--trials` seeded Monte Carlo, byte-identical for any
+//!   `--jobs`)
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
@@ -46,6 +50,7 @@ fn cli() -> Command {
                 .flag("ablations", "extra ablation tables")
                 .flag("planner", "planner artifacts (best mapping per cluster, gap ablation)")
                 .flag("validate", "analytical-vs-simulated step gap table (timeline)")
+                .flag("resilience", "availability-adjusted TTT + laser-serviceability tables")
                 .opt_default("jobs", "worker threads for the evaluation grids", "1"),
         )
         .sub(
@@ -84,6 +89,8 @@ fn cli() -> Command {
                 .opt_default("jobs", "worker threads for the scoring grid", "1")
                 .opt("knobs", "JSON file with calibration knob overrides")
                 .opt("csv", "also write the ranked plan to this CSV file")
+                .opt("rerank-sim", "re-rank the top K plans on simulated step time")
+                .flag("availability", "rank on failure-adjusted effective TTT (resilience)")
                 .flag("json", "machine-readable output (util::json, deterministic)"),
         )
         .sub(
@@ -102,6 +109,29 @@ fn cli() -> Command {
             .opt_default("plan-top", "also validate the planner's top K mappings", "0")
             .opt_default("jobs", "worker threads for the planner scoring grid", "1")
             .opt("knobs", "JSON file with calibration knob overrides")
+            .opt("csv", "also write the validation table to this CSV file")
+            .flag("json", "machine-readable output (util::json, deterministic)"),
+        )
+        .sub(
+            Command::new(
+                "resilience",
+                "failure-aware effective time-to-train (FIT rates -> goodput)",
+            )
+            .opt(
+                "cluster",
+                "passage-512 | electrical-512 | electrical-144 (default: the paired \
+                 Passage-vs-Electrical-144 headline comparison)",
+            )
+            .opt("gpus", "custom cluster: total GPUs (with --pod-size and --gbps)")
+            .opt("pod-size", "custom cluster: GPUs per scale-up pod")
+            .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
+            .opt("config", "MoE config index 1..4 (default: all four)")
+            .opt("tech", "passage | cpo | electrical | pluggable (default: by cluster)")
+            .opt_default("seed", "Monte Carlo seed", "7")
+            .opt_default("trials", "Monte Carlo trials (0 = closed form only)", "128")
+            .opt_default("jobs", "worker threads for the trial pool", "1")
+            .opt("knobs", "JSON file with calibration knob overrides")
+            .opt("csv", "also write the result table to this CSV file")
             .flag("json", "machine-readable output (util::json, deterministic)"),
         )
         .sub(
@@ -144,6 +174,7 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
         Some("sweep") => sweep_cmd(args),
         Some("plan") => plan_cmd(args),
         Some("validate") => validate_cmd(args),
+        Some("resilience") => resilience_cmd(args),
         Some("netsim") => netsim_cmd(),
         Some("hw") => {
             let (t7, _) = sweep::fig7();
@@ -171,7 +202,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
     let cache = ClusterCache::new();
     let all = args.flag("all")
         || !["table1", "table2", "table3", "table4", "fig7", "fig8", "fig10", "fig11",
-             "breakdown", "ablations", "planner", "validate"]
+             "breakdown", "ablations", "planner", "validate", "resilience"]
             .iter()
             .any(|f| args.flag(f));
     if all {
@@ -227,6 +258,11 @@ fn figures(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("validate") {
         println!("{}", sweep::validate_gap_table_cached(&knobs, &cache).render());
+    }
+    if args.flag("resilience") {
+        let (speedup, service) = sweep::resilience_tables_cached(&knobs, &cache);
+        println!("{}", speedup.render());
+        println!("{}", service.render());
     }
     Ok(())
 }
@@ -336,7 +372,7 @@ fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
     write_csv(args, &table)
 }
 
-/// Shared knob-file parsing for `plan` and `validate`.
+/// Shared knob-file parsing for `plan`, `validate` and `resilience`.
 fn knobs_from_args(args: &Args) -> anyhow::Result<PerfKnobs> {
     Ok(match args.get("knobs") {
         Some(path) => config::knobs_from_json(
@@ -386,11 +422,17 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
     let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(10);
     let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let rerank = args.get_usize("rerank-sim").map_err(anyhow::Error::msg)?.unwrap_or(0);
     let knobs = knobs_from_args(args)?;
     let key = cluster_key_from_args(args)?;
 
-    let req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(top);
-    let outcome = planner::plan(&req, jobs);
+    let cache = ClusterCache::new();
+    let cluster = cache.get(&key);
+    let mut req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(top);
+    if args.flag("availability") {
+        req = req.with_availability(planner::AvailabilityObjective::default_for(&cluster));
+    }
+    let outcome = planner::plan_with_cache(&req, jobs, &cache);
     anyhow::ensure!(
         !outcome.ranked.is_empty(),
         "no feasible mapping for this (workload, cluster) pair \
@@ -398,6 +440,9 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         outcome.enumerated
     );
     if args.flag("json") {
+        if rerank > 0 {
+            eprintln!("--rerank-sim is table-mode only; ignored with --json");
+        }
         println!("{}", planner::outcome_json(&outcome).to_string_pretty());
         return write_csv(args, &planner::ranked_table(&outcome));
     }
@@ -410,6 +455,18 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     }
     let table = planner::ranked_table(&outcome);
     println!("{}", table.render());
+    if rerank > 0 {
+        if req.availability.is_some() {
+            // stderr keeps stdout byte-identical across job counts
+            eprintln!(
+                "note: --rerank-sim orders on *simulated healthy* TTT; the \
+                 availability adjustment applies to the analytical ranking only"
+            );
+        }
+        let (scored, skipped) =
+            planner::rerank_simulated(&outcome, rerank, &req.workload, &cluster, &knobs);
+        println!("{}", planner::rerank_table(&scored, skipped).render());
+    }
     write_csv(args, &table)
 }
 
@@ -465,6 +522,7 @@ fn validate_cmd(args: &Args) -> anyhow::Result<()> {
          use --plan-top K to validate planner-found mappings"
     );
     let config_name = rows[0].analytical.config_name.clone();
+    let table = timeline::validation_table(&cluster.spec.name, &config_name, &rows);
     if args.flag("json") {
         println!(
             "{}",
@@ -472,12 +530,78 @@ fn validate_cmd(args: &Args) -> anyhow::Result<()> {
                 .to_string_pretty()
         );
     } else {
-        println!(
-            "{}",
-            timeline::validation_table(&cluster.spec.name, &config_name, &rows).render()
-        );
+        println!("{}", table.render());
     }
-    Ok(())
+    write_csv(args, &table)
+}
+
+fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
+    use lumos::model::Workload;
+    use lumos::resilience::{self, FabricReliability, ResilienceSpec};
+
+    let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(7) as u64;
+    let trials = args.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap_or(128);
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let knobs = knobs_from_args(args)?;
+    let spec = ResilienceSpec { seed, trials, ..ResilienceSpec::default() };
+    let cache = ClusterCache::new();
+    let configs: Vec<usize> = match args.get_usize("config").map_err(anyhow::Error::msg)? {
+        Some(c) => {
+            anyhow::ensure!((1..=4).contains(&c), "--config must be 1..4, got {c}");
+            vec![c]
+        }
+        None => vec![1, 2, 3, 4],
+    };
+
+    let custom = [args.get("gpus"), args.get("pod-size"), args.get("gbps")];
+    if args.get("cluster").is_none() && custom.iter().all(Option::is_none) {
+        // The headline comparison: Passage (external-laser optics) vs the
+        // 144-pod electrical alternative, availability-adjusted.
+        anyhow::ensure!(
+            args.get("tech").is_none(),
+            "--tech needs --cluster (the default run fixes the techs per fabric)"
+        );
+        let rows = resilience::paper_pairs(&configs, &knobs, &spec, jobs, &cache);
+        let table = resilience::speedup_table(&rows);
+        if args.flag("json") {
+            println!("{}", resilience::paired_json(&rows, seed, trials).to_string_pretty());
+            return write_csv(args, &table);
+        }
+        println!("{}", table.render());
+        let pods = resilience::pod_serviceability(&knobs, &spec, jobs, &cache);
+        println!("{}", resilience::serviceability_table(&pods).render());
+        return write_csv(args, &table);
+    }
+
+    let key = cluster_key_from_args(args)?;
+    let cluster = cache.get(&key);
+    let fabric = match args.get("tech") {
+        Some(name) => FabricReliability::from_cli_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown tech '{name}' (have passage, cpo, electrical, pluggable)")
+        })?,
+        None => FabricReliability::default_for(&cluster),
+    };
+    let mut rows = Vec::new();
+    for &cfg in &configs {
+        let w = Workload::paper_gpt_4p7t(cfg);
+        let map = resilience::default_mapping(&w, &cluster).map_err(anyhow::Error::msg)?;
+        // seed derived from the config index, not the list position, so
+        // --config 3 draws the same trials as config 3 of an all-config run
+        let s = ResilienceSpec { seed: seed.wrapping_add(cfg as u64), ..spec.clone() };
+        rows.push(resilience::assess(&w, &cluster, &map, &knobs, &fabric, &s, jobs));
+    }
+    let table = resilience::assessment_table(&rows);
+    if args.flag("json") {
+        let json = Json::obj(vec![
+            ("seed", Json::num(seed as f64)),
+            ("trials", Json::num(trials as f64)),
+            ("rows", Json::Arr(rows.iter().map(resilience::assessment_json).collect())),
+        ]);
+        println!("{}", json.to_string_pretty());
+        return write_csv(args, &table);
+    }
+    println!("{}", table.render());
+    write_csv(args, &table)
 }
 
 fn netsim_cmd() -> anyhow::Result<()> {

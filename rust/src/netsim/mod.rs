@@ -223,6 +223,23 @@ impl Network {
     pub fn flow(&self, src: usize, dst: usize, bytes: f64) -> Flow {
         Flow { src, dst, bytes, path: self.path(src, dst) }
     }
+
+    /// Fail-in-place degradation of one GPU's injection capacity: scale its
+    /// scale-up up/down links by `up_factor` and (when the network has
+    /// per-GPU NICs, [`Network::two_level`]) its NIC links by `nic_factor`.
+    /// A failed lane out of `k` parallel lanes is `factor = 1 - 1/k`; a dead
+    /// link is `0.0`. The [`crate::resilience`] degraded re-simulation and
+    /// the degraded-fabric bench series build on this.
+    pub fn scale_node_links(&mut self, node: usize, up_factor: f64, nic_factor: f64) {
+        assert!(node < self.n_nodes, "node {node} out of range");
+        assert!(up_factor >= 0.0 && nic_factor >= 0.0, "negative capacity factor");
+        self.links[self.up[node]].capacity *= up_factor;
+        self.links[self.down[node]].capacity *= up_factor;
+        if !self.nic_up.is_empty() {
+            self.links[self.nic_up[node]].capacity *= nic_factor;
+            self.links[self.nic_down[node]].capacity *= nic_factor;
+        }
+    }
 }
 
 /// Result of simulating a batch of flows.
@@ -654,6 +671,22 @@ mod tests {
         let net = Network::sls(4, 800.0, 0.0); // 100 GB/s
         let r = simulate(&net, &[net.flow(0, 1, 1e9)]);
         assert!((r.makespan - 0.01).abs() < 1e-9, "{}", r.makespan);
+    }
+
+    #[test]
+    fn degraded_node_slows_only_flows_through_it() {
+        let mut net = Network::sls(4, 800.0, 0.0);
+        net.scale_node_links(0, 0.5, 1.0); // node 0 loses half its lanes
+        let r = simulate(&net, &[net.flow(0, 1, 1e9), net.flow(2, 3, 1e9)]);
+        assert!((r.flow_times[0] - 0.02).abs() < 1e-9, "{}", r.flow_times[0]);
+        assert!((r.flow_times[1] - 0.01).abs() < 1e-9, "{}", r.flow_times[1]);
+        // NIC factor is a no-op on single-level networks; on two-level it
+        // scales the NIC pair.
+        let mut two = Network::two_level(16, 8, 800.0, 100.0, 0.0);
+        two.scale_node_links(0, 1.0, 0.5);
+        let slow = simulate(&two, &[two.flow(0, 12, 1e8)]);
+        let fast = simulate(&two, &[two.flow(1, 12, 1e8)]);
+        assert!(slow.makespan > 1.9 * fast.makespan, "{} vs {}", slow.makespan, fast.makespan);
     }
 
     #[test]

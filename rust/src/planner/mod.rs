@@ -25,10 +25,34 @@ use crate::model::Workload;
 use crate::parallel::{enumerate_candidates, Mapping, Parallelism};
 use crate::perf::memory::MemoryBreakdown;
 use crate::perf::{check_feasible, evaluate, PerfKnobs, PerfReport};
+use crate::resilience::{self, FabricReliability, GoodputInputs, RepairModel};
 use crate::sweep::engine::{run_grid_with_cache, ClusterCache, ClusterKey, EvalJob};
+use crate::timeline::{self, TimelineReport};
+use crate::topology::cluster::Cluster;
 use crate::util::json::Json;
 use crate::util::stats::fmt_time;
 use crate::util::table::Table;
+
+/// Optional availability-adjusted objective (`lumos plan --availability`):
+/// rank on the [`crate::resilience`] effective time-to-train instead of
+/// the healthy one, so mappings that expose large scale-out communication
+/// (the PP=1/DP-heavy winners whose giant gradient syncs a degraded NIC
+/// inflates) pay for their failure blast radius.
+#[derive(Debug, Clone)]
+pub struct AvailabilityObjective {
+    pub fabric: FabricReliability,
+    pub repair: RepairModel,
+}
+
+impl AvailabilityObjective {
+    /// The fabric the cluster preset implies, with default repair times.
+    pub fn default_for(cluster: &Cluster) -> AvailabilityObjective {
+        AvailabilityObjective {
+            fabric: FabricReliability::default_for(cluster),
+            repair: RepairModel::default(),
+        }
+    }
+}
 
 /// One planning problem: map `workload` onto `cluster`.
 #[derive(Debug, Clone)]
@@ -38,6 +62,8 @@ pub struct PlanRequest {
     pub knobs: PerfKnobs,
     /// Keep at most this many ranked plans (0 = all feasible points).
     pub top: usize,
+    /// Rank on availability-adjusted effective TTT when set.
+    pub availability: Option<AvailabilityObjective>,
 }
 
 impl PlanRequest {
@@ -48,12 +74,19 @@ impl PlanRequest {
             cluster,
             knobs: knobs.clone(),
             top: 0,
+            availability: None,
         }
     }
 
     /// Limit the ranked result to the best `top` plans.
     pub fn with_top(mut self, top: usize) -> Self {
         self.top = top;
+        self
+    }
+
+    /// Rank on the availability-adjusted objective.
+    pub fn with_availability(mut self, objective: AvailabilityObjective) -> Self {
+        self.availability = Some(objective);
         self
     }
 }
@@ -64,6 +97,16 @@ pub struct RankedPlan {
     pub mapping: Mapping,
     pub memory: MemoryBreakdown,
     pub report: PerfReport,
+    /// Availability-adjusted effective TTT (populated when the request
+    /// carries an [`AvailabilityObjective`]; the ranking key then).
+    pub adjusted_ttt: Option<f64>,
+}
+
+impl RankedPlan {
+    /// The value this plan was ranked on.
+    pub fn objective_ttt(&self) -> f64 {
+        self.adjusted_ttt.unwrap_or(self.report.time_to_train_s)
+    }
 }
 
 /// The planner's answer: ranked feasible plans plus search accounting.
@@ -91,22 +134,56 @@ impl PlanOutcome {
     }
 }
 
-/// Deterministic ranking: time-to-train under `total_cmp`, ties broken on
-/// the mapping tuple so the order never depends on evaluation order.
+/// Deterministic ranking: the objective (healthy TTT, or the
+/// availability-adjusted TTT when requested) under `total_cmp`, ties
+/// broken on the mapping tuple so the order never depends on evaluation
+/// order.
 fn rank_order(a: &RankedPlan, b: &RankedPlan) -> Ordering {
-    let key = |p: &RankedPlan| {
-        (
-            p.mapping.par.tp,
-            p.mapping.par.pp,
-            p.mapping.par.dp,
-            p.mapping.microbatch_seqs,
-            p.mapping.moe.experts_per_dp_rank,
-        )
+    a.objective_ttt()
+        .total_cmp(&b.objective_ttt())
+        .then_with(|| mapping_key(&a.mapping).cmp(&mapping_key(&b.mapping)))
+}
+
+/// Deterministic tie-break tuple for a mapping.
+fn mapping_key(m: &Mapping) -> (usize, usize, usize, usize, usize) {
+    (m.par.tp, m.par.pp, m.par.dp, m.microbatch_seqs, m.moe.experts_per_dp_rank)
+}
+
+/// Compose already-evaluated degraded step times into the closed-form
+/// availability-adjusted effective TTT (see
+/// [`crate::resilience::goodput`]).
+fn adjusted_ttt_from_steps(
+    steps: &resilience::DegradedSteps,
+    dp: usize,
+    n_gpus: usize,
+    objective: &AvailabilityObjective,
+) -> f64 {
+    let inputs = GoodputInputs {
+        healthy_step: steps.healthy_step,
+        degraded_up_step: steps.degraded_up_step,
+        degraded_out_step: steps.degraded_out_step,
+        healthy_ttt: steps.healthy_ttt,
+        dp,
+        lam_up_field_h: objective.fabric.field_rate_up_per_hour(n_gpus),
+        lam_out_field_h: objective.fabric.field_rate_out_per_hour(n_gpus),
+        lam_tray_h: objective.fabric.tray_rate_per_hour(n_gpus),
+        repair: objective.repair.clone(),
     };
-    a.report
-        .time_to_train_s
-        .total_cmp(&b.report.time_to_train_s)
-        .then_with(|| key(a).cmp(&key(b)))
+    resilience::expected(&inputs).effective_ttt
+}
+
+/// The closed-form availability-adjusted effective TTT of one mapping
+/// under `objective` (the one-off form; [`plan_with_cache`] hoists the
+/// degraded clusters and reuses its healthy reports instead).
+pub fn availability_adjusted_ttt(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    objective: &AvailabilityObjective,
+) -> f64 {
+    let steps = resilience::analytical_degraded_steps(w, cluster, map, knobs, &objective.fabric);
+    adjusted_ttt_from_steps(&steps, map.par.dp, cluster.spec.n_gpus, objective)
 }
 
 /// The paper's fixed mapping evaluated on `cluster` as a comparison
@@ -163,10 +240,44 @@ pub fn plan_with_cache(req: &PlanRequest, jobs: usize, cache: &ClusterCache) -> 
         .collect();
     let reports = run_grid_with_cache(&grid, jobs, cache);
 
+    // Availability objective: the degraded clusters depend only on
+    // (cluster, fabric), so build them once and score the two degraded
+    // evaluations per candidate on the same worker pool as the healthy
+    // grid, reusing the healthy report already in hand.
+    let adjusted: Option<Vec<f64>> = req.availability.as_ref().map(|obj| {
+        use crate::resilience::{degraded_cluster, DegradedMode, DegradedSteps};
+        let up = degraded_cluster(
+            &cluster,
+            DegradedMode::ScaleUpLink,
+            1.0 / obj.fabric.scale_up_links_per_gpu as f64,
+        );
+        let out = degraded_cluster(
+            &cluster,
+            DegradedMode::ScaleOutLink,
+            1.0 / obj.fabric.scale_out_links_per_gpu as f64,
+        );
+        crate::sweep::engine::run_indexed(feasible.len(), jobs, |i| {
+            let (m, _) = &feasible[i];
+            let steps = DegradedSteps {
+                healthy_step: reports[i].step_time,
+                healthy_ttt: reports[i].time_to_train_s,
+                degraded_up_step: evaluate(&req.workload, &up, m, &req.knobs).step_time,
+                degraded_out_step: evaluate(&req.workload, &out, m, &req.knobs).step_time,
+            };
+            adjusted_ttt_from_steps(&steps, m.par.dp, cluster.spec.n_gpus, obj)
+        })
+    });
+
     let mut ranked: Vec<RankedPlan> = feasible
         .into_iter()
         .zip(reports)
-        .map(|((mapping, memory), report)| RankedPlan { mapping, memory, report })
+        .enumerate()
+        .map(|(i, ((mapping, memory), report))| RankedPlan {
+            mapping,
+            memory,
+            report,
+            adjusted_ttt: adjusted.as_ref().map(|a| a[i]),
+        })
         .collect();
     ranked.sort_by(rank_order);
     if req.top > 0 {
@@ -207,12 +318,16 @@ pub fn ranked_table(outcome: &PlanOutcome) -> Table {
     );
     let header = [
         "#", "TP", "PP", "DP", "micro", "exp/rank", "EP domain", "HBM", "step", "TTT",
-        "vs paper map",
+        "eff TTT", "vs paper map",
     ];
     let mut t = Table::new(&title, &header);
     for (i, p) in outcome.ranked.iter().enumerate() {
         let vs_paper = match &outcome.paper_baseline {
             Some(b) => format!("{:.2}x", b.time_to_train_s / p.report.time_to_train_s),
+            None => "—".to_string(),
+        };
+        let eff = match p.adjusted_ttt {
+            Some(t) => resilience::fmt_ttt(t),
             None => "—".to_string(),
         };
         t.row(&[
@@ -226,7 +341,85 @@ pub fn ranked_table(outcome: &PlanOutcome) -> Table {
             format!("{:.0}%", 100.0 * p.memory.utilization()),
             fmt_time(p.report.step_time),
             fmt_time(p.report.time_to_train_s),
+            eff,
             vs_paper,
+        ]);
+    }
+    t
+}
+
+/// One plan re-scored on the discrete-event simulator.
+#[derive(Debug, Clone)]
+pub struct SimScored {
+    /// 1-based rank in the analytical ordering.
+    pub ana_rank: usize,
+    pub plan: RankedPlan,
+    pub sim: TimelineReport,
+}
+
+impl SimScored {
+    /// Relative step-time gap: (simulated − analytical) / analytical.
+    pub fn gap(&self) -> f64 {
+        (self.sim.step_time - self.plan.report.step_time) / self.plan.report.step_time
+    }
+}
+
+/// Re-rank the top `k` ranked plans on *simulated* step time (`lumos plan
+/// --rerank-sim K`): the analytical winners lean on the closed form's
+/// overlap credits (EXPERIMENTS.md §Validate measures +60…120% for the
+/// PP=1/DP-heavy mappings), so the simulator gets the final word.
+/// Deterministic: plans simulate serially in analytical-rank order and
+/// sort on simulated TTT under `total_cmp` with the mapping tuple as
+/// tie-break. Mappings the DAG-size guard rejects are skipped (second
+/// return value).
+pub fn rerank_simulated(
+    outcome: &PlanOutcome,
+    k: usize,
+    workload: &Workload,
+    cluster: &Cluster,
+    knobs: &PerfKnobs,
+) -> (Vec<SimScored>, usize) {
+    let mut scored = Vec::new();
+    let mut skipped = 0usize;
+    for (i, p) in outcome.ranked.iter().take(k).enumerate() {
+        match timeline::simulate_step(workload, cluster, &p.mapping, knobs) {
+            Ok(sim) => scored.push(SimScored { ana_rank: i + 1, plan: p.clone(), sim }),
+            Err(_) => skipped += 1,
+        }
+    }
+    scored.sort_by(|a, b| {
+        a.sim
+            .time_to_train_s
+            .total_cmp(&b.sim.time_to_train_s)
+            .then_with(|| mapping_key(&a.plan.mapping).cmp(&mapping_key(&b.plan.mapping)))
+    });
+    (scored, skipped)
+}
+
+/// Render a simulated re-rank (companion table to [`ranked_table`]).
+pub fn rerank_table(scored: &[SimScored], skipped: usize) -> Table {
+    let mut title = format!("Plan re-rank: top {} by simulated step time", scored.len() + skipped);
+    if skipped > 0 {
+        title.push_str(&format!(" ({skipped} skipped: DAG too large)"));
+    }
+    let mut t = Table::new(
+        &title,
+        &["sim#", "ana#", "TP", "PP", "DP", "micro", "exp/rank", "ana step", "sim step",
+          "gap", "sim TTT"],
+    );
+    for (i, s) in scored.iter().enumerate() {
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{}", s.ana_rank),
+            format!("{}", s.plan.mapping.par.tp),
+            format!("{}", s.plan.mapping.par.pp),
+            format!("{}", s.plan.mapping.par.dp),
+            format!("{}", s.plan.mapping.microbatch_seqs),
+            format!("{}", s.plan.mapping.moe.experts_per_dp_rank),
+            fmt_time(s.plan.report.step_time),
+            fmt_time(s.sim.step_time),
+            format!("{:+.1}%", 100.0 * s.gap()),
+            fmt_time(s.sim.time_to_train_s),
         ]);
     }
     t
@@ -258,6 +451,10 @@ pub fn outcome_json(outcome: &PlanOutcome) -> Json {
                 ),
                 ("step_time_s", Json::num(p.report.step_time)),
                 ("time_to_train_s", Json::num(p.report.time_to_train_s)),
+                (
+                    "adjusted_time_to_train_s",
+                    p.adjusted_ttt.map_or(Json::Null, resilience::num_or_null),
+                ),
                 ("comm_fraction", Json::num(p.report.comm_fraction)),
                 ("achieved_mfu", Json::num(p.report.achieved_mfu)),
                 ("hbm_utilization", Json::num(p.memory.utilization())),
@@ -377,5 +574,79 @@ mod tests {
         assert!(r.contains("vs paper map"), "{r}");
         assert!(r.contains("ScaleUp"), "{r}");
         assert_eq!(r.lines().count(), 3 + 5); // title + header + sep + 5 rows
+    }
+
+    #[test]
+    fn availability_objective_ranks_on_adjusted_ttt() {
+        let cluster = ClusterKey::Passage512.build();
+        let obj = AvailabilityObjective::default_for(&cluster);
+        let out = plan(
+            &req(ClusterKey::Passage512, 4).with_top(8).with_availability(obj),
+            2,
+        );
+        for p in &out.ranked {
+            let adj = p.adjusted_ttt.expect("availability runs populate adjusted TTT");
+            // failures only cost time
+            assert!(adj > p.report.time_to_train_s, "{adj}");
+            assert_eq!(p.objective_ttt().to_bits(), adj.to_bits());
+        }
+        for w in out.ranked.windows(2) {
+            assert!(w[0].adjusted_ttt.unwrap() <= w[1].adjusted_ttt.unwrap());
+        }
+        // adjusted column renders; plain runs show the placeholder
+        assert!(!ranked_table(&out).render().contains('—'));
+        let plain = plan(&req(ClusterKey::Passage512, 4).with_top(2), 2);
+        assert!(plain.ranked[0].adjusted_ttt.is_none());
+    }
+
+    #[test]
+    fn dp_heavy_mappings_pay_more_under_availability() {
+        // The PP=1/DP-heavy winner exposes a giant scale-out gradient sync;
+        // a degraded NIC inflates it more than the paper mapping — its
+        // availability-adjusted inflation must be strictly larger.
+        use crate::model::MoeConfig;
+        let knobs = PerfKnobs::default();
+        let cluster = ClusterKey::Passage512.build();
+        let obj = AvailabilityObjective::default_for(&cluster);
+        let w = Workload::paper_gpt_4p7t(4);
+        let inflation = |m: &Mapping| {
+            let r = evaluate(&w, &cluster, m, &knobs);
+            availability_adjusted_ttt(&w, &cluster, m, &knobs, &obj) / r.time_to_train_s
+        };
+        let paper = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+        let moe = MoeConfig { experts_per_dp_rank: 4, ..MoeConfig::paper_config(4) };
+        let dp_heavy = Mapping::try_new(Parallelism { tp: 8, pp: 1, dp: 4096 }, moe).unwrap();
+        assert!(
+            inflation(&dp_heavy) > inflation(&paper),
+            "{} vs {}",
+            inflation(&dp_heavy),
+            inflation(&paper)
+        );
+    }
+
+    #[test]
+    fn rerank_simulated_is_deterministic_and_exposes_optimism() {
+        let knobs = PerfKnobs::default();
+        let out = plan(&req(ClusterKey::Passage512, 4).with_top(3), 2);
+        let cluster = ClusterKey::Passage512.build();
+        let w = Workload::paper_gpt_4p7t(4);
+        let (scored, skipped) = rerank_simulated(&out, 3, &w, &cluster, &knobs);
+        assert_eq!(scored.len() + skipped, 3);
+        assert!(!scored.is_empty(), "all top plans skipped");
+        for s in &scored {
+            assert!(s.sim.step_time > 0.0 && s.ana_rank >= 1);
+        }
+        for pair in scored.windows(2) {
+            assert!(pair[0].sim.time_to_train_s <= pair[1].sim.time_to_train_s);
+        }
+        // the planner's winners lean on the overlap credits: the simulator
+        // runs them slower (EXPERIMENTS.md §Validate)
+        assert!(scored.iter().any(|s| s.gap() > 0.0));
+        let (again, again_skipped) = rerank_simulated(&out, 3, &w, &cluster, &knobs);
+        assert_eq!(
+            rerank_table(&scored, skipped).render(),
+            rerank_table(&again, again_skipped).render()
+        );
+        assert!(rerank_table(&scored, skipped).render().contains("sim step"));
     }
 }

@@ -1,0 +1,214 @@
+//! Lowering a failure into a degraded fabric and re-pricing the training
+//! step on it — the fail-in-place half of the resilience loop.
+//!
+//! Two consistent views of the same degradation:
+//!
+//! - **Analytical** ([`analytical_degraded_steps`]): every collective in
+//!   the perf model is barrier-synchronous, so a group containing one GPU
+//!   that lost a fraction `f` of a domain's lanes finishes at that slowest
+//!   member's rate — pricing the step on a cluster whose domain bandwidth
+//!   is scaled by `(1 - f)` ([`degraded_cluster`]) is exact for the
+//!   ring/all-to-all schedules the model costs. This is the cheap path the
+//!   goodput engine and the planner's availability objective evaluate per
+//!   mapping.
+//! - **Simulated** ([`simulate_degraded_step`]): the [`crate::timeline`]
+//!   task DAG re-executed on a slice [`crate::netsim::Network`] with the
+//!   victim GPU's link capacity actually removed
+//!   ([`crate::netsim::Network::scale_node_links`]). The blast radius
+//!   *emerges* from max-min sharing + task barriers instead of being
+//!   assumed; `tests/resilience_golden.rs` pins that both views move the
+//!   same way.
+//!
+//! The asymmetry the paper's serviceability argument rides on falls out
+//! here: the same failed scale-out pluggable costs the 144-pod electrical
+//! fabric its (dominant, spilled) expert all-to-all bandwidth, while on
+//! Passage it only touches the mostly-overlapped DP sync and thin PP
+//! traffic.
+
+use crate::model::Workload;
+use crate::parallel::Mapping;
+use crate::perf::{evaluate, PerfKnobs};
+use crate::resilience::FabricReliability;
+use crate::timeline::{self, TimelineError, TimelineReport};
+use crate::topology::cluster::Cluster;
+
+/// Which network domain the failed link belonged to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradedMode {
+    /// One of the victim GPU's scale-up lanes is out.
+    ScaleUpLink,
+    /// One of the victim GPU's scale-out NIC pluggables is out.
+    ScaleOutLink,
+}
+
+/// Clone `cluster` with the affected domain's per-GPU bandwidth scaled by
+/// `(1 - lost_fraction)` — the slowest-member rate every barrier
+/// collective in the analytical model runs at.
+pub fn degraded_cluster(cluster: &Cluster, mode: DegradedMode, lost_fraction: f64) -> Cluster {
+    assert!((0.0..=1.0).contains(&lost_fraction), "lost fraction {lost_fraction}");
+    let mut spec = cluster.spec.clone();
+    match mode {
+        DegradedMode::ScaleUpLink => spec.scale_up.gbps_per_gpu *= 1.0 - lost_fraction,
+        DegradedMode::ScaleOutLink => spec.scale_out.gbps_per_gpu *= 1.0 - lost_fraction,
+    }
+    Cluster::new(spec)
+}
+
+/// Analytical step times of one (workload, cluster, mapping) point in the
+/// healthy state and under a single worst-placed link failure per domain.
+#[derive(Debug, Clone)]
+pub struct DegradedSteps {
+    pub healthy_step: f64,
+    pub healthy_ttt: f64,
+    /// Step time with one scale-up lane (of `fabric.scale_up_links_per_gpu`)
+    /// failed on the slowest GPU.
+    pub degraded_up_step: f64,
+    /// Step time with one scale-out pluggable (of
+    /// `fabric.scale_out_links_per_gpu`) failed on the slowest GPU.
+    pub degraded_out_step: f64,
+}
+
+impl DegradedSteps {
+    /// Degraded-over-healthy step ratio for the scale-up failure (≥ 1).
+    pub fn up_ratio(&self) -> f64 {
+        self.degraded_up_step / self.healthy_step
+    }
+
+    /// Degraded-over-healthy step ratio for the scale-out failure (≥ 1).
+    pub fn out_ratio(&self) -> f64 {
+        self.degraded_out_step / self.healthy_step
+    }
+}
+
+/// Evaluate the healthy and single-failure degraded step times with the
+/// analytical model (three [`evaluate`] calls). Callers must have passed
+/// [`crate::perf::check_feasible`].
+pub fn analytical_degraded_steps(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    fabric: &FabricReliability,
+) -> DegradedSteps {
+    let healthy = evaluate(w, cluster, map, knobs);
+    let up = degraded_cluster(
+        cluster,
+        DegradedMode::ScaleUpLink,
+        1.0 / fabric.scale_up_links_per_gpu as f64,
+    );
+    let out = degraded_cluster(
+        cluster,
+        DegradedMode::ScaleOutLink,
+        1.0 / fabric.scale_out_links_per_gpu as f64,
+    );
+    DegradedSteps {
+        healthy_step: healthy.step_time,
+        healthy_ttt: healthy.time_to_train_s,
+        degraded_up_step: evaluate(w, &up, map, knobs).step_time,
+        degraded_out_step: evaluate(w, &out, map, knobs).step_time,
+    }
+}
+
+/// Re-simulate the full step DAG with the victim GPU's links degraded in
+/// place: stage-0 local rank 0 of the [`crate::timeline`] slice loses
+/// `lost_fraction` of the chosen domain's capacity.
+pub fn simulate_degraded_step(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    mode: DegradedMode,
+    lost_fraction: f64,
+) -> Result<TimelineReport, TimelineError> {
+    assert!((0.0..=1.0).contains(&lost_fraction), "lost fraction {lost_fraction}");
+    let (up_f, nic_f) = match mode {
+        DegradedMode::ScaleUpLink => (1.0 - lost_fraction, 1.0),
+        DegradedMode::ScaleOutLink => (1.0, 1.0 - lost_fraction),
+    };
+    timeline::simulate_step_with(w, cluster, map, knobs, |net| {
+        net.scale_node_links(0, up_f, nic_f)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MoeConfig;
+    use crate::parallel::Parallelism;
+
+    fn point(cfg: usize) -> (Workload, Mapping) {
+        let w = Workload::paper_gpt_4p7t(cfg);
+        let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(cfg));
+        (w, m)
+    }
+
+    #[test]
+    fn degradation_never_speeds_the_step_up() {
+        let knobs = PerfKnobs::default();
+        let fabric = FabricReliability::passage();
+        for cluster in [Cluster::passage_512(32_768), Cluster::electrical_144(32_256)] {
+            let (w, m) = point(4);
+            let s = analytical_degraded_steps(&w, &cluster, &m, &knobs, &fabric);
+            assert!(s.up_ratio() >= 1.0 && s.out_ratio() >= 1.0, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn scale_out_failure_hits_the_spilled_fabric_hardest() {
+        // The §III.d asymmetry: the same failed NIC pluggable costs the
+        // 144-pod electrical fabric its spilled expert all-to-all, while
+        // Passage (EP in-pod) barely notices.
+        let knobs = PerfKnobs::default();
+        let (w, m) = point(4);
+        let psg = analytical_degraded_steps(
+            &w,
+            &Cluster::passage_512(32_768),
+            &m,
+            &knobs,
+            &FabricReliability::passage(),
+        );
+        let alt = analytical_degraded_steps(
+            &w,
+            &Cluster::electrical_144(32_256),
+            &m,
+            &knobs,
+            &FabricReliability::electrical(),
+        );
+        assert!(alt.out_ratio() > 1.3, "{}", alt.out_ratio());
+        assert!(psg.out_ratio() < 1.05, "{}", psg.out_ratio());
+        assert!(alt.out_ratio() > 10.0 * (psg.out_ratio() - 1.0) + 1.0);
+    }
+
+    #[test]
+    fn simulated_and_analytical_degradation_move_together() {
+        let knobs = PerfKnobs::default();
+        let (w, m) = point(4);
+        let cluster = Cluster::electrical_144(32_256);
+        let healthy = timeline::simulate_step(&w, &cluster, &m, &knobs).unwrap();
+        let degraded =
+            simulate_degraded_step(&w, &cluster, &m, &knobs, DegradedMode::ScaleOutLink, 0.5)
+                .unwrap();
+        assert!(degraded.step_time > healthy.step_time);
+        let ana = analytical_degraded_steps(
+            &w,
+            &cluster,
+            &m,
+            &knobs,
+            &FabricReliability::electrical(),
+        );
+        // both views agree the scale-out failure is a material slowdown
+        assert!(degraded.step_time / healthy.step_time > 1.1);
+        assert!(ana.out_ratio() > 1.1);
+    }
+
+    #[test]
+    fn degraded_cluster_scales_only_the_chosen_domain() {
+        let c = Cluster::passage_512(32_768);
+        let up = degraded_cluster(&c, DegradedMode::ScaleUpLink, 0.25);
+        assert!((up.spec.scale_up.gbps_per_gpu - 24_000.0).abs() < 1e-9);
+        assert!((up.spec.scale_out.gbps_per_gpu - 1_600.0).abs() < 1e-9);
+        let out = degraded_cluster(&c, DegradedMode::ScaleOutLink, 0.5);
+        assert!((out.spec.scale_up.gbps_per_gpu - 32_000.0).abs() < 1e-9);
+        assert!((out.spec.scale_out.gbps_per_gpu - 800.0).abs() < 1e-9);
+    }
+}

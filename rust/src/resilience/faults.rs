@@ -1,0 +1,214 @@
+//! Seeded Monte Carlo failure sampling from the [`crate::hw::reliability`]
+//! FIT composition.
+//!
+//! A cluster's failure behaviour is the superposition of three Poisson
+//! processes derived from per-component FIT rates (failures per 1e9
+//! device-hours):
+//!
+//! - **scale-up field failures** — a field-replaceable unit on an in-pod
+//!   link (external laser module, pluggable, connector reseat). The link
+//!   runs degraded (fail-in-place) until a technician swaps the unit.
+//! - **scale-out field failures** — same, on the Ethernet NIC pluggables.
+//! - **GPU-tray failures** — co-packaged silicon (PIC, SerDes) or, for
+//!   integrated-laser CPO, the lasers themselves: the tray comes out, the
+//!   job checkpoint-restarts on the surviving DP replicas (§II.C.3).
+//!
+//! Determinism: every trial draws from its own [`Rng`] stream, forked from
+//! the engine seed by trial index *before* any work is distributed, so
+//! results are byte-identical for any `--jobs` count and independent of
+//! trial execution order (property-tested in `tests/resilience_prop.rs`).
+
+use crate::resilience::{FabricReliability, RepairModel};
+use crate::util::rng::Rng;
+
+/// What failed, which decides both the degradation and the repair path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Field-replaceable scale-up unit: the GPU's in-pod injection runs
+    /// degraded until the swap.
+    ScaleUpLink,
+    /// Field-replaceable scale-out pluggable: the GPU's NIC runs degraded
+    /// until the swap.
+    ScaleOutLink,
+    /// Tray-impacting failure: checkpoint-restart, one DP replica out
+    /// until the tray is serviced.
+    GpuTray,
+}
+
+/// One sampled failure.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    /// Arrival time, hours since trace start.
+    pub at_h: f64,
+    pub kind: FaultKind,
+    /// Affected GPU (uniform over the cluster).
+    pub gpu: usize,
+    /// Sampled repair duration, hours (exponential around the
+    /// [`RepairModel`] mean for the kind).
+    pub repair_h: f64,
+}
+
+/// On-demand sampler of the superposed failure process for one
+/// (cluster size, fabric, repair) triple. Owns its RNG stream.
+#[derive(Debug, Clone)]
+pub struct FaultProcess {
+    lam_up_h: f64,
+    lam_out_h: f64,
+    lam_tray_h: f64,
+    field_repair_h: f64,
+    tray_repair_h: f64,
+    n_gpus: usize,
+    clock_h: f64,
+    rng: Rng,
+}
+
+impl FaultProcess {
+    pub fn new(
+        fabric: &FabricReliability,
+        repair: &RepairModel,
+        n_gpus: usize,
+        rng: Rng,
+    ) -> FaultProcess {
+        Self::from_rates(
+            fabric.field_rate_up_per_hour(n_gpus),
+            fabric.field_rate_out_per_hour(n_gpus),
+            fabric.tray_rate_per_hour(n_gpus),
+            repair,
+            n_gpus,
+            rng,
+        )
+    }
+
+    /// Build directly from cluster-wide rates (per hour) — the
+    /// [`crate::resilience::goodput`] engine's entry point, which has
+    /// already reduced the fabric to rates.
+    pub fn from_rates(
+        lam_up_h: f64,
+        lam_out_h: f64,
+        lam_tray_h: f64,
+        repair: &RepairModel,
+        n_gpus: usize,
+        rng: Rng,
+    ) -> FaultProcess {
+        FaultProcess {
+            lam_up_h,
+            lam_out_h,
+            lam_tray_h,
+            field_repair_h: repair.field_repair_hours,
+            tray_repair_h: repair.tray_repair_hours,
+            n_gpus: n_gpus.max(1),
+            clock_h: 0.0,
+            rng,
+        }
+    }
+
+    /// Total failure rate, per hour.
+    pub fn total_rate_per_hour(&self) -> f64 {
+        self.lam_up_h + self.lam_out_h + self.lam_tray_h
+    }
+}
+
+/// Samples the next failure on demand: exponential inter-arrival over the
+/// superposed rate, kind by rate weight, GPU uniform, repair exponential.
+/// The iterator is infinite unless the composed rate is zero.
+impl Iterator for FaultProcess {
+    type Item = FaultEvent;
+
+    fn next(&mut self) -> Option<FaultEvent> {
+        let total = self.total_rate_per_hour();
+        if total <= 0.0 {
+            return None;
+        }
+        self.clock_h += self.rng.exp(total);
+        let u = self.rng.f64() * total;
+        let (kind, mean_repair) = if u < self.lam_up_h {
+            (FaultKind::ScaleUpLink, self.field_repair_h)
+        } else if u < self.lam_up_h + self.lam_out_h {
+            (FaultKind::ScaleOutLink, self.field_repair_h)
+        } else {
+            (FaultKind::GpuTray, self.tray_repair_h)
+        };
+        Some(FaultEvent {
+            at_h: self.clock_h,
+            kind,
+            gpu: self.rng.below(self.n_gpus as u64) as usize,
+            repair_h: self.rng.exp(1.0 / mean_repair),
+        })
+    }
+}
+
+/// Sample a full failure trace over `horizon_h` hours (the batch form of
+/// [`FaultProcess`]; the goodput engine samples on demand instead).
+pub fn sample_trace(
+    fabric: &FabricReliability,
+    repair: &RepairModel,
+    n_gpus: usize,
+    horizon_h: f64,
+    rng: Rng,
+) -> Vec<FaultEvent> {
+    let mut events = Vec::new();
+    for ev in FaultProcess::new(fabric, repair, n_gpus, rng) {
+        if ev.at_h > horizon_h {
+            break;
+        }
+        events.push(ev);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn psg() -> FabricReliability {
+        FabricReliability::passage()
+    }
+
+    #[test]
+    fn trace_is_deterministic_from_the_seed() {
+        let repair = RepairModel::default();
+        let a = sample_trace(&psg(), &repair, 32_768, 100.0, Rng::new(7));
+        let b = sample_trace(&psg(), &repair, 32_768, 100.0, Rng::new(7));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_h.to_bits(), y.at_h.to_bits());
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.gpu, y.gpu);
+        }
+        let c = sample_trace(&psg(), &repair, 32_768, 100.0, Rng::new(8));
+        assert!(a.len() != c.len() || a[0].at_h != c[0].at_h);
+    }
+
+    #[test]
+    fn rates_match_the_fit_arithmetic() {
+        // Passage at 32k GPUs: field failures a few per hour (lasers
+        // dominate), tray events well under one per hour (external lasers
+        // keep the co-packaged FIT small).
+        let repair = RepairModel::default();
+        let horizon = 2_000.0;
+        let trace = sample_trace(&psg(), &repair, 32_768, horizon, Rng::new(1));
+        let trays = trace.iter().filter(|e| e.kind == FaultKind::GpuTray).count();
+        let fields = trace.len() - trays;
+        let lam_field = psg().field_rate_up_per_hour(32_768)
+            + psg().field_rate_out_per_hour(32_768);
+        let lam_tray = psg().tray_rate_per_hour(32_768);
+        assert!((fields as f64 / horizon - lam_field).abs() / lam_field < 0.1);
+        assert!((trays as f64 / horizon - lam_tray).abs() / lam_tray < 0.35);
+        assert!(trace.windows(2).all(|w| w[0].at_h <= w[1].at_h));
+        assert!(trace.iter().all(|e| e.gpu < 32_768 && e.repair_h > 0.0));
+    }
+
+    #[test]
+    fn integrated_lasers_flip_failures_into_tray_events() {
+        let repair = RepairModel::default();
+        let count = |fab: &FabricReliability| {
+            sample_trace(fab, &repair, 4_096, 1_000.0, Rng::new(3))
+                .iter()
+                .filter(|e| e.kind == FaultKind::GpuTray)
+                .count()
+        };
+        let cpo = count(&FabricReliability::cpo_integrated());
+        let ext = count(&psg());
+        assert!(cpo > 10 * ext.max(1), "cpo {cpo} vs external {ext}");
+    }
+}

@@ -1,0 +1,312 @@
+//! Composing failure rates, degraded step times and checkpoint-restart
+//! into **availability-adjusted effective time-to-train**.
+//!
+//! Model (per (workload, cluster, mapping, fabric) point):
+//!
+//! - Checkpointing at the Young/Daly optimal interval
+//!   `τ* = sqrt(2·C·MTBF_tray)` costs a `1 + C/τ*` overhead on all
+//!   productive time and bounds the rewind after a tray event to `τ*/2`
+//!   in expectation.
+//! - Field-replaceable link failures leave the job running **degraded**
+//!   (fail-in-place): between failure and swap the step runs at the
+//!   slowest member's rate (see [`crate::resilience::degrade`]). In the
+//!   closed form the steady-state probability that at least one unit of a
+//!   class is down is `1 − exp(−λ·MTTR)` (M/G/∞ occupancy).
+//! - Tray events force a checkpoint-restart: the job rewinds an expected
+//!   `τ*/2` of work, pays the restart latency, and runs on `dp − 1`
+//!   replicas until the tray returns.
+//!
+//! [`expected`] is the deterministic closed form (what the figures tables
+//! and the planner's availability objective use); [`monte_carlo_trial`]
+//! samples one wall-clock trajectory from the same inputs (what
+//! `lumos resilience --trials N` averages). The two agree within a few
+//! percent on the paper clusters (pinned in `tests/resilience_golden.rs`).
+
+use crate::resilience::faults::{FaultKind, FaultProcess};
+use crate::resilience::RepairModel;
+use crate::util::rng::Rng;
+
+/// Everything the goodput composition needs, pre-reduced to scalars so a
+/// Monte Carlo trial is pure arithmetic (no network model in the loop).
+#[derive(Debug, Clone)]
+pub struct GoodputInputs {
+    /// Healthy step time, seconds.
+    pub healthy_step: f64,
+    /// Step time with one scale-up lane failed on the slowest GPU.
+    pub degraded_up_step: f64,
+    /// Step time with one scale-out pluggable failed on the slowest GPU.
+    pub degraded_out_step: f64,
+    /// Healthy time-to-train (the work target), seconds.
+    pub healthy_ttt: f64,
+    /// DP replica count of the mapping (tray blast radius: one replica out
+    /// during tray repair).
+    pub dp: usize,
+    /// Field-replaceable scale-up failures per hour, cluster-wide.
+    pub lam_up_field_h: f64,
+    /// Field-replaceable scale-out failures per hour, cluster-wide.
+    pub lam_out_field_h: f64,
+    /// Tray-impacting failures per hour, cluster-wide.
+    pub lam_tray_h: f64,
+    pub repair: RepairModel,
+}
+
+/// The availability accounting for one point.
+#[derive(Debug, Clone)]
+pub struct GoodputReport {
+    /// Expected wall-clock time-to-train including failures
+    /// (`f64::INFINITY` when failures destroy work faster than the job
+    /// creates it — the integrated-laser-CPO-at-scale regime).
+    pub effective_ttt: f64,
+    /// `healthy_ttt / effective_ttt` (0 when divergent).
+    pub availability: f64,
+    /// Young/Daly optimal checkpoint interval, seconds (∞ when no tray
+    /// failures).
+    pub checkpoint_interval_s: f64,
+    /// Steady-state probability at least one scale-up link is degraded.
+    pub degraded_fraction_up: f64,
+    /// Steady-state probability at least one scale-out link is degraded.
+    pub degraded_fraction_out: f64,
+    /// Expected step-time inflation from fail-in-place degradation (≥ 1).
+    pub expected_slowdown: f64,
+    /// Cluster-wide mean time between tray events, hours.
+    pub tray_mtbf_h: f64,
+}
+
+/// Deterministic closed-form expectation of the goodput composition.
+pub fn expected(inp: &GoodputInputs) -> GoodputReport {
+    let r = &inp.repair;
+    let fu = 1.0 - (-inp.lam_up_field_h * r.field_repair_hours).exp();
+    let fo = 1.0 - (-inp.lam_out_field_h * r.field_repair_hours).exp();
+    let sh = inp.healthy_step;
+    let slow = 1.0
+        + fu * (inp.degraded_up_step / sh - 1.0)
+        + fo * (inp.degraded_out_step / sh - 1.0);
+
+    let (tau, ckpt, tray_mtbf_h) = if inp.lam_tray_h > 0.0 {
+        let mtbf_s = 3600.0 / inp.lam_tray_h;
+        let tau = (2.0 * r.checkpoint_write_s * mtbf_s).sqrt();
+        (tau, 1.0 + r.checkpoint_write_s / tau, mtbf_s / 3600.0)
+    } else {
+        (f64::INFINITY, 1.0, f64::INFINITY)
+    };
+
+    let g = slow * ckpt; // wall seconds per healthy-work second
+    let effective_ttt = if inp.lam_tray_h > 0.0 {
+        // Per tray event: rewind τ/2 of work (g wall-seconds each), the
+        // restart latency, and one replica of dp out for the repair.
+        let loss_s = g * tau / 2.0
+            + r.restart_s
+            + r.tray_repair_hours * 3600.0 / inp.dp as f64;
+        let denom = 1.0 - inp.lam_tray_h / 3600.0 * loss_s;
+        if denom > 0.0 {
+            inp.healthy_ttt * g / denom
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        inp.healthy_ttt * g
+    };
+    GoodputReport {
+        effective_ttt,
+        availability: if effective_ttt.is_finite() {
+            inp.healthy_ttt / effective_ttt
+        } else {
+            0.0
+        },
+        checkpoint_interval_s: tau,
+        degraded_fraction_up: fu,
+        degraded_fraction_out: fo,
+        expected_slowdown: slow,
+        tray_mtbf_h,
+    }
+}
+
+/// One sampled wall-clock trajectory: walk a [`FaultProcess`] trace
+/// sampled from the inputs' rates, accruing work at the current
+/// (degraded, checkpoint-taxed, replica-reduced) rate until the work
+/// target is met. Returns the trial's effective time-to-train in seconds
+/// (`INFINITY` if the trial exceeds 100× the healthy duration — the
+/// divergent regime). `rng` is the trial's stream; the fault trace and
+/// the rewind draws fork from it, so one stream fully determines the
+/// trial.
+pub fn monte_carlo_trial(inp: &GoodputInputs, rng: &mut Rng) -> f64 {
+    let r = &inp.repair;
+    let target = inp.healthy_ttt;
+    let wall_cap = 100.0 * target;
+    let sh = inp.healthy_step;
+
+    let mut process = FaultProcess::from_rates(
+        inp.lam_up_field_h,
+        inp.lam_out_field_h,
+        inp.lam_tray_h,
+        r,
+        1, // goodput is placement-blind: which GPU failed does not matter
+        rng.fork(1),
+    );
+    let mut local = rng.fork(2);
+    let tau = if inp.lam_tray_h > 0.0 {
+        (2.0 * r.checkpoint_write_s * 3600.0 / inp.lam_tray_h).sqrt()
+    } else {
+        f64::INFINITY
+    };
+    let ckpt = if tau.is_finite() { 1.0 + r.checkpoint_write_s / tau } else { 1.0 };
+
+    let mut now = 0.0f64;
+    let mut work = 0.0f64;
+    // active repair completion times, per class
+    let mut rep_up: Vec<f64> = Vec::new();
+    let mut rep_out: Vec<f64> = Vec::new();
+    let mut rep_tray: Vec<f64> = Vec::new();
+    let mut pending = process.next();
+
+    while work < target {
+        if now > wall_cap {
+            return f64::INFINITY;
+        }
+        rep_up.retain(|&t| t > now);
+        rep_out.retain(|&t| t > now);
+        rep_tray.retain(|&t| t > now);
+        let mut step = sh;
+        if !rep_up.is_empty() {
+            step = step.max(inp.degraded_up_step);
+        }
+        if !rep_out.is_empty() {
+            step = step.max(inp.degraded_out_step);
+        }
+        let replicas = inp.dp.saturating_sub(rep_tray.len());
+        let rate = (sh / step) / ckpt * replicas as f64 / inp.dp as f64;
+
+        // A failure that arrived while the clock was stalled (restart)
+        // applies immediately; repair completions are always in the
+        // future (retained above).
+        let next_fail =
+            pending.as_ref().map_or(f64::INFINITY, |e| (e.at_h * 3600.0).max(now));
+        let min_of = |xs: &[f64]| xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let horizon = next_fail
+            .min(min_of(&rep_up))
+            .min(min_of(&rep_out))
+            .min(min_of(&rep_tray));
+        if rate > 0.0 && work + rate * (horizon - now) >= target {
+            now += (target - work) / rate;
+            break;
+        }
+        work += rate * (horizon - now);
+        now = horizon;
+        if pending.is_some() && horizon >= next_fail {
+            let ev = pending.take().expect("checked is_some");
+            match ev.kind {
+                FaultKind::ScaleUpLink => rep_up.push(now + ev.repair_h * 3600.0),
+                FaultKind::ScaleOutLink => rep_out.push(now + ev.repair_h * 3600.0),
+                FaultKind::GpuTray => {
+                    work = (work - local.f64() * tau).max(0.0);
+                    now += r.restart_s;
+                    rep_tray.push(now + ev.repair_h * 3600.0);
+                }
+            }
+            pending = process.next();
+        }
+    }
+    now
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> GoodputInputs {
+        GoodputInputs {
+            healthy_step: 1.0,
+            degraded_up_step: 1.01,
+            degraded_out_step: 1.5,
+            healthy_ttt: 3.0e5,
+            dp: 256,
+            lam_up_field_h: 5.0,
+            lam_out_field_h: 0.25,
+            lam_tray_h: 0.07,
+            repair: RepairModel::default(),
+        }
+    }
+
+    #[test]
+    fn expected_is_sane_and_monotone_in_rates() {
+        let base = expected(&inputs());
+        assert!(base.effective_ttt > inputs().healthy_ttt);
+        assert!(base.availability > 0.0 && base.availability < 1.0);
+        assert!(base.expected_slowdown >= 1.0);
+        let mut worse = inputs();
+        worse.lam_tray_h *= 4.0;
+        let w = expected(&worse);
+        assert!(w.effective_ttt > base.effective_ttt);
+        assert!(w.checkpoint_interval_s < base.checkpoint_interval_s);
+    }
+
+    #[test]
+    fn no_failures_means_only_checkpoint_free_run() {
+        let mut inp = inputs();
+        inp.lam_up_field_h = 0.0;
+        inp.lam_out_field_h = 0.0;
+        inp.lam_tray_h = 0.0;
+        let r = expected(&inp);
+        assert_eq!(r.effective_ttt.to_bits(), inp.healthy_ttt.to_bits());
+        assert_eq!(r.availability, 1.0);
+        assert!(r.checkpoint_interval_s.is_infinite());
+        let mut rng = Rng::new(1);
+        let t = monte_carlo_trial(&inp, &mut rng);
+        assert!((t - inp.healthy_ttt).abs() / inp.healthy_ttt < 1e-12);
+    }
+
+    #[test]
+    fn divergent_regimes_report_infinity() {
+        let mut inp = inputs();
+        inp.lam_tray_h = 400.0; // tray event every 9 s: nothing survives
+        let r = expected(&inp);
+        assert!(r.effective_ttt.is_infinite());
+        assert_eq!(r.availability, 0.0);
+        let mut rng = Rng::new(2);
+        inp.healthy_ttt = 1.0e3; // keep the capped trial cheap
+        assert!(monte_carlo_trial(&inp, &mut rng).is_infinite());
+    }
+
+    #[test]
+    fn monte_carlo_mean_tracks_the_closed_form() {
+        let inp = inputs();
+        let cf = expected(&inp).effective_ttt;
+        let mut base = Rng::new(42);
+        let trials = 64;
+        let mean: f64 = (0..trials)
+            .map(|t| {
+                let mut rng = base.fork(t);
+                monte_carlo_trial(&inp, &mut rng)
+            })
+            .sum::<f64>()
+            / trials as f64;
+        assert!((mean - cf).abs() / cf < 0.15, "mc {mean} vs closed form {cf}");
+    }
+
+    #[test]
+    fn trials_are_deterministic_and_order_independent() {
+        let inp = inputs();
+        let streams = |seed: u64| {
+            let mut base = Rng::new(seed);
+            (0..16).map(|t| base.fork(t)).collect::<Vec<_>>()
+        };
+        let forward: Vec<f64> = streams(7)
+            .iter()
+            .map(|s| monte_carlo_trial(&inp, &mut s.clone()))
+            .collect();
+        let mut reversed: Vec<f64> = streams(7)
+            .iter()
+            .rev()
+            .map(|s| monte_carlo_trial(&inp, &mut s.clone()))
+            .collect();
+        reversed.reverse();
+        for (a, b) in forward.iter().zip(&reversed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let other: Vec<f64> = streams(8)
+            .iter()
+            .map(|s| monte_carlo_trial(&inp, &mut s.clone()))
+            .collect();
+        assert_ne!(forward, other);
+    }
+}

@@ -1,0 +1,665 @@
+//! Failure-aware effective time-to-train: closing the loop from FIT rates
+//! to the paper's 2.7× headline.
+//!
+//! The paper's serviceability argument (§II.C.3, §III.d) — lasers dominate
+//! optics failure rates, and external field-replaceable lasers keep
+//! failures link-local instead of GPU-tray events — is qualitative in the
+//! text and was a dead end in this repo: [`crate::hw::reliability`]
+//! computes FIT compositions that nothing converted into lost training
+//! time. This subsystem quantifies it end-to-end:
+//!
+//! 1. [`faults`] — seeded Monte Carlo failure traces from the FIT
+//!    composition of a [`FabricReliability`] profile (per-component
+//!    lasers/PIC/SerDes/connectors with field-unit vs GPU-tray blast
+//!    radius), byte-identical for any `--jobs` via per-trial forked
+//!    [`crate::util::rng::Rng`] streams.
+//! 2. [`degrade`] — lowers a failure into a degraded fabric: the
+//!    analytical model re-priced at the slowest member's bandwidth, and
+//!    the [`crate::timeline`] step DAG re-simulated on a
+//!    [`crate::netsim::Network`] with the failed link's capacity removed
+//!    (fail-in-place).
+//! 3. [`goodput`] — composes rates, degraded intervals and
+//!    checkpoint-restart (Young/Daly optimal interval from the tray MTBF)
+//!    into **availability-adjusted effective time-to-train**, as a closed
+//!    form and as Monte Carlo trials.
+//!
+//! Surfaced as `lumos resilience` (CLI), `lumos figures --resilience`
+//! (the integrated-vs-external-laser TTT delta — the §III.d argument as a
+//! number), and the planner's optional availability objective
+//! ([`crate::planner::AvailabilityObjective`]). Related work grounds the
+//! framing: arXiv 2507.14000 sells photonic fabrics on exactly this
+//! system-level accounting, and arXiv 2603.21313 argues
+//! reliability/serviceability — not pJ/bit — is what stalls CPO
+//! deployment.
+
+pub mod degrade;
+pub mod faults;
+pub mod goodput;
+
+use crate::hw::reliability::LinkReliability;
+use crate::model::Workload;
+use crate::parallel::{Mapping, Parallelism};
+use crate::perf::{check_feasible, PerfKnobs};
+use crate::sweep::engine::{run_indexed, ClusterCache, ClusterKey};
+use crate::topology::cluster::Cluster;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::fmt_time;
+use crate::util::table::Table;
+
+pub use degrade::{analytical_degraded_steps, degraded_cluster, DegradedMode, DegradedSteps};
+pub use faults::{sample_trace, FaultEvent, FaultKind, FaultProcess};
+pub use goodput::{expected, monte_carlo_trial, GoodputInputs, GoodputReport};
+
+/// Service-time and checkpointing parameters of the repair model.
+#[derive(Debug, Clone)]
+pub struct RepairModel {
+    /// Mean time to swap a field-replaceable unit (external laser module,
+    /// pluggable), hours — dispatch + swap; the link runs degraded
+    /// meanwhile (fail-in-place).
+    pub field_repair_hours: f64,
+    /// Mean time to service a GPU tray, hours — one DP replica out.
+    pub tray_repair_hours: f64,
+    /// Blocking checkpoint write time, seconds (~1.7 GB/GPU of optimizer
+    /// state to local NVMe with asynchronous draining).
+    pub checkpoint_write_s: f64,
+    /// Job restart latency after a tray event (relaunch + checkpoint
+    /// load), seconds.
+    pub restart_s: f64,
+}
+
+impl Default for RepairModel {
+    fn default() -> Self {
+        RepairModel {
+            field_repair_hours: 2.0,
+            tray_repair_hours: 8.0,
+            checkpoint_write_s: 30.0,
+            restart_s: 600.0,
+        }
+    }
+}
+
+/// Reliability profile of a cluster build-out: the scale-up link design,
+/// the scale-out NIC design, and how many of each a GPU carries.
+#[derive(Debug, Clone)]
+pub struct FabricReliability {
+    pub name: String,
+    pub scale_up: LinkReliability,
+    /// Scale-up lanes per GPU (32 Tb/s over 56G×8λ fibers ≈ 72; the §II.C
+    /// "rails" count).
+    pub scale_up_links_per_gpu: usize,
+    pub scale_out: LinkReliability,
+    /// Scale-out pluggables per GPU (1.6 Tb/s as 2×800G DR8).
+    pub scale_out_links_per_gpu: usize,
+}
+
+impl FabricReliability {
+    fn with_scale_up(name: &str, scale_up: LinkReliability) -> FabricReliability {
+        FabricReliability {
+            name: name.to_string(),
+            scale_up,
+            scale_up_links_per_gpu: 72,
+            scale_out: LinkReliability::pluggable(8.0),
+            scale_out_links_per_gpu: 2,
+        }
+    }
+
+    /// Passage: external field-replaceable lasers feed the interposer
+    /// (§III.d) — link failures stay link-local.
+    pub fn passage() -> FabricReliability {
+        let link = LinkReliability::passage_external_laser(4.0);
+        Self::with_scale_up("Passage (external laser)", link)
+    }
+
+    /// In-package-laser CPO at the same bandwidth: a laser failure is a
+    /// GPU-tray event.
+    pub fn cpo_integrated() -> FabricReliability {
+        Self::with_scale_up("CPO (integrated laser)", LinkReliability::cpo_integrated_laser(4.0))
+    }
+
+    /// Pluggable-module scale-up (lasers in the module: field unit).
+    pub fn pluggable_scale_up() -> FabricReliability {
+        Self::with_scale_up("Pluggable scale-up", LinkReliability::pluggable(4.0))
+    }
+
+    /// The electrical alternative: copper in-pod links (no optics), the
+    /// same Ethernet pluggables for scale-out.
+    pub fn electrical() -> FabricReliability {
+        Self::with_scale_up("Electrical (copper)", LinkReliability::copper())
+    }
+
+    /// The profile a cluster preset implies: Passage-named clusters get
+    /// external-laser optics, everything else copper scale-up.
+    pub fn default_for(cluster: &Cluster) -> FabricReliability {
+        if cluster.spec.name.starts_with("Passage") {
+            FabricReliability::passage()
+        } else {
+            FabricReliability::electrical()
+        }
+    }
+
+    /// CLI name lookup (`--tech passage | cpo | electrical | pluggable`).
+    pub fn from_cli_name(name: &str) -> Option<FabricReliability> {
+        match name {
+            "passage" => Some(FabricReliability::passage()),
+            "cpo" => Some(FabricReliability::cpo_integrated()),
+            "electrical" => Some(FabricReliability::electrical()),
+            "pluggable" => Some(FabricReliability::pluggable_scale_up()),
+            _ => None,
+        }
+    }
+
+    /// Field-replaceable scale-up failures per hour, cluster-wide.
+    pub fn field_rate_up_per_hour(&self, n_gpus: usize) -> f64 {
+        self.scale_up.field_impact_fit()
+            * (self.scale_up_links_per_gpu * n_gpus) as f64
+            / 1e9
+    }
+
+    /// Field-replaceable scale-out failures per hour, cluster-wide.
+    pub fn field_rate_out_per_hour(&self, n_gpus: usize) -> f64 {
+        self.scale_out.field_impact_fit()
+            * (self.scale_out_links_per_gpu * n_gpus) as f64
+            / 1e9
+    }
+
+    /// GPU-tray-impacting failures per hour, cluster-wide (both link
+    /// classes contribute their co-packaged FIT).
+    pub fn tray_rate_per_hour(&self, n_gpus: usize) -> f64 {
+        (self.scale_up.tray_impact_fit() * self.scale_up_links_per_gpu as f64
+            + self.scale_out.tray_impact_fit() * self.scale_out_links_per_gpu as f64)
+            * n_gpus as f64
+            / 1e9
+    }
+
+    pub fn tray_events_per_year(&self, n_gpus: usize) -> f64 {
+        self.tray_rate_per_hour(n_gpus) * 8760.0
+    }
+
+    /// Mean time between *any* link failure, hours.
+    pub fn link_mtbf_hours(&self, n_gpus: usize) -> f64 {
+        let fit_per_gpu = self.scale_up.link_fit() * self.scale_up_links_per_gpu as f64
+            + self.scale_out.link_fit() * self.scale_out_links_per_gpu as f64;
+        1e9 / (fit_per_gpu * n_gpus as f64)
+    }
+}
+
+/// Engine parameters shared by every assessment in one run.
+#[derive(Debug, Clone)]
+pub struct ResilienceSpec {
+    pub repair: RepairModel,
+    pub seed: u64,
+    /// Monte Carlo trials per assessment; 0 = closed form only (the
+    /// figures path).
+    pub trials: usize,
+}
+
+impl Default for ResilienceSpec {
+    fn default() -> Self {
+        ResilienceSpec { repair: RepairModel::default(), seed: 7, trials: 128 }
+    }
+}
+
+/// One point's full resilience accounting.
+#[derive(Debug, Clone)]
+pub struct Assessment {
+    pub cluster: String,
+    pub config_name: String,
+    pub fabric: String,
+    pub mapping: Mapping,
+    pub steps: DegradedSteps,
+    pub inputs: GoodputInputs,
+    /// Closed-form expectation.
+    pub expected: GoodputReport,
+    pub tray_per_year: f64,
+    pub link_mtbf_h: f64,
+    /// Monte Carlo trials behind the `mc_*` aggregates (0 = closed form
+    /// copied through).
+    pub trials: usize,
+    pub mc_mean_ttt: f64,
+    pub mc_min_ttt: f64,
+    pub mc_max_ttt: f64,
+}
+
+impl Assessment {
+    /// Effective TTT minus healthy TTT (what failures cost), seconds.
+    pub fn ttt_lost_s(&self) -> f64 {
+        self.expected.effective_ttt - self.steps.healthy_ttt
+    }
+}
+
+/// Assess one (workload, cluster, mapping) point under `fabric`:
+/// analytical degraded steps, closed-form goodput, and `spec.trials`
+/// Monte Carlo trajectories on `jobs` worker threads (trial streams are
+/// forked from the seed in index order before any work is distributed, so
+/// output is byte-identical for any `jobs`).
+pub fn assess(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    fabric: &FabricReliability,
+    spec: &ResilienceSpec,
+    jobs: usize,
+) -> Assessment {
+    let n = cluster.spec.n_gpus;
+    let steps = analytical_degraded_steps(w, cluster, map, knobs, fabric);
+    let inputs = GoodputInputs {
+        healthy_step: steps.healthy_step,
+        degraded_up_step: steps.degraded_up_step,
+        degraded_out_step: steps.degraded_out_step,
+        healthy_ttt: steps.healthy_ttt,
+        dp: map.par.dp,
+        lam_up_field_h: fabric.field_rate_up_per_hour(n),
+        lam_out_field_h: fabric.field_rate_out_per_hour(n),
+        lam_tray_h: fabric.tray_rate_per_hour(n),
+        repair: spec.repair.clone(),
+    };
+    let report = expected(&inputs);
+    let (mc_mean, mc_min, mc_max) = if spec.trials == 0 {
+        (report.effective_ttt, report.effective_ttt, report.effective_ttt)
+    } else {
+        let mut base = Rng::new(spec.seed);
+        let streams: Vec<Rng> = (0..spec.trials).map(|t| base.fork(t as u64)).collect();
+        let results = run_indexed(spec.trials, jobs, |i| {
+            let mut rng = streams[i].clone();
+            monte_carlo_trial(&inputs, &mut rng)
+        });
+        let mean = results.iter().sum::<f64>() / results.len() as f64;
+        let min = results.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = results.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        (mean, min, max)
+    };
+    Assessment {
+        cluster: cluster.spec.name.clone(),
+        config_name: format!(
+            "E{}/k{}/m{}",
+            w.moe.total_experts, w.moe.active_per_token, w.moe.granularity
+        ),
+        fabric: fabric.name.clone(),
+        mapping: map.clone(),
+        steps,
+        inputs,
+        expected: report,
+        tray_per_year: fabric.tray_events_per_year(n),
+        link_mtbf_h: fabric.link_mtbf_hours(n),
+        trials: spec.trials,
+        mc_mean_ttt: mc_mean,
+        mc_min_ttt: mc_min,
+        mc_max_ttt: mc_max,
+    }
+}
+
+/// A mapping to assess on `cluster`: the paper's TP16×PP8×DP256 when the
+/// cluster is (within 2%) the paper scale, otherwise a TP16×PP1 layout
+/// that fills the cluster (the pod-scale golden scenario uses this on one
+/// 512-GPU pod).
+pub fn default_mapping(w: &Workload, cluster: &Cluster) -> Result<Mapping, String> {
+    let n = cluster.spec.n_gpus;
+    let paper = Parallelism::paper();
+    let delta = (paper.n_gpus() as f64 - n as f64).abs() / n as f64;
+    if delta <= 0.02 && paper.tp <= cluster.spec.pod_size {
+        if let Ok(m) = Mapping::try_new(paper, w.moe) {
+            if check_feasible(w, &m).is_ok() {
+                return Ok(m);
+            }
+        }
+    }
+    let tp = 16;
+    if n % tp != 0 {
+        return Err(format!("no default mapping: {n} GPUs is not a multiple of TP {tp}"));
+    }
+    let par = Parallelism { tp, pp: 1, dp: n / tp };
+    let m = Mapping::try_new(par, w.moe).map_err(|e| format!("no default mapping: {e}"))?;
+    check_feasible(w, &m).map_err(|e| format!("default mapping infeasible: {e}"))?;
+    Ok(m)
+}
+
+/// One row of the headline comparison: the same Table IV config assessed
+/// on Passage (external-laser optics) and the 144-pod electrical
+/// alternative (copper + the same Ethernet pluggables).
+#[derive(Debug, Clone)]
+pub struct PairedRow {
+    pub config: usize,
+    pub passage: Assessment,
+    pub electrical: Assessment,
+}
+
+impl PairedRow {
+    /// Healthy Passage-vs-Electrical speedup (the Fig. 11 ratio).
+    pub fn healthy_speedup(&self) -> f64 {
+        self.electrical.steps.healthy_ttt / self.passage.steps.healthy_ttt
+    }
+
+    /// Availability-adjusted speedup (closed form).
+    pub fn adjusted_speedup(&self) -> f64 {
+        self.electrical.expected.effective_ttt / self.passage.expected.effective_ttt
+    }
+}
+
+/// Assess the paper's headline pair for each config in `configs`, with
+/// per-row seeds derived from the *config index* (not the list position),
+/// so the same (seed, config) always draws the same trials regardless of
+/// which subset of configs a run requests — and deterministic for any
+/// `jobs`.
+pub fn paper_pairs(
+    configs: &[usize],
+    knobs: &PerfKnobs,
+    spec: &ResilienceSpec,
+    jobs: usize,
+    cache: &ClusterCache,
+) -> Vec<PairedRow> {
+    let passage = cache.get(&ClusterKey::Passage512);
+    let electrical = cache.get(&ClusterKey::Electrical144);
+    let fab_p = FabricReliability::passage();
+    let fab_e = FabricReliability::electrical();
+    configs
+        .iter()
+        .map(|&cfg| {
+            let w = Workload::paper_gpt_4p7t(cfg);
+            let map = default_mapping(&w, &passage).expect("paper mapping fits Passage-512");
+            let spec_p =
+                ResilienceSpec { seed: spec.seed.wrapping_add(2 * cfg as u64), ..spec.clone() };
+            let spec_e = ResilienceSpec {
+                seed: spec.seed.wrapping_add(2 * cfg as u64 + 1),
+                ..spec.clone()
+            };
+            PairedRow {
+                config: cfg,
+                passage: assess(&w, &passage, &map, knobs, &fab_p, &spec_p, jobs),
+                electrical: assess(&w, &electrical, &map, knobs, &fab_e, &spec_e, jobs),
+            }
+        })
+        .collect()
+}
+
+/// The §III.d golden scenario: Config 4 on one 512-GPU Passage pod —
+/// identical performance, three laser placements; only serviceability
+/// differs.
+pub fn pod_serviceability(
+    knobs: &PerfKnobs,
+    spec: &ResilienceSpec,
+    jobs: usize,
+    cache: &ClusterCache,
+) -> Vec<Assessment> {
+    let cluster = cache.get(&ClusterKey::custom(512, 512, 32_000.0));
+    let w = Workload::paper_gpt_4p7t(4);
+    let map = default_mapping(&w, &cluster).expect("TP16×PP1×DP32 fits one pod");
+    [
+        FabricReliability::passage(),
+        FabricReliability::cpo_integrated(),
+        FabricReliability::pluggable_scale_up(),
+    ]
+    .iter()
+    .enumerate()
+    .map(|(i, fabric)| {
+        let s = ResilienceSpec { seed: spec.seed.wrapping_add(100 + i as u64), ..spec.clone() };
+        assess(&w, &cluster, &map, knobs, fabric, &s, jobs)
+    })
+    .collect()
+}
+
+/// Format a possibly-divergent duration: [`fmt_time`] when finite,
+/// `"diverges"` otherwise (the shared rendering rule for effective-TTT
+/// cells — the planner's adjusted column uses it too).
+pub fn fmt_ttt(secs: f64) -> String {
+    if secs.is_finite() {
+        fmt_time(secs)
+    } else {
+        "diverges".to_string()
+    }
+}
+
+/// Divergence-aware ratio cell: `"{:.2}x"` when finite, `"—"` otherwise.
+fn fmt_ratio(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.2}x")
+    } else {
+        "—".to_string()
+    }
+}
+
+/// The headline artifact: availability-adjusted Passage-vs-Electrical-144
+/// speedup for every Table IV config.
+pub fn speedup_table(rows: &[PairedRow]) -> Table {
+    let trials = rows.first().map_or(0, |r| r.passage.trials);
+    let source = if trials == 0 {
+        "closed form".to_string()
+    } else {
+        format!("closed form, {trials} trials")
+    };
+    let mut t = Table::new(
+        &format!("Resilience: availability-adjusted time-to-train ({source})"),
+        &[
+            "Config",
+            "Passage eff TTT",
+            "avail",
+            "Electr-144 eff TTT",
+            "avail",
+            "mc mean (P / E)",
+            "healthy speedup",
+            "adjusted speedup",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            format!("Config {}", r.config),
+            fmt_ttt(r.passage.expected.effective_ttt),
+            format!("{:.1}%", 100.0 * r.passage.expected.availability),
+            fmt_ttt(r.electrical.expected.effective_ttt),
+            format!("{:.1}%", 100.0 * r.electrical.expected.availability),
+            if r.passage.trials == 0 {
+                "—".to_string() // closed form only: no independent MC ran
+            } else {
+                format!(
+                    "{} / {}",
+                    fmt_ttt(r.passage.mc_mean_ttt),
+                    fmt_ttt(r.electrical.mc_mean_ttt)
+                )
+            },
+            fmt_ratio(r.healthy_speedup()),
+            fmt_ratio(r.adjusted_speedup()),
+        ]);
+    }
+    t
+}
+
+/// The §III.d artifact: what laser placement alone costs in effective TTT
+/// on otherwise identical hardware.
+pub fn serviceability_table(rows: &[Assessment]) -> Table {
+    let mut t = Table::new(
+        "Serviceability: laser placement on one 512-GPU pod (Config 4)",
+        &[
+            "Link design",
+            "tray events/yr",
+            "tray MTBF",
+            "ckpt interval",
+            "eff TTT",
+            "TTT lost",
+            "avail",
+        ],
+    );
+    for a in rows {
+        t.row(&[
+            a.fabric.clone(),
+            format!("{:.1}", a.tray_per_year),
+            fmt_ttt(a.expected.tray_mtbf_h * 3600.0),
+            fmt_ttt(a.expected.checkpoint_interval_s),
+            fmt_ttt(a.expected.effective_ttt),
+            fmt_ttt(a.ttt_lost_s()),
+            format!("{:.2}%", 100.0 * a.expected.availability),
+        ]);
+    }
+    t
+}
+
+/// Detailed per-assessment table (the `lumos resilience --cluster ...`
+/// payload): one row per config.
+pub fn assessment_table(rows: &[Assessment]) -> Table {
+    let (cluster, fabric) = rows
+        .first()
+        .map(|a| (a.cluster.clone(), a.fabric.clone()))
+        .unwrap_or_default();
+    let mut t = Table::new(
+        &format!("Resilience: {cluster} under {fabric}"),
+        &[
+            "Config",
+            "healthy TTT",
+            "degr up/out step",
+            "tray MTBF",
+            "eff TTT",
+            "mc mean",
+            "mc min..max",
+            "avail",
+        ],
+    );
+    for a in rows {
+        t.row(&[
+            a.config_name.clone(),
+            fmt_ttt(a.steps.healthy_ttt),
+            format!("{:.3}x/{:.3}x", a.steps.up_ratio(), a.steps.out_ratio()),
+            fmt_ttt(a.expected.tray_mtbf_h * 3600.0),
+            fmt_ttt(a.expected.effective_ttt),
+            fmt_ttt(a.mc_mean_ttt),
+            format!("{}..{}", fmt_ttt(a.mc_min_ttt), fmt_ttt(a.mc_max_ttt)),
+            format!("{:.2}%", 100.0 * a.expected.availability),
+        ]);
+    }
+    t
+}
+
+/// JSON number, or `null` for non-finite values (divergent regimes) — the
+/// shared serialization rule for effective-TTT fields.
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Machine-readable form of one assessment (deterministic serialization;
+/// divergent values serialize as `null`).
+pub fn assessment_json(a: &Assessment) -> Json {
+    Json::obj(vec![
+        ("cluster", Json::str(&a.cluster)),
+        ("config", Json::str(&a.config_name)),
+        ("fabric", Json::str(&a.fabric)),
+        ("healthy_ttt_s", Json::num(a.steps.healthy_ttt)),
+        ("healthy_step_s", Json::num(a.steps.healthy_step)),
+        ("degraded_up_step_ratio", Json::num(a.steps.up_ratio())),
+        ("degraded_out_step_ratio", Json::num(a.steps.out_ratio())),
+        ("effective_ttt_s", num_or_null(a.expected.effective_ttt)),
+        ("availability", Json::num(a.expected.availability)),
+        ("checkpoint_interval_s", num_or_null(a.expected.checkpoint_interval_s)),
+        ("expected_slowdown", Json::num(a.expected.expected_slowdown)),
+        ("degraded_fraction_up", Json::num(a.expected.degraded_fraction_up)),
+        ("degraded_fraction_out", Json::num(a.expected.degraded_fraction_out)),
+        ("tray_mtbf_h", num_or_null(a.expected.tray_mtbf_h)),
+        ("tray_events_per_year", Json::num(a.tray_per_year)),
+        ("link_mtbf_h", Json::num(a.link_mtbf_h)),
+        (
+            "mc",
+            Json::obj(vec![
+                ("trials", Json::num(a.trials as f64)),
+                ("mean_ttt_s", num_or_null(a.mc_mean_ttt)),
+                ("min_ttt_s", num_or_null(a.mc_min_ttt)),
+                ("max_ttt_s", num_or_null(a.mc_max_ttt)),
+            ]),
+        ),
+    ])
+}
+
+/// Machine-readable form of the paired headline run
+/// (`lumos resilience --json`).
+pub fn paired_json(rows: &[PairedRow], seed: u64, trials: usize) -> Json {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("config", Json::num(r.config as f64)),
+                ("passage", assessment_json(&r.passage)),
+                ("electrical", assessment_json(&r.electrical)),
+                ("healthy_speedup", Json::num(r.healthy_speedup())),
+                ("adjusted_speedup", num_or_null(r.adjusted_speedup())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("seed", Json::num(seed as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_rates_compose_into_cluster_rates() {
+        let fab = FabricReliability::passage();
+        // 72 external-laser links (2150 field FIT each) + 2 pluggables
+        // (4100 field FIT each) per GPU at 32k GPUs ≈ 5.3 field events/h.
+        let up = fab.field_rate_up_per_hour(32_768);
+        let out = fab.field_rate_out_per_hour(32_768);
+        assert!((up - 5.07).abs() < 0.02, "{up}");
+        assert!((out - 0.269).abs() < 0.01, "{out}");
+        // tray events stay rare: co-packaged PIC+SerDes only.
+        let tray = fab.tray_rate_per_hour(32_768);
+        assert!((tray - 0.0728).abs() < 0.001, "{tray}");
+        // integrated lasers make trays ~65x more frequent
+        let cpo = FabricReliability::cpo_integrated().tray_rate_per_hour(32_768);
+        assert!(cpo > 60.0 * tray, "{cpo} vs {tray}");
+    }
+
+    #[test]
+    fn default_mapping_covers_paper_and_pod_scales() {
+        let w = Workload::paper_gpt_4p7t(4);
+        let paper = default_mapping(&w, &Cluster::passage_512(32_768)).unwrap();
+        assert_eq!(paper.par, Parallelism::paper());
+        let pod = default_mapping(&w, &Cluster::custom(512, 512, 32_000.0)).unwrap();
+        assert_eq!((pod.par.tp, pod.par.pp, pod.par.dp), (16, 1, 32));
+        assert!(default_mapping(&w, &Cluster::custom(24, 8, 32_000.0)).is_err());
+    }
+
+    #[test]
+    fn assessment_is_byte_identical_across_job_counts() {
+        let knobs = PerfKnobs::default();
+        let cache = ClusterCache::new();
+        let spec = ResilienceSpec { trials: 32, ..ResilienceSpec::default() };
+        let serial = paper_pairs(&[4], &knobs, &spec, 1, &cache);
+        let parallel = paper_pairs(&[4], &knobs, &spec, 4, &cache);
+        assert_eq!(
+            speedup_table(&serial).render(),
+            speedup_table(&parallel).render()
+        );
+        assert_eq!(
+            serial[0].passage.mc_mean_ttt.to_bits(),
+            parallel[0].passage.mc_mean_ttt.to_bits()
+        );
+        assert_eq!(
+            paired_json(&serial, 7, 32).to_string_pretty(),
+            paired_json(&parallel, 7, 32).to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn artifacts_render() {
+        let knobs = PerfKnobs::default();
+        let cache = ClusterCache::new();
+        let spec = ResilienceSpec { trials: 0, ..ResilienceSpec::default() };
+        let rows = paper_pairs(&[1, 4], &knobs, &spec, 1, &cache);
+        let r = speedup_table(&rows).render();
+        assert!(r.contains("adjusted speedup"), "{r}");
+        assert!(r.contains("Config 4"), "{r}");
+        let pods = pod_serviceability(&knobs, &spec, 1, &cache);
+        let s = serviceability_table(&pods).render();
+        assert!(s.contains("CPO (integrated laser)"), "{s}");
+        assert!(s.contains("tray events/yr"), "{s}");
+        let a = assessment_table(&pods).render();
+        assert!(a.contains("mc mean"), "{a}");
+        let j = assessment_json(&pods[0]).to_string_pretty();
+        assert!(j.contains("\"effective_ttt_s\""), "{j}");
+    }
+}

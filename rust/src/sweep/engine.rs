@@ -163,36 +163,50 @@ pub fn run_grid_with_cache(
     workers: usize,
     cache: &ClusterCache,
 ) -> Vec<PerfReport> {
-    let workers = workers.clamp(1, jobs.len().max(1));
+    run_indexed(jobs.len(), workers, |i| jobs[i].run(cache))
+}
+
+/// Execute `job(0..n)` on `workers` threads and return the results **in
+/// index order** regardless of completion order — the generic core behind
+/// [`run_grid`] (perf-model grids) and the [`crate::resilience`] Monte
+/// Carlo trial pool. `job` must be pure per index; `workers <= 1` (or a
+/// single item) runs inline with no threads spawned.
+pub fn run_indexed<R, F>(n: usize, workers: usize, job: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
     if workers == 1 {
-        return jobs.iter().map(|j| j.run(cache)).collect();
+        return (0..n).map(&job).collect();
     }
 
-    // An atomic next-job counter feeds the pool; workers tag results with
-    // the job index and send them back over a channel so the main thread
-    // can restore deterministic order.
+    // An atomic next-index counter feeds the pool; workers tag results
+    // with their index and send them back over a channel so the main
+    // thread can restore deterministic order.
     let next = AtomicUsize::new(0);
-    let (res_tx, res_rx) = mpsc::channel::<(usize, PerfReport)>();
+    let (res_tx, res_rx) = mpsc::channel::<(usize, R)>();
 
-    let mut out: Vec<Option<PerfReport>> = jobs.iter().map(|_| None).collect();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let res_tx = res_tx.clone();
             let next = &next;
+            let job = &job;
             scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
+                if i >= n {
                     break;
                 }
-                let report = jobs[i].run(cache);
-                if res_tx.send((i, report)).is_err() {
+                let result = job(i);
+                if res_tx.send((i, result)).is_err() {
                     break;
                 }
             });
         }
         drop(res_tx);
-        for (i, report) in res_rx {
-            out[i] = Some(report);
+        for (i, result) in res_rx {
+            out[i] = Some(result);
         }
     });
     out.into_iter().map(|r| r.expect("worker dropped a job")).collect()
@@ -274,6 +288,15 @@ mod tests {
         for (s, p) in serial.iter().zip(&par) {
             assert_eq!(s.step_time.to_bits(), p.step_time.to_bits());
         }
+    }
+
+    #[test]
+    fn run_indexed_preserves_index_order_for_any_worker_count() {
+        let serial = run_indexed(37, 1, |i| i * i);
+        for workers in [2, 4, 9] {
+            assert_eq!(serial, run_indexed(37, workers, |i| i * i), "workers={workers}");
+        }
+        assert!(run_indexed(0, 4, |i| i).is_empty());
     }
 
     #[test]

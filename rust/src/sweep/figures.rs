@@ -552,6 +552,24 @@ fn gap_table_from(outs: &[planner::PlanOutcome]) -> Table {
     t
 }
 
+/// Resilience artifacts (`lumos figures --resilience`): the
+/// availability-adjusted Passage-vs-Electrical-144 speedup per Table IV
+/// config, and the integrated-vs-external-laser effective-TTT delta on one
+/// pod (the §III.d serviceability argument as a number). Closed-form only
+/// (deterministic, no Monte Carlo seed).
+pub fn resilience_tables(knobs: &PerfKnobs) -> (Table, Table) {
+    resilience_tables_cached(knobs, &ClusterCache::new())
+}
+
+/// [`resilience_tables`] against a caller-owned cluster cache.
+pub fn resilience_tables_cached(knobs: &PerfKnobs, cache: &ClusterCache) -> (Table, Table) {
+    use crate::resilience::{self, ResilienceSpec};
+    let spec = ResilienceSpec { trials: 0, ..ResilienceSpec::default() };
+    let pairs = resilience::paper_pairs(&[1, 2, 3, 4], knobs, &spec, 1, cache);
+    let pods = resilience::pod_serviceability(knobs, &spec, 1, cache);
+    (resilience::speedup_table(&pairs), resilience::serviceability_table(&pods))
+}
+
 /// Analytical-vs-simulated step-time gap on the §VI clusters (Config 4,
 /// paper mapping): every closed-form headline number next to its
 /// discrete-event counterpart — the `lumos figures --validate` artifact.
@@ -674,6 +692,7 @@ pub fn render_all_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -
     out.push_str(&breakdown_table_cached(knobs, cache).render());
     out.push('\n');
     let (planner_best, planner_gap) = planner_tables_cached(knobs, jobs, cache);
+    let (resilience_speedup, resilience_service) = resilience_tables_cached(knobs, cache);
     for t in [
         pod_size_sweep_cached(knobs, jobs, cache),
         bandwidth_sweep_cached(knobs, jobs, cache),
@@ -681,6 +700,8 @@ pub fn render_all_cached(knobs: &PerfKnobs, jobs: usize, cache: &ClusterCache) -
         planner_best,
         planner_gap,
         validate_gap_table_cached(knobs, cache),
+        resilience_speedup,
+        resilience_service,
         topology_ablation(),
         routing_restriction_ablation(),
     ] {
@@ -747,11 +768,25 @@ mod tests {
         let knobs = PerfKnobs::default();
         let cache = ClusterCache::new();
         let _ = render_all_cached(&knobs, 2, &cache);
-        // Exactly 14 distinct clusters across every grid: the 3 §VI presets
-        // (fig10/11, granularity, planner tables) + 6 pod-sweep customs +
-        // 5 more bandwidth-sweep customs (512@32T is shared between the two
-        // sweeps). Each is built once for the whole command.
-        assert_eq!(cache.built(), 14);
+        // Exactly 15 distinct clusters across every grid: the 3 §VI presets
+        // (fig10/11, granularity, planner/resilience tables) + 6 pod-sweep
+        // customs + 5 more bandwidth-sweep customs (512@32T is shared
+        // between the two sweeps) + the single 512-GPU pod of the
+        // resilience serviceability scenario. Each is built once for the
+        // whole command.
+        assert_eq!(cache.built(), 15);
+    }
+
+    #[test]
+    fn resilience_tables_carry_the_serviceability_numbers() {
+        let (speedup, service) = resilience_tables(&PerfKnobs::default());
+        let r = speedup.render();
+        assert!(r.contains("adjusted speedup"), "{r}");
+        assert_eq!(r.lines().count(), 3 + 4); // title + header + sep + 4 configs
+        let s = service.render();
+        for needle in ["Passage (external laser)", "CPO (integrated laser)", "TTT lost"] {
+            assert!(s.contains(needle), "missing {needle}: {s}");
+        }
     }
 
     #[test]

@@ -109,7 +109,23 @@ pub fn simulate_step(
     map: &Mapping,
     knobs: &PerfKnobs,
 ) -> Result<TimelineReport, TimelineError> {
-    let dag = lower_step(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
+    simulate_step_with(w, cluster, map, knobs, |_| {})
+}
+
+/// [`simulate_step`] with a hook that may edit the lowered slice network
+/// before simulation — the fail-in-place path: [`crate::resilience`]
+/// removes a failed link's capacity
+/// ([`crate::netsim::Network::scale_node_links`]) and re-simulates the step
+/// on the degraded fabric.
+pub fn simulate_step_with(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    tweak: impl FnOnce(&mut crate::netsim::Network),
+) -> Result<TimelineReport, TimelineError> {
+    let mut dag = lower_step(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
+    tweak(&mut dag.net);
     let result = simulate_dag(&dag.net, &dag.nodes);
 
     // Attribution walk over the stage-0 chain: the chain is serialized, so
@@ -297,6 +313,21 @@ mod tests {
         let frac = p.bubble / pipelined;
         let model = v.analytical.breakdown.bubble_fraction();
         assert!((frac - model).abs() < 0.05, "sim bubble {frac} vs 1F1B {model}");
+    }
+
+    #[test]
+    fn degraded_slice_network_slows_the_simulated_step() {
+        let w = Workload::paper_gpt_4p7t(4);
+        let c = Cluster::passage_512(32_768);
+        let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+        let knobs = PerfKnobs::default();
+        let healthy = simulate_step(&w, &c, &m, &knobs).unwrap();
+        // GPU 0 (stage 0, rank 0) loses half its scale-up lanes: every
+        // barrier collective it participates in slows to its rate.
+        let degraded =
+            simulate_step_with(&w, &c, &m, &knobs, |net| net.scale_node_links(0, 0.5, 1.0))
+                .unwrap();
+        assert!(degraded.step_time > healthy.step_time);
     }
 
     #[test]

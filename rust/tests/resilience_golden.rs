@@ -1,0 +1,178 @@
+//! Goldens for the `resilience` subsystem (ISSUE 4 acceptance): the
+//! paper's serviceability argument (§II.C.3, §III.d) asserted as numbers.
+//!
+//! - Laser placement: with default FIT rates and repair times,
+//!   integrated-laser CPO loses strictly more effective time-to-train than
+//!   external-laser Passage at equal bandwidth on the 512-GPU pod, and at
+//!   the full 32k-GPU scale the integrated-laser design diverges outright
+//!   (tray MTBF ≈ 13 min — the arXiv 2603.21313 "wrong problem" regime).
+//! - The headline survives the accounting: the availability-adjusted
+//!   Passage-vs-Electrical-144 speedup is **wider** than the healthy one
+//!   on every Table IV config and stays ≥ 2.5× where the paper's 2.7×
+//!   headline lives (Config 4 adjusts to ≈ 3.2×).
+//! - Determinism: `lumos resilience` output is byte-identical across
+//!   `--jobs` and reproducible from `--seed`.
+
+use lumos::model::Workload;
+use lumos::perf::PerfKnobs;
+use lumos::resilience::{
+    self, assess, default_mapping, paper_pairs, pod_serviceability, speedup_table,
+    FabricReliability, ResilienceSpec,
+};
+use lumos::sweep::engine::{ClusterCache, ClusterKey};
+
+fn closed_form_spec() -> ResilienceSpec {
+    ResilienceSpec { trials: 0, ..ResilienceSpec::default() }
+}
+
+#[test]
+fn integrated_laser_loses_strictly_more_ttt_on_the_pod() {
+    // Equal bandwidth, equal performance — only the laser placement
+    // differs. The external-laser design loses ~1 day of effective TTT to
+    // failures on one 512-GPU pod; the integrated-laser design loses >10x
+    // that because every laser failure is a tray event.
+    let rows =
+        pod_serviceability(&PerfKnobs::default(), &closed_form_spec(), 1, &ClusterCache::new());
+    let ext = &rows[0]; // Passage (external laser)
+    let cpo = &rows[1]; // CPO (integrated laser)
+    assert_eq!(ext.steps.healthy_ttt.to_bits(), cpo.steps.healthy_ttt.to_bits());
+    assert!(ext.expected.effective_ttt.is_finite());
+    assert!(cpo.expected.effective_ttt.is_finite());
+    assert!(cpo.expected.effective_ttt > ext.expected.effective_ttt);
+    assert!(
+        cpo.ttt_lost_s() > 5.0 * ext.ttt_lost_s(),
+        "cpo lost {} vs external lost {}",
+        cpo.ttt_lost_s(),
+        ext.ttt_lost_s()
+    );
+    // the mechanism: tray events, not total failure count
+    assert!(cpo.tray_per_year > 50.0 * ext.tray_per_year);
+}
+
+#[test]
+fn integrated_laser_cpo_diverges_at_cluster_scale() {
+    // 32k GPUs x 72 links x integrated lasers: a tray event every ~13
+    // minutes destroys work faster than the job creates it.
+    let cache = ClusterCache::new();
+    let cluster = cache.get(&ClusterKey::Passage512);
+    let w = Workload::paper_gpt_4p7t(4);
+    let map = default_mapping(&w, &cluster).unwrap();
+    let a = assess(
+        &w,
+        &cluster,
+        &map,
+        &PerfKnobs::default(),
+        &FabricReliability::cpo_integrated(),
+        &closed_form_spec(),
+        1,
+    );
+    assert!(a.expected.effective_ttt.is_infinite(), "{}", a.expected.effective_ttt);
+    assert_eq!(a.expected.availability, 0.0);
+    assert!(a.expected.tray_mtbf_h < 0.5, "{}", a.expected.tray_mtbf_h);
+}
+
+#[test]
+fn adjusted_speedup_holds_the_headline_on_all_configs() {
+    let rows = paper_pairs(
+        &[1, 2, 3, 4],
+        &PerfKnobs::default(),
+        &closed_form_spec(),
+        2,
+        &ClusterCache::new(),
+    );
+    assert_eq!(rows.len(), 4);
+    for r in &rows {
+        // failures cost both fabrics time...
+        assert!(r.passage.expected.effective_ttt > r.passage.steps.healthy_ttt);
+        assert!(r.electrical.expected.effective_ttt > r.electrical.steps.healthy_ttt);
+        // ...but the electrical alternative pays more on every config: its
+        // spilled EP all-to-all rides exactly the links that degrade, so
+        // the availability accounting *widens* the Passage advantage.
+        assert!(
+            r.adjusted_speedup() > r.healthy_speedup(),
+            "config {}: adjusted {} vs healthy {}",
+            r.config,
+            r.adjusted_speedup(),
+            r.healthy_speedup()
+        );
+    }
+    // the Config 4 headline: 2.71x healthy, >= 2.5x (≈3.2x) adjusted
+    let c4 = &rows[3];
+    assert!((c4.healthy_speedup() - 2.7).abs() < 0.15, "{}", c4.healthy_speedup());
+    assert!(c4.adjusted_speedup() >= 2.5, "{}", c4.adjusted_speedup());
+    assert!(c4.adjusted_speedup() > 3.0, "{}", c4.adjusted_speedup());
+}
+
+#[test]
+fn monte_carlo_agrees_with_the_closed_form() {
+    let spec = ResilienceSpec { trials: 48, ..ResilienceSpec::default() };
+    let rows = paper_pairs(&[4], &PerfKnobs::default(), &spec, 2, &ClusterCache::new());
+    for a in [&rows[0].passage, &rows[0].electrical] {
+        let cf = a.expected.effective_ttt;
+        assert!(
+            (a.mc_mean_ttt - cf).abs() / cf < 0.15,
+            "{}: mc {} vs closed form {}",
+            a.cluster,
+            a.mc_mean_ttt,
+            cf
+        );
+        assert!(a.mc_min_ttt <= a.mc_mean_ttt && a.mc_mean_ttt <= a.mc_max_ttt);
+        // failures make every trial slower than the healthy run
+        assert!(a.mc_min_ttt > a.steps.healthy_ttt);
+    }
+}
+
+#[test]
+fn output_is_byte_identical_across_jobs_and_reproducible_from_seed() {
+    let knobs = PerfKnobs::default();
+    let cache = ClusterCache::new();
+    let spec = ResilienceSpec { seed: 7, trials: 64, ..ResilienceSpec::default() };
+    let serial = paper_pairs(&[4], &knobs, &spec, 1, &cache);
+    let parallel = paper_pairs(&[4], &knobs, &spec, 4, &cache);
+    assert_eq!(speedup_table(&serial).render(), speedup_table(&parallel).render());
+    assert_eq!(
+        resilience::paired_json(&serial, 7, 64).to_string_pretty(),
+        resilience::paired_json(&parallel, 7, 64).to_string_pretty()
+    );
+    // same seed reproduces bit-exactly; a different seed does not
+    let again = paper_pairs(&[4], &knobs, &spec, 2, &cache);
+    assert_eq!(
+        serial[0].passage.mc_mean_ttt.to_bits(),
+        again[0].passage.mc_mean_ttt.to_bits()
+    );
+    let other_spec = ResilienceSpec { seed: 8, trials: 64, ..ResilienceSpec::default() };
+    let other = paper_pairs(&[4], &knobs, &other_spec, 2, &cache);
+    assert_ne!(
+        serial[0].passage.mc_mean_ttt.to_bits(),
+        other[0].passage.mc_mean_ttt.to_bits()
+    );
+}
+
+#[test]
+fn degraded_simulation_confirms_the_analytical_blast_radius() {
+    // The timeline cross-check of the degrade path: a failed scale-out
+    // pluggable re-simulated on the step DAG hurts the 144-pod electrical
+    // fabric (spilled EP) far more than Passage (in-pod EP).
+    use lumos::model::MoeConfig;
+    use lumos::parallel::{Mapping, Parallelism};
+    use lumos::resilience::degrade::{simulate_degraded_step, DegradedMode};
+    use lumos::timeline::simulate_step;
+    use lumos::topology::cluster::Cluster;
+
+    let knobs = PerfKnobs::default();
+    let w = Workload::paper_gpt_4p7t(4);
+    let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+    let ratio = |cluster: &Cluster| {
+        let healthy = simulate_step(&w, cluster, &m, &knobs).unwrap().step_time;
+        let degraded =
+            simulate_degraded_step(&w, cluster, &m, &knobs, DegradedMode::ScaleOutLink, 0.5)
+                .unwrap()
+                .step_time;
+        degraded / healthy
+    };
+    let psg = ratio(&Cluster::passage_512(32_768));
+    let alt = ratio(&Cluster::electrical_144(32_256));
+    assert!(alt > psg, "electrical degraded ratio {alt} vs passage {psg}");
+    assert!(alt > 1.1, "{alt}");
+    assert!(psg < 1.1, "{psg}");
+}

@@ -1,0 +1,166 @@
+//! Property tests for the resilience substrate (ISSUE 4 satellite):
+//! `hw::reliability` FIT-composition edge cases and the `util::rng`
+//! determinism contract the Monte Carlo engine's `--jobs` invariance
+//! rests on.
+
+use lumos::hw::reliability::{FitRates, LinkReliability, Replaceable};
+use lumos::prop_assert;
+use lumos::resilience::{monte_carlo_trial, GoodputInputs, RepairModel};
+use lumos::util::prop::check;
+use lumos::util::rng::Rng;
+
+fn random_link(g: &mut lumos::util::prop::Gen) -> LinkReliability {
+    LinkReliability {
+        name: "prop",
+        lasers_per_link: g.usize(0, 8) as f64,
+        laser_location: if g.bool() { Replaceable::FieldUnit } else { Replaceable::GpuTray },
+        connectors_per_link: g.usize(0, 4) as f64,
+        fits: FitRates {
+            laser: g.f64(0.0, 1000.0),
+            pic: g.f64(0.0, 100.0),
+            electrical: g.f64(0.0, 100.0),
+            connector: g.f64(0.0, 200.0),
+        },
+    }
+}
+
+#[test]
+fn link_fit_is_monotone_in_every_fit_rate() {
+    check("link_fit monotone", 256, |g| {
+        let base = random_link(g);
+        let delta = g.f64(0.0, 500.0);
+        let field = g.usize(0, 3);
+        let mut bumped = base.clone();
+        match field {
+            0 => bumped.fits.laser += delta,
+            1 => bumped.fits.pic += delta,
+            2 => bumped.fits.electrical += delta,
+            _ => bumped.fits.connector += delta,
+        }
+        prop_assert!(
+            bumped.link_fit() >= base.link_fit(),
+            "field {field} bump by {delta} lowered link_fit: {} -> {}",
+            base.link_fit(),
+            bumped.link_fit()
+        );
+        // tray impact is monotone too (it sums a subset of the terms)
+        prop_assert!(
+            bumped.tray_impact_fit() >= base.tray_impact_fit(),
+            "tray impact dropped on bump"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn tray_impact_never_exceeds_link_fit() {
+    check("tray <= link", 256, |g| {
+        let l = random_link(g);
+        prop_assert!(
+            l.tray_impact_fit() <= l.link_fit() + 1e-12,
+            "tray {} > link {}",
+            l.tray_impact_fit(),
+            l.link_fit()
+        );
+        // and the field/tray split partitions the total exactly
+        let total = l.field_impact_fit() + l.tray_impact_fit();
+        prop_assert!(
+            (total - l.link_fit()).abs() <= 1e-9 * l.link_fit().max(1.0),
+            "partition broken: {total} vs {}",
+            l.link_fit()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_component_rates_are_degenerate_not_negative() {
+    let zero = LinkReliability {
+        name: "zero",
+        lasers_per_link: 0.0,
+        laser_location: Replaceable::GpuTray,
+        connectors_per_link: 0.0,
+        fits: FitRates { laser: 0.0, pic: 0.0, electrical: 0.0, connector: 0.0 },
+    };
+    assert_eq!(zero.link_fit(), 0.0);
+    assert_eq!(zero.tray_impact_fit(), 0.0);
+    assert_eq!(zero.field_impact_fit(), 0.0);
+    // copper: lasers contribute nothing even at GpuTray placement
+    let mut cu = LinkReliability::copper();
+    cu.laser_location = Replaceable::GpuTray;
+    assert_eq!(cu.tray_impact_fit(), cu.fits.electrical);
+}
+
+#[test]
+fn forked_streams_are_independent_of_consumption_order() {
+    // The resilience engine forks one stream per trial up front and runs
+    // trials on a worker pool: a stream's output must not depend on when
+    // (or in what order) the streams are consumed.
+    check("fork order independence", 64, |g| {
+        let seed = g.u64(u64::MAX);
+        let n = g.usize(2, 24);
+        let fork_all = |seed: u64| -> Vec<Rng> {
+            let mut base = Rng::new(seed);
+            (0..n).map(|t| base.fork(t as u64)).collect()
+        };
+        let drain = |rng: &Rng| -> Vec<u64> {
+            let mut r = rng.clone();
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let streams = fork_all(seed);
+        let forward: Vec<Vec<u64>> = streams.iter().map(drain).collect();
+        let mut backward: Vec<Vec<u64>> = streams.iter().rev().map(drain).collect();
+        backward.reverse();
+        prop_assert!(forward == backward, "stream output depends on consumption order");
+        // interleaved consumption does not couple streams either
+        let mut interleaved: Vec<Vec<u64>> = streams.iter().map(|_| Vec::new()).collect();
+        for round in 0..16 {
+            for (i, s) in streams.iter().enumerate() {
+                let mut r = s.clone();
+                for _ in 0..round {
+                    r.next_u64();
+                }
+                interleaved[i].push(r.next_u64());
+            }
+        }
+        for (i, seq) in interleaved.iter().enumerate() {
+            prop_assert!(*seq == forward[i][..seq.len()], "interleaving changed stream {i}");
+        }
+        // distinct trials see distinct streams
+        prop_assert!(forward[0] != forward[1], "fork produced identical streams");
+        Ok(())
+    });
+}
+
+#[test]
+fn monte_carlo_trials_are_order_independent() {
+    // End-to-end form of the contract: per-trial effective TTTs are
+    // identical whether trials run 0..n or n..0 — the property `--jobs N`
+    // byte-identity reduces to.
+    check("trial order independence", 16, |g| {
+        let inp = GoodputInputs {
+            healthy_step: 1.0,
+            degraded_up_step: 1.0 + g.f64(0.0, 0.1),
+            degraded_out_step: 1.0 + g.f64(0.0, 1.0),
+            healthy_ttt: g.f64(1.0e4, 3.0e5),
+            dp: g.usize(1, 512),
+            lam_up_field_h: g.f64(0.0, 6.0),
+            lam_out_field_h: g.f64(0.0, 0.5),
+            lam_tray_h: g.f64(0.0, 0.1),
+            repair: RepairModel::default(),
+        };
+        let seed = g.u64(u64::MAX);
+        let n = 8usize;
+        let mut base = Rng::new(seed);
+        let streams: Vec<Rng> = (0..n).map(|t| base.fork(t as u64)).collect();
+        let run = |i: usize| {
+            let mut rng = streams[i].clone();
+            monte_carlo_trial(&inp, &mut rng)
+        };
+        let forward: Vec<u64> = (0..n).map(|i| run(i).to_bits()).collect();
+        let mut backward: Vec<u64> = (0..n).rev().map(|i| run(i).to_bits()).collect();
+        backward.reverse();
+        prop_assert!(forward == backward, "trial results depend on execution order");
+        Ok(())
+    });
+}
