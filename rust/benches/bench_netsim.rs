@@ -1,17 +1,35 @@
 //! Bench: the flow-level network simulator — events/second on collective
 //! replays at pod scale, the substrate cost of validating the analytical
-//! model. Every case runs twice: `ref` is the original full-recompute
-//! progressive filling ([`simulate_reference`]), `inc` the incremental
-//! component-local engine behind [`simulate`]/[`replay_schedule`] — the
-//! before/after pair for the netsim fast-path optimisation.
+//! model. Every case runs twice where the reference is tractable: `ref` is
+//! the original full-recompute progressive filling ([`simulate_reference`]
+//! / [`simulate_dag_reference`]), `inc` the incremental component-local
+//! engine behind [`simulate`]/[`replay_schedule`]/[`simulate_dag`] — the
+//! before/after pairs for the netsim fast-path optimisations.
+//!
+//! The dependency-engine series lower real timeline step DAGs (the §VI
+//! paper mapping, plus a deep-PP × fine-microbatch mapping from the region
+//! `timeline::MAX_DAG_NODES` used to reject) — the workload whose cost
+//! decides whether simulation can sit inside the planner's search loop.
+//!
+//! On exit the run writes a machine-readable baseline
+//! (`BENCH_netsim.json`, path override via `LUMOS_BENCH_JSON`) with every
+//! series plus the derived inc-vs-ref speedups, so the perf trajectory is
+//! recorded run over run.
 //!
 //! Run: `cargo bench --bench bench_netsim`
 
 use lumos::collectives as coll;
+use lumos::model::{MoeConfig, Workload};
 use lumos::netsim::{
-    replay_schedule, replay_schedule_dependent, simulate, simulate_reference, Flow, Network,
+    replay_schedule, replay_schedule_dependent, simulate, simulate_dag, simulate_dag_reference,
+    simulate_reference, Flow, Network,
 };
+use lumos::parallel::{Mapping, Parallelism};
+use lumos::perf::PerfKnobs;
+use lumos::timeline::lower_step;
+use lumos::topology::cluster::Cluster;
 use lumos::util::bench::{black_box, Bencher};
+use lumos::util::json::Json;
 
 /// Multi-step schedule whose steps touch disjoint rank groups — the case
 /// where bulk-synchronous barriers serialize work the dependency engine
@@ -158,4 +176,91 @@ fn main() {
             black_box(simulate(&net, &flows));
         });
     }
+
+    // ---- dependency engine: incremental vs full-recompute oracle ----------
+    // rank-local staggered replay: admissions land mid-flight, completions
+    // cascade — the dep engine's general case, small enough for the oracle
+    let net = Network::cluster(16, 4, 800.0, 100.0, 2.0, 5e-6);
+    let mut ops = Vec::new();
+    for step in 0..8usize {
+        for s in 0..16usize {
+            let d = (s * 5 + step * 3 + 1) % 16;
+            ops.push(coll::CommOp {
+                step,
+                src: s,
+                dst: d,
+                bytes: 1e6 * (1 + (s * 7 + d * 3 + step) % 11) as f64,
+            });
+        }
+    }
+    let sched = coll::CommSchedule::new("staggered-dep", 16, ops);
+    let dag = lumos::netsim::schedule_rank_dag(&sched);
+    let nn = dag.len() as f64;
+    b.bench_items("dep staggered replay (ref)", nn, "node", || {
+        black_box(simulate_dag_reference(&net, &dag));
+    });
+    b.bench_items("dep staggered replay (inc)", nn, "node", || {
+        black_box(simulate_dag(&net, &dag));
+    });
+
+    // the §VI paper-mapping step DAG (~18k nodes): the workload `lumos
+    // validate` and the resilience degraded re-simulation pay per call —
+    // the headline inc-vs-ref pair (BENCH_netsim.json `derived` block)
+    let knobs = PerfKnobs::default();
+    let w = Workload::paper_gpt_4p7t(4);
+    let cluster = Cluster::passage_512(32_768);
+    let paper = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+    let step = lower_step(&w, &cluster, &paper, &knobs).expect("paper mapping lowers");
+    let nn = step.nodes.len() as f64;
+    b.bench_items("dep step-dag paper 18k (ref)", nn, "node", || {
+        black_box(simulate_dag_reference(&step.net, &step.nodes));
+    });
+    b.bench_items("dep step-dag paper 18k (inc)", nn, "node", || {
+        black_box(simulate_dag(&step.net, &step.nodes));
+    });
+
+    // deep-PP × fine-microbatch (~229k nodes, estimate 305k — from the
+    // region the old MAX_DAG_NODES=300k cap rejected): the large-DAG
+    // before/after pair. Hundreds of flows stay concurrently active across
+    // 64 stages, so the reference pays a full allocation-heavy recompute
+    // per event while the incremental engine re-fills only the touched
+    // stage's component.
+    let deep = Mapping::try_with_microbatch(
+        Parallelism { tp: 8, pp: 64, dp: 64 },
+        MoeConfig::paper_config(4),
+        1,
+    )
+    .unwrap();
+    let step_deep = lower_step(&w, &cluster, &deep, &knobs).expect("deep mapping lowers");
+    let nn = step_deep.nodes.len() as f64;
+    b.bench_items("dep step-dag deep-pp (ref)", nn, "node", || {
+        black_box(simulate_dag_reference(&step_deep.net, &step_deep.nodes));
+    });
+    b.bench_items("dep step-dag deep-pp (inc)", nn, "node", || {
+        black_box(simulate_dag(&step_deep.net, &step_deep.nodes));
+    });
+
+    // ---- machine-readable baseline ----------------------------------------
+    let speedup = |pair: &str| -> Json {
+        match (b.mean_of(&format!("{pair} (ref)")), b.mean_of(&format!("{pair} (inc)"))) {
+            (Some(r), Some(i)) if i > 0.0 => Json::num(r / i),
+            _ => Json::Null,
+        }
+    };
+    let derived = Json::obj(vec![
+        ("dep_staggered_speedup", speedup("dep staggered replay")),
+        ("dep_step_dag_paper_speedup", speedup("dep step-dag paper 18k")),
+        ("dep_step_dag_deep_speedup", speedup("dep step-dag deep-pp")),
+        ("staggered_mesh_64_speedup", speedup("staggered mesh n=64")),
+        ("deep_pp_nodes", Json::num(step_deep.nodes.len() as f64)),
+    ]);
+    let out = Json::obj(vec![
+        ("bench", Json::str("netsim")),
+        ("series", b.to_json().get("series").clone()),
+        ("derived", derived),
+    ]);
+    let path =
+        std::env::var("LUMOS_BENCH_JSON").unwrap_or_else(|_| "BENCH_netsim.json".to_string());
+    std::fs::write(&path, out.to_string_pretty() + "\n").expect("write bench baseline");
+    println!("  baseline written to {path}");
 }

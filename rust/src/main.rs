@@ -10,11 +10,14 @@
 //!   for machine-readable output)
 //! - `validate` discrete-event simulation of a full training step vs the
 //!   analytical model (`--plan-top K` cross-checks the planner's best
-//!   mappings; `--json` for machine-readable output)
+//!   mappings; `--deep` sweeps the deep-PP × fine-microbatch grid the
+//!   pre-incremental engine rejected; `--json` for machine-readable
+//!   output)
 //! - `resilience` failure-aware effective time-to-train: FIT rates →
 //!   failure traces → degraded fabrics → availability-adjusted goodput
 //!   (`--seed`/`--trials` seeded Monte Carlo, byte-identical for any
-//!   `--jobs`)
+//!   `--jobs`; `--degrade simulated|analytical` picks timeline-measured
+//!   vs closed-form degraded-step pricing)
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
@@ -107,9 +110,19 @@ fn cli() -> Command {
             .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
             .opt_default("config", "MoE config index 1..4", "4")
             .opt_default("plan-top", "also validate the planner's top K mappings", "0")
+            .opt_default(
+                "deep-top",
+                "mappings per --deep grid (deep-PP region, smallest DAG first)",
+                "3",
+            )
             .opt_default("jobs", "worker threads for the planner scoring grid", "1")
             .opt("knobs", "JSON file with calibration knob overrides")
             .opt("csv", "also write the validation table to this CSV file")
+            .flag(
+                "deep",
+                "also validate the deep-PP x fine-microbatch grid the pre-incremental \
+                 engine rejected (DAG estimate > 300k nodes)",
+            )
             .flag("json", "machine-readable output (util::json, deterministic)"),
         )
         .sub(
@@ -127,6 +140,11 @@ fn cli() -> Command {
             .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
             .opt("config", "MoE config index 1..4 (default: all four)")
             .opt("tech", "passage | cpo | electrical | pluggable (default: by cluster)")
+            .opt_default(
+                "degrade",
+                "degraded-step pricing: simulated (timeline-measured ratios) | analytical",
+                "simulated",
+            )
             .opt_default("seed", "Monte Carlo seed", "7")
             .opt_default("trials", "Monte Carlo trials (0 = closed form only)", "128")
             .opt_default("jobs", "worker threads for the trial pool", "1")
@@ -465,7 +483,12 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         }
         let (scored, skipped) =
             planner::rerank_simulated(&outcome, rerank, &req.workload, &cluster, &knobs);
-        println!("{}", planner::rerank_table(&scored, skipped).render());
+        // skipped plans stay visible as table rows; the reasons go to
+        // stderr so stdout stays byte-identical across job counts
+        for line in planner::rerank_skip_lines(&skipped) {
+            eprintln!("{line}");
+        }
+        println!("{}", planner::rerank_table(&scored, &skipped).render());
     }
     write_csv(args, &table)
 }
@@ -495,6 +518,36 @@ fn validate_cmd(args: &Args) -> anyhow::Result<()> {
             timeline::validate_mapping(&workload, &cluster, &map, &knobs)
                 .map_err(|e| anyhow::anyhow!("paper mapping: {e}"))?,
         );
+    }
+
+    // The previously-rejected deep-PP × fine-microbatch region: every grid
+    // mapping's lowered DAG exceeds the pre-incremental 300k-node cap, so
+    // none of these could simulate before the dep engine went
+    // component-incremental.
+    if args.flag("deep") {
+        let deep_top = args.get_usize("deep-top").map_err(anyhow::Error::msg)?.unwrap_or(3);
+        let deep = timeline::deep_candidates(&workload, &cluster, deep_top);
+        anyhow::ensure!(
+            !deep.is_empty(),
+            "no feasible deep-PP mappings (DAG estimate > {} nodes) for this \
+             (workload, cluster) pair",
+            timeline::DEEP_REGION_MIN_NODES
+        );
+        for m in deep {
+            if rows.iter().any(|v: &timeline::Validation| v.mapping == m) {
+                continue;
+            }
+            rows.push(
+                timeline::validate_mapping(&workload, &cluster, &m, &knobs).map_err(|e| {
+                    anyhow::anyhow!(
+                        "deep mapping TP{}xPP{}xDP{}: {e}",
+                        m.par.tp,
+                        m.par.pp,
+                        m.par.dp
+                    )
+                })?,
+            );
+        }
     }
 
     // Cross-check the planner's best mappings on the same cluster.
@@ -537,13 +590,19 @@ fn validate_cmd(args: &Args) -> anyhow::Result<()> {
 
 fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
     use lumos::model::Workload;
-    use lumos::resilience::{self, FabricReliability, ResilienceSpec};
+    use lumos::resilience::{self, DegradeSource, FabricReliability, ResilienceSpec};
 
     let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(7) as u64;
     let trials = args.get_usize("trials").map_err(anyhow::Error::msg)?.unwrap_or(128);
     let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
     let knobs = knobs_from_args(args)?;
-    let spec = ResilienceSpec { seed, trials, ..ResilienceSpec::default() };
+    let degrade = match args.get("degrade") {
+        Some(name) => DegradeSource::from_cli_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown degrade mode '{name}' (have simulated, analytical)")
+        })?,
+        None => DegradeSource::Simulated,
+    };
+    let spec = ResilienceSpec { seed, trials, degrade, ..ResilienceSpec::default() };
     let cache = ClusterCache::new();
     let configs: Vec<usize> = match args.get_usize("config").map_err(anyhow::Error::msg)? {
         Some(c) => {
@@ -551,6 +610,18 @@ fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
             vec![c]
         }
         None => vec![1, 2, 3, 4],
+    };
+
+    // A degrade-source fallback must never be silent: the reason goes to
+    // stderr (stdout stays byte-identical across job counts).
+    let warn_fallback = |a: &resilience::Assessment| {
+        if let Some(note) = &a.degrade_note {
+            eprintln!(
+                "note: {} / {}: simulated degraded-step pricing unavailable, \
+                 using analytical: {note}",
+                a.cluster, a.config_name
+            );
+        }
     };
 
     let custom = [args.get("gpus"), args.get("pod-size"), args.get("gbps")];
@@ -562,6 +633,10 @@ fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
             "--tech needs --cluster (the default run fixes the techs per fabric)"
         );
         let rows = resilience::paper_pairs(&configs, &knobs, &spec, jobs, &cache);
+        for r in &rows {
+            warn_fallback(&r.passage);
+            warn_fallback(&r.electrical);
+        }
         let table = resilience::speedup_table(&rows);
         if args.flag("json") {
             println!("{}", resilience::paired_json(&rows, seed, trials).to_string_pretty());
@@ -588,7 +663,9 @@ fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
         // seed derived from the config index, not the list position, so
         // --config 3 draws the same trials as config 3 of an all-config run
         let s = ResilienceSpec { seed: seed.wrapping_add(cfg as u64), ..spec.clone() };
-        rows.push(resilience::assess(&w, &cluster, &map, &knobs, &fabric, &s, jobs));
+        let a = resilience::assess(&w, &cluster, &map, &knobs, &fabric, &s, jobs);
+        warn_fallback(&a);
+        rows.push(a);
     }
     let table = resilience::assessment_table(&rows);
     if args.flag("json") {

@@ -21,12 +21,26 @@
 //!   degenerate chain case) the engine reproduces [`super::replay_schedule`]
 //!   to ≤ 1e-9 relative; `tests/netsim_prop.rs` pins this property.
 //!
-//! The per-event allocation is a full progressive-filling recompute over the
-//! active flow set (the shape of [`super::simulate_reference`], which the
-//! incremental engine is property-tested against). Timeline DAGs lower
-//! collectives to a handful of aggregate flows per task, so active sets stay
-//! small and the recompute is not the bottleneck; making this engine
-//! component-incremental like [`super::Simulator`] is listed in ROADMAP.
+//! # Incremental fast path
+//!
+//! The production entry point ([`simulate_dag`], backed by the reusable
+//! [`DagSimulator`]) is *component-incremental*, the same idea as
+//! [`super::Simulator`]: on each admit/finish instant only the connected
+//! component of links/flows whose bottleneck set could have changed is
+//! re-filled (max-min fairness decomposes exactly over connected components
+//! of the flow–link sharing graph, so untouched flows keep exact rates),
+//! all per-node/per-link buffers are reused across events, and exact-tie
+//! batching collapses the symmetric rounds DAG workloads produce (hundreds
+//! of bit-equal per-GPU links) into one pass. This is what lifted
+//! `timeline::MAX_DAG_NODES` out of the planner's way — deep-PP ×
+//! fine-microbatch step DAGs keep thousands of flows concurrently active,
+//! and a full per-event recompute made them impractical to simulate.
+//!
+//! [`simulate_dag_reference`] keeps the original full-recompute
+//! implementation as the oracle: `tests/netsim_prop.rs` asserts the two
+//! agree to ≤ 1e-9 relative on randomized DAGs, and
+//! `benches/bench_netsim.rs` records the before/after series
+//! (`BENCH_netsim.json`).
 
 use std::collections::BTreeMap;
 
@@ -73,10 +87,428 @@ pub struct DagResult {
     pub events: usize,
 }
 
-/// Execute `nodes` on `net`: dependency-driven admission over a max-min
-/// fair fluid network. Panics on an unsatisfiable DAG (forward dependency)
-/// or a zero-rate deadlock, mirroring [`super::simulate`].
+// ---------------------------------------------------------------------------
+// Incremental engine (the production fast path)
+// ---------------------------------------------------------------------------
+
+/// Reusable incremental DAG simulation state.
+///
+/// All per-node and per-link buffers live here and are recycled across
+/// events and across [`DagSimulator::simulate`] calls, so the steady state
+/// of a simulation allocates almost nothing per event (only flow paths).
+///
+/// Invariants maintained between events (asserted by the property tests
+/// through the oracle comparison):
+/// - `rate` holds the exact max-min fair allocation of the current active
+///   flow set: the sum of rates over any link never exceeds its capacity,
+///   and every flow is bottlenecked on at least one saturated link.
+/// - Every admit/finish marks the links it touched *dirty*; before the
+///   clock advances, only the connected component(s) (flows ↔ shared
+///   links) reachable from dirty links are re-filled. Max-min decomposes
+///   over components, so untouched flows keep exact rates.
+/// - Bottleneck rounds freeze every link whose fair share ties the
+///   bottleneck *exactly* (bit-equal); max-min is unique, so batching the
+///   tie is equivalent to the reference's one-link-per-round order but
+///   collapses symmetric rounds into one pass.
+#[derive(Debug, Default)]
+pub struct DagSimulator {
+    // per-node state
+    indeg: Vec<usize>,
+    succ: Vec<Vec<usize>>,
+    remaining: Vec<f64>,
+    rate: Vec<f64>,
+    frozen: Vec<bool>,
+    in_set: Vec<bool>,
+    paths: Vec<Vec<usize>>,
+    finish: Vec<f64>,
+    ready: Vec<usize>,
+    active_flows: Vec<usize>,
+    active_delays: Vec<usize>,
+    // per-link state
+    link_flows: Vec<Vec<usize>>,
+    link_cap: Vec<f64>,
+    link_users: Vec<usize>,
+    link_in_set: Vec<bool>,
+    link_dirty: Vec<bool>,
+    // scratch work lists
+    dirty_links: Vec<usize>,
+    set_flows: Vec<usize>,
+    set_links: Vec<usize>,
+    link_stack: Vec<usize>,
+    tied: Vec<usize>,
+    born: Vec<usize>,
+}
+
+impl DagSimulator {
+    pub fn new() -> DagSimulator {
+        DagSimulator::default()
+    }
+
+    fn reset(&mut self, net: &Network, nodes: &[DagNode]) {
+        let n = nodes.len();
+        let nl = net.links.len();
+        // One deep-PP simulation can grow the reusable buffers to millions
+        // of entries; don't let that peak stay resident for the rest of
+        // the thread's life once the workload shrinks back down. The
+        // per-node/per-link vectors only ever grow, so their lengths track
+        // the largest run so far — release everything when the new run is
+        // far smaller than a large high-water mark (steady-state reuse at
+        // similar sizes is untouched).
+        const SHRINK_ABOVE: usize = 1 << 18;
+        if (self.succ.len() > SHRINK_ABOVE && n < self.succ.len() / 4)
+            || (self.link_flows.len() > SHRINK_ABOVE && nl < self.link_flows.len() / 4)
+        {
+            *self = DagSimulator::default();
+        }
+        self.indeg.clear();
+        self.indeg.resize(n, 0);
+        for v in &mut self.succ {
+            v.clear();
+        }
+        if self.succ.len() < n {
+            self.succ.resize_with(n, Vec::new);
+        }
+        self.remaining.clear();
+        self.remaining.extend(nodes.iter().map(|nd| match nd.work {
+            DagWork::Delay(d) => d,
+            DagWork::Flow { bytes, .. } => bytes,
+        }));
+        self.rate.clear();
+        self.rate.resize(n, 0.0);
+        self.frozen.clear();
+        self.frozen.resize(n, false);
+        self.in_set.clear();
+        self.in_set.resize(n, false);
+        for v in &mut self.paths {
+            v.clear();
+        }
+        if self.paths.len() < n {
+            self.paths.resize_with(n, Vec::new);
+        }
+        self.finish.clear();
+        self.finish.resize(n, 0.0);
+        self.ready.clear();
+        self.active_flows.clear();
+        self.active_delays.clear();
+        for v in &mut self.link_flows {
+            v.clear();
+        }
+        if self.link_flows.len() < nl {
+            self.link_flows.resize_with(nl, Vec::new);
+        }
+        self.link_cap.clear();
+        self.link_cap.resize(nl, 0.0);
+        self.link_users.clear();
+        self.link_users.resize(nl, 0);
+        self.link_in_set.clear();
+        self.link_in_set.resize(nl, false);
+        self.link_dirty.clear();
+        self.link_dirty.resize(nl, false);
+        self.dirty_links.clear();
+        self.set_flows.clear();
+        self.set_links.clear();
+        self.link_stack.clear();
+        self.tied.clear();
+        self.born.clear();
+        for (i, node) in nodes.iter().enumerate() {
+            self.indeg[i] = node.deps.len();
+            for &d in &node.deps {
+                assert!(
+                    d < i,
+                    "node {i} depends on later/own node {d}: emit in topological order"
+                );
+                self.succ[d].push(i);
+            }
+            if node.deps.is_empty() {
+                self.ready.push(i);
+            }
+        }
+    }
+
+    /// Collect the connected component(s) reachable from the dirty links
+    /// into `set_flows`/`set_links` (transitive closure over shared links).
+    fn seed_dirty_component(&mut self) {
+        self.set_flows.clear();
+        self.set_links.clear();
+        self.link_stack.clear();
+        for &l in &self.dirty_links {
+            self.link_dirty[l] = false;
+            if !self.link_in_set[l] {
+                self.link_in_set[l] = true;
+                self.set_links.push(l);
+                self.link_stack.push(l);
+            }
+        }
+        self.dirty_links.clear();
+        while let Some(l) = self.link_stack.pop() {
+            // the closure walk reads `link_flows`/`paths` and writes the
+            // disjoint set/stack fields, so plain iteration borrows fine
+            for &fi in &self.link_flows[l] {
+                if self.in_set[fi] {
+                    continue;
+                }
+                self.in_set[fi] = true;
+                self.set_flows.push(fi);
+                for &l2 in &self.paths[fi] {
+                    if !self.link_in_set[l2] {
+                        self.link_in_set[l2] = true;
+                        self.set_links.push(l2);
+                        self.link_stack.push(l2);
+                    }
+                }
+            }
+        }
+        for &fi in &self.set_flows {
+            self.in_set[fi] = false;
+        }
+    }
+
+    /// Progressive filling restricted to `set_flows` / `set_links`, with
+    /// exact-tie batching.
+    ///
+    /// Preconditions: `set_links` covers every link on every set flow's
+    /// path, `link_in_set[l]` is true exactly for set links (cleared here),
+    /// and every alive user of a set link is a set flow (the component
+    /// closure). Bottleneck candidates are scanned in ascending link id
+    /// (matching the reference's `BTreeMap` iteration order), and every
+    /// link whose share ties the bottleneck bit-exactly freezes in the same
+    /// round — equivalent rates, one pass over symmetric rounds.
+    fn fill(&mut self, net: &Network) {
+        self.set_links.sort_unstable();
+        for &l in &self.set_links {
+            self.link_cap[l] = net.links[l].capacity;
+            self.link_users[l] = self.link_flows[l].len();
+            self.link_in_set[l] = false;
+        }
+        for &fi in &self.set_flows {
+            self.frozen[fi] = false;
+        }
+        let mut unfrozen = self.set_flows.len();
+        while unfrozen > 0 {
+            // bottleneck = min fair share among set links with users
+            let mut best: Option<f64> = None;
+            for &l in &self.set_links {
+                let users = self.link_users[l];
+                if users == 0 {
+                    continue;
+                }
+                let share = self.link_cap[l] / users as f64;
+                let better = match best {
+                    None => true,
+                    Some(s) => share < s,
+                };
+                if better {
+                    best = Some(share);
+                }
+            }
+            let Some(share) = best else { break };
+            // Freeze all flows of every link whose share ties the
+            // bottleneck exactly. The tie list is collected before any
+            // freezing so float drift inside the round cannot shrink it.
+            self.tied.clear();
+            for &l in &self.set_links {
+                let users = self.link_users[l];
+                if users > 0 && self.link_cap[l] / users as f64 == share {
+                    self.tied.push(l);
+                }
+            }
+            for &bl in &self.tied {
+                for &fi in &self.link_flows[bl] {
+                    if self.frozen[fi] {
+                        continue;
+                    }
+                    self.frozen[fi] = true;
+                    unfrozen -= 1;
+                    self.rate[fi] = share;
+                    for &l in &self.paths[fi] {
+                        let c = self.link_cap[l] - share;
+                        self.link_cap[l] = if c < 0.0 { 0.0 } else { c };
+                        self.link_users[l] -= 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Execute `nodes` on `net`: dependency-driven admission over a max-min
+    /// fair fluid network. Panics on an unsatisfiable DAG (forward
+    /// dependency) or a zero-rate deadlock, mirroring [`super::simulate`].
+    pub fn simulate(&mut self, net: &Network, nodes: &[DagNode]) -> DagResult {
+        self.reset(net, nodes);
+        let n = nodes.len();
+        let mut now = 0.0f64;
+        let mut done = 0usize;
+        let mut events = 0usize;
+
+        // Completion helper: records finish, unlocks successors into ready.
+        macro_rules! complete {
+            ($i:expr) => {{
+                let i = $i;
+                self.finish[i] = now;
+                done += 1;
+                for &s in &self.succ[i] {
+                    self.indeg[s] -= 1;
+                    if self.indeg[s] == 0 {
+                        self.ready.push(s);
+                    }
+                }
+            }};
+        }
+
+        loop {
+            // Admit everything ready; zero-work nodes complete instantly
+            // and may cascade more ready nodes. Admitted flows join the
+            // link adjacency and mark their links dirty.
+            while let Some(i) = self.ready.pop() {
+                match nodes[i].work {
+                    DagWork::Delay(d) => {
+                        if d <= 0.0 {
+                            complete!(i);
+                        } else {
+                            self.active_delays.push(i);
+                        }
+                    }
+                    DagWork::Flow { src, dst, bytes } => {
+                        if bytes <= 0.0 || src == dst {
+                            // a zero-byte "flow" still pays the base
+                            // latency, matching `simulate`'s per-flow
+                            // `+ base_latency`
+                            if net.base_latency > 0.0 {
+                                self.remaining[i] = net.base_latency;
+                                self.active_delays.push(i);
+                            } else {
+                                complete!(i);
+                            }
+                        } else {
+                            let path = net.path(src, dst);
+                            for &l in &path {
+                                self.link_flows[l].push(i);
+                                if !self.link_dirty[l] {
+                                    self.link_dirty[l] = true;
+                                    self.dirty_links.push(l);
+                                }
+                            }
+                            self.paths[i] = path;
+                            self.active_flows.push(i);
+                        }
+                    }
+                }
+            }
+            if done == n {
+                break;
+            }
+            assert!(
+                !self.active_flows.is_empty() || !self.active_delays.is_empty(),
+                "dag deadlocked: {} of {n} nodes stuck",
+                n - done
+            );
+            events += 1;
+
+            // --- re-fill only the component(s) the admits/finishes touched
+            if !self.dirty_links.is_empty() {
+                self.seed_dirty_component();
+                self.fill(net);
+            }
+
+            // --- advance to the next completion ---------------------------
+            let mut dt = f64::INFINITY;
+            for &i in &self.active_flows {
+                let r = self.rate[i];
+                if r > 0.0 {
+                    let t = self.remaining[i] / r;
+                    if t < dt {
+                        dt = t;
+                    }
+                }
+            }
+            for &i in &self.active_delays {
+                if self.remaining[i] < dt {
+                    dt = self.remaining[i];
+                }
+            }
+            assert!(dt.is_finite(), "deadlocked flows (zero rate)");
+            now += dt;
+
+            // Flow completions first; a completed flow owing latency
+            // becomes a *newborn* delay that must not absorb this event's
+            // dt. Completed flows leave the link adjacency and mark their
+            // links dirty for the next event's component re-fill.
+            self.born.clear();
+            let mut w = 0;
+            for r in 0..self.active_flows.len() {
+                let i = self.active_flows[r];
+                self.remaining[i] -= self.rate[i] * dt;
+                if self.remaining[i] <= 1e-9 {
+                    self.rate[i] = 0.0;
+                    for &l in &self.paths[i] {
+                        if let Some(pos) = self.link_flows[l].iter().position(|&x| x == i) {
+                            // ordered remove keeps link user lists in
+                            // admission order
+                            self.link_flows[l].remove(pos);
+                        }
+                        if !self.link_dirty[l] {
+                            self.link_dirty[l] = true;
+                            self.dirty_links.push(l);
+                        }
+                    }
+                    if net.base_latency > 0.0 {
+                        self.remaining[i] = net.base_latency;
+                        self.born.push(i);
+                    } else {
+                        complete!(i);
+                    }
+                } else {
+                    self.active_flows[w] = i;
+                    w += 1;
+                }
+            }
+            self.active_flows.truncate(w);
+            let mut w = 0;
+            for r in 0..self.active_delays.len() {
+                let i = self.active_delays[r];
+                self.remaining[i] -= dt;
+                if self.remaining[i] <= 1e-9 {
+                    complete!(i);
+                } else {
+                    self.active_delays[w] = i;
+                    w += 1;
+                }
+            }
+            self.active_delays.truncate(w);
+            self.active_delays.extend_from_slice(&self.born);
+        }
+
+        let makespan = self.finish.iter().cloned().fold(0.0f64, f64::max);
+        DagResult { makespan, finish: self.finish.clone(), events }
+    }
+}
+
+/// Execute `nodes` on `net` with the incremental engine (see
+/// [`DagSimulator`]). Convenience entry point: a thread-local simulator is
+/// reused across calls, so repeated callers ([`crate::timeline`] inside
+/// `plan --rerank-sim`, `validate --deep`, the resilience degraded
+/// re-simulations) get the buffer reuse without threading a simulator
+/// through their APIs. Reuse is observationally pure — `reset` rebuilds
+/// every per-run field, pinned by the reuse property test in
+/// `tests/netsim_prop.rs`.
 pub fn simulate_dag(net: &Network, nodes: &[DagNode]) -> DagResult {
+    thread_local! {
+        static SIM: std::cell::RefCell<DagSimulator> =
+            std::cell::RefCell::new(DagSimulator::new());
+    }
+    SIM.with(|sim| sim.borrow_mut().simulate(net, nodes))
+}
+
+// ---------------------------------------------------------------------------
+// Reference implementation (full recompute per event)
+// ---------------------------------------------------------------------------
+
+/// The original implementation: every admit/finish instant rebuilds the
+/// whole max-min allocation from scratch (the shape of
+/// [`super::simulate_reference`]). Kept as the oracle for the incremental
+/// engine — property tests assert agreement ≤ 1e-9 relative — and for
+/// before/after benchmarking in `benches/bench_netsim.rs`.
+pub fn simulate_dag_reference(net: &Network, nodes: &[DagNode]) -> DagResult {
     let n = nodes.len();
     let mut indeg = vec![0usize; n];
     let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
@@ -383,6 +815,55 @@ mod tests {
     }
 
     #[test]
+    fn incremental_matches_reference_on_staggered_dag() {
+        // Uneven flow sizes over shared links with rank-local admission:
+        // completions cascade one at a time, admissions land mid-flight, so
+        // the incremental path re-fills components repeatedly.
+        let net = Network::cluster(16, 4, 800.0, 100.0, 2.0, 5e-6);
+        let mut ops = Vec::new();
+        for step in 0..6usize {
+            for s in 0..16usize {
+                let d = (s * 5 + step * 3 + 1) % 16;
+                ops.push(coll::CommOp {
+                    step,
+                    src: s,
+                    dst: d,
+                    bytes: 1e6 * (1 + (s * 7 + d * 3 + step) % 11) as f64,
+                });
+            }
+        }
+        let sched = coll::CommSchedule::new("staggered", 16, ops);
+        let dag = schedule_rank_dag(&sched);
+        let fast = simulate_dag(&net, &dag);
+        let slow = simulate_dag_reference(&net, &dag);
+        let rel = (fast.makespan - slow.makespan).abs() / slow.makespan;
+        assert!(rel <= 1e-9, "makespan {} vs {}", fast.makespan, slow.makespan);
+        for (i, (a, b)) in fast.finish.iter().zip(&slow.finish).enumerate() {
+            assert!((a - b).abs() <= 1e-9 * b.max(1e-30), "node {i}: {a} vs {b}");
+        }
+        assert!(fast.events > 0 && slow.events > 0);
+    }
+
+    #[test]
+    fn dag_simulator_reuse_is_stateless_across_dags() {
+        let net = Network::cluster(12, 4, 800.0, 100.0, 2.0, 5e-6);
+        let sched = coll::pairwise_a2a_schedule(12, 8e6);
+        let dag = schedule_rank_dag(&sched);
+        let mut sim = DagSimulator::new();
+        let first = sim.simulate(&net, &dag);
+        // a brand-new simulator is the ground truth for "no leaked state"
+        let fresh = DagSimulator::new().simulate(&net, &dag);
+        assert_eq!(first.makespan, fresh.makespan);
+        assert_eq!(first.finish, fresh.finish);
+        // run an unrelated DAG in between to dirty the buffers
+        let small = Network::sls(4, 800.0, 0.0);
+        sim.simulate(&small, &[DagNode::flow(0, 1, 1e9, vec![]), DagNode::delay(1e-3, vec![0])]);
+        let second = sim.simulate(&net, &dag);
+        assert_eq!(first.makespan, second.makespan);
+        assert_eq!(first.finish, second.finish);
+    }
+
+    #[test]
     fn disjoint_steps_overlap_under_rank_deps() {
         // 4 steps that share no ranks: bulk-sync serializes them, the
         // dependency engine runs them all at t=0.
@@ -449,5 +930,15 @@ mod tests {
     fn forward_deps_are_rejected() {
         let net = Network::sls(2, 800.0, 0.0);
         simulate_dag(&net, &[DagNode::delay(1.0, vec![1]), DagNode::delay(1.0, vec![])]);
+    }
+
+    #[test]
+    #[should_panic(expected = "topological")]
+    fn reference_rejects_forward_deps_too() {
+        let net = Network::sls(2, 800.0, 0.0);
+        simulate_dag_reference(
+            &net,
+            &[DagNode::delay(1.0, vec![1]), DagNode::delay(1.0, vec![])],
+        );
     }
 }

@@ -24,6 +24,13 @@
 //! graph, so this is not an approximation; [`simulate_reference`] keeps
 //! the original full-recompute implementation and the property tests in
 //! `tests/netsim_prop.rs` assert the two agree to ≤ 1e-9 relative.
+//!
+//! The dependency-driven engine ([`dep::simulate_dag`], the
+//! [`crate::timeline`] substrate) uses the same component-local re-fill on
+//! every admit/finish instant (see [`DagSimulator`]), with
+//! [`simulate_dag_reference`] as its full-recompute oracle — that is what
+//! lifted the `timeline::MAX_DAG_NODES` cap and made step simulation cheap
+//! enough for the planner's inner loop.
 
 pub mod dep;
 
@@ -32,8 +39,8 @@ use std::collections::BTreeMap;
 use crate::collectives::CommSchedule;
 
 pub use dep::{
-    replay_schedule_dependent, schedule_chain_dag, schedule_rank_dag, simulate_dag, DagNode,
-    DagResult, DagWork,
+    replay_schedule_dependent, schedule_chain_dag, schedule_rank_dag, simulate_dag,
+    simulate_dag_reference, DagNode, DagResult, DagSimulator, DagWork,
 };
 
 /// Directed link with finite capacity.

@@ -150,6 +150,14 @@ impl Mapping {
         self
     }
 
+    /// 1F1B microbatches per step per DP rank under `w` — the one place
+    /// `global_batch / dp / microbatch_seqs` is derived (floored at 1 for
+    /// callers probing non-enumerated mappings; the enumeration guarantees
+    /// exact divisibility).
+    pub fn n_micro(&self, w: &Workload) -> usize {
+        (w.global_batch / self.par.dp / self.microbatch_seqs).max(1)
+    }
+
     /// GPU id for a coordinate (TP innermost, DP middle, PP outermost).
     pub fn gpu_of(&self, c: RankCoord) -> usize {
         assert!(c.dp < self.par.dp && c.pp < self.par.pp && c.tp < self.par.tp);

@@ -63,7 +63,7 @@ pub fn memory_breakdown(w: &Workload, map: &Mapping) -> MemoryBreakdown {
     // fewer microbatches than stages only n_micro are ever in flight —
     // the planner searches that regime, so the bound must be tight).
     let mb_tokens = (microbatch_seqs * w.seq_len) as f64;
-    let n_micro = (w.global_batch / par.dp / microbatch_seqs).max(1);
+    let n_micro = map.n_micro(w);
     let act_per_micro =
         mb_tokens * w.activation_bytes_per_token_layer() * layers_per_stage / par.tp as f64;
     let activations = act_per_micro * par.pp.min(n_micro) as f64;

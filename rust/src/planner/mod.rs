@@ -364,27 +364,47 @@ impl SimScored {
     }
 }
 
+/// A plan the simulated re-rank could not score (with the reason): after
+/// the `MAX_DAG_NODES` lift the guard only fires on truly pathological
+/// lowerings, but when it does the plan must stay visible in the output —
+/// a silently dropped row used to read as "this mapping was never a
+/// candidate".
+#[derive(Debug, Clone)]
+pub struct SkippedPlan {
+    /// 1-based rank in the analytical ordering.
+    pub ana_rank: usize,
+    /// The un-simulated plan, analytical report included, so the rendered
+    /// row still carries everything the analytical ranking knew.
+    pub plan: RankedPlan,
+    pub reason: String,
+}
+
 /// Re-rank the top `k` ranked plans on *simulated* step time (`lumos plan
 /// --rerank-sim K`): the analytical winners lean on the closed form's
 /// overlap credits (EXPERIMENTS.md §Validate measures +60…120% for the
 /// PP=1/DP-heavy mappings), so the simulator gets the final word.
 /// Deterministic: plans simulate serially in analytical-rank order and
 /// sort on simulated TTT under `total_cmp` with the mapping tuple as
-/// tie-break. Mappings the DAG-size guard rejects are skipped (second
-/// return value).
+/// tie-break. Plans the simulator cannot score are returned as
+/// [`SkippedPlan`]s (second return value) and rendered by
+/// [`rerank_table`], never dropped.
 pub fn rerank_simulated(
     outcome: &PlanOutcome,
     k: usize,
     workload: &Workload,
     cluster: &Cluster,
     knobs: &PerfKnobs,
-) -> (Vec<SimScored>, usize) {
+) -> (Vec<SimScored>, Vec<SkippedPlan>) {
     let mut scored = Vec::new();
-    let mut skipped = 0usize;
+    let mut skipped = Vec::new();
     for (i, p) in outcome.ranked.iter().take(k).enumerate() {
         match timeline::simulate_step(workload, cluster, &p.mapping, knobs) {
             Ok(sim) => scored.push(SimScored { ana_rank: i + 1, plan: p.clone(), sim }),
-            Err(_) => skipped += 1,
+            Err(e) => skipped.push(SkippedPlan {
+                ana_rank: i + 1,
+                plan: p.clone(),
+                reason: e.to_string(),
+            }),
         }
     }
     scored.sort_by(|a, b| {
@@ -397,10 +417,13 @@ pub fn rerank_simulated(
 }
 
 /// Render a simulated re-rank (companion table to [`ranked_table`]).
-pub fn rerank_table(scored: &[SimScored], skipped: usize) -> Table {
-    let mut title = format!("Plan re-rank: top {} by simulated step time", scored.len() + skipped);
-    if skipped > 0 {
-        title.push_str(&format!(" ({skipped} skipped: DAG too large)"));
+/// Skipped plans appear as explicit rows after the scored ones, keyed by
+/// their analytical rank, so nothing the re-rank touched is invisible.
+pub fn rerank_table(scored: &[SimScored], skipped: &[SkippedPlan]) -> Table {
+    let mut title =
+        format!("Plan re-rank: top {} by simulated step time", scored.len() + skipped.len());
+    if !skipped.is_empty() {
+        title.push_str(&format!(" ({} not simulated — see rows)", skipped.len()));
     }
     let mut t = Table::new(
         &title,
@@ -422,7 +445,42 @@ pub fn rerank_table(scored: &[SimScored], skipped: usize) -> Table {
             fmt_time(s.sim.time_to_train_s),
         ]);
     }
+    for s in skipped {
+        t.row(&[
+            "—".to_string(),
+            format!("{}", s.ana_rank),
+            format!("{}", s.plan.mapping.par.tp),
+            format!("{}", s.plan.mapping.par.pp),
+            format!("{}", s.plan.mapping.par.dp),
+            format!("{}", s.plan.mapping.microbatch_seqs),
+            format!("{}", s.plan.mapping.moe.experts_per_dp_rank),
+            fmt_time(s.plan.report.step_time),
+            "skipped".to_string(),
+            "—".to_string(),
+            "—".to_string(),
+        ]);
+    }
     t
+}
+
+/// One `reason` line per skipped plan (stderr companion to
+/// [`rerank_table`] — the table carries the mapping, this carries the
+/// why).
+pub fn rerank_skip_lines(skipped: &[SkippedPlan]) -> Vec<String> {
+    skipped
+        .iter()
+        .map(|s| {
+            format!(
+                "rerank-sim skipped ana#{} TP{}xPP{}xDP{}/mb{}: {}",
+                s.ana_rank,
+                s.plan.mapping.par.tp,
+                s.plan.mapping.par.pp,
+                s.plan.mapping.par.dp,
+                s.plan.mapping.microbatch_seqs,
+                s.reason
+            )
+        })
+        .collect()
 }
 
 /// Machine-readable form of a plan outcome (`lumos plan --json`):
@@ -631,7 +689,7 @@ mod tests {
         let cluster = ClusterKey::Passage512.build();
         let w = Workload::paper_gpt_4p7t(4);
         let (scored, skipped) = rerank_simulated(&out, 3, &w, &cluster, &knobs);
-        assert_eq!(scored.len() + skipped, 3);
+        assert_eq!(scored.len() + skipped.len(), 3);
         assert!(!scored.is_empty(), "all top plans skipped");
         for s in &scored {
             assert!(s.sim.step_time > 0.0 && s.ana_rank >= 1);
@@ -644,9 +702,47 @@ mod tests {
         assert!(scored.iter().any(|s| s.gap() > 0.0));
         let (again, again_skipped) = rerank_simulated(&out, 3, &w, &cluster, &knobs);
         assert_eq!(
-            rerank_table(&scored, skipped).render(),
-            rerank_table(&again, again_skipped).render()
+            rerank_table(&scored, &skipped).render(),
+            rerank_table(&again, &again_skipped).render()
         );
-        assert!(rerank_table(&scored, skipped).render().contains("sim step"));
+        assert!(rerank_table(&scored, &skipped).render().contains("sim step"));
+    }
+
+    #[test]
+    fn rerank_surfaces_skipped_plans_instead_of_dropping_them() {
+        // Build an outcome whose only plan exceeds even the lifted DAG cap
+        // (a degenerate lowering); the re-rank must keep it visible as a
+        // SkippedPlan row, not silently shrink the table.
+        use crate::model::MoeConfig;
+        let knobs = PerfKnobs::default();
+        let cluster = ClusterKey::Passage512.build();
+        let w = Workload::paper_gpt_4p7t(4);
+        let huge = Mapping::try_with_microbatch(
+            Parallelism { tp: 64, pp: 120, dp: 32 },
+            MoeConfig::paper_config(4),
+            1,
+        )
+        .unwrap();
+        let report = evaluate(&w, &cluster, &huge, &knobs);
+        let memory = crate::perf::memory::memory_breakdown(&w, &huge);
+        let outcome = PlanOutcome {
+            cluster: cluster.spec.name.clone(),
+            config_name: report.config_name.clone(),
+            enumerated: 1,
+            pruned: 0,
+            ranked: vec![RankedPlan { mapping: huge.clone(), memory, report, adjusted_ttt: None }],
+            paper_baseline: None,
+        };
+        let (scored, skipped) = rerank_simulated(&outcome, 1, &w, &cluster, &knobs);
+        assert!(scored.is_empty());
+        assert_eq!(skipped.len(), 1);
+        assert_eq!(skipped[0].ana_rank, 1);
+        assert!(skipped[0].reason.contains("too large"), "{}", skipped[0].reason);
+        let rendered = rerank_table(&scored, &skipped).render();
+        assert!(rendered.contains("skipped"), "{rendered}");
+        assert!(rendered.contains("120"), "{rendered}");
+        let lines = rerank_skip_lines(&skipped);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("TP64xPP120xDP32"), "{}", lines[0]);
     }
 }

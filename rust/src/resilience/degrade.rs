@@ -109,6 +109,54 @@ pub fn analytical_degraded_steps(
     }
 }
 
+/// [`DegradedSteps`] with the degradation ratios *measured* on the
+/// timeline step DAG instead of assumed by the closed form: the step is
+/// simulated healthy and with one victim GPU's links degraded in place
+/// ([`simulate_degraded_step`], losing `1/links_per_gpu` of the domain's
+/// lanes — the single worst-placed failure the fabric profile implies),
+/// and the measured degraded/healthy *ratios* are applied to the
+/// analytical healthy step. Anchoring at the analytical healthy step keeps
+/// the work target and the healthy TTT identical between the two modes, so
+/// feeding these steps into [`crate::resilience::goodput`] changes only
+/// the degradation pricing — exactly the quantity the simulator measures
+/// better (a single victim's blast radius emerges from max-min sharing and
+/// task barriers instead of the slowest-member whole-cluster bound the
+/// analytical mode charges).
+///
+/// Errors when the mapping cannot be simulated (fails
+/// [`crate::perf::check_feasible`], or the DAG guard fires);
+/// [`crate::resilience::assess`] falls back to
+/// [`analytical_degraded_steps`] then and records which source it used.
+pub fn simulated_degraded_steps(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    fabric: &FabricReliability,
+) -> Result<DegradedSteps, TimelineError> {
+    // clean error instead of the perf model's divisibility asserts
+    crate::perf::check_feasible(w, map).map_err(TimelineError::Infeasible)?;
+    let healthy_ana = evaluate(w, cluster, map, knobs);
+    // one lowering, three fabric states
+    let dag = timeline::lower_step(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
+    let healthy_sim = timeline::simulate_lowered(w, &dag, |_| {});
+    let up_lost = 1.0 / fabric.scale_up_links_per_gpu as f64;
+    let out_lost = 1.0 / fabric.scale_out_links_per_gpu as f64;
+    let up =
+        timeline::simulate_lowered(w, &dag, |net| net.scale_node_links(0, 1.0 - up_lost, 1.0));
+    let out =
+        timeline::simulate_lowered(w, &dag, |net| net.scale_node_links(0, 1.0, 1.0 - out_lost));
+    // Degradation can only slow the step; clamp away float noise so the
+    // goodput composition never sees a speedup from a failure.
+    let ratio = |d: f64| (d / healthy_sim.step_time).max(1.0);
+    Ok(DegradedSteps {
+        healthy_step: healthy_ana.step_time,
+        healthy_ttt: healthy_ana.time_to_train_s,
+        degraded_up_step: healthy_ana.step_time * ratio(up.step_time),
+        degraded_out_step: healthy_ana.step_time * ratio(out.step_time),
+    })
+}
+
 /// Re-simulate the full step DAG with the victim GPU's links degraded in
 /// place: stage-0 local rank 0 of the [`crate::timeline`] slice loses
 /// `lost_fraction` of the chosen domain's capacity.
@@ -199,6 +247,22 @@ mod tests {
         // both views agree the scale-out failure is a material slowdown
         assert!(degraded.step_time / healthy.step_time > 1.1);
         assert!(ana.out_ratio() > 1.1);
+    }
+
+    #[test]
+    fn simulated_degraded_steps_keep_the_healthy_anchor() {
+        // Measured mode must change only the degradation pricing: healthy
+        // step/TTT stay bit-identical to the analytical mode, and the
+        // measured degraded steps never undercut the healthy one.
+        let knobs = PerfKnobs::default();
+        let (w, m) = point(4);
+        let cluster = Cluster::passage_512(32_768);
+        let fabric = FabricReliability::passage();
+        let ana = analytical_degraded_steps(&w, &cluster, &m, &knobs, &fabric);
+        let sim = simulated_degraded_steps(&w, &cluster, &m, &knobs, &fabric).unwrap();
+        assert_eq!(sim.healthy_step.to_bits(), ana.healthy_step.to_bits());
+        assert_eq!(sim.healthy_ttt.to_bits(), ana.healthy_ttt.to_bits());
+        assert!(sim.up_ratio() >= 1.0 && sim.out_ratio() >= 1.0, "{sim:?}");
     }
 
     #[test]

@@ -47,7 +47,10 @@ use crate::util::rng::Rng;
 use crate::util::stats::fmt_time;
 use crate::util::table::Table;
 
-pub use degrade::{analytical_degraded_steps, degraded_cluster, DegradedMode, DegradedSteps};
+pub use degrade::{
+    analytical_degraded_steps, degraded_cluster, simulated_degraded_steps, DegradedMode,
+    DegradedSteps,
+};
 pub use faults::{sample_trace, FaultEvent, FaultKind, FaultProcess};
 pub use goodput::{expected, monte_carlo_trial, GoodputInputs, GoodputReport};
 
@@ -184,6 +187,40 @@ impl FabricReliability {
     }
 }
 
+/// Where the degraded-step ratios the goodput composition prices come
+/// from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeSource {
+    /// Closed-form slowest-member pricing: the whole cluster's domain
+    /// bandwidth scaled down ([`analytical_degraded_steps`]). Conservative
+    /// — every collective everywhere runs at the degraded rate.
+    Analytical,
+    /// Ratios measured by re-simulating the timeline step DAG with one
+    /// victim GPU's links degraded in place
+    /// ([`simulated_degraded_steps`]); the blast radius emerges from
+    /// max-min sharing and task barriers. The default — this is the
+    /// closed-the-loop form the incremental dep engine made affordable.
+    Simulated,
+}
+
+impl DegradeSource {
+    /// CLI name lookup (`--degrade analytical | simulated`).
+    pub fn from_cli_name(name: &str) -> Option<DegradeSource> {
+        match name {
+            "analytical" => Some(DegradeSource::Analytical),
+            "simulated" => Some(DegradeSource::Simulated),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradeSource::Analytical => "analytical",
+            DegradeSource::Simulated => "simulated",
+        }
+    }
+}
+
 /// Engine parameters shared by every assessment in one run.
 #[derive(Debug, Clone)]
 pub struct ResilienceSpec {
@@ -192,11 +229,20 @@ pub struct ResilienceSpec {
     /// Monte Carlo trials per assessment; 0 = closed form only (the
     /// figures path).
     pub trials: usize,
+    /// Degraded-step pricing mode (default: [`DegradeSource::Simulated`];
+    /// falls back to analytical per point when the mapping cannot be
+    /// simulated, recorded in [`Assessment::degrade_source`]).
+    pub degrade: DegradeSource,
 }
 
 impl Default for ResilienceSpec {
     fn default() -> Self {
-        ResilienceSpec { repair: RepairModel::default(), seed: 7, trials: 128 }
+        ResilienceSpec {
+            repair: RepairModel::default(),
+            seed: 7,
+            trials: 128,
+            degrade: DegradeSource::Simulated,
+        }
     }
 }
 
@@ -208,6 +254,13 @@ pub struct Assessment {
     pub fabric: String,
     pub mapping: Mapping,
     pub steps: DegradedSteps,
+    /// Where `steps`' degraded ratios actually came from — may differ from
+    /// the requested [`ResilienceSpec::degrade`] when the simulated path
+    /// was unavailable for this point and the engine fell back.
+    pub degrade_source: DegradeSource,
+    /// Why the simulated path was unavailable (`None` when `degrade_source`
+    /// matches the request) — surfaced so a fallback is never silent.
+    pub degrade_note: Option<String>,
     pub inputs: GoodputInputs,
     /// Closed-form expectation.
     pub expected: GoodputReport,
@@ -229,10 +282,11 @@ impl Assessment {
 }
 
 /// Assess one (workload, cluster, mapping) point under `fabric`:
-/// analytical degraded steps, closed-form goodput, and `spec.trials`
-/// Monte Carlo trajectories on `jobs` worker threads (trial streams are
-/// forked from the seed in index order before any work is distributed, so
-/// output is byte-identical for any `jobs`).
+/// degraded steps per `spec.degrade` (timeline-measured ratios by
+/// default, analytical fallback recorded in the result), closed-form
+/// goodput, and `spec.trials` Monte Carlo trajectories on `jobs` worker
+/// threads (trial streams are forked from the seed in index order before
+/// any work is distributed, so output is byte-identical for any `jobs`).
 pub fn assess(
     w: &Workload,
     cluster: &Cluster,
@@ -243,7 +297,26 @@ pub fn assess(
     jobs: usize,
 ) -> Assessment {
     let n = cluster.spec.n_gpus;
-    let steps = analytical_degraded_steps(w, cluster, map, knobs, fabric);
+    let (steps, degrade_source, degrade_note) = match spec.degrade {
+        DegradeSource::Analytical => (
+            analytical_degraded_steps(w, cluster, map, knobs, fabric),
+            DegradeSource::Analytical,
+            None,
+        ),
+        DegradeSource::Simulated => match simulated_degraded_steps(w, cluster, map, knobs, fabric)
+        {
+            Ok(s) => (s, DegradeSource::Simulated, None),
+            // DAG guard fired (or the point is infeasible, which the
+            // analytical path would assert on too): fall back to the
+            // closed form and carry the reason — a fallback must never
+            // be silent.
+            Err(e) => (
+                analytical_degraded_steps(w, cluster, map, knobs, fabric),
+                DegradeSource::Analytical,
+                Some(e.to_string()),
+            ),
+        },
+    };
     let inputs = GoodputInputs {
         healthy_step: steps.healthy_step,
         degraded_up_step: steps.degraded_up_step,
@@ -279,6 +352,8 @@ pub fn assess(
         fabric: fabric.name.clone(),
         mapping: map.clone(),
         steps,
+        degrade_source,
+        degrade_note,
         inputs,
         expected: report,
         tray_per_year: fabric.tray_events_per_year(n),
@@ -500,8 +575,15 @@ pub fn assessment_table(rows: &[Assessment]) -> Table {
         .first()
         .map(|a| (a.cluster.clone(), a.fabric.clone()))
         .unwrap_or_default();
+    let src = match rows.first() {
+        Some(first) if rows.iter().all(|a| a.degrade_source == first.degrade_source) => {
+            first.degrade_source.name()
+        }
+        Some(_) => "mixed",
+        None => "analytical",
+    };
     let mut t = Table::new(
-        &format!("Resilience: {cluster} under {fabric}"),
+        &format!("Resilience: {cluster} under {fabric} ({src} degraded steps)"),
         &[
             "Config",
             "healthy TTT",
@@ -547,6 +629,11 @@ pub fn assessment_json(a: &Assessment) -> Json {
         ("fabric", Json::str(&a.fabric)),
         ("healthy_ttt_s", Json::num(a.steps.healthy_ttt)),
         ("healthy_step_s", Json::num(a.steps.healthy_step)),
+        ("degrade_source", Json::str(a.degrade_source.name())),
+        (
+            "degrade_fallback_reason",
+            a.degrade_note.as_deref().map_or(Json::Null, Json::str),
+        ),
         ("degraded_up_step_ratio", Json::num(a.steps.up_ratio())),
         ("degraded_out_step_ratio", Json::num(a.steps.out_ratio())),
         ("effective_ttt_s", num_or_null(a.expected.effective_ttt)),
@@ -627,7 +714,15 @@ mod tests {
     fn assessment_is_byte_identical_across_job_counts() {
         let knobs = PerfKnobs::default();
         let cache = ClusterCache::new();
-        let spec = ResilienceSpec { trials: 32, ..ResilienceSpec::default() };
+        // analytical degraded steps: the jobs-determinism contract is about
+        // the Monte Carlo pool, and the analytical mode keeps this test
+        // cheap (the simulated mode is deterministic serial code either
+        // way — pinned by the golden suite)
+        let spec = ResilienceSpec {
+            trials: 32,
+            degrade: DegradeSource::Analytical,
+            ..ResilienceSpec::default()
+        };
         let serial = paper_pairs(&[4], &knobs, &spec, 1, &cache);
         let parallel = paper_pairs(&[4], &knobs, &spec, 4, &cache);
         assert_eq!(
@@ -648,18 +743,57 @@ mod tests {
     fn artifacts_render() {
         let knobs = PerfKnobs::default();
         let cache = ClusterCache::new();
-        let spec = ResilienceSpec { trials: 0, ..ResilienceSpec::default() };
+        let spec = ResilienceSpec {
+            trials: 0,
+            degrade: DegradeSource::Analytical,
+            ..ResilienceSpec::default()
+        };
         let rows = paper_pairs(&[1, 4], &knobs, &spec, 1, &cache);
         let r = speedup_table(&rows).render();
         assert!(r.contains("adjusted speedup"), "{r}");
         assert!(r.contains("Config 4"), "{r}");
-        let pods = pod_serviceability(&knobs, &spec, 1, &cache);
+        // pod assessments run the default simulated degrade path (small
+        // pp=1 slice DAGs, cheap) — the rendered artifacts carry the source
+        let pods = pod_serviceability(
+            &knobs,
+            &ResilienceSpec { trials: 0, ..ResilienceSpec::default() },
+            1,
+            &cache,
+        );
         let s = serviceability_table(&pods).render();
         assert!(s.contains("CPO (integrated laser)"), "{s}");
         assert!(s.contains("tray events/yr"), "{s}");
         let a = assessment_table(&pods).render();
         assert!(a.contains("mc mean"), "{a}");
+        assert!(a.contains("simulated degraded steps"), "{a}");
         let j = assessment_json(&pods[0]).to_string_pretty();
         assert!(j.contains("\"effective_ttt_s\""), "{j}");
+        assert!(j.contains("\"degrade_source\""), "{j}");
+    }
+
+    #[test]
+    fn simulated_degrade_falls_back_when_the_point_cannot_simulate() {
+        use crate::model::MoeConfig;
+        let knobs = PerfKnobs::default();
+        let cluster = Cluster::passage_512(32_768);
+        // a lowering even the lifted DAG cap rejects: assess must fall
+        // back to analytical pricing and record that it did
+        let huge = Mapping::try_with_microbatch(
+            Parallelism { tp: 64, pp: 120, dp: 32 },
+            MoeConfig::paper_config(4),
+            1,
+        )
+        .unwrap();
+        let w = Workload::paper_gpt_4p7t(4);
+        let spec = ResilienceSpec { trials: 0, ..ResilienceSpec::default() };
+        assert_eq!(spec.degrade, DegradeSource::Simulated);
+        let a = assess(&w, &cluster, &huge, &knobs, &FabricReliability::passage(), &spec, 1);
+        assert_eq!(a.degrade_source, DegradeSource::Analytical);
+        // the fallback carries its reason — never silent
+        let note = a.degrade_note.as_deref().unwrap_or("");
+        assert!(note.contains("too large"), "{note}");
+        let j = assessment_json(&a).to_string_pretty();
+        assert!(j.contains("\"degrade_fallback_reason\""), "{j}");
+        assert!(a.expected.effective_ttt > a.steps.healthy_ttt);
     }
 }

@@ -563,8 +563,16 @@ pub fn resilience_tables(knobs: &PerfKnobs) -> (Table, Table) {
 
 /// [`resilience_tables`] against a caller-owned cluster cache.
 pub fn resilience_tables_cached(knobs: &PerfKnobs, cache: &ClusterCache) -> (Table, Table) {
-    use crate::resilience::{self, ResilienceSpec};
-    let spec = ResilienceSpec { trials: 0, ..ResilienceSpec::default() };
+    use crate::resilience::{self, DegradeSource, ResilienceSpec};
+    // Closed form on analytical degraded ratios: the figures artifact is
+    // the calibrated-headline table (EXPERIMENTS.md §Resilience), rendered
+    // many times per `figures --all`. The CLI (`lumos resilience`) prices
+    // degradation from timeline-measured ratios by default instead.
+    let spec = ResilienceSpec {
+        trials: 0,
+        degrade: DegradeSource::Analytical,
+        ..ResilienceSpec::default()
+    };
     let pairs = resilience::paper_pairs(&[1, 2, 3, 4], knobs, &spec, 1, cache);
     let pods = resilience::pod_serviceability(knobs, &spec, 1, cache);
     (resilience::speedup_table(&pairs), resilience::serviceability_table(&pods))

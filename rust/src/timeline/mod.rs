@@ -21,8 +21,14 @@
 //!
 //! Entry points: [`simulate_step`] (one mapping), [`validate_mapping`]
 //! (simulate + analytical + gap), `lumos validate` (CLI, including
-//! `--plan-top K` to cross-check the planner's best mappings) and
+//! `--plan-top K` to cross-check the planner's best mappings and `--deep`
+//! to sweep the deep-PP × fine-microbatch region the pre-incremental
+//! engine rejected — see [`DEEP_REGION_MIN_NODES`]) and
 //! `sweep::validate_gap_table` (the `figures --validate` artifact).
+//! Simulation runs on the component-incremental
+//! [`crate::netsim::DagSimulator`], which is what makes per-candidate
+//! re-simulation cheap enough to sit inside the planner's search loop
+//! (`lumos plan --rerank-sim`).
 
 mod lower;
 
@@ -30,13 +36,50 @@ pub use lower::{estimate_nodes, lower_step, ChainTask, Phase, StepDag, MAX_DAG_N
 
 use crate::model::Workload;
 use crate::netsim::simulate_dag;
-use crate::parallel::Mapping;
+use crate::parallel::{enumerate_candidates, Mapping};
 use crate::perf::memory::MemoryBreakdown;
 use crate::perf::{evaluate_feasible, Infeasible, PerfKnobs, PerfReport};
 use crate::topology::cluster::Cluster;
 use crate::util::json::Json;
 use crate::util::stats::fmt_time;
 use crate::util::table::Table;
+
+/// The DAG-size cap *before* the dependency engine went
+/// component-incremental (PR 5 lifted [`MAX_DAG_NODES`] from this value):
+/// mappings whose lowering exceeds it — the deep-PP × fine-microbatch
+/// corner of the search space — used to be rejected outright, so the
+/// planner's `--rerank-sim` and `lumos validate --plan-top` silently fell
+/// back to the analytical model exactly where its overlap credits are
+/// least trustworthy. `lumos validate --deep` sweeps this
+/// previously-rejected region end-to-end.
+pub const DEEP_REGION_MIN_NODES: usize = 300_000;
+
+/// Deterministic grid over the previously-rejected deep-PP region: every
+/// feasible enumerated mapping whose lowered DAG estimate lies in
+/// `(DEEP_REGION_MIN_NODES, MAX_DAG_NODES]`, ordered by estimated node
+/// count (smallest first — the band just past the old cap) with the
+/// mapping tuple as tie-break, truncated to `top`.
+pub fn deep_candidates(w: &Workload, cluster: &Cluster, top: usize) -> Vec<Mapping> {
+    let mut out: Vec<(usize, Mapping)> = enumerate_candidates(w, cluster)
+        .into_iter()
+        .filter_map(|m| {
+            let est = estimate_nodes(&m, m.n_micro(w));
+            if est > DEEP_REGION_MIN_NODES
+                && est <= MAX_DAG_NODES
+                && crate::perf::check_feasible(w, &m).is_ok()
+            {
+                Some((est, m))
+            } else {
+                None
+            }
+        })
+        .collect();
+    out.sort_by_key(|(est, m)| {
+        (*est, m.par.tp, m.par.pp, m.par.dp, m.microbatch_seqs, m.moe.experts_per_dp_rank)
+    });
+    out.truncate(top);
+    out.into_iter().map(|(_, m)| m).collect()
+}
 
 /// Where the simulated step time went, measured on the stage-0 chain
 /// (the stage whose last gradient sync ends the step). The fields
@@ -124,9 +167,23 @@ pub fn simulate_step_with(
     knobs: &PerfKnobs,
     tweak: impl FnOnce(&mut crate::netsim::Network),
 ) -> Result<TimelineReport, TimelineError> {
-    let mut dag = lower_step(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
-    tweak(&mut dag.net);
-    let result = simulate_dag(&dag.net, &dag.nodes);
+    let dag = lower_step(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
+    Ok(simulate_lowered(w, &dag, tweak))
+}
+
+/// Simulate an already-lowered step DAG, applying `tweak` to a copy of its
+/// slice network first. The lowering is reusable across fabric states, so
+/// callers that re-simulate one mapping under several degradations (the
+/// [`crate::resilience`] healthy/up/out sweep) lower once and call this
+/// per state instead of paying [`lower_step`] three times.
+pub fn simulate_lowered(
+    w: &Workload,
+    dag: &StepDag,
+    tweak: impl FnOnce(&mut crate::netsim::Network),
+) -> TimelineReport {
+    let mut net = dag.net.clone();
+    tweak(&mut net);
+    let result = simulate_dag(&net, &dag.nodes);
 
     // Attribution walk over the stage-0 chain: the chain is serialized, so
     // each instant belongs to exactly one task (bucketed by phase) or to
@@ -152,13 +209,13 @@ pub fn simulate_step_with(
     }
     phases.bubble += result.makespan - cursor;
 
-    Ok(TimelineReport {
+    TimelineReport {
         step_time: result.makespan,
         time_to_train_s: result.makespan * w.steps_to_target(),
         phases,
         nodes: dag.nodes.len(),
         events: result.events,
-    })
+    }
 }
 
 /// One mapping's analytical-vs-simulated comparison.
@@ -328,6 +385,24 @@ mod tests {
             simulate_step_with(&w, &c, &m, &knobs, |net| net.scale_node_links(0, 0.5, 1.0))
                 .unwrap();
         assert!(degraded.step_time > healthy.step_time);
+    }
+
+    #[test]
+    fn deep_candidates_cover_the_previously_rejected_region() {
+        let w = Workload::paper_gpt_4p7t(4);
+        let c = Cluster::passage_512(32_768);
+        let deep = deep_candidates(&w, &c, 3);
+        assert!(!deep.is_empty(), "no deep-PP candidates on Passage-512/config 4");
+        let mut last_est = 0usize;
+        for m in &deep {
+            let est = estimate_nodes(m, m.n_micro(&w));
+            assert!(est > DEEP_REGION_MIN_NODES && est <= MAX_DAG_NODES, "{est}");
+            assert!(est >= last_est, "not ordered by estimate");
+            last_est = est;
+            assert!(crate::perf::check_feasible(&w, m).is_ok());
+        }
+        // deterministic
+        assert_eq!(deep, deep_candidates(&w, &c, 3));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::{fmt_si, fmt_time, Summary};
 
 /// Result of one benchmark.
@@ -114,6 +115,43 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Mean seconds of a recorded result by exact name (None if that
+    /// benchmark did not run).
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.samples.mean())
+    }
+
+    /// Machine-readable form of every recorded result: per-series
+    /// mean/median/stddev seconds plus throughput where recorded, keyed by
+    /// benchmark name (deterministic key order via `util::json`). The
+    /// netsim bench writes this as `BENCH_netsim.json` so the perf
+    /// trajectory is recorded run over run.
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mean = r.samples.mean();
+                let mut fields = vec![
+                    ("name", Json::str(&r.name)),
+                    ("mean_s", Json::num(mean)),
+                    ("median_s", Json::num(r.samples.median())),
+                    ("stddev_s", Json::num(r.samples.stddev())),
+                    ("samples", Json::num(r.samples.len() as f64)),
+                ];
+                if let Some(items) = r.items_per_iter {
+                    fields.push(("items_per_iter", Json::num(items)));
+                    if mean > 0.0 {
+                        fields.push(("items_per_s", Json::num(items / mean)));
+                        fields.push(("unit", Json::str(r.unit)));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![("series", Json::Arr(series))])
+    }
 }
 
 /// Prevent the optimizer from discarding a computed value.
@@ -147,5 +185,26 @@ mod tests {
             black_box(vec![0u8; 1024]);
         });
         assert!(b.results()[0].report().contains("/s]"));
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        std::env::set_var("LUMOS_BENCH_FAST", "1");
+        let mut b = Bencher::new().with_samples(2);
+        b.bench_items("series-a", 10.0, "flow", || {
+            black_box((0..64).sum::<u64>());
+        });
+        b.bench("series-b", || {
+            black_box((0..64).product::<u64>());
+        });
+        let j = b.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let series = parsed.get("series").as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].get("name").as_str(), Some("series-a"));
+        assert!(series[0].get("mean_s").as_f64().unwrap() >= 0.0);
+        assert!(series[0].get("items_per_iter").as_f64().is_some());
+        assert!(b.mean_of("series-b").is_some());
+        assert!(b.mean_of("missing").is_none());
     }
 }

@@ -4,14 +4,18 @@
 //! incremental fast path agrees with the full-recompute reference to
 //! ≤ 1e-9 relative. ISSUE 3 adds the dependency-driven engine's contract:
 //! on chain-dependency (full-barrier) schedules it reproduces the
-//! bulk-synchronous `replay_schedule` oracle to ≤ 1e-9 relative. Uses the
-//! in-tree `util::prop` framework (seeded, shrinking; override with
-//! `LUMOS_PROP_SEED`).
+//! bulk-synchronous `replay_schedule` oracle to ≤ 1e-9 relative. ISSUE 5
+//! adds the incremental dependency engine's contract: on randomized DAGs
+//! (random topologies × dependency shapes) `simulate_dag` agrees with the
+//! full-recompute `simulate_dag_reference` oracle to ≤ 1e-9 relative, per
+//! node. Uses the in-tree `util::prop` framework (seeded, shrinking;
+//! override with `LUMOS_PROP_SEED`).
 
 use lumos::collectives as coll;
 use lumos::netsim::{
     fair_rates, replay_schedule, replay_schedule_dependent, schedule_chain_dag, simulate,
-    simulate_dag, simulate_reference, Flow, Network,
+    simulate_dag, simulate_dag_reference, simulate_reference, DagNode, DagSimulator, Flow,
+    Network,
 };
 use lumos::prop_assert;
 use lumos::util::prop::{check, Gen};
@@ -196,6 +200,123 @@ fn prop_chain_dag_reproduces_bulk_synchronous_replay() {
         );
         for (i, (a, b)) in dag.finish.iter().zip(&bulk.flow_times).enumerate() {
             prop_assert!((a - b).abs() <= tol(*b), "flow {i}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+/// Random task DAG over `net`: a mix of delays and flows (zero-byte and
+/// self-loop flows included) with one of three dependency shapes —
+/// layered barriers (the timeline's block structure), chain-heavy
+/// (pipeline-like), or sparse random fan-in. Nodes are emitted in
+/// topological order by construction.
+fn random_dag(g: &mut Gen, net: &Network) -> Vec<DagNode> {
+    let n_nodes = g.usize(1, 60);
+    let shape = g.usize(0, 2);
+    let mut nodes: Vec<DagNode> = Vec::with_capacity(n_nodes);
+    let mut layer_start = 0usize;
+    for i in 0..n_nodes {
+        let deps: Vec<usize> = if i == 0 {
+            Vec::new()
+        } else {
+            match shape {
+                // layered barriers: depend on every node of the previous
+                // layer block (layers of ~4)
+                0 => {
+                    if i % 4 == 0 {
+                        layer_start = i.saturating_sub(4);
+                    }
+                    (layer_start..i.min(layer_start + 4)).collect()
+                }
+                // chain-heavy: previous node, sometimes one extra
+                1 => {
+                    let mut d = vec![i - 1];
+                    if g.bool() && i >= 2 {
+                        d.push(g.usize(0, i - 2));
+                    }
+                    d.sort_unstable();
+                    d.dedup();
+                    d
+                }
+                // sparse random fan-in (possibly a root)
+                _ => {
+                    let k = g.usize(0, 3.min(i));
+                    let mut d: Vec<usize> =
+                        (0..k).map(|_| g.usize(0, i - 1)).collect();
+                    d.sort_unstable();
+                    d.dedup();
+                    d
+                }
+            }
+        };
+        let node = if g.usize(0, 3) == 0 {
+            // delays, including zero-duration
+            let dur = if g.bool() { g.f64(1e-6, 5e-3) } else { 0.0 };
+            DagNode::delay(dur, deps)
+        } else {
+            let n = net.n_nodes;
+            let src = g.usize(0, n - 1);
+            // self-loops exercise the zero-work flow path
+            let dst = if g.usize(0, 7) == 0 { src } else { g.usize(0, n - 1) };
+            let bytes = if g.bool() { g.f64(1e3, 1e8) } else { 0.0 };
+            DagNode::flow(src, dst, bytes, deps)
+        };
+        nodes.push(node);
+    }
+    nodes
+}
+
+#[test]
+fn prop_incremental_dag_matches_reference() {
+    // The ISSUE-5 acceptance contract: the component-incremental dependency
+    // engine agrees with the full-recompute oracle to ≤ 1e-9 relative on
+    // randomized (topology × dependency-shape) DAGs, node by node.
+    check("incremental simulate_dag == simulate_dag_reference", 64, |g| {
+        let net = random_net(g);
+        let dag = random_dag(g, &net);
+        let fast = simulate_dag(&net, &dag);
+        let slow = simulate_dag_reference(&net, &dag);
+        let tol = |x: f64| 1e-9 * x.abs().max(1e-12);
+        prop_assert!(
+            (fast.makespan - slow.makespan).abs() <= tol(slow.makespan),
+            "makespan {} vs {}",
+            fast.makespan,
+            slow.makespan
+        );
+        prop_assert!(
+            fast.finish.len() == slow.finish.len(),
+            "{} vs {} nodes",
+            fast.finish.len(),
+            slow.finish.len()
+        );
+        for (i, (a, b)) in fast.finish.iter().zip(&slow.finish).enumerate() {
+            prop_assert!((a - b).abs() <= tol(*b), "node {i}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dag_simulator_reuse_matches_fresh_runs() {
+    // The reusable-buffer contract: one DagSimulator fed a sequence of
+    // unrelated (net, dag) pairs must report exactly what a *brand-new*
+    // simulator reports for each pair — no state may leak across runs.
+    // (Deliberately not compared against `simulate_dag`, whose
+    // thread-local simulator has its own call history.)
+    check("DagSimulator reuse is stateless", 24, |g| {
+        let mut sim = DagSimulator::new();
+        for _ in 0..3 {
+            let net = random_net(g);
+            let dag = random_dag(g, &net);
+            let reused = sim.simulate(&net, &dag);
+            let fresh = DagSimulator::new().simulate(&net, &dag);
+            prop_assert!(
+                reused.makespan.to_bits() == fresh.makespan.to_bits(),
+                "makespan {} vs {}",
+                reused.makespan,
+                fresh.makespan
+            );
+            prop_assert!(reused.finish == fresh.finish, "finish vectors differ");
         }
         Ok(())
     });
