@@ -1,0 +1,433 @@
+//! Minimal Rust lexer for the lint pass: source text → comment records +
+//! a comment-free token stream.
+//!
+//! This is deliberately not a full Rust grammar — just enough token
+//! fidelity that the rules in [`super::rules`] can match
+//! identifier/punctuation shapes without being fooled by string literals,
+//! char literals, lifetimes, raw strings, or (doc) comments. It is
+//! dependency-free like the rest of the substrate (DESIGN.md §Environment
+//! deviations): no proc-macro2/syn, just a hand-rolled cursor.
+
+/// Token classes the rule engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (raw `r#ident`s included, prefix stripped).
+    Ident,
+    /// `'a`, `'static`, `'_`, loop labels — lifetimes, not char literals.
+    Lifetime,
+    /// Numeric literal (any base, float exponents, type suffixes).
+    Num,
+    /// String literal of any flavour (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Single non-bracket punctuation character (`::` is two tokens).
+    Punct,
+    /// `(`, `[`, `{`.
+    Open,
+    /// `)`, `]`, `}`.
+    Close,
+}
+
+/// One token: kind, verbatim text, and 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment (line, block, or doc) with its text including delimiters;
+/// block comments may span `line..=end_line`.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub end_line: usize,
+    pub text: String,
+}
+
+/// Lex result: the comment-free token stream plus every comment.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, k: usize) -> Option<char> {
+        self.chars.get(self.pos + k).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn bump_into(&mut self, text: &mut String) {
+        if let Some(c) = self.bump() {
+            text.push(c);
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens and comments. Never fails: unknown bytes become
+/// single-character [`TokKind::Punct`] tokens, so the scan degrades
+/// gracefully on pathological input instead of erroring.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { chars: src.chars().collect(), pos: 0, line: 1 };
+    let mut out = Lexed::default();
+    while let Some(c) = cur.peek() {
+        if c.is_whitespace() {
+            cur.bump();
+        } else if c == '/' && cur.peek_at(1) == Some('/') {
+            line_comment(&mut cur, &mut out);
+        } else if c == '/' && cur.peek_at(1) == Some('*') {
+            block_comment(&mut cur, &mut out);
+        } else if is_ident_start(c) {
+            ident_or_prefixed(&mut cur, &mut out);
+        } else if c.is_ascii_digit() {
+            number(&mut cur, &mut out);
+        } else if c == '"' {
+            string_lit(&mut cur, &mut out, String::new());
+        } else if c == '\'' {
+            quote(&mut cur, &mut out);
+        } else {
+            let line = cur.line;
+            cur.bump();
+            let kind = match c {
+                '(' | '[' | '{' => TokKind::Open,
+                ')' | ']' | '}' => TokKind::Close,
+                _ => TokKind::Punct,
+            };
+            out.tokens.push(Tok { kind, text: c.to_string(), line });
+        }
+    }
+    out
+}
+
+fn line_comment(cur: &mut Cursor, out: &mut Lexed) {
+    let line = cur.line;
+    let mut text = String::new();
+    while let Some(c) = cur.peek() {
+        if c == '\n' {
+            break;
+        }
+        text.push(c);
+        cur.bump();
+    }
+    out.comments.push(Comment { line, end_line: line, text });
+}
+
+fn block_comment(cur: &mut Cursor, out: &mut Lexed) {
+    let line = cur.line;
+    let mut text = String::new();
+    cur.bump_into(&mut text); // '/'
+    cur.bump_into(&mut text); // '*'
+    let mut depth = 1usize;
+    while depth > 0 {
+        match cur.peek() {
+            None => break,
+            Some('/') if cur.peek_at(1) == Some('*') => {
+                depth += 1;
+                cur.bump_into(&mut text);
+                cur.bump_into(&mut text);
+            }
+            Some('*') if cur.peek_at(1) == Some('/') => {
+                depth -= 1;
+                cur.bump_into(&mut text);
+                cur.bump_into(&mut text);
+            }
+            Some(_) => cur.bump_into(&mut text),
+        }
+    }
+    out.comments.push(Comment { line, end_line: cur.line, text });
+}
+
+/// Identifier, or one of the prefixed literal forms that start with an
+/// identifier character: `r"…"`, `r#"…"#`, `r#ident`, `b"…"`, `b'…'`,
+/// `br"…"`, `br#"…"#`.
+fn ident_or_prefixed(cur: &mut Cursor, out: &mut Lexed) {
+    let c0 = cur.peek();
+    if c0 == Some('r') {
+        let mut hashes = 0usize;
+        while cur.peek_at(1 + hashes) == Some('#') {
+            hashes += 1;
+        }
+        if cur.peek_at(1 + hashes) == Some('"') {
+            raw_string(cur, out, 1, hashes);
+            return;
+        }
+        if hashes == 1 && cur.peek_at(2).is_some_and(is_ident_start) {
+            cur.bump(); // 'r'
+            cur.bump(); // '#'
+            plain_ident(cur, out);
+            return;
+        }
+    } else if c0 == Some('b') {
+        match cur.peek_at(1) {
+            Some('"') => {
+                let mut text = String::new();
+                cur.bump_into(&mut text); // 'b'
+                string_lit(cur, out, text);
+                return;
+            }
+            Some('\'') => {
+                let line = cur.line;
+                let mut text = String::new();
+                cur.bump_into(&mut text); // 'b'
+                char_lit(cur, &mut text);
+                out.tokens.push(Tok { kind: TokKind::Char, text, line });
+                return;
+            }
+            Some('r') => {
+                let mut hashes = 0usize;
+                while cur.peek_at(2 + hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if cur.peek_at(2 + hashes) == Some('"') {
+                    raw_string(cur, out, 2, hashes);
+                    return;
+                }
+            }
+            _ => {}
+        }
+    }
+    plain_ident(cur, out);
+}
+
+fn plain_ident(cur: &mut Cursor, out: &mut Lexed) {
+    let line = cur.line;
+    let mut text = String::new();
+    while let Some(c) = cur.peek() {
+        if !is_ident_continue(c) {
+            break;
+        }
+        text.push(c);
+        cur.bump();
+    }
+    out.tokens.push(Tok { kind: TokKind::Ident, text, line });
+}
+
+/// `prefix_len` chars (`r` or `br`), then `hashes` `#`s, then the quoted
+/// body, closed by `"` followed by the same number of `#`s.
+fn raw_string(cur: &mut Cursor, out: &mut Lexed, prefix_len: usize, hashes: usize) {
+    let line = cur.line;
+    let mut text = String::new();
+    for _ in 0..prefix_len + hashes + 1 {
+        cur.bump_into(&mut text);
+    }
+    loop {
+        match cur.peek() {
+            None => break,
+            Some('"') => {
+                let closes = (0..hashes).all(|k| cur.peek_at(1 + k) == Some('#'));
+                cur.bump_into(&mut text);
+                if closes {
+                    for _ in 0..hashes {
+                        cur.bump_into(&mut text);
+                    }
+                    break;
+                }
+            }
+            Some(_) => cur.bump_into(&mut text),
+        }
+    }
+    out.tokens.push(Tok { kind: TokKind::Str, text, line });
+}
+
+/// Ordinary (or byte) string starting at `"`; `text` may carry a `b`
+/// prefix already consumed by the caller.
+fn string_lit(cur: &mut Cursor, out: &mut Lexed, mut text: String) {
+    let line = cur.line;
+    cur.bump_into(&mut text); // opening '"'
+    while let Some(c) = cur.peek() {
+        if c == '\\' {
+            cur.bump_into(&mut text);
+            cur.bump_into(&mut text);
+        } else if c == '"' {
+            cur.bump_into(&mut text);
+            break;
+        } else {
+            cur.bump_into(&mut text);
+        }
+    }
+    out.tokens.push(Tok { kind: TokKind::Str, text, line });
+}
+
+/// `'` starts either a char literal or a lifetime/label. It is a char
+/// literal iff the next char is an escape, or the char after next closes
+/// the quote (`'x'`); everything else (`'a`, `'static`, `'_`, `'outer:`)
+/// is a lifetime.
+fn quote(cur: &mut Cursor, out: &mut Lexed) {
+    let line = cur.line;
+    let is_char = cur.peek_at(1) == Some('\\') || cur.peek_at(2) == Some('\'');
+    let mut text = String::new();
+    if is_char {
+        char_lit(cur, &mut text);
+        out.tokens.push(Tok { kind: TokKind::Char, text, line });
+    } else {
+        cur.bump_into(&mut text); // '\''
+        while let Some(c) = cur.peek() {
+            if !is_ident_continue(c) {
+                break;
+            }
+            text.push(c);
+            cur.bump();
+        }
+        out.tokens.push(Tok { kind: TokKind::Lifetime, text, line });
+    }
+}
+
+/// Body of a char/byte-char literal, cursor on the opening `'`.
+fn char_lit(cur: &mut Cursor, text: &mut String) {
+    cur.bump_into(text); // opening '\''
+    while let Some(c) = cur.peek() {
+        if c == '\\' {
+            cur.bump_into(text);
+            cur.bump_into(text);
+        } else if c == '\'' {
+            cur.bump_into(text);
+            break;
+        } else {
+            cur.bump_into(text);
+        }
+    }
+}
+
+/// Number: digits/`_`/base prefixes/type suffixes, one `.` if followed by
+/// a digit (so `0..n` stays a range), and `e±dd` exponents on non-hex
+/// literals.
+fn number(cur: &mut Cursor, out: &mut Lexed) {
+    let line = cur.line;
+    let mut text = String::new();
+    while let Some(c) = cur.peek() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            text.push(c);
+            cur.bump();
+        } else if c == '.'
+            && !text.contains('.')
+            && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit())
+        {
+            text.push(c);
+            cur.bump();
+        } else if (c == '+' || c == '-')
+            && (text.ends_with('e') || text.ends_with('E'))
+            && !text.starts_with("0x")
+            && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit())
+        {
+            text.push(c);
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+    out.tokens.push(Tok { kind: TokKind::Num, text, line });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_brackets() {
+        let ts = kinds("fn f(x: usize) -> usize { x + 1 }");
+        assert_eq!(ts[0], (TokKind::Ident, "fn".into()));
+        assert_eq!(ts[2], (TokKind::Open, "(".into()));
+        assert!(ts.iter().any(|t| *t == (TokKind::Num, "1".into())));
+        assert_eq!(ts.last().map(|t| t.0), Some(TokKind::Close));
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("a // trailing\n/* block\nspans */ b");
+        assert_eq!(l.tokens.len(), 2);
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        assert_eq!(l.comments[1].end_line, 3);
+        assert_eq!(l.tokens[1].line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("/* a /* b */ c */ x");
+        assert_eq!(l.tokens.len(), 1);
+        assert_eq!(l.tokens[0].text, "x");
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ts = kinds(r#"let s = "HashMap // not a comment";"#);
+        assert!(ts.iter().all(|t| t.1 != "HashMap"));
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let l = lex("r#\"raw \" inner\"# b\"bytes\" br\"rawbytes\"");
+        assert_eq!(l.tokens.len(), 3);
+        assert!(l.tokens.iter().all(|t| t.kind == TokKind::Str));
+        let ts = kinds("r#match x");
+        assert_eq!(ts[0], (TokKind::Ident, "match".into()));
+        assert_eq!(ts[1], (TokKind::Ident, "x".into()));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ts = kinds("let c = 'a'; let b = b'\\n'; fn f<'a>(x: &'a str) {}");
+        let chars: Vec<_> = ts.iter().filter(|t| t.0 == TokKind::Char).collect();
+        let lifes: Vec<_> = ts.iter().filter(|t| t.0 == TokKind::Lifetime).collect();
+        assert_eq!(chars.len(), 2);
+        assert_eq!(lifes.len(), 2);
+        let ts = kinds("'outer: loop { break 'outer; }");
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Lifetime).count(), 2);
+    }
+
+    #[test]
+    fn escaped_quote_chars() {
+        let ts = kinds(r"let q = '\''; let u = '\u{8}'; let sp = b' ';");
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn numbers_ranges_exponents() {
+        let ts = kinds("1.9e-15 0..n 0xFFF0 1_000 2.5f64");
+        let nums: Vec<_> =
+            ts.iter().filter(|t| t.0 == TokKind::Num).map(|t| t.1.clone()).collect();
+        assert_eq!(nums, vec!["1.9e-15", "0", "0xFFF0", "1_000", "2.5f64"]);
+        assert!(ts.iter().any(|t| t.1 == "n" && t.0 == TokKind::Ident));
+    }
+
+    #[test]
+    fn lines_are_one_based_and_tracked() {
+        let l = lex("a\nb\n\nc");
+        let lines: Vec<usize> = l.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,206 @@
+//! `lumos lint` — dependency-free determinism & concurrency static
+//! analysis over the repo's own Rust sources.
+//!
+//! Every headline number (Table IV speedups, availability tables, netsim
+//! baselines) rests on the contract that output is byte-identical across
+//! `--jobs N` and reproducible from `--seed`. The [`rules`] engine makes
+//! that contract structural: ambient hash order, wall-clock reads,
+//! un-seeded entropy, arrival-order float reduction, unjustified panics
+//! and undocumented `unsafe` are findings, not conventions. Exemptions
+//! are inline and self-documenting:
+//!
+//! ```text
+//! // lumos: allow(<rule>[, <rule>]*) -- <reason>
+//! ```
+//!
+//! written on the offending line, or alone on the line(s) above it.
+//!
+//! The scanner itself honours the contract it enforces: files are listed
+//! in sorted order, scanned in parallel on
+//! [`crate::sweep::engine::run_indexed`] (index-ordered results), and the
+//! report is identical for any `--jobs N`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::sweep::engine::run_indexed;
+use crate::util::json::Json;
+
+/// One lint finding. The derived ordering (file, line, rule, message) is
+/// the report order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Aggregate result of a lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// findings silenced by `lumos: allow` directives
+    pub suppressed: usize,
+}
+
+/// Lint one source string (`file` is only a label). Returns surviving
+/// findings and the suppressed count.
+pub fn lint_source(file: &str, src: &str, only: &[String]) -> (Vec<Finding>, usize) {
+    rules::scan_lexed(file, &lexer::lex(src), only)
+}
+
+/// Lint `.rs` files under `paths` (files or directories) with `jobs`
+/// scanner threads. File order is sorted-deterministic; the report is
+/// identical for any job count.
+pub fn lint_paths(paths: &[PathBuf], only: &[String], jobs: usize) -> Result<LintReport> {
+    let mut files = Vec::new();
+    for p in paths {
+        ensure!(p.exists(), "no such path: {}", p.display());
+        files.extend(collect_rs_files(p)?);
+    }
+    files.sort();
+    files.dedup();
+    ensure!(!files.is_empty(), "no .rs files under the given paths");
+
+    // Read serially in sorted order (I/O error paths stay simple);
+    // scanning — the expensive part — fans out index-ordered.
+    let mut sources = Vec::with_capacity(files.len());
+    for f in &files {
+        sources.push(
+            std::fs::read_to_string(f).with_context(|| format!("reading {}", f.display()))?,
+        );
+    }
+    let labels: Vec<String> = files.iter().map(|f| f.display().to_string()).collect();
+    let per_file = run_indexed(files.len(), jobs, |i| {
+        lint_source(&labels[i], &sources[i], only)
+    });
+
+    let mut report =
+        LintReport { findings: Vec::new(), files_scanned: files.len(), suppressed: 0 };
+    for (found, suppressed) in per_file {
+        report.findings.extend(found);
+        report.suppressed += suppressed;
+    }
+    report.findings.sort();
+    Ok(report)
+}
+
+/// All `.rs` files under `path` (itself, if it is a file), sorted.
+pub fn collect_rs_files(path: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(out);
+    }
+    walk(path, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    let iter =
+        std::fs::read_dir(dir).with_context(|| format!("reading directory {}", dir.display()))?;
+    for e in iter {
+        entries.push(e.with_context(|| format!("reading directory {}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Default lint root when no paths are given: the crate sources, whether
+/// invoked from the repo root or from `rust/`.
+pub fn default_root() -> Result<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    bail!("no rust/src or src directory here; pass explicit paths to `lumos lint`")
+}
+
+/// Deterministic JSON form of the report (the CI gate diffs this across
+/// `--jobs` values).
+pub fn report_json(r: &LintReport) -> Json {
+    Json::obj(vec![
+        ("files_scanned", Json::num(r.files_scanned as f64)),
+        ("suppressed", Json::num(r.suppressed as f64)),
+        (
+            "findings",
+            Json::arr(r.findings.iter().map(|f| {
+                Json::obj(vec![
+                    ("file", Json::str(&f.file)),
+                    ("line", Json::num(f.line as f64)),
+                    ("rule", Json::str(f.rule)),
+                    ("message", Json::str(&f.message)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Human-readable rule registry (`lumos lint --list`).
+pub fn rule_table() -> String {
+    let mut out = String::from("lint rules (suppress: `// lumos: allow(<rule>) -- <reason>`):\n");
+    for r in rules::RULES {
+        out.push_str(&format!("  {:14} {}\n{:17}{}\n", r.id, r.fires_on, "", r.why));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_source_reports_and_sorts() {
+        let src = "use std::collections::HashMap;\nfn f() { x.unwrap(); }\n";
+        let (fs, sup) = lint_source("a.rs", src, &[]);
+        assert_eq!(sup, 0);
+        assert_eq!(fs.len(), 2);
+        assert!(fs[0].line <= fs[1].line);
+        assert_eq!(fs[0].rule, "hash-iter");
+        let shown = fs[0].to_string();
+        assert!(shown.starts_with("a.rs:1: [hash-iter]"), "{shown}");
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let (findings, suppressed) = lint_source("a.rs", "fn f() { panic!(\"x\") }\n", &[]);
+        let r = LintReport { findings, files_scanned: 1, suppressed };
+        let j = report_json(&r);
+        assert_eq!(j.get("files_scanned").as_usize(), Some(1));
+        let arr = j.get("findings").as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").as_str(), Some("panic-path"));
+    }
+
+    #[test]
+    fn rule_table_lists_every_rule() {
+        let t = rule_table();
+        for r in rules::RULES {
+            assert!(t.contains(r.id), "missing {}", r.id);
+        }
+    }
+}

@@ -1,0 +1,641 @@
+//! The lint rule engine: determinism & concurrency rules over the token
+//! stream from [`super::lexer`], `#[cfg(test)]`/`#[test]` masking, and
+//! `lumos: allow(<rule>) -- <reason>` suppression directives.
+//!
+//! Every rule is wired to a real repo invariant (DESIGN.md §Determinism
+//! invariants & lint rules): results must be byte-identical across
+//! `--jobs N` and reproducible from `--seed`, so ambient hash order,
+//! wall clocks, ambient entropy, and arrival-order float reduction are
+//! all structural hazards, not style nits.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Comment, Lexed, Tok, TokKind};
+use super::Finding;
+
+/// One rule: stable id (the `--rule` / `allow(...)` key), what it fires
+/// on, and the invariant it protects.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleDef {
+    pub id: &'static str,
+    pub fires_on: &'static str,
+    pub why: &'static str,
+}
+
+/// The rule registry (`lumos lint --list`).
+pub const RULES: &[RuleDef] = &[
+    RuleDef {
+        id: "hash-iter",
+        fires_on: "HashMap / HashSet / RandomState / DefaultHasher",
+        why: "std hash iteration order varies per process; ordered collections \
+              keep every table/figure byte-identical",
+    },
+    RuleDef {
+        id: "wallclock",
+        fires_on: "Instant::now / SystemTime",
+        why: "wall-clock reads leak host timing into results; only measurement \
+              harnesses may read clocks, and each site says why",
+    },
+    RuleDef {
+        id: "entropy",
+        fires_on: "thread_rng / rand::random / OsRng / from_entropy",
+        why: "all randomness must flow from the seeded, index-order-forked \
+              util::rng streams (--seed reproducibility)",
+    },
+    RuleDef {
+        id: "float-reduce",
+        fires_on: "accumulation over arrival-order channel receives",
+        why: "float addition is not associative; reduce in index order \
+              (sweep::engine::run_indexed) so --jobs N is bit-stable",
+    },
+    RuleDef {
+        id: "panic-path",
+        fires_on: ".unwrap() / .expect() / panic! outside tests",
+        why: "library panics must be structurally impossible (say why inline) \
+              or become Result propagation",
+    },
+    RuleDef {
+        id: "unsafe-safety",
+        fires_on: "`unsafe` without a nearby SAFETY comment",
+        why: "every unsafe site documents the invariant that makes it sound",
+    },
+    RuleDef {
+        id: "lint-directive",
+        fires_on: "malformed or dangling `lumos:` comments",
+        why: "a suppression that does not parse silently suppresses nothing",
+    },
+];
+
+/// Is `id` a known rule id?
+pub fn is_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Scan one lexed file. Returns the findings that survive suppression
+/// (sorted by line, deduplicated per (line, rule)) and the count of
+/// findings suppressed by `lumos: allow` directives. `only` restricts to
+/// the listed rule ids; empty means all rules.
+pub fn scan_lexed(file: &str, lexed: &Lexed, only: &[String]) -> (Vec<Finding>, usize) {
+    let toks = &lexed.tokens;
+    let masked = test_mask(toks);
+    let enabled = |id: &str| only.is_empty() || only.iter().any(|o| o == id);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    if enabled("hash-iter") {
+        ident_rule(file, toks, &masked, "hash-iter", &mut raw);
+    }
+    if enabled("entropy") {
+        ident_rule(file, toks, &masked, "entropy", &mut raw);
+    }
+    if enabled("wallclock") {
+        rule_wallclock(file, toks, &masked, &mut raw);
+    }
+    if enabled("panic-path") {
+        rule_panic_path(file, toks, &masked, &mut raw);
+    }
+    if enabled("unsafe-safety") {
+        rule_unsafe_safety(file, toks, &masked, &lexed.comments, &mut raw);
+    }
+    if enabled("float-reduce") {
+        rule_float_reduce(file, toks, &masked, &mut raw);
+    }
+
+    let (suppress, problems) = directive_map(toks, &lexed.comments);
+    if enabled("lint-directive") {
+        for (line, msg) in problems {
+            raw.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: "lint-directive",
+                message: msg,
+            });
+        }
+    }
+
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in raw {
+        if suppress.contains(&(f.line, f.rule.to_string())) {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    kept.sort();
+    kept.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    (kept, suppressed)
+}
+
+// ---------------------------------------------------------------------
+// Token-tree helpers
+// ---------------------------------------------------------------------
+
+/// Index one past the `Close` matching the `Open` at `open`.
+fn group_end(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 1usize;
+    let mut i = open + 1;
+    while i < toks.len() && depth > 0 {
+        match toks[i].kind {
+            TokKind::Open => depth += 1,
+            TokKind::Close => depth -= 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// End of the item starting at `start`: one past the first depth-0 `;`,
+/// or one past the close of the first depth-0 `{…}` body.
+fn item_end(toks: &[Tok], start: usize) -> usize {
+    let mut i = start;
+    while i < toks.len() {
+        let t = &toks[i];
+        match t.kind {
+            TokKind::Open => {
+                if t.text == "{" {
+                    return group_end(toks, i);
+                }
+                i = group_end(toks, i);
+            }
+            // the enclosing block closed before the item did — stop here
+            TokKind::Close => return i,
+            _ => {
+                if t.text == ";" {
+                    return i + 1;
+                }
+                i += 1;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// Token mask covering `#[test]` / `#[cfg(test)]`-attributed items (and
+/// any attributes stacked on them): panics and clocks are fine in tests.
+/// `#[cfg(not(test))]` does NOT mask (the `not` ident opts back in).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut masked = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].kind == TokKind::Punct && toks[i].text == "#") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if j < toks.len() && toks[j].kind == TokKind::Punct && toks[j].text == "!" {
+            j += 1;
+        }
+        if !(j < toks.len() && toks[j].kind == TokKind::Open && toks[j].text == "[") {
+            i += 1;
+            continue;
+        }
+        let attr_end = group_end(toks, j);
+        let mut has_test = false;
+        let mut has_not = false;
+        for t in &toks[j + 1..attr_end.saturating_sub(1)] {
+            if t.kind == TokKind::Ident {
+                has_test |= t.text == "test";
+                has_not |= t.text == "not";
+            }
+        }
+        if !(has_test && !has_not) {
+            i = attr_end;
+            continue;
+        }
+        // swallow further stacked attributes, then the attributed item
+        let mut k = attr_end;
+        while k + 1 < toks.len()
+            && toks[k].kind == TokKind::Punct
+            && toks[k].text == "#"
+            && toks[k + 1].kind == TokKind::Open
+            && toks[k + 1].text == "["
+        {
+            k = group_end(toks, k + 1);
+        }
+        let end = item_end(toks, k);
+        for m in masked.iter_mut().take(end).skip(i) {
+            *m = true;
+        }
+        i = end;
+    }
+    masked
+}
+
+// ---------------------------------------------------------------------
+// Suppression directives
+// ---------------------------------------------------------------------
+
+/// Parse every `lumos:` comment. Returns the suppression set — (code
+/// line, rule id) pairs — plus (line, message) problems for malformed or
+/// dangling directives.
+#[allow(clippy::type_complexity)]
+fn directive_map(
+    toks: &[Tok],
+    comments: &[Comment],
+) -> (BTreeSet<(usize, String)>, Vec<(usize, String)>) {
+    let code_lines: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+    let mut suppress = BTreeSet::new();
+    let mut problems = Vec::new();
+    for c in comments {
+        let body = c.text.trim_start_matches(['/', '!', '*']).trim_start();
+        let Some(rest) = body.strip_prefix("lumos:") else {
+            continue;
+        };
+        match parse_allow(rest.trim()) {
+            Err(e) => problems.push((c.line, format!("malformed lint directive: {e}"))),
+            Ok(rules) => {
+                // a trailing directive covers its own line; a standalone
+                // one covers the next line that has code on it
+                let target = if code_lines.contains(&c.line) {
+                    Some(c.line)
+                } else {
+                    code_lines.range(c.end_line + 1..).next().copied()
+                };
+                match target {
+                    Some(t) => {
+                        for r in rules {
+                            suppress.insert((t, r));
+                        }
+                    }
+                    None => problems.push((
+                        c.line,
+                        "lint directive does not precede any code".to_string(),
+                    )),
+                }
+            }
+        }
+    }
+    (suppress, problems)
+}
+
+/// Grammar after the `lumos:` marker:
+/// `allow(<rule>[, <rule>]*) -- <reason>` with a nonempty reason.
+fn parse_allow(rest: &str) -> Result<Vec<String>, String> {
+    let rest = rest
+        .strip_prefix("allow")
+        .ok_or("expected `allow(<rule>[, <rule>]*) -- <reason>`")?;
+    let rest = rest.trim_start().strip_prefix('(').ok_or("expected `(` after `allow`")?;
+    let (ids, rest) = rest.split_once(')').ok_or("missing `)` after the rule list")?;
+    let mut rules = Vec::new();
+    for id in ids.split(',') {
+        let id = id.trim();
+        if id.is_empty() {
+            return Err("empty rule id in allow(...)".to_string());
+        }
+        if !is_rule(id) {
+            return Err(format!("unknown rule '{id}' (see `lumos lint --list`)"));
+        }
+        rules.push(id.to_string());
+    }
+    let rest = rest.trim_start();
+    let reason = rest.strip_prefix("--").ok_or("missing `-- <reason>` justification")?;
+    if reason.trim().is_empty() {
+        return Err("empty justification after `--`".to_string());
+    }
+    Ok(rules)
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+fn push(out: &mut Vec<Finding>, file: &str, line: usize, rule: &'static str, message: String) {
+    out.push(Finding { file: file.to_string(), line, rule, message });
+}
+
+/// hash-iter and entropy are plain banned-identifier rules.
+fn ident_rule(
+    file: &str,
+    toks: &[Tok],
+    masked: &[bool],
+    rule: &'static str,
+    out: &mut Vec<Finding>,
+) {
+    let hash_idents = ["HashMap", "HashSet", "RandomState", "DefaultHasher"];
+    let entropy_idents = ["thread_rng", "ThreadRng", "OsRng", "from_entropy"];
+    for (i, t) in toks.iter().enumerate() {
+        if masked[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if rule == "hash-iter" && hash_idents.contains(&t.text.as_str()) {
+            push(
+                out,
+                file,
+                t.line,
+                rule,
+                format!(
+                    "std hash collection `{}` — iteration order is nondeterministic; \
+                     use BTreeMap/BTreeSet",
+                    t.text
+                ),
+            );
+        }
+        if rule == "entropy" {
+            let rand_random = t.text == "random"
+                && i >= 3
+                && toks[i - 1].text == ":"
+                && toks[i - 2].text == ":"
+                && toks[i - 3].text == "rand";
+            if entropy_idents.contains(&t.text.as_str()) || rand_random {
+                push(
+                    out,
+                    file,
+                    t.line,
+                    rule,
+                    format!(
+                        "`{}` draws ambient entropy — all randomness must flow from \
+                         the seeded util::rng streams",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn rule_wallclock(file: &str, toks: &[Tok], masked: &[bool], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if masked[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        let instant_now = t.text == "Instant"
+            && i + 3 < toks.len()
+            && toks[i + 1].text == ":"
+            && toks[i + 2].text == ":"
+            && toks[i + 3].text == "now";
+        if instant_now || t.text == "SystemTime" {
+            let what = if instant_now { "Instant::now" } else { "SystemTime" };
+            push(
+                out,
+                file,
+                t.line,
+                "wallclock",
+                format!(
+                    "`{what}` reads the wall clock — deterministic modules must not; \
+                     measurement harnesses say why inline"
+                ),
+            );
+        }
+    }
+}
+
+fn rule_panic_path(file: &str, toks: &[Tok], masked: &[bool], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if masked[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        let method_call = (t.text == "unwrap" || t.text == "expect")
+            && i >= 1
+            && toks[i - 1].kind == TokKind::Punct
+            && toks[i - 1].text == "."
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Open
+            && toks[i + 1].text == "(";
+        if method_call {
+            push(
+                out,
+                file,
+                t.line,
+                "panic-path",
+                format!(
+                    "`.{}()` can panic in library code — propagate a Result or \
+                     justify the invariant",
+                    t.text
+                ),
+            );
+        }
+        let macro_call = t.text == "panic"
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Punct
+            && toks[i + 1].text == "!";
+        if macro_call {
+            push(
+                out,
+                file,
+                t.line,
+                "panic-path",
+                "`panic!` in library code — return an error or justify the invariant"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// An `unsafe` token needs a comment containing `SAFETY` ending on its
+/// own line or within the 3 lines above it.
+fn rule_unsafe_safety(
+    file: &str,
+    toks: &[Tok],
+    masked: &[bool],
+    comments: &[Comment],
+    out: &mut Vec<Finding>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        if masked[i] || t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let lo = t.line.saturating_sub(3);
+        let justified = comments
+            .iter()
+            .any(|c| c.text.contains("SAFETY") && c.end_line >= lo && c.end_line <= t.line);
+        if !justified {
+            push(
+                out,
+                file,
+                t.line,
+                "unsafe-safety",
+                "`unsafe` without a `// SAFETY:` comment on or within 3 lines above it"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Arrival-order receives: `.recv()` / `.try_recv()` with no arguments,
+/// `.recv_timeout(…)`, or a `for … in <receiver-ish>` header. Selective
+/// receives with arguments (e.g. the coordinator's tagged
+/// `self.recv(src, tag)`) are deterministic and do not count.
+fn arrival_order_recv(toks: &[Tok], i: usize) -> bool {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident {
+        return false;
+    }
+    let after_dot = i >= 1 && toks[i - 1].kind == TokKind::Punct && toks[i - 1].text == ".";
+    let empty_call = |k: usize| {
+        toks.get(k).is_some_and(|o| o.kind == TokKind::Open && o.text == "(")
+            && toks.get(k + 1).is_some_and(|c| c.kind == TokKind::Close && c.text == ")")
+    };
+    if after_dot && (t.text == "recv" || t.text == "try_recv") && empty_call(i + 1) {
+        return true;
+    }
+    if after_dot
+        && t.text == "recv_timeout"
+        && toks.get(i + 1).is_some_and(|o| o.kind == TokKind::Open && o.text == "(")
+    {
+        return true;
+    }
+    // `for (i, r) in res_rx { … }` — iterating a receiver yields
+    // completion order
+    let receiver_ish = t.text == "rx"
+        || t.text.ends_with("_rx")
+        || t.text.starts_with("rx_")
+        || t.text.contains("receiver");
+    receiver_ish && i >= 1 && toks[i - 1].kind == TokKind::Ident && toks[i - 1].text == "in"
+}
+
+/// Float accumulation shapes: compound assignment (`+=` `-=` `*=` `/=`)
+/// or `.sum(` / `.fold(` / `.product(`.
+fn is_accumulation(toks: &[Tok], j: usize) -> bool {
+    let t = &toks[j];
+    if t.kind == TokKind::Punct
+        && matches!(t.text.as_str(), "+" | "-" | "*" | "/")
+        && toks.get(j + 1).is_some_and(|n| n.kind == TokKind::Punct && n.text == "=")
+    {
+        return true;
+    }
+    t.kind == TokKind::Ident
+        && matches!(t.text.as_str(), "sum" | "fold" | "product")
+        && j >= 1
+        && toks[j - 1].kind == TokKind::Punct
+        && toks[j - 1].text == "."
+        && toks.get(j + 1).is_some_and(|n| n.kind == TokKind::Open && n.text == "(")
+}
+
+/// For every arrival-order receive, look for an accumulation in the rest
+/// of its enclosing block; receiving in completion order and folding the
+/// results changes the bits across worker counts.
+fn rule_float_reduce(file: &str, toks: &[Tok], masked: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if masked[i] || !arrival_order_recv(toks, i) {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        while j < toks.len() {
+            match toks[j].kind {
+                TokKind::Open => depth += 1,
+                TokKind::Close => {
+                    if depth == 0 {
+                        break; // enclosing block closed
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+            if !masked[j] && is_accumulation(toks, j) {
+                push(
+                    out,
+                    file,
+                    toks[j].line,
+                    "float-reduce",
+                    format!(
+                        "float accumulation over arrival-order results (receive at \
+                         line {}) — restore index order before reducing \
+                         (sweep::engine::run_indexed)",
+                        toks[i].line
+                    ),
+                );
+                break;
+            }
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn findings(src: &str) -> Vec<(usize, &'static str)> {
+        let (fs, _) = scan_lexed("t.rs", &lex(src), &[]);
+        fs.into_iter().map(|f| (f.line, f.rule)).collect()
+    }
+
+    #[test]
+    fn test_items_are_masked() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\nfn lib() { y.unwrap(); }\n";
+        assert_eq!(findings(src), vec![(3, "panic-path")]);
+    }
+
+    #[test]
+    fn cfg_test_mod_is_masked_but_not_cfg_not_test() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { panic!(\"x\") } }\n";
+        assert!(findings(src).is_empty());
+        let src = "#[cfg(not(test))]\nfn lib() { panic!(\"x\") }\n";
+        assert_eq!(findings(src), vec![(2, "panic-path")]);
+    }
+
+    #[test]
+    fn stacked_attributes_extend_the_mask() {
+        let src = "#[test]\n#[ignore]\nfn t() { q.unwrap(); }\n";
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn suppression_targets_next_code_line() {
+        let src = "// lumos: allow(panic-path) -- structurally nonempty\nfn f() { x.unwrap(); }\n";
+        let (fs, sup) = scan_lexed("t.rs", &lex(src), &[]);
+        assert!(fs.is_empty());
+        assert_eq!(sup, 1);
+    }
+
+    #[test]
+    fn trailing_suppression_covers_its_own_line() {
+        let src = "fn f() { x.unwrap() } // lumos: allow(panic-path) -- infallible\n";
+        let (fs, sup) = scan_lexed("t.rs", &lex(src), &[]);
+        assert!(fs.is_empty());
+        assert_eq!(sup, 1);
+    }
+
+    #[test]
+    fn malformed_directives_are_findings() {
+        let src = "// lumos: allow(panic-path)\nfn f() {}\n";
+        assert_eq!(findings(src), vec![(1, "lint-directive")]);
+        let src = "// lumos: allow(no-such-rule) -- why\nfn f() {}\n";
+        assert_eq!(findings(src), vec![(1, "lint-directive")]);
+        let src = "fn f() {}\n// lumos: allow(panic-path) -- dangles\n";
+        assert_eq!(findings(src), vec![(2, "lint-directive")]);
+    }
+
+    #[test]
+    fn only_filter_restricts_rules() {
+        let src = "fn f() { let m: HashMap<u8, u8> = x.unwrap(); }\n";
+        let (fs, _) = scan_lexed("t.rs", &lex(src), &["hash-iter".to_string()]);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "hash-iter");
+    }
+
+    #[test]
+    fn selective_recv_is_not_float_reduce() {
+        // the coordinator's tagged recv + accumulate shape must stay clean
+        let src = "fn ar(&mut self) { let inc = self.recv(prev, tag); \
+                   for (d, s) in dst.iter_mut().zip(&inc) { *d += s; } }\n";
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn arrival_order_accumulation_fires() {
+        let src = "fn f() { let mut t = 0.0; for v in res_rx { t += v; } }\n";
+        assert_eq!(findings(src), vec![(1, "float-reduce")]);
+        let src = "fn f() { let v = rx.recv().unwrap();\n s += v; }\n";
+        let (fs, _) = scan_lexed("t.rs", &lex(src), &["float-reduce".to_string()]);
+        assert_eq!(fs.len(), 1);
+    }
+
+    #[test]
+    fn indexed_store_is_clean() {
+        // run_indexed's own shape: receiver iterated, results stored by index
+        let src = "fn f() { for (i, r) in res_rx { out[i] = Some(r); } }\n";
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_window() {
+        let src = "// SAFETY: the artifact pins the layout\nunsafe { go() }\n";
+        assert!(findings(src).is_empty());
+        let src = "fn f() { unsafe { go() } }\n";
+        assert_eq!(findings(src), vec![(1, "unsafe-safety")]);
+    }
+}

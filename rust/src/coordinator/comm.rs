@@ -62,6 +62,7 @@ impl Endpoint {
         self.bytes_sent += (data.len() * 4) as u64;
         self.senders[dst]
             .send(Msg { src: self.rank, tag, data })
+            // lumos: allow(panic-path) -- a closed channel means a peer already panicked; propagate the abort
             .expect("peer hung up");
     }
 
@@ -73,6 +74,7 @@ impl Endpoint {
             }
         }
         loop {
+            // lumos: allow(panic-path) -- a closed fabric means a peer already panicked; propagate the abort
             let m = self.inbox.recv().expect("fabric closed");
             if m.src == src && m.tag == tag {
                 return m.data;
@@ -205,7 +207,11 @@ pub fn run_workers<R: Send + 'static>(
         let f = f.clone();
         handles.push(std::thread::spawn(move || f(ep)));
     }
-    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    handles
+        .into_iter()
+        // lumos: allow(panic-path) -- run_workers propagates worker panics to the caller by design
+        .map(|h| h.join().expect("worker panicked"))
+        .collect()
 }
 
 #[cfg(test)]

@@ -44,6 +44,7 @@ pub fn fig7_comparison(gbps: f64) -> (Vec<PowerBreakdown>, f64) {
     let passage = breakdowns
         .iter()
         .find(|b| b.tech.contains("Passage"))
+        // lumos: allow(panic-path) -- the static catalog always contains the Passage entry
         .expect("catalog has passage");
     let best_conventional = catalog()
         .iter()

@@ -35,8 +35,12 @@
 //!   [`runtime`] (PJRT).
 //! - **Substrate**: [`util`] (JSON, RNG, property testing, CLI, stats,
 //!   tables, bench harness — the vendored crate set is minimal: the only
-//!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API).
+//!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API),
+//!   and [`analysis`], the determinism & concurrency lint (`lumos lint`)
+//!   that makes the byte-identical `--jobs N` / seeded-reproducibility
+//!   contract structural instead of conventional.
 
+pub mod analysis;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

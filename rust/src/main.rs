@@ -21,9 +21,13 @@
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
+//! - `lint`     determinism & concurrency static analysis over the repo's
+//!   own sources (non-zero exit on findings; `--json` for the CI gate)
 
 use std::process::ExitCode;
 
+use anyhow::Context as _;
+use lumos::analysis;
 use lumos::config;
 use lumos::perf::{evaluate_feasible, PerfKnobs};
 use lumos::planner;
@@ -165,6 +169,13 @@ fn cli() -> Command {
                 .opt_default("seed", "rng seed", "42")
                 .opt("csv", "write the loss curve to this CSV file"),
         )
+        .sub(
+            Command::new("lint", "determinism & concurrency static analysis")
+                .opt("rule", "run only this rule id (repeatable; see --list)")
+                .opt_default("jobs", "worker threads for the file scan", "1")
+                .flag("json", "machine-readable report (util::json, deterministic)")
+                .flag("list", "list the rule registry and exit"),
+        )
 }
 
 fn main() -> ExitCode {
@@ -205,6 +216,7 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("train") => train(args),
+        Some("lint") => lint_cmd(args),
         _ => {
             println!("{}", cli().help_text());
             Ok(())
@@ -288,6 +300,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
 fn model(args: &Args) -> anyhow::Result<()> {
     let cluster = config::cluster_preset(args.get("cluster").unwrap_or("passage-512"))?;
     let cfg_idx = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=4).contains(&cfg_idx), "--config must be 1..4, got {cfg_idx}");
     let (knobs, json_microbatch) = match args.get("knobs") {
         Some(path) => {
             let j = Json::parse(&std::fs::read_to_string(path)?).map_err(anyhow::Error::msg)?;
@@ -344,7 +357,7 @@ fn model(args: &Args) -> anyhow::Result<()> {
 /// serial == parallel diff contract).
 fn write_csv(args: &Args, table: &Table) -> anyhow::Result<()> {
     if let Some(path) = args.get("csv") {
-        std::fs::write(path, table.to_csv())?;
+        std::fs::write(path, table.to_csv()).with_context(|| format!("writing {path}"))?;
         eprintln!("result grid written to {path}");
     }
     Ok(())
@@ -413,9 +426,18 @@ fn cluster_key_from_args(args: &Args) -> anyhow::Result<ClusterKey> {
             args.get("cluster").is_none(),
             "--cluster conflicts with --gpus/--pod-size/--gbps (pick a preset or a custom point)"
         );
-        let n = args.get_usize("gpus").map_err(anyhow::Error::msg)?.unwrap();
-        let pod = args.get_usize("pod-size").map_err(anyhow::Error::msg)?.unwrap();
-        let gbps = args.get_f64("gbps").map_err(anyhow::Error::msg)?.unwrap();
+        let n = args
+            .get_usize("gpus")
+            .map_err(anyhow::Error::msg)?
+            .context("--gpus is required for a custom cluster")?;
+        let pod = args
+            .get_usize("pod-size")
+            .map_err(anyhow::Error::msg)?
+            .context("--pod-size is required for a custom cluster")?;
+        let gbps = args
+            .get_f64("gbps")
+            .map_err(anyhow::Error::msg)?
+            .context("--gbps is required for a custom cluster")?;
         anyhow::ensure!(
             pod > 0 && n > 0 && n % pod == 0,
             "--gpus must be a multiple of --pod-size"
@@ -513,6 +535,7 @@ fn validate_cmd(args: &Args) -> anyhow::Result<()> {
     // cluster (same gate as the planner baseline).
     if planner::paper_baseline(&workload, &cluster, &knobs).is_some() {
         let map = Mapping::try_new(Parallelism::paper(), workload.moe)
+            // lumos: allow(panic-path) -- paper_baseline() already built this mapping
             .expect("baseline implies a legal mapping");
         rows.push(
             timeline::validate_mapping(&workload, &cluster, &map, &knobs)
@@ -750,8 +773,48 @@ fn train(args: &Args) -> anyhow::Result<()> {
         report.steady_step_secs(),
     );
     if let Some(path) = args.get("csv") {
-        std::fs::write(path, report.to_csv())?;
+        std::fs::write(path, report.to_csv()).with_context(|| format!("writing {path}"))?;
         println!("loss curve written to {path}");
     }
+    Ok(())
+}
+
+fn lint_cmd(args: &Args) -> anyhow::Result<()> {
+    if args.flag("list") {
+        print!("{}", analysis::rule_table());
+        return Ok(());
+    }
+    let only: Vec<String> = args.get_all("rule").iter().map(|s| s.to_string()).collect();
+    for r in &only {
+        anyhow::ensure!(
+            analysis::rules::is_rule(r),
+            "unknown rule '{r}' (see `lumos lint --list`)"
+        );
+    }
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let paths: Vec<std::path::PathBuf> = if args.positional.is_empty() {
+        vec![analysis::default_root()?]
+    } else {
+        args.positional.iter().map(std::path::PathBuf::from).collect()
+    };
+    let report = analysis::lint_paths(&paths, &only, jobs)?;
+    if args.flag("json") {
+        println!("{}", analysis::report_json(&report).to_string_pretty());
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        println!(
+            "{} file(s) scanned, {} finding(s), {} suppressed",
+            report.files_scanned,
+            report.findings.len(),
+            report.suppressed
+        );
+    }
+    anyhow::ensure!(
+        report.findings.is_empty(),
+        "{} lint finding(s) — fix, or justify with `// lumos: allow(<rule>) -- <reason>`",
+        report.findings.len()
+    );
     Ok(())
 }

@@ -28,6 +28,7 @@ impl MoeConfig {
             2 => MoeConfig { total_experts: 64, active_per_token: 2, granularity: 2, experts_per_dp_rank: 2 },
             3 => MoeConfig { total_experts: 128, active_per_token: 4, granularity: 4, experts_per_dp_rank: 4 },
             4 => MoeConfig { total_experts: 256, active_per_token: 8, granularity: 8, experts_per_dp_rank: 8 },
+            // lumos: allow(panic-path) -- documented contract; CLI paths range-check --config first
             _ => panic!("paper configs are 1..=4"),
         }
     }

@@ -648,8 +648,10 @@ pub fn simulate_dag_reference(net: &Network, nodes: &[DagNode]) -> DagResult {
                         rate.insert(fi, share);
                         unfrozen -= 1;
                         for &l in &paths[fi] {
+                            // lumos: allow(panic-path) -- admit() inserted every path link into both maps
                             let c = link_cap.get_mut(&l).unwrap();
                             *c = (*c - share).max(0.0);
+                            // lumos: allow(panic-path) -- admit() inserted every path link into both maps
                             *users.get_mut(&l).unwrap() -= 1;
                         }
                     }

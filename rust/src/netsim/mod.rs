@@ -590,6 +590,7 @@ pub fn simulate_reference(net: &Network, flows: &[Flow]) -> SimResult {
                     if link_cap[l] < 0.0 {
                         link_cap[l] = 0.0;
                     }
+                    // lumos: allow(panic-path) -- every active flow's path links are keys by construction
                     *remaining_users.get_mut(&l).unwrap() -= 1;
                 }
             }

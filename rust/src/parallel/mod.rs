@@ -103,6 +103,7 @@ impl Mapping {
     pub fn new(par: Parallelism, moe: MoeConfig) -> Self {
         match Self::try_new(par, moe) {
             Ok(m) => m,
+            // lumos: allow(panic-path) -- documented panicking constructor; try_new is the checked form
             Err(e) => panic!("{e}"),
         }
     }

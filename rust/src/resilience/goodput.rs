@@ -193,6 +193,7 @@ pub fn monte_carlo_trial(inp: &GoodputInputs, rng: &mut Rng) -> f64 {
         work += rate * (horizon - now);
         now = horizon;
         if pending.is_some() && horizon >= next_fail {
+            // lumos: allow(panic-path) -- guarded by the pending.is_some() branch above
             let ev = pending.take().expect("checked is_some");
             match ev.kind {
                 FaultKind::ScaleUpLink => rep_up.push(now + ev.repair_h * 3600.0),

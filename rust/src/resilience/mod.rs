@@ -432,6 +432,7 @@ pub fn paper_pairs(
         .iter()
         .map(|&cfg| {
             let w = Workload::paper_gpt_4p7t(cfg);
+            // lumos: allow(panic-path) -- §VI preset: every paper config maps onto Passage-512
             let map = default_mapping(&w, &passage).expect("paper mapping fits Passage-512");
             let spec_p =
                 ResilienceSpec { seed: spec.seed.wrapping_add(2 * cfg as u64), ..spec.clone() };
@@ -459,6 +460,7 @@ pub fn pod_serviceability(
 ) -> Vec<Assessment> {
     let cluster = cache.get(&ClusterKey::custom(512, 512, 32_000.0));
     let w = Workload::paper_gpt_4p7t(4);
+    // lumos: allow(panic-path) -- §III.d preset: Config 4 always fits one 512-GPU pod
     let map = default_mapping(&w, &cluster).expect("TP16×PP1×DP32 fits one pod");
     [
         FabricReliability::passage(),

@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::{Artifact, EntrySpec};
 use crate::runtime::tensor::Tensor;
+use crate::util::sync::lock;
 
 /// Global lock serializing every call into the `xla` crate.
 ///
@@ -77,11 +78,12 @@ impl Engine {
     pub fn load(&self, artifact: &Artifact, entry_name: &str) -> Result<Arc<CompiledEntry>> {
         let entry = artifact.entry(entry_name)?.clone();
         let key = format!("{}::{}", artifact.dir.display(), entry_name);
-        if let Some(hit) = self.inner.cache.lock().unwrap().get(&key) {
+        if let Some(hit) = lock(&self.inner.cache).get(&key) {
             return Ok(hit.clone());
         }
-        let _xla = XLA_LOCK.lock().unwrap();
+        let _xla = lock(&XLA_LOCK);
         let path = artifact.hlo_path(&entry);
+        // lumos: allow(wallclock) -- compile-time reporting to stderr, not part of any result
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
@@ -103,7 +105,7 @@ impl Engine {
             path.file_name().unwrap_or_default().to_string_lossy(),
             t0.elapsed().as_secs_f64()
         );
-        self.inner.cache.lock().unwrap().insert(key, compiled.clone());
+        lock(&self.inner.cache).insert(key, compiled.clone());
         Ok(compiled)
     }
 }
@@ -148,13 +150,14 @@ impl CompiledEntry {
                 self.spec.inputs.len()
             );
         }
-        let _xla = XLA_LOCK.lock().unwrap();
+        let _xla = lock(&XLA_LOCK);
         let literals: Vec<&xla::Literal> = inputs.iter().map(|v| &v.0).collect();
+        // lumos: allow(wallclock) -- EntryStats execution timing is the measurement payload
         let t0 = Instant::now();
         let mut replicas = self.exe.execute::<&xla::Literal>(&literals)?;
         let elapsed = t0.elapsed().as_secs_f64();
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock(&self.stats);
             st.executions += 1;
             st.total_secs += elapsed;
         }
@@ -210,17 +213,18 @@ impl CompiledEntry {
                 );
             }
         }
-        let _xla = XLA_LOCK.lock().unwrap();
+        let _xla = lock(&XLA_LOCK);
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(Tensor::to_literal)
             .collect::<Result<_>>()?;
 
+        // lumos: allow(wallclock) -- EntryStats execution timing is the measurement payload
         let t0 = Instant::now();
         let mut replicas = self.exe.execute::<xla::Literal>(&literals)?;
         let elapsed = t0.elapsed().as_secs_f64();
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock(&self.stats);
             st.executions += 1;
             st.total_secs += elapsed;
         }
@@ -277,6 +281,6 @@ impl CompiledEntry {
     }
 
     pub fn stats(&self) -> EntryStats {
-        self.stats.lock().unwrap().clone()
+        lock(&self.stats).clone()
     }
 }

@@ -22,6 +22,7 @@ use crate::model::{MoeConfig, Workload};
 use crate::parallel::{Mapping, Parallelism};
 use crate::perf::{evaluate, PerfKnobs, PerfReport};
 use crate::topology::cluster::Cluster;
+use crate::util::sync::lock;
 
 /// Orderable description of a cluster — the memoization key. Bandwidth is
 /// keyed by its exact bit pattern (no lossy rounding).
@@ -77,19 +78,19 @@ impl ClusterCache {
     }
 
     pub fn get(&self, key: &ClusterKey) -> Arc<Cluster> {
-        if let Some(hit) = self.map.lock().unwrap().get(key) {
+        if let Some(hit) = lock(&self.map).get(key) {
             return hit.clone();
         }
         // Build outside the lock so concurrent first touches of distinct
         // keys don't serialize; a racing duplicate build of the same key
         // is possible and harmless (first insert wins).
         let built = Arc::new(key.build());
-        self.map.lock().unwrap().entry(key.clone()).or_insert(built).clone()
+        lock(&self.map).entry(key.clone()).or_insert(built).clone()
     }
 
     /// Distinct clusters constructed so far (memoization observability).
     pub fn built(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock(&self.map).len()
     }
 }
 
@@ -209,7 +210,10 @@ where
             out[i] = Some(result);
         }
     });
-    out.into_iter().map(|r| r.expect("worker dropped a job")).collect()
+    out.into_iter()
+        // lumos: allow(panic-path) -- the scope join guarantees every index was sent exactly once
+        .map(|r| r.expect("worker dropped a job"))
+        .collect()
 }
 
 /// Cartesian grid helper: clusters × paper configs, row-major in cluster

@@ -483,6 +483,7 @@ fn best_table_from(outs: &[planner::PlanOutcome]) -> Table {
         &["Cluster", "TP", "PP", "DP", "micro", "exp/rank", "EP domain", "TTT", "vs paper map"],
     );
     for out in outs {
+        // lumos: allow(panic-path) -- §VI presets always have a feasible mapping
         let best = out.best().expect("paper clusters always have feasible mappings");
         let vs_paper = match &out.paper_baseline {
             Some(b) => format!("{:.2}x", b.time_to_train_s / best.report.time_to_train_s),
@@ -528,7 +529,9 @@ fn gap_table_from(outs: &[planner::PlanOutcome]) -> Table {
     );
     let mut planned = Vec::new();
     for out in outs {
+        // lumos: allow(panic-path) -- §VI presets always have a feasible mapping and a baseline
         let best_ttt = out.best().expect("feasible").report.time_to_train_s;
+        // lumos: allow(panic-path) -- §VI presets always have a feasible mapping and a baseline
         let paper = out.paper_baseline.as_ref().expect("§VI clusters have a baseline");
         t.row(&[
             out.cluster.clone(),
@@ -596,6 +599,7 @@ pub fn validate_gap_table_cached(knobs: &PerfKnobs, cache: &ClusterCache) -> Tab
     for key in section6_clusters() {
         let cluster = cache.get(&key);
         let v = timeline::validate_mapping(&w, &cluster, &map, knobs)
+            // lumos: allow(panic-path) -- the paper mapping's DAG is under the size cap on §VI clusters
             .expect("paper mapping is simulable on the §VI clusters");
         let p = &v.simulated.phases;
         let comm = p.tp_comm + p.ep_comm + p.pp_comm + p.dp_comm;

@@ -84,6 +84,7 @@ impl Torus {
 
     /// Bisection bandwidth, Gb/s: cut across the largest dimension.
     pub fn bisection_gbps(&self) -> f64 {
+        // lumos: allow(panic-path) -- dims is nonempty by construction (checked in new)
         let dmax = *self.dims.iter().max().unwrap();
         let cross_section = self.n_nodes() / dmax;
         // 2 directed links per node pair crossing the cut, both wrap & mid.

@@ -98,6 +98,7 @@ pub fn train_single(
     let corpus = Corpus::markov(vocab, seed ^ 0xC0FFEE);
     let mut rng = Rng::new(seed);
 
+    // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
     let t_all = Instant::now();
     // Literal-form state loop (§Perf-L3: skips Tensor<->Vec copies of the
     // ~3P-array state every step; see EXPERIMENTS.md).
@@ -108,6 +109,7 @@ pub fn train_single(
         .collect::<Result<_>>()?;
     let mut logs = Vec::with_capacity(steps);
     for step in 0..steps {
+        // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
         let t0 = Instant::now();
         let tokens = LitVal::from_tensor(&batch_tensor(art, &corpus, &mut rng)?)?;
         let mut inputs: Vec<&LitVal> = state.iter().collect();
@@ -161,6 +163,7 @@ pub fn train_dp(
     // Identical initial state on every worker (same seed through init).
     let state0 = init.execute(&[Tensor::scalar_u32(seed as u32)])?;
 
+    // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
     let t_all = Instant::now();
     let art = Arc::new(art.clone());
     let grad: Arc<CompiledEntry> = grad;
@@ -176,6 +179,7 @@ pub fn train_dp(
         let mut logs = Vec::with_capacity(steps);
 
         for step in 0..steps {
+            // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
             let t0 = Instant::now();
             let bytes_before = ep.bytes_sent;
             let tokens = batch_tensor(&art, &corpus, &mut rng)?;

@@ -96,6 +96,7 @@ impl Bencher {
         }
         let mut samples = Summary::new();
         for _ in 0..self.sample_count {
+            // lumos: allow(wallclock) -- the bench harness measures real elapsed time by design
             let t0 = Instant::now();
             f();
             samples.add(t0.elapsed().as_secs_f64());

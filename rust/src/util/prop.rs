@@ -98,6 +98,7 @@ pub struct PropFailure {
 /// so failures reproduce across runs; override with `LUMOS_PROP_SEED`.
 pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> CaseResult) {
     if let Err(f) = check_seeded(name, cases, default_seed(name), &prop) {
+        // lumos: allow(panic-path) -- the property harness reports failures by panicking, like assert
         panic!(
             "property '{}' failed (seed={}, case={}): {}\n  shrunk draws: {:?}",
             f.name, f.seed, f.case, f.message, f.shrunk_draws

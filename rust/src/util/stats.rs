@@ -63,7 +63,7 @@ impl Summary {
             return 0.0;
         }
         let mut xs = self.samples.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let rank = (q / 100.0) * (xs.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;

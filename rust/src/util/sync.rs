@@ -1,0 +1,42 @@
+//! Shared-state helpers: one place that states the repo's lock-poisoning
+//! policy instead of eleven scattered `lock().unwrap()`s.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Acquire `m`, aborting on poison. A poisoned mutex means another worker
+/// already panicked mid-update; every pool in this crate (sweep grids,
+/// Monte Carlo trials, the PJRT engine cache) treats that as fatal rather
+/// than computing on half-written shared state.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        // lumos: allow(panic-path) -- poisoning means a worker already panicked; propagate the abort
+        Err(e) => panic!("poisoned lock: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_gives_access() {
+        let m = Mutex::new(41);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "poisoned lock")]
+    fn poisoned_lock_aborts() {
+        let m = std::sync::Arc::new(Mutex::new(0));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        lock(&m);
+    }
+}

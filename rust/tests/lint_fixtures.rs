@@ -1,0 +1,230 @@
+//! Fixture matrix for `lumos lint`: for every rule a firing snippet, a
+//! suppressed snippet, and a clean snippet — plus the self-check that the
+//! crate's own sources lint clean (the CI gate in miniature) and the
+//! `--jobs` independence contract on the report.
+
+use std::path::PathBuf;
+
+use lumos::analysis::{lint_paths, lint_source, report_json, rules, LintReport};
+
+/// Lint one snippet with all rules; return (rule ids fired, suppressed count).
+fn run(src: &str) -> (Vec<&'static str>, usize) {
+    let (findings, suppressed) = lint_source("fixture.rs", src, &[]);
+    (findings.into_iter().map(|f| f.rule).collect(), suppressed)
+}
+
+/// One fixture row: the snippet must fire exactly `rule`; the suppressed
+/// variant (directive on the line above the first line) must be silent;
+/// the clean variant must produce nothing.
+struct Fixture {
+    rule: &'static str,
+    firing: &'static str,
+    suppressed: &'static str,
+    clean: &'static str,
+}
+
+const FIXTURES: &[Fixture] = &[
+    Fixture {
+        rule: "hash-iter",
+        firing: "use std::collections::HashMap;\nfn f() -> HashMap<u8, u8> { todo!() }\n",
+        suppressed: "// lumos: allow(hash-iter) -- keys are re-sorted before output\n\
+                     use std::collections::HashMap;\n",
+        clean: "use std::collections::BTreeMap;\nfn f() -> BTreeMap<u8, u8> { todo!() }\n",
+    },
+    Fixture {
+        rule: "wallclock",
+        firing: "fn f() { let t0 = std::time::Instant::now(); drop(t0); }\n",
+        suppressed: "// lumos: allow(wallclock) -- bench harness measures real time\n\
+                     fn f() { let t0 = std::time::Instant::now(); drop(t0); }\n",
+        clean: "fn f(clock: f64) -> f64 { clock + 1.0 }\n",
+    },
+    Fixture {
+        rule: "entropy",
+        firing: "fn f() -> f64 { rand::random() }\n",
+        suppressed: "// lumos: allow(entropy) -- seeding the master stream itself\n\
+                     fn f() -> u64 { OsRng.next_u64() }\n",
+        clean: "fn f(rng: &mut Rng) -> f64 { rng.next_f64() }\n",
+    },
+    Fixture {
+        rule: "float-reduce",
+        firing: "fn f(rx: Receiver<f64>) -> f64 {\n\
+                 let mut acc = 0.0;\n\
+                 while let Ok(v) = rx.recv() { acc += v; }\n\
+                 acc }\n",
+        suppressed: "fn f(rx: Receiver<f64>) -> f64 {\n\
+                     let mut acc = 0.0;\n\
+                     // lumos: allow(float-reduce) -- integral counters only\n\
+                     while let Ok(v) = rx.recv() { acc += v; }\n\
+                     acc }\n",
+        clean: "fn f(parts: &[f64]) -> f64 { parts.iter().sum() }\n",
+    },
+    Fixture {
+        rule: "panic-path",
+        firing: "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n",
+        suppressed: "// lumos: allow(panic-path) -- x is Some by construction\n\
+                     fn f(x: Option<u8>) -> u8 { x.unwrap() }\n",
+        clean: "fn f(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n",
+    },
+    Fixture {
+        rule: "unsafe-safety",
+        firing: "fn f() { unsafe { go() } }\n",
+        suppressed: "// lumos: allow(unsafe-safety) -- documented at the impl block\n\
+                     fn f() { unsafe { go() } }\n",
+        clean: "// SAFETY: the layout is pinned by the artifact manifest\n\
+                fn f() { unsafe { go() } }\n",
+    },
+    Fixture {
+        rule: "lint-directive",
+        firing: "// lumos: allow(panic-path)\nfn f() {}\n",
+        suppressed: "// lumos: allow(lint-directive) -- exercising the meta-rule\n\
+                     fn f() {} // lumos: allow(panic-path)\n",
+        clean: "// lumos: allow(panic-path) -- covers the line below\nfn f() { x.unwrap(); }\n",
+    },
+];
+
+#[test]
+fn every_rule_has_a_fixture() {
+    let covered: Vec<&str> = FIXTURES.iter().map(|f| f.rule).collect();
+    for r in rules::RULES {
+        assert!(covered.contains(&r.id), "no fixture row for rule {}", r.id);
+    }
+    assert_eq!(covered.len(), rules::RULES.len());
+}
+
+#[test]
+fn firing_fixtures_fire_their_rule() {
+    for fx in FIXTURES {
+        let (fired, suppressed) = run(fx.firing);
+        assert!(
+            fired.contains(&fx.rule),
+            "{}: firing snippet produced {:?}",
+            fx.rule,
+            fired
+        );
+        assert_eq!(suppressed, 0, "{}: firing snippet should not suppress", fx.rule);
+    }
+}
+
+#[test]
+fn suppressed_fixtures_are_silent_and_counted() {
+    for fx in FIXTURES {
+        let (fired, suppressed) = run(fx.suppressed);
+        assert!(
+            !fired.contains(&fx.rule),
+            "{}: suppressed snippet still fired {:?}",
+            fx.rule,
+            fired
+        );
+        assert!(suppressed >= 1, "{}: suppression not counted", fx.rule);
+    }
+}
+
+#[test]
+fn clean_fixtures_are_clean() {
+    for fx in FIXTURES {
+        let (fired, _) = run(fx.clean);
+        assert!(
+            !fired.contains(&fx.rule),
+            "{}: clean snippet fired {:?}",
+            fx.rule,
+            fired
+        );
+    }
+}
+
+#[test]
+fn rule_filter_scopes_the_scan() {
+    // one snippet with two violations; --rule keeps only the asked-for one
+    let src = "use std::collections::HashMap;\nfn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    let (all, _) = lint_source("fixture.rs", src, &[]);
+    assert_eq!(all.len(), 2);
+    let (only, _) = lint_source("fixture.rs", src, &["panic-path".to_string()]);
+    assert_eq!(only.len(), 1);
+    assert_eq!(only[0].rule, "panic-path");
+}
+
+#[test]
+fn test_regions_are_exempt() {
+    let src = "#[cfg(test)]\nmod tests {\n\
+               use std::collections::HashMap;\n\
+               #[test] fn t() { let _ = std::time::Instant::now(); x.unwrap(); }\n}\n";
+    let (fired, _) = run(src);
+    assert!(fired.is_empty(), "test region fired {fired:?}");
+}
+
+#[test]
+fn directive_variants_are_diagnosed() {
+    // missing reason
+    let (fired, _) = run("// lumos: allow(wallclock)\nfn f() {}\n");
+    assert_eq!(fired, vec!["lint-directive"]);
+    // unknown rule id
+    let (fired, _) = run("// lumos: allow(no-such-rule) -- why\nfn f() {}\n");
+    assert_eq!(fired, vec!["lint-directive"]);
+    // dangling: no code after the directive
+    let (fired, _) = run("fn f() {}\n// lumos: allow(panic-path) -- dangles\n");
+    assert_eq!(fired, vec!["lint-directive"]);
+}
+
+fn crate_src() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// The CI gate in miniature: the crate's own sources must lint clean, and
+/// the suppression inventory must be substantial (the sweep really ran).
+#[test]
+fn crate_sources_lint_clean() {
+    let report = lint_paths(&[crate_src()], &[], 2).expect("lint run");
+    let shown: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(report.findings.is_empty(), "crate not lint-clean:\n{}", shown.join("\n"));
+    assert!(report.files_scanned >= 50, "only {} files scanned", report.files_scanned);
+    assert!(report.suppressed >= 20, "only {} suppressions", report.suppressed);
+}
+
+/// Byte-identical reports across worker counts — the same contract the CI
+/// gate diffs via `--json`.
+#[test]
+fn report_is_jobs_independent() {
+    let one = lint_paths(&[crate_src()], &[], 1).expect("jobs=1");
+    let four = lint_paths(&[crate_src()], &[], 4).expect("jobs=4");
+    assert_eq!(one.findings, four.findings);
+    assert_eq!(one.files_scanned, four.files_scanned);
+    assert_eq!(one.suppressed, four.suppressed);
+    assert_eq!(
+        report_json(&one).to_string_pretty(),
+        report_json(&four).to_string_pretty()
+    );
+}
+
+/// A seeded violation on disk is caught end-to-end through lint_paths —
+/// the same path the CI canary exercises through the binary.
+#[test]
+fn seeded_violation_on_disk_is_caught() {
+    let dir = std::env::temp_dir().join(format!("lumos_lint_canary_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("canary.rs");
+    std::fs::write(&path, "use std::collections::HashMap;\npub fn f() {}\n")
+        .expect("write canary");
+    let report = lint_paths(&[dir.clone()], &[], 1).expect("lint canary");
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "hash-iter");
+    assert_eq!(report.findings[0].line, 1);
+    assert!(report.findings[0].file.ends_with("canary.rs"));
+}
+
+/// JSON report shape is stable: the keys the CI gate parses exist.
+#[test]
+fn json_report_has_gate_keys() {
+    let report = LintReport {
+        findings: lint_source("a.rs", "fn f() { q.unwrap(); }\n", &[]).0,
+        files_scanned: 1,
+        suppressed: 0,
+    };
+    let j = report_json(&report);
+    assert_eq!(j.get("files_scanned").as_usize(), Some(1));
+    assert_eq!(j.get("suppressed").as_usize(), Some(0));
+    let arr = j.get("findings").as_arr().expect("findings array");
+    assert_eq!(arr.len(), 1);
+    assert_eq!(arr[0].get("rule").as_str(), Some("panic-path"));
+    assert_eq!(arr[0].get("line").as_usize(), Some(1));
+}
