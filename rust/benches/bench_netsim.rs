@@ -22,11 +22,11 @@ use lumos::collectives as coll;
 use lumos::model::{MoeConfig, Workload};
 use lumos::netsim::{
     replay_schedule, replay_schedule_dependent, simulate, simulate_dag, simulate_dag_reference,
-    simulate_reference, Flow, Network,
+    simulate_dag_scan, simulate_reference, Flow, Network,
 };
 use lumos::parallel::{Mapping, Parallelism};
 use lumos::perf::PerfKnobs;
-use lumos::timeline::lower_step;
+use lumos::timeline::{lower_step, SkeletonCache};
 use lumos::topology::cluster::Cluster;
 use lumos::util::bench::{black_box, Bencher};
 use lumos::util::json::Json;
@@ -205,7 +205,10 @@ fn main() {
 
     // the §VI paper-mapping step DAG (~18k nodes): the workload `lumos
     // validate` and the resilience degraded re-simulation pay per call —
-    // the headline inc-vs-ref pair (BENCH_netsim.json `derived` block)
+    // the headline inc-vs-ref pair (BENCH_netsim.json `derived` block).
+    // `inc` is the lazy completion-time heap engine; `scan` is the PR 5
+    // incremental engine with the per-event O(active) dt scan, kept as the
+    // heap's own before/after baseline.
     let knobs = PerfKnobs::default();
     let w = Workload::paper_gpt_4p7t(4);
     let cluster = Cluster::passage_512(32_768);
@@ -214,6 +217,9 @@ fn main() {
     let nn = step.nodes.len() as f64;
     b.bench_items("dep step-dag paper 18k (ref)", nn, "node", || {
         black_box(simulate_dag_reference(&step.net, &step.nodes));
+    });
+    b.bench_items("dep step-dag paper 18k (scan)", nn, "node", || {
+        black_box(simulate_dag_scan(&step.net, &step.nodes));
     });
     b.bench_items("dep step-dag paper 18k (inc)", nn, "node", || {
         black_box(simulate_dag(&step.net, &step.nodes));
@@ -236,8 +242,40 @@ fn main() {
     b.bench_items("dep step-dag deep-pp (ref)", nn, "node", || {
         black_box(simulate_dag_reference(&step_deep.net, &step_deep.nodes));
     });
+    b.bench_items("dep step-dag deep-pp (scan)", nn, "node", || {
+        black_box(simulate_dag_scan(&step_deep.net, &step_deep.nodes));
+    });
     b.bench_items("dep step-dag deep-pp (inc)", nn, "node", || {
         black_box(simulate_dag(&step_deep.net, &step_deep.nodes));
+    });
+
+    // ---- skeleton cache: fresh lowering vs re-parameterization ------------
+    // Every cached call still pays `step_volumes` + the slot table + the
+    // in-place value rewrite; only skeleton construction is amortized —
+    // the per-candidate lowering cost inside `plan --objective sim`.
+    b.bench_items("lower deep-pp (fresh)", nn, "node", || {
+        black_box(lower_step(&w, &cluster, &deep, &knobs).expect("deep mapping lowers"));
+    });
+    let mut cache = SkeletonCache::new();
+    cache.lower(&w, &cluster, &deep, &knobs).expect("deep mapping lowers");
+    b.bench_items("lower deep-pp (cached)", nn, "node", || {
+        black_box(cache.lower(&w, &cluster, &deep, &knobs).expect("deep mapping lowers"));
+    });
+
+    // ---- per-candidate scoring: the PR 5 path vs the PR 7 path ------------
+    // What one planner candidate costs end to end: fresh lowering + dt-scan
+    // event loop (how PR 5's --rerank-sim scored a plan) vs skeleton-cache
+    // re-parameterization + lazy-heap simulation (the --objective sim inner
+    // loop). The acceptance gate on this pair lives in `derived` below.
+    b.bench_items("plan candidate deep-pp (relower+scan)", nn, "node", || {
+        let s = lower_step(&w, &cluster, &deep, &knobs).expect("deep mapping lowers");
+        black_box(simulate_dag_scan(&s.net, &s.nodes));
+    });
+    let mut cache = SkeletonCache::new();
+    cache.lower(&w, &cluster, &deep, &knobs).expect("deep mapping lowers");
+    b.bench_items("plan candidate deep-pp (cache+heap)", nn, "node", || {
+        let s = cache.lower(&w, &cluster, &deep, &knobs).expect("deep mapping lowers");
+        black_box(simulate_dag(&s.net, &s.nodes));
     });
 
     // ---- machine-readable baseline ----------------------------------------
@@ -247,10 +285,32 @@ fn main() {
             _ => Json::Null,
         }
     };
+    let ratio = |num: &str, den: &str| -> Json {
+        match (b.mean_of(num), b.mean_of(den)) {
+            (Some(n), Some(d)) if d > 0.0 => Json::num(n / d),
+            _ => Json::Null,
+        }
+    };
     let derived = Json::obj(vec![
         ("dep_staggered_speedup", speedup("dep staggered replay")),
         ("dep_step_dag_paper_speedup", speedup("dep step-dag paper 18k")),
         ("dep_step_dag_deep_speedup", speedup("dep step-dag deep-pp")),
+        (
+            "dep_step_dag_paper_heap_vs_scan",
+            ratio("dep step-dag paper 18k (scan)", "dep step-dag paper 18k (inc)"),
+        ),
+        (
+            "dep_step_dag_deep_heap_vs_scan",
+            ratio("dep step-dag deep-pp (scan)", "dep step-dag deep-pp (inc)"),
+        ),
+        (
+            "lowering_cache_deep_speedup",
+            ratio("lower deep-pp (fresh)", "lower deep-pp (cached)"),
+        ),
+        (
+            "plan_candidate_deep_speedup",
+            ratio("plan candidate deep-pp (relower+scan)", "plan candidate deep-pp (cache+heap)"),
+        ),
         ("staggered_mesh_64_speedup", speedup("staggered mesh n=64")),
         ("deep_pp_nodes", Json::num(step_deep.nodes.len() as f64)),
     ]);

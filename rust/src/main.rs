@@ -97,6 +97,16 @@ fn cli() -> Command {
                 .opt("knobs", "JSON file with calibration knob overrides")
                 .opt("csv", "also write the ranked plan to this CSV file")
                 .opt("rerank-sim", "re-rank the top K plans on simulated step time")
+                .opt_default(
+                    "objective",
+                    "ranking objective: ttt (analytical) | sim (simulate the feasible set)",
+                    "ttt",
+                )
+                .opt(
+                    "sim-margin",
+                    "sim objective: simulate candidates within (1+margin)x of the best \
+                     analytical TTT (default 1.25; inf disables the prefilter)",
+                )
                 .flag("availability", "rank on failure-adjusted effective TTT (resilience)")
                 .flag("json", "machine-readable output (util::json, deterministic)"),
         )
@@ -463,27 +473,81 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
     let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(10);
     let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
     let rerank = args.get_usize("rerank-sim").map_err(anyhow::Error::msg)?.unwrap_or(0);
+    let objective = args.get("objective").unwrap_or("ttt");
+    anyhow::ensure!(
+        objective == "ttt" || objective == "sim",
+        "--objective must be 'ttt' or 'sim', got '{objective}'"
+    );
+    let margin = match args.get_f64("sim-margin").map_err(anyhow::Error::msg)? {
+        Some(m) => {
+            anyhow::ensure!(!m.is_nan() && m >= 0.0, "--sim-margin must be >= 0");
+            m
+        }
+        None => planner::DEFAULT_SIM_MARGIN,
+    };
+    anyhow::ensure!(
+        !(objective == "sim" && rerank > 0),
+        "--rerank-sim is redundant with --objective sim (the whole admitted set is simulated)"
+    );
     let knobs = knobs_from_args(args)?;
     let key = cluster_key_from_args(args)?;
 
     let cache = ClusterCache::new();
     let cluster = cache.get(&key);
-    let mut req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(top);
+    // the sim objective scores the full feasible ranking, so don't let
+    // --top truncate the planner output (it still truncates the table)
+    let req_top = if objective == "sim" { 0 } else { top };
+    let mut req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(req_top);
     if args.flag("availability") {
         req = req.with_availability(planner::AvailabilityObjective::default_for(&cluster));
     }
-    let outcome = planner::plan_with_cache(&req, jobs, &cache);
+    let mut outcome = planner::plan_with_cache(&req, jobs, &cache);
     anyhow::ensure!(
         !outcome.ranked.is_empty(),
         "no feasible mapping for this (workload, cluster) pair \
          ({} candidates enumerated, all pruned)",
         outcome.enumerated
     );
-    if args.flag("json") {
-        if rerank > 0 {
-            eprintln!("--rerank-sim is table-mode only; ignored with --json");
+    if objective == "sim" {
+        if req.availability.is_some() {
+            // stderr keeps stdout byte-identical across job counts
+            eprintln!(
+                "note: --objective sim orders on *simulated healthy* TTT; the \
+                 availability adjustment applies to the analytical ranking only"
+            );
         }
-        println!("{}", planner::outcome_json(&outcome).to_string_pretty());
+        let sim = planner::plan_simulated(&outcome, &req.workload, &cluster, &knobs, margin, jobs);
+        let table = planner::sim_table(&sim, top);
+        if args.flag("json") {
+            if top > 0 {
+                outcome.ranked.truncate(top);
+            }
+            let section = planner::SimSection::from_plan(&sim);
+            println!("{}", planner::outcome_json(&outcome, Some(&section)).to_string_pretty());
+            return write_csv(args, &table);
+        }
+        if let Some(b) = &outcome.paper_baseline {
+            println!(
+                "paper mapping (TP16 x PP8 x DP256): step {}, TTT {}\n",
+                fmt_time(b.step_time),
+                fmt_time(b.time_to_train_s)
+            );
+        }
+        // skip reasons go to stderr so stdout stays byte-identical
+        for line in planner::rerank_skip_lines(&sim.skipped) {
+            eprintln!("{line}");
+        }
+        println!("{}", table.render());
+        return write_csv(args, &table);
+    }
+    if args.flag("json") {
+        let rerank_results = (rerank > 0).then(|| {
+            planner::rerank_simulated(&outcome, rerank, &req.workload, &cluster, &knobs)
+        });
+        let section = rerank_results
+            .as_ref()
+            .map(|(scored, skipped)| planner::SimSection::from_rerank(scored, skipped));
+        println!("{}", planner::outcome_json(&outcome, section.as_ref()).to_string_pretty());
         return write_csv(args, &planner::ranked_table(&outcome));
     }
     if let Some(b) = &outcome.paper_baseline {

@@ -36,13 +36,29 @@
 //! fine-microbatch step DAGs keep thousands of flows concurrently active,
 //! and a full per-event recompute made them impractical to simulate.
 //!
+//! # Lazy completion-time heap
+//!
+//! The incremental re-fill left one O(active) cost per event: the dt scan
+//! over every active flow and delay to find the next completion. The
+//! production loop ([`DagSimulator::simulate`]) replaces it with a
+//! predicted-completion min-heap that is invalidated *lazily*: each entry
+//! carries a per-node generation counter, a flow's entry is re-predicted
+//! only when the re-fill changes its rate (bit-exact comparison — the
+//! component re-fill already guarantees untouched flows keep identical
+//! rates), and stale entries are discarded when popped. Delay-only events —
+//! the overwhelming majority in timeline DAGs — now cost O(log active)
+//! instead of O(active). The eager dt-scan loop is kept verbatim as
+//! [`DagSimulator::simulate_scan`] (the PR 5 baseline) for benchmarking and
+//! cross-checking; `benches/bench_netsim.rs` records heap-vs-scan series.
+//!
 //! [`simulate_dag_reference`] keeps the original full-recompute
 //! implementation as the oracle: `tests/netsim_prop.rs` asserts the two
 //! agree to ≤ 1e-9 relative on randomized DAGs, and
 //! `benches/bench_netsim.rs` records the before/after series
 //! (`BENCH_netsim.json`).
 
-use std::collections::BTreeMap;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::collectives::CommSchedule;
 
@@ -91,6 +107,46 @@ pub struct DagResult {
 // Incremental engine (the production fast path)
 // ---------------------------------------------------------------------------
 
+/// One predicted completion in the lazy min-heap. `gen` must match the
+/// node's current generation for the entry to be live; settlement (a rate
+/// change in the re-fill) and completion both bump the generation, so every
+/// superseded entry is discarded the moment it surfaces. Ordering is
+/// (time, node, gen) under `total_cmp`, so pop order is deterministic even
+/// across exact completion-time ties.
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
+    /// Predicted completion instant, seconds.
+    time: f64,
+    node: usize,
+    gen: u32,
+    /// True for timed work (`remaining` counts seconds: delays, latency
+    /// tails of finished flows); false for byte-counted flows.
+    timed: bool,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.node.cmp(&other.node))
+            .then(self.gen.cmp(&other.gen))
+    }
+}
+
 /// Reusable incremental DAG simulation state.
 ///
 /// All per-node and per-link buffers live here and are recycled across
@@ -137,6 +193,12 @@ pub struct DagSimulator {
     link_stack: Vec<usize>,
     tied: Vec<usize>,
     born: Vec<usize>,
+    // lazy completion-time heap (see module docs §Lazy completion heap):
+    // `remaining[i]` is valid as of `upd[i]`; `gen[i]` invalidates
+    // superseded heap entries without touching the heap.
+    upd: Vec<f64>,
+    gen: Vec<u32>,
+    heap: BinaryHeap<Reverse<HeapEntry>>,
 }
 
 impl DagSimulator {
@@ -210,6 +272,11 @@ impl DagSimulator {
         self.link_stack.clear();
         self.tied.clear();
         self.born.clear();
+        self.upd.clear();
+        self.upd.resize(n, 0.0);
+        self.gen.clear();
+        self.gen.resize(n, 0);
+        self.heap.clear();
         for (i, node) in nodes.iter().enumerate() {
             self.indeg[i] = node.deps.len();
             for &d in &node.deps {
@@ -273,7 +340,16 @@ impl DagSimulator {
     /// (matching the reference's `BTreeMap` iteration order), and every
     /// link whose share ties the bottleneck bit-exactly freezes in the same
     /// round — equivalent rates, one pass over symmetric rounds.
-    fn fill(&mut self, net: &Network) {
+    ///
+    /// In `lazy` mode (the heap-driven [`DagSimulator::simulate`] loop) a
+    /// flow whose new share differs from its old rate is *settled*: its
+    /// residual bytes are brought forward to `now` under the old rate, its
+    /// generation is bumped (invalidating the old heap entry in place), and
+    /// a fresh completion prediction is pushed. Flows whose share comes out
+    /// bit-identical keep their old entry — linear extrapolation from
+    /// `upd[i]` stays exact under an unchanged rate, so the entry is still
+    /// the true completion time and the heap is untouched.
+    fn fill(&mut self, net: &Network, now: f64, lazy: bool) {
         self.set_links.sort_unstable();
         for &l in &self.set_links {
             self.link_cap[l] = net.links[l].capacity;
@@ -312,14 +388,32 @@ impl DagSimulator {
                     self.tied.push(l);
                 }
             }
-            for &bl in &self.tied {
-                for &fi in &self.link_flows[bl] {
+            for ti in 0..self.tied.len() {
+                let bl = self.tied[ti];
+                for pi in 0..self.link_flows[bl].len() {
+                    let fi = self.link_flows[bl][pi];
                     if self.frozen[fi] {
                         continue;
                     }
                     self.frozen[fi] = true;
                     unfrozen -= 1;
+                    let old = self.rate[fi];
                     self.rate[fi] = share;
+                    if lazy && share != old {
+                        // settle the residual bytes at the old rate, then
+                        // re-aim the completion entry at the new one
+                        self.remaining[fi] -= old * (now - self.upd[fi]);
+                        self.upd[fi] = now;
+                        self.gen[fi] = self.gen[fi].wrapping_add(1);
+                        if share > 0.0 {
+                            self.heap.push(Reverse(HeapEntry {
+                                time: now + self.remaining[fi] / share,
+                                node: fi,
+                                gen: self.gen[fi],
+                                timed: false,
+                            }));
+                        }
+                    }
                     for &l in &self.paths[fi] {
                         let c = self.link_cap[l] - share;
                         self.link_cap[l] = if c < 0.0 { 0.0 } else { c };
@@ -333,7 +427,201 @@ impl DagSimulator {
     /// Execute `nodes` on `net`: dependency-driven admission over a max-min
     /// fair fluid network. Panics on an unsatisfiable DAG (forward
     /// dependency) or a zero-rate deadlock, mirroring [`super::simulate`].
+    ///
+    /// This is the lazy-heap production loop: the next completion comes
+    /// from the predicted-completion min-heap (`O(log active)` per event)
+    /// instead of [`DagSimulator::simulate_scan`]'s `O(active)` dt scan.
+    /// Only flows whose rate changed in the component re-fill touch the
+    /// heap; everything else keeps its prediction. Agreement with the
+    /// oracle ≤ 1e-9 relative is pinned in `tests/netsim_prop.rs`.
     pub fn simulate(&mut self, net: &Network, nodes: &[DagNode]) -> DagResult {
+        self.reset(net, nodes);
+        let n = nodes.len();
+        let mut now = 0.0f64;
+        let mut done = 0usize;
+        let mut events = 0usize;
+        // live work counts (the heap loop has no active_* vecs to measure)
+        let mut live_flows = 0usize;
+        let mut live_delays = 0usize;
+
+        // Completion helper: records finish, unlocks successors into ready.
+        macro_rules! complete {
+            ($i:expr) => {{
+                let i = $i;
+                self.finish[i] = now;
+                done += 1;
+                for &s in &self.succ[i] {
+                    self.indeg[s] -= 1;
+                    if self.indeg[s] == 0 {
+                        self.ready.push(s);
+                    }
+                }
+            }};
+        }
+
+        loop {
+            // Admit everything ready; zero-work nodes complete instantly
+            // and may cascade more ready nodes. Admitted delays get their
+            // completion entry immediately (it never moves); admitted
+            // flows join the link adjacency, mark their links dirty, and
+            // get their first entry from the settlement in `fill`.
+            while let Some(i) = self.ready.pop() {
+                match nodes[i].work {
+                    DagWork::Delay(d) => {
+                        if d <= 0.0 {
+                            complete!(i);
+                        } else {
+                            self.upd[i] = now;
+                            live_delays += 1;
+                            self.heap.push(Reverse(HeapEntry {
+                                time: now + d,
+                                node: i,
+                                gen: self.gen[i],
+                                timed: true,
+                            }));
+                        }
+                    }
+                    DagWork::Flow { src, dst, bytes } => {
+                        if bytes <= 0.0 || src == dst {
+                            // a zero-byte "flow" still pays the base
+                            // latency, matching `simulate`'s per-flow
+                            // `+ base_latency`
+                            if net.base_latency > 0.0 {
+                                self.remaining[i] = net.base_latency;
+                                self.upd[i] = now;
+                                live_delays += 1;
+                                self.heap.push(Reverse(HeapEntry {
+                                    time: now + net.base_latency,
+                                    node: i,
+                                    gen: self.gen[i],
+                                    timed: true,
+                                }));
+                            } else {
+                                complete!(i);
+                            }
+                        } else {
+                            let path = net.path(src, dst);
+                            for &l in &path {
+                                self.link_flows[l].push(i);
+                                if !self.link_dirty[l] {
+                                    self.link_dirty[l] = true;
+                                    self.dirty_links.push(l);
+                                }
+                            }
+                            self.paths[i] = path;
+                            self.upd[i] = now;
+                            live_flows += 1;
+                        }
+                    }
+                }
+            }
+            if done == n {
+                break;
+            }
+            assert!(
+                live_flows > 0 || live_delays > 0,
+                "dag deadlocked: {} of {n} nodes stuck",
+                n - done
+            );
+            events += 1;
+
+            // --- re-fill only the component(s) the admits/finishes touched
+            if !self.dirty_links.is_empty() {
+                self.seed_dirty_component();
+                self.fill(net, now, true);
+            }
+
+            // --- advance to the next predicted completion ----------------
+            let t = loop {
+                match self.heap.peek() {
+                    Some(&Reverse(e)) if e.gen == self.gen[e.node] => break e.time,
+                    Some(_) => {
+                        self.heap.pop();
+                    }
+                    // lumos: allow(panic-path) -- zero-rate deadlock, the same contract violation the scan loop's dt assert catches
+                    None => panic!("deadlocked flows (zero rate)"),
+                }
+            };
+            if t > now {
+                now = t;
+            }
+
+            // Batch-complete everything due at `now`, mirroring the scan
+            // loop's per-kind tolerances (≤ 1e-9 bytes for flows, ≤ 1e-9 s
+            // for timed work). Completed flows leave the link adjacency
+            // and mark their links dirty for the next event's re-fill; a
+            // flow owing latency becomes a timed entry at `now +
+            // base_latency`.
+            while let Some(&Reverse(e)) = self.heap.peek() {
+                if e.gen != self.gen[e.node] {
+                    self.heap.pop();
+                    continue;
+                }
+                let i = e.node;
+                let rem = if e.timed {
+                    self.remaining[i] - (now - self.upd[i])
+                } else {
+                    self.remaining[i] - self.rate[i] * (now - self.upd[i])
+                };
+                if rem > 1e-9 {
+                    if e.time <= now {
+                        // the prediction rounded short of the last byte:
+                        // settle and re-aim at the residue (ε-sized, so
+                        // the follow-up event lands ~immediately)
+                        self.heap.pop();
+                        self.remaining[i] = rem;
+                        self.upd[i] = now;
+                        let again = if e.timed { now + rem } else { now + rem / self.rate[i] };
+                        self.heap.push(Reverse(HeapEntry { time: again, ..e }));
+                        continue;
+                    }
+                    break;
+                }
+                self.heap.pop();
+                self.gen[i] = self.gen[i].wrapping_add(1);
+                if e.timed {
+                    live_delays -= 1;
+                    complete!(i);
+                } else {
+                    live_flows -= 1;
+                    self.rate[i] = 0.0;
+                    for &l in &self.paths[i] {
+                        if let Some(pos) = self.link_flows[l].iter().position(|&x| x == i) {
+                            // ordered remove keeps link user lists in
+                            // admission order
+                            self.link_flows[l].remove(pos);
+                        }
+                        if !self.link_dirty[l] {
+                            self.link_dirty[l] = true;
+                            self.dirty_links.push(l);
+                        }
+                    }
+                    if net.base_latency > 0.0 {
+                        self.remaining[i] = net.base_latency;
+                        self.upd[i] = now;
+                        live_delays += 1;
+                        self.heap.push(Reverse(HeapEntry {
+                            time: now + net.base_latency,
+                            node: i,
+                            gen: self.gen[i],
+                            timed: true,
+                        }));
+                    } else {
+                        complete!(i);
+                    }
+                }
+            }
+        }
+
+        let makespan = self.finish.iter().cloned().fold(0.0f64, f64::max);
+        DagResult { makespan, finish: self.finish.clone(), events }
+    }
+
+    /// Execute `nodes` with the eager per-event dt scan over all active
+    /// work — the PR 5 loop, kept verbatim as the measured baseline for
+    /// the lazy heap (`benches/bench_netsim.rs` heap-vs-scan series) and
+    /// as a second independent cross-check of [`DagSimulator::simulate`].
+    pub fn simulate_scan(&mut self, net: &Network, nodes: &[DagNode]) -> DagResult {
         self.reset(net, nodes);
         let n = nodes.len();
         let mut now = 0.0f64;
@@ -407,7 +695,7 @@ impl DagSimulator {
             // --- re-fill only the component(s) the admits/finishes touched
             if !self.dirty_links.is_empty() {
                 self.seed_dirty_component();
-                self.fill(net);
+                self.fill(net, now, false);
             }
 
             // --- advance to the next completion ---------------------------
@@ -497,6 +785,18 @@ pub fn simulate_dag(net: &Network, nodes: &[DagNode]) -> DagResult {
             std::cell::RefCell::new(DagSimulator::new());
     }
     SIM.with(|sim| sim.borrow_mut().simulate(net, nodes))
+}
+
+/// [`simulate_dag`] on the eager dt-scan loop
+/// ([`DagSimulator::simulate_scan`], the PR 5 baseline) with the same
+/// thread-local buffer reuse, so heap-vs-scan comparisons measure the
+/// event loop and not allocator noise.
+pub fn simulate_dag_scan(net: &Network, nodes: &[DagNode]) -> DagResult {
+    thread_local! {
+        static SIM: std::cell::RefCell<DagSimulator> =
+            std::cell::RefCell::new(DagSimulator::new());
+    }
+    SIM.with(|sim| sim.borrow_mut().simulate_scan(net, nodes))
 }
 
 // ---------------------------------------------------------------------------
@@ -844,6 +1144,63 @@ mod tests {
             assert!((a - b).abs() <= 1e-9 * b.max(1e-30), "node {i}: {a} vs {b}");
         }
         assert!(fast.events > 0 && slow.events > 0);
+    }
+
+    #[test]
+    fn heap_loop_matches_scan_loop_on_staggered_dag() {
+        // Same workload as the incremental-vs-reference test: admissions
+        // land mid-flight, so rates change repeatedly and the lazy heap
+        // must settle/invalidate on every re-fill.
+        let net = Network::cluster(16, 4, 800.0, 100.0, 2.0, 5e-6);
+        let mut ops = Vec::new();
+        for step in 0..6usize {
+            for s in 0..16usize {
+                let d = (s * 5 + step * 3 + 1) % 16;
+                ops.push(coll::CommOp {
+                    step,
+                    src: s,
+                    dst: d,
+                    bytes: 1e6 * (1 + (s * 7 + d * 3 + step) % 11) as f64,
+                });
+            }
+        }
+        let sched = coll::CommSchedule::new("staggered", 16, ops);
+        let dag = schedule_rank_dag(&sched);
+        let mut sim = DagSimulator::new();
+        let heap = sim.simulate(&net, &dag);
+        let scan = sim.simulate_scan(&net, &dag);
+        let rel = (heap.makespan - scan.makespan).abs() / scan.makespan;
+        assert!(rel <= 1e-9, "makespan {} vs {}", heap.makespan, scan.makespan);
+        for (i, (a, b)) in heap.finish.iter().zip(&scan.finish).enumerate() {
+            assert!((a - b).abs() <= 1e-9 * b.max(1e-30), "node {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn heap_invalidation_tracks_serial_rate_changes() {
+        // One long flow whose fair share changes at every event: short
+        // flows join and leave its bottleneck link one after another, so
+        // the long flow's heap entry is invalidated and re-predicted many
+        // times before it finally completes.
+        let net = Network::sls(4, 800.0, 0.0);
+        let mut dag = vec![DagNode::flow(1, 0, 4e9, vec![])];
+        let mut gate: Option<usize> = None;
+        for _ in 0..8 {
+            let deps = match gate {
+                None => vec![],
+                Some(g) => vec![g],
+            };
+            dag.push(DagNode::flow(2, 0, 2e8, deps));
+            gate = Some(dag.len() - 1);
+        }
+        let heap = simulate_dag(&net, &dag);
+        let scan = simulate_dag_scan(&net, &dag);
+        let reference = simulate_dag_reference(&net, &dag);
+        for (i, (a, b)) in heap.finish.iter().zip(&reference.finish).enumerate() {
+            assert!((a - b).abs() <= 1e-9 * b.max(1e-30), "node {i}: {a} vs {b}");
+        }
+        let rel = (heap.makespan - scan.makespan).abs() / scan.makespan;
+        assert!(rel <= 1e-9, "{} vs {}", heap.makespan, scan.makespan);
     }
 
     #[test]

@@ -483,12 +483,256 @@ pub fn rerank_skip_lines(skipped: &[SkippedPlan]) -> Vec<String> {
         .collect()
 }
 
+/// Default admission margin for [`plan_simulated`]'s analytical prefilter:
+/// a feasible candidate is simulated iff its analytical TTT is within
+/// `(1 + margin)×` of the best analytical TTT. The analytical model is a
+/// *lower bound* in practice — EXPERIMENTS.md §Validate measures the
+/// simulator running +4.5…+120% slower, never faster — so a candidate
+/// whose closed-form TTT already exceeds `2.25×` the analytical winner
+/// cannot beat that winner's simulated time and is safely skipped. The
+/// margin is configurable (`--sim-margin`); `f64::INFINITY` disables the
+/// prefilter entirely.
+pub const DEFAULT_SIM_MARGIN: f64 = 1.25;
+
+/// Result of full-set simulated planning (`lumos plan --objective sim`).
+#[derive(Debug, Clone)]
+pub struct SimPlan {
+    /// Simulated plans, best *simulated* TTT first.
+    pub scored: Vec<SimScored>,
+    /// Admitted plans the simulator could not score (DAG size guard);
+    /// kept visible, never dropped.
+    pub skipped: Vec<SkippedPlan>,
+    /// Feasible candidates the analytical prefilter did not admit.
+    pub prefiltered: usize,
+    /// The admission margin used (see [`DEFAULT_SIM_MARGIN`]).
+    pub margin: f64,
+}
+
+impl SimPlan {
+    /// Candidates that went through the simulator (scored or skipped).
+    pub fn admitted(&self) -> usize {
+        self.scored.len() + self.skipped.len()
+    }
+}
+
+/// Score the feasible set on the discrete-event simulator and rank on
+/// simulated TTT (`lumos plan --objective sim`) — the full-set form of
+/// [`rerank_simulated`], affordable because each candidate costs one
+/// skeleton-cache re-parameterization plus one lazy-heap simulation
+/// instead of a fresh lowering plus a dt-scan event loop.
+///
+/// `outcome` must carry the *untruncated* ranking (request `top == 0`);
+/// the analytical prefilter admits every candidate within
+/// `(1 + margin)×` of the best analytical TTT, and the admitted set
+/// simulates on `jobs` [`crate::sweep::engine::run_indexed`] workers.
+/// Each worker owns a thread-local [`timeline::SkeletonCache`] (and the
+/// dependency engine's thread-local `DagSimulator` buffers underneath) —
+/// sound because cached re-parameterization is bit-equal to fresh
+/// lowering, so results never depend on which worker simulated which
+/// candidate, and the final order is (simulated TTT under `total_cmp`,
+/// mapping tuple): byte-identical output for any `--jobs N`.
+pub fn plan_simulated(
+    outcome: &PlanOutcome,
+    workload: &Workload,
+    cluster: &Cluster,
+    knobs: &PerfKnobs,
+    margin: f64,
+    jobs: usize,
+) -> SimPlan {
+    let cutoff = outcome
+        .ranked
+        .first()
+        .map(|best| best.report.time_to_train_s * (1.0 + margin))
+        .unwrap_or(f64::INFINITY);
+    let admitted: Vec<(usize, &RankedPlan)> = outcome
+        .ranked
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.report.time_to_train_s <= cutoff)
+        .collect();
+    let prefiltered = outcome.ranked.len() - admitted.len();
+
+    use std::cell::RefCell;
+    thread_local! {
+        static SIM_CACHE: RefCell<timeline::SkeletonCache> =
+            RefCell::new(timeline::SkeletonCache::new());
+    }
+    let results = crate::sweep::engine::run_indexed(admitted.len(), jobs, |i| {
+        let (_, p) = &admitted[i];
+        SIM_CACHE.with(|c| {
+            timeline::simulate_step_cached(workload, cluster, &p.mapping, knobs, &mut c.borrow_mut())
+        })
+    });
+
+    let mut scored = Vec::new();
+    let mut skipped = Vec::new();
+    for ((rank0, p), result) in admitted.into_iter().zip(results) {
+        match result {
+            Ok(sim) => scored.push(SimScored { ana_rank: rank0 + 1, plan: p.clone(), sim }),
+            Err(e) => skipped.push(SkippedPlan {
+                ana_rank: rank0 + 1,
+                plan: p.clone(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+    scored.sort_by(|a, b| {
+        a.sim
+            .time_to_train_s
+            .total_cmp(&b.sim.time_to_train_s)
+            .then_with(|| mapping_key(&a.plan.mapping).cmp(&mapping_key(&b.plan.mapping)))
+    });
+    SimPlan { scored, skipped, prefiltered, margin }
+}
+
+/// Render a [`SimPlan`] (`lumos plan --objective sim`). Shows the best
+/// `top` simulated rows (0 = all) plus every skipped row; the title keeps
+/// the full admission accounting so truncation stays honest.
+pub fn sim_table(sim: &SimPlan, top: usize) -> Table {
+    let shown = if top > 0 { sim.scored.len().min(top) } else { sim.scored.len() };
+    let mut title = format!(
+        "Plan (sim objective): {} candidates simulated, {} prefiltered (analytical margin {:.2}), showing {} of {}",
+        sim.admitted(),
+        sim.prefiltered,
+        sim.margin,
+        shown,
+        sim.scored.len(),
+    );
+    if !sim.skipped.is_empty() {
+        title.push_str(&format!(" ({} not simulated — see rows)", sim.skipped.len()));
+    }
+    let mut t = Table::new(
+        &title,
+        &["sim#", "ana#", "TP", "PP", "DP", "micro", "exp/rank", "ana step", "sim step",
+          "gap", "sim TTT"],
+    );
+    for (i, s) in sim.scored.iter().take(shown).enumerate() {
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{}", s.ana_rank),
+            format!("{}", s.plan.mapping.par.tp),
+            format!("{}", s.plan.mapping.par.pp),
+            format!("{}", s.plan.mapping.par.dp),
+            format!("{}", s.plan.mapping.microbatch_seqs),
+            format!("{}", s.plan.mapping.moe.experts_per_dp_rank),
+            fmt_time(s.plan.report.step_time),
+            fmt_time(s.sim.step_time),
+            format!("{:+.1}%", 100.0 * s.gap()),
+            fmt_time(s.sim.time_to_train_s),
+        ]);
+    }
+    for s in &sim.skipped {
+        t.row(&[
+            "—".to_string(),
+            format!("{}", s.ana_rank),
+            format!("{}", s.plan.mapping.par.tp),
+            format!("{}", s.plan.mapping.par.pp),
+            format!("{}", s.plan.mapping.par.dp),
+            format!("{}", s.plan.mapping.microbatch_seqs),
+            format!("{}", s.plan.mapping.moe.experts_per_dp_rank),
+            fmt_time(s.plan.report.step_time),
+            "skipped".to_string(),
+            "—".to_string(),
+            "—".to_string(),
+        ]);
+    }
+    t
+}
+
+/// JSON rows for simulated results — shared by the `--objective sim` and
+/// `--rerank-sim` sections of [`outcome_json`]. Scored rows first (in
+/// simulated order), then skipped rows keyed by analytical rank.
+fn sim_rows_json(scored: &[SimScored], skipped: &[SkippedPlan]) -> Json {
+    let mut rows: Vec<Json> = scored
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Json::obj(vec![
+                ("sim_rank", Json::num((i + 1) as f64)),
+                ("ana_rank", Json::num(s.ana_rank as f64)),
+                (
+                    "mapping",
+                    Json::obj(vec![
+                        ("tp", Json::num(s.plan.mapping.par.tp as f64)),
+                        ("pp", Json::num(s.plan.mapping.par.pp as f64)),
+                        ("dp", Json::num(s.plan.mapping.par.dp as f64)),
+                        ("microbatch_seqs", Json::num(s.plan.mapping.microbatch_seqs as f64)),
+                        (
+                            "experts_per_dp_rank",
+                            Json::num(s.plan.mapping.moe.experts_per_dp_rank as f64),
+                        ),
+                    ]),
+                ),
+                ("analytical_step_s", Json::num(s.plan.report.step_time)),
+                ("simulated_step_s", Json::num(s.sim.step_time)),
+                ("gap", Json::num(s.gap())),
+                ("simulated_time_to_train_s", Json::num(s.sim.time_to_train_s)),
+                ("dag_nodes", Json::num(s.sim.nodes as f64)),
+            ])
+        })
+        .collect();
+    for s in skipped {
+        rows.push(Json::obj(vec![
+            ("sim_rank", Json::Null),
+            ("ana_rank", Json::num(s.ana_rank as f64)),
+            (
+                "mapping",
+                Json::obj(vec![
+                    ("tp", Json::num(s.plan.mapping.par.tp as f64)),
+                    ("pp", Json::num(s.plan.mapping.par.pp as f64)),
+                    ("dp", Json::num(s.plan.mapping.par.dp as f64)),
+                    ("microbatch_seqs", Json::num(s.plan.mapping.microbatch_seqs as f64)),
+                    (
+                        "experts_per_dp_rank",
+                        Json::num(s.plan.mapping.moe.experts_per_dp_rank as f64),
+                    ),
+                ]),
+            ),
+            ("analytical_step_s", Json::num(s.plan.report.step_time)),
+            ("skipped_reason", Json::str(&s.reason)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+/// The simulated section of [`outcome_json`] — either a full
+/// `--objective sim` run or a top-K `--rerank-sim` (distinguished by
+/// `mode`; rerank passes `prefiltered == 0` and the K as `admitted`).
+#[derive(Debug, Clone)]
+pub struct SimSection<'a> {
+    pub mode: &'a str,
+    pub scored: &'a [SimScored],
+    pub skipped: &'a [SkippedPlan],
+    pub prefiltered: usize,
+    pub margin: Option<f64>,
+}
+
+impl<'a> SimSection<'a> {
+    /// The section for a full-set [`SimPlan`].
+    pub fn from_plan(sim: &'a SimPlan) -> SimSection<'a> {
+        SimSection {
+            mode: "objective-sim",
+            scored: &sim.scored,
+            skipped: &sim.skipped,
+            prefiltered: sim.prefiltered,
+            margin: Some(sim.margin),
+        }
+    }
+
+    /// The section for a top-K [`rerank_simulated`] result.
+    pub fn from_rerank(scored: &'a [SimScored], skipped: &'a [SkippedPlan]) -> SimSection<'a> {
+        SimSection { mode: "rerank-sim", scored, skipped, prefiltered: 0, margin: None }
+    }
+}
+
 /// Machine-readable form of a plan outcome (`lumos plan --json`):
 /// mapping + timing per ranked plan, plus the search accounting
 /// (enumerated / pruned / feasible) and the paper baseline when present.
-/// Keys are sorted (BTreeMap), so serialization is deterministic and
-/// byte-identical for any worker count.
-pub fn outcome_json(outcome: &PlanOutcome) -> Json {
+/// When `sim` is set (`--objective sim` or `--rerank-sim`), a `simulated`
+/// section carries the scored *and* skipped rows — JSON mode no longer
+/// drops the simulator's answer. Keys are sorted (BTreeMap), so
+/// serialization is deterministic and byte-identical for any worker count.
+pub fn outcome_json(outcome: &PlanOutcome, sim: Option<&SimSection<'_>>) -> Json {
     let ranked: Vec<Json> = outcome
         .ranked
         .iter()
@@ -530,7 +774,7 @@ pub fn outcome_json(outcome: &PlanOutcome) -> Json {
         ]),
         None => Json::Null,
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("cluster", Json::str(&outcome.cluster)),
         ("config", Json::str(&outcome.config_name)),
         ("enumerated", Json::num(outcome.enumerated as f64)),
@@ -538,7 +782,21 @@ pub fn outcome_json(outcome: &PlanOutcome) -> Json {
         ("feasible", Json::num((outcome.enumerated - outcome.pruned) as f64)),
         ("paper_baseline", baseline),
         ("ranked", Json::Arr(ranked)),
-    ])
+    ];
+    if let Some(s) = sim {
+        fields.push((
+            "simulated",
+            Json::obj(vec![
+                ("mode", Json::str(s.mode)),
+                ("scored", Json::num(s.scored.len() as f64)),
+                ("skipped", Json::num(s.skipped.len() as f64)),
+                ("prefiltered", Json::num(s.prefiltered as f64)),
+                ("margin", s.margin.map_or(Json::Null, Json::num)),
+                ("rows", sim_rows_json(s.scored, s.skipped)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 #[cfg(test)]
@@ -609,8 +867,8 @@ mod tests {
     #[test]
     fn outcome_json_is_deterministic_and_complete() {
         let r = req(ClusterKey::Passage512, 4).with_top(3);
-        let a = outcome_json(&plan(&r, 1)).to_string_pretty();
-        let b = outcome_json(&plan(&r, 4)).to_string_pretty();
+        let a = outcome_json(&plan(&r, 1), None).to_string_pretty();
+        let b = outcome_json(&plan(&r, 4), None).to_string_pretty();
         assert_eq!(a, b, "plan --json must be byte-identical across job counts");
         let j = Json::parse(&a).unwrap();
         assert_eq!(j.get("ranked").as_arr().unwrap().len(), 3);
@@ -706,6 +964,87 @@ mod tests {
             rerank_table(&again, &again_skipped).render()
         );
         assert!(rerank_table(&scored, &skipped).render().contains("sim step"));
+    }
+
+    #[test]
+    fn plan_simulated_scores_the_admitted_set_deterministically() {
+        let knobs = PerfKnobs::default();
+        let out = plan(&req(ClusterKey::Passage512, 4), 2);
+        let cluster = ClusterKey::Passage512.build();
+        let w = Workload::paper_gpt_4p7t(4);
+        let feasible = out.ranked.len();
+        // a tight margin keeps the unit test fast; the CLI smoke runs the
+        // default margin over the full feasible set
+        let sim1 = plan_simulated(&out, &w, &cluster, &knobs, 0.25, 1);
+        let sim4 = plan_simulated(&out, &w, &cluster, &knobs, 0.25, 4);
+        // accounting: every feasible plan is either scored, skipped, or
+        // prefiltered — nothing vanishes
+        assert_eq!(sim1.admitted() + sim1.prefiltered, feasible);
+        assert!(!sim1.scored.is_empty());
+        // worker count cannot change a byte of the output
+        assert_eq!(sim_table(&sim1, 0).render(), sim_table(&sim4, 0).render());
+        assert_eq!(
+            outcome_json(&out, Some(&SimSection::from_plan(&sim1))).to_string_pretty(),
+            outcome_json(&out, Some(&SimSection::from_plan(&sim4))).to_string_pretty()
+        );
+        // ranked on simulated TTT
+        for pair in sim1.scored.windows(2) {
+            assert!(pair[0].sim.time_to_train_s <= pair[1].sim.time_to_train_s);
+        }
+        // agrees point-for-point with the serial top-K re-rank
+        let k = sim1.scored.len().min(3);
+        let (rr, _) = rerank_simulated(&out, k, &w, &cluster, &knobs);
+        for (a, b) in sim1.scored.iter().zip(rr.iter().take(k)) {
+            if a.plan.mapping == b.plan.mapping {
+                assert_eq!(a.sim.step_time.to_bits(), b.sim.step_time.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sim_prefilter_margin_widens_the_admitted_set() {
+        let knobs = PerfKnobs::default();
+        let out = plan(&req(ClusterKey::Passage512, 4), 2);
+        let cluster = ClusterKey::Passage512.build();
+        let w = Workload::paper_gpt_4p7t(4);
+        let tight = plan_simulated(&out, &w, &cluster, &knobs, 0.02, 2);
+        let wide = plan_simulated(&out, &w, &cluster, &knobs, 0.3, 2);
+        assert!(tight.admitted() <= wide.admitted());
+        assert!(tight.prefiltered >= wide.prefiltered);
+        // the analytical winner is always admitted (its TTT is the cutoff
+        // baseline), so neither scored set is empty
+        assert!(!tight.scored.is_empty() && !wide.scored.is_empty());
+        // accounting: admitted + prefiltered always covers the feasible set
+        for sim in [&tight, &wide] {
+            assert_eq!(sim.admitted() + sim.prefiltered, out.ranked.len());
+        }
+        // a wider margin can only improve (or tie) the simulated winner
+        let best_tight = tight.scored[0].sim.time_to_train_s;
+        let best_wide = wide.scored[0].sim.time_to_train_s;
+        assert!(best_wide <= best_tight);
+    }
+
+    #[test]
+    fn outcome_json_sim_section_carries_scored_and_skipped_rows() {
+        let knobs = PerfKnobs::default();
+        let out = plan(&req(ClusterKey::Passage512, 4).with_top(3), 2);
+        let cluster = ClusterKey::Passage512.build();
+        let w = Workload::paper_gpt_4p7t(4);
+        let (scored, skipped) = rerank_simulated(&out, 3, &w, &cluster, &knobs);
+        let j = outcome_json(&out, Some(&SimSection::from_rerank(&scored, &skipped)));
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let sim = parsed.get("simulated");
+        assert_eq!(sim.get("mode").as_str(), Some("rerank-sim"));
+        assert_eq!(
+            sim.get("rows").as_arr().unwrap().len(),
+            scored.len() + skipped.len()
+        );
+        let row0 = sim.get("rows").at(0);
+        assert!(row0.get("simulated_step_s").as_f64().unwrap() > 0.0);
+        assert!(row0.get("gap").as_f64().is_some());
+        // without sim results the key is absent (old shape preserved)
+        let plain = Json::parse(&outcome_json(&out, None).to_string_pretty()).unwrap();
+        assert!(matches!(plain.get("simulated"), Json::Null));
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Skeleton cache: amortize [`lower_step`](super::lower_step) across
+//! planner candidates.
+//!
+//! Mappings sharing their structural geometry lower to the *same* DAG
+//! skeleton — identical node kinds, dependency lists, flow endpoints and
+//! slice network — and differ only in the numbers: flow byte-sizes and
+//! delay durations. The builder reads every such number through the
+//! [`Slot`] table and records which slot each node's value came from, so
+//! a cached skeleton can be re-parameterized for a new candidate by
+//! rewriting node values slot-by-slot. That rewrite is bit-equal to a
+//! fresh lowering by construction (both write `params[slot]` verbatim into
+//! the node), which the skeleton-cache property test pins.
+//!
+//! # What makes a cached skeleton reusable
+//!
+//! [`build_from_params`] takes no reference to the workload, cluster or
+//! mapping: every branch it takes depends only on the structural fields of
+//! `StepParams` (pod, span, stride, pp, tp, n_micro, the DP-branch
+//! selector, the expert-ring flag, the slice network's two bandwidths) and
+//! the zero-pattern of the slot table (`comm_group` emits a flow group,
+//! a bare α delay, or a placeholder depending on which slots are
+//! non-zero). [`SkeletonKey`] is exactly that tuple, so key equality ⇒
+//! skeleton equality, with no appeal to how the candidate was derived.
+
+use crate::model::Workload;
+use crate::netsim::DagWork;
+use crate::parallel::Mapping;
+use crate::perf::PerfKnobs;
+use crate::topology::cluster::Cluster;
+
+use super::lower::{build_from_params, step_params, StepParams};
+use super::StepDag;
+
+/// Structural identity of a lowered step DAG — see the module docs for
+/// why these fields (and nothing else) determine the skeleton.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SkeletonKey {
+    pod: usize,
+    span: usize,
+    stride: usize,
+    pp: usize,
+    tp: usize,
+    n_micro: usize,
+    dp_branch: u8,
+    expert_ring: bool,
+    /// Slice-network bandwidths, compared bit-exactly (they parameterize
+    /// `Network::two_level`, which is part of the skeleton).
+    up_gbps_bits: u64,
+    out_gbps_bits: u64,
+    /// Bit i set ⇔ `params[i] > 0.0` — the builder's emit/skip decisions.
+    zero_mask: u32,
+}
+
+fn key_of(sp: &StepParams) -> SkeletonKey {
+    let mut zero_mask = 0u32;
+    for (i, &v) in sp.params.iter().enumerate() {
+        if v > 0.0 {
+            zero_mask |= 1 << i;
+        }
+    }
+    SkeletonKey {
+        pod: sp.pod,
+        span: sp.span,
+        stride: sp.stride,
+        pp: sp.pp,
+        tp: sp.tp,
+        n_micro: sp.vols.n_micro,
+        dp_branch: sp.dp_branch,
+        expert_ring: sp.expert_ring,
+        up_gbps_bits: sp.up_gbps.to_bits(),
+        out_gbps_bits: sp.out_gbps.to_bits(),
+        zero_mask,
+    }
+}
+
+struct Entry {
+    key: SkeletonKey,
+    dag: StepDag,
+    /// `Slot` of every node's value, parallel to `dag.nodes`.
+    tags: Vec<u8>,
+    /// LRU stamp (logical clock tick of last use).
+    stamp: u64,
+}
+
+/// Keep at most this many skeletons alive; deep-PP skeletons run to ~1 M
+/// nodes each, and planner sweeps revisit only a handful of shapes at a
+/// time (candidates are enumerated in mapping order, so shapes cluster).
+pub const MAX_CACHED_SKELETONS: usize = 4;
+
+/// A small LRU of lowered DAG skeletons, re-parameterized in place per
+/// candidate. One per planner worker thread; results are bit-identical to
+/// fresh [`lower_step`](super::lower_step) calls regardless of cache
+/// state, so per-worker caches cannot perturb deterministic output.
+#[derive(Default)]
+pub struct SkeletonCache {
+    entries: Vec<Entry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl SkeletonCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Candidates that reused a cached skeleton (re-parameterize only).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Candidates that paid a full lowering.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// [`lower_step`](super::lower_step) through the cache: on a skeleton
+    /// hit, rewrite the cached DAG's node values (and volumes) in place
+    /// instead of rebuilding it. The returned DAG is bit-equal to a fresh
+    /// lowering either way.
+    pub fn lower(
+        &mut self,
+        w: &Workload,
+        cluster: &Cluster,
+        map: &Mapping,
+        knobs: &PerfKnobs,
+    ) -> Result<&StepDag, String> {
+        let sp = step_params(w, cluster, map, knobs)?;
+        let key = key_of(&sp);
+        self.clock += 1;
+        if let Some(idx) = self.entries.iter().position(|e| e.key == key) {
+            self.hits += 1;
+            let entry = &mut self.entries[idx];
+            entry.stamp = self.clock;
+            debug_assert_eq!(entry.tags.len(), entry.dag.nodes.len());
+            for (node, &tag) in entry.dag.nodes.iter_mut().zip(&entry.tags) {
+                let v = sp.params[tag as usize];
+                match &mut node.work {
+                    DagWork::Delay(d) => *d = v,
+                    DagWork::Flow { bytes, .. } => *bytes = v,
+                }
+            }
+            entry.dag.vols = sp.vols;
+            return Ok(&self.entries[idx].dag);
+        }
+        self.misses += 1;
+        let (dag, tags) = build_from_params(sp);
+        if self.entries.len() >= MAX_CACHED_SKELETONS {
+            // evict the least-recently-used skeleton
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+            {
+                self.entries.swap_remove(lru);
+            }
+        }
+        self.entries.push(Entry { key, dag, tags, stamp: self.clock });
+        let idx = self.entries.len() - 1;
+        Ok(&self.entries[idx].dag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lower_step;
+    use super::*;
+    use crate::model::MoeConfig;
+    use crate::parallel::Parallelism;
+
+    fn paper_setup() -> (Workload, Cluster, Mapping) {
+        let w = Workload::paper_gpt_4p7t(4);
+        let c = Cluster::passage_512(32_768);
+        let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+        (w, c, m)
+    }
+
+    fn assert_dags_bit_equal(a: &StepDag, b: &StepDag) {
+        assert_eq!(a.nodes.len(), b.nodes.len());
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.deps, y.deps);
+            match (&x.work, &y.work) {
+                (DagWork::Delay(dx), DagWork::Delay(dy)) => {
+                    assert_eq!(dx.to_bits(), dy.to_bits());
+                }
+                (
+                    DagWork::Flow { src: sx, dst: dx, bytes: bx },
+                    DagWork::Flow { src: sy, dst: dy, bytes: by },
+                ) => {
+                    assert_eq!((sx, dx), (sy, dy));
+                    assert_eq!(bx.to_bits(), by.to_bits());
+                }
+                _ => panic!("node kind mismatch"),
+            }
+        }
+        assert_eq!(a.net.n_nodes, b.net.n_nodes);
+        assert_eq!(a.chain.len(), b.chain.len());
+    }
+
+    #[test]
+    fn cache_hit_reparameterization_matches_fresh_lowering() {
+        let (w, c, m) = paper_setup();
+        // same skeleton, different values: mfu scales compute durations,
+        // comm_dtype_bytes scales the TP/EP byte sizes
+        let knobs_a = PerfKnobs::default();
+        let knobs_b = PerfKnobs { mfu: 0.55, comm_dtype_bytes: 2.0, ..PerfKnobs::default() };
+        let mut cache = SkeletonCache::new();
+        cache.lower(&w, &c, &m, &knobs_a).unwrap();
+        // second candidate: same skeleton, re-parameterized in place
+        let fresh = lower_step(&w, &c, &m, &knobs_b).unwrap();
+        let cached = cache.lower(&w, &c, &m, &knobs_b).unwrap();
+        assert_dags_bit_equal(cached, &fresh);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn distinct_skeletons_do_not_collide() {
+        let (w, c, m) = paper_setup();
+        let knobs = PerfKnobs::default();
+        let deep = Mapping::try_with_microbatch(
+            Parallelism { tp: 8, pp: 64, dp: 64 },
+            MoeConfig::paper_config(4),
+            1,
+        )
+        .unwrap();
+        let mut cache = SkeletonCache::new();
+        for mapping in [&m, &deep] {
+            let fresh = lower_step(&w, &c, mapping, &knobs).unwrap();
+            let cached = cache.lower(&w, &c, mapping, &knobs).unwrap();
+            assert_dags_bit_equal(cached, &fresh);
+        }
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        // revisiting the first shape after the second still re-parameterizes
+        let fresh = lower_step(&w, &c, &m, &knobs).unwrap();
+        let cached = cache.lower(&w, &c, &m, &knobs).unwrap();
+        assert_dags_bit_equal(cached, &fresh);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn eviction_keeps_the_cache_bounded_and_correct() {
+        let (w, c, _) = paper_setup();
+        let knobs = PerfKnobs::default();
+        // more distinct skeletons than MAX_CACHED_SKELETONS: microbatch
+        // grain (n_micro is structural) plus two deeper-PP shapes
+        let mut shapes: Vec<Mapping> = [1, 2, 4, 8]
+            .iter()
+            .map(|&mb| {
+                Mapping::try_with_microbatch(
+                    Parallelism::paper(),
+                    MoeConfig::paper_config(4),
+                    mb,
+                )
+                .unwrap()
+            })
+            .collect();
+        for pp in [16, 32] {
+            shapes.push(
+                Mapping::try_with_microbatch(
+                    Parallelism { tp: 8, pp, dp: 4096 / pp },
+                    MoeConfig::paper_config(4),
+                    1,
+                )
+                .unwrap(),
+            );
+        }
+        let mut cache = SkeletonCache::new();
+        for m in &shapes {
+            let fresh = lower_step(&w, &c, m, &knobs).unwrap();
+            let cached = cache.lower(&w, &c, m, &knobs).unwrap();
+            assert_dags_bit_equal(cached, &fresh);
+        }
+        assert_eq!(cache.misses(), shapes.len() as u64);
+        // evicted shape rebuilds correctly on revisit
+        let fresh = lower_step(&w, &c, &shapes[0], &knobs).unwrap();
+        let cached = cache.lower(&w, &c, &shapes[0], &knobs).unwrap();
+        assert_dags_bit_equal(cached, &fresh);
+    }
+}

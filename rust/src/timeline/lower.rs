@@ -95,42 +95,114 @@ pub fn estimate_nodes(map: &Mapping, n_micro: usize) -> usize {
     blocks * (5 + 4 * tp) + map.par.pp * (4 + 4 * tp)
 }
 
-struct Builder<'a> {
-    cluster: &'a Cluster,
-    map: &'a Mapping,
+/// Value slots of the candidate-dependent parameter table.
+///
+/// The builder reads every per-candidate number through this table
+/// ([`Builder::params`]) and records which slot each node's value came
+/// from ([`Builder::tags`]), so a lowered DAG can be *re-parameterized*
+/// for another candidate by rewriting node values slot-by-slot — the
+/// skeleton cache in [`super::cache`]. Every branch the builder takes
+/// depends only on the structural geometry plus the zero-pattern of this
+/// table, both captured by [`super::SkeletonCache`]'s key; that is what
+/// makes a cached skeleton provably reusable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub(crate) enum Slot {
+    /// Literal 0.0 (degenerate placeholder delays).
+    Zero = 0,
+    /// Forward-block matmul time (⅓ of fwd+bwd per microbatch).
+    ComputeF,
+    /// Backward-block matmul time (⅔ — 2 matmuls per weight vs 1).
+    ComputeB,
+    /// TP + expert-TP ring all-reduce wire bytes per block.
+    TpBytes,
+    TpAlpha,
+    /// EP all-to-all, in-pod part.
+    EpInBytes,
+    EpInAlpha,
+    /// EP all-to-all, pod-crossing part.
+    EpXBytes,
+    EpXAlpha,
+    /// Pipeline p2p transfer per boundary.
+    PpBytes,
+    /// Scale-out latency fronting each pipeline send.
+    OutLat,
+    /// DP sync, small branch: ring inside one pod.
+    DpRingBytes,
+    DpRingAlpha,
+    /// DP sync, big branch: in-pod reduce-scatter / all-gather legs.
+    DpPodBytes,
+    DpPodAlpha,
+    /// DP sync, big branch: inter-pod cross ring.
+    DpXBytes,
+    DpXAlpha,
+    /// Expert-set gradient ring.
+    ExBytes,
+    ExAlpha,
+}
+
+/// Number of [`Slot`] variants (table width).
+pub(crate) const N_SLOTS: usize = 19;
+
+/// Everything the builder consumes, split into *structural* fields —
+/// which, together with the zero-pattern of `params`, fully determine the
+/// DAG skeleton — and the candidate-value table. Produced by
+/// [`step_params`]; consumed by [`build_from_params`] (and hashed into a
+/// cache key by [`super::SkeletonCache`]).
+pub(crate) struct StepParams {
+    pub(crate) pod: usize,
+    pub(crate) span: usize,
+    pub(crate) stride: usize,
+    pub(crate) pp: usize,
+    pub(crate) tp: usize,
+    pub(crate) n_blocks: usize,
+    /// DP sync shape: 0 = none, 1 = in-pod ring, 2 = hierarchical
+    /// reduce-scatter → cross ring → all-gather.
+    pub(crate) dp_branch: u8,
+    pub(crate) expert_ring: bool,
+    pub(crate) up_gbps: f64,
+    pub(crate) out_gbps: f64,
+    pub(crate) est: usize,
+    pub(crate) params: [f64; N_SLOTS],
+    pub(crate) vols: StepVolumes,
+}
+
+struct Builder {
     nodes: Vec<DagNode>,
+    /// `Slot` of every node's value, parallel to `nodes` — the
+    /// re-parameterization map the skeleton cache replays.
+    tags: Vec<u8>,
     chain: Vec<ChainTask>,
-    /// stage-local geometry
+    /// stage-local geometry (all part of the skeleton key)
     pod: usize,
     span: usize,
     stride: usize,
     pp: usize,
-    // precomputed per-block task parameters (plain copies so the builder
-    // borrows nothing from the StepVolumes it hands back)
-    compute_per_micro: f64,
-    pp_bytes: f64,
-    shared_grad_bytes: f64,
-    expert_grad_bytes: f64,
-    tp_bytes: f64,
-    tp_alpha: f64,
-    ep_in_bytes: f64,
-    ep_in_alpha: f64,
-    ep_x_bytes: f64,
-    ep_x_alpha: f64,
+    tp: usize,
+    dp_branch: u8,
+    expert_ring: bool,
+    /// candidate-value table, indexed by [`Slot`]
+    params: [f64; N_SLOTS],
 }
 
-impl<'a> Builder<'a> {
+impl Builder {
     fn gid(&self, stage: usize, local: usize) -> usize {
         stage * self.stride + local
     }
 
-    fn delay(&mut self, dur: f64, deps: Vec<usize>) -> usize {
-        self.nodes.push(DagNode::delay(dur, deps));
+    fn val(&self, s: Slot) -> f64 {
+        self.params[s as usize]
+    }
+
+    fn delay(&mut self, dur: Slot, deps: Vec<usize>) -> usize {
+        self.nodes.push(DagNode::delay(self.val(dur), deps));
+        self.tags.push(dur as u8);
         self.nodes.len() - 1
     }
 
-    fn flow(&mut self, src: usize, dst: usize, bytes: f64, deps: Vec<usize>) -> usize {
-        self.nodes.push(DagNode::flow(src, dst, bytes, deps));
+    fn flow(&mut self, src: usize, dst: usize, bytes: Slot, deps: Vec<usize>) -> usize {
+        self.nodes.push(DagNode::flow(src, dst, self.val(bytes), deps));
+        self.tags.push(bytes as u8);
         self.nodes.len() - 1
     }
 
@@ -167,18 +239,18 @@ impl<'a> Builder<'a> {
         &mut self,
         stage: usize,
         deps: &[usize],
-        in_bytes: f64,
-        in_alpha: f64,
-        x_bytes: f64,
-        x_alpha: f64,
+        in_bytes: Slot,
+        in_alpha: Slot,
+        x_bytes: Slot,
+        x_alpha: Slot,
         perm_in: impl Fn(&Self, usize) -> usize,
         x_stage: usize,
         x_perm: impl Fn(&Self, usize) -> usize,
     ) -> Vec<usize> {
-        let tp = self.map.par.tp;
+        let tp = self.tp;
         let mut ends = Vec::new();
-        if in_bytes > 0.0 {
-            let fdeps = if in_alpha > 0.0 {
+        if self.val(in_bytes) > 0.0 {
+            let fdeps = if self.val(in_alpha) > 0.0 {
                 vec![self.delay(in_alpha, deps.to_vec())]
             } else {
                 deps.to_vec()
@@ -198,11 +270,11 @@ impl<'a> Builder<'a> {
                 // degenerate single-rank group: only the startup term
                 ends = fdeps;
             }
-        } else if in_alpha > 0.0 {
+        } else if self.val(in_alpha) > 0.0 {
             ends.push(self.delay(in_alpha, deps.to_vec()));
         }
-        if x_bytes > 0.0 {
-            let fdeps = if x_alpha > 0.0 {
+        if self.val(x_bytes) > 0.0 {
+            let fdeps = if self.val(x_alpha) > 0.0 {
                 vec![self.delay(x_alpha, deps.to_vec())]
             } else {
                 deps.to_vec()
@@ -216,11 +288,11 @@ impl<'a> Builder<'a> {
                     fdeps.clone(),
                 ));
             }
-        } else if x_alpha > 0.0 {
+        } else if self.val(x_alpha) > 0.0 {
             ends.push(self.delay(x_alpha, deps.to_vec()));
         }
         if ends.is_empty() {
-            ends.push(self.delay(0.0, deps.to_vec()));
+            ends.push(self.delay(Slot::Zero, deps.to_vec()));
         }
         ends
     }
@@ -240,21 +312,21 @@ impl<'a> Builder<'a> {
         }
         // backward is 2× forward (2 matmuls vs 1 per weight)
         let cdur = match action {
-            Action::Forward(_) => self.compute_per_micro / 3.0,
-            Action::Backward(_) => 2.0 * self.compute_per_micro / 3.0,
+            Action::Forward(_) => Slot::ComputeF,
+            Action::Backward(_) => Slot::ComputeB,
         };
         let cnode = self.delay(cdur, deps.clone());
         self.record(stage, Phase::Compute, &[cnode], &deps);
 
-        let tp = self.map.par.tp;
-        let tail = if self.tp_bytes > 0.0 || self.tp_alpha > 0.0 {
+        let tp = self.tp;
+        let tail = if self.val(Slot::TpBytes) > 0.0 || self.val(Slot::TpAlpha) > 0.0 {
             let ends = self.comm_group(
                 stage,
                 &[cnode],
-                self.tp_bytes,
-                self.tp_alpha,
-                0.0,
-                0.0,
+                Slot::TpBytes,
+                Slot::TpAlpha,
+                Slot::Zero,
+                Slot::Zero,
                 |_, l| if tp > 1 { (l + 1) % tp } else { l },
                 stage,
                 |_, l| l,
@@ -268,10 +340,10 @@ impl<'a> Builder<'a> {
         let ep_ends = self.comm_group(
             stage,
             &tail,
-            self.ep_in_bytes,
-            self.ep_in_alpha,
-            self.ep_x_bytes,
-            self.ep_x_alpha,
+            Slot::EpInBytes,
+            Slot::EpInAlpha,
+            Slot::EpXBytes,
+            Slot::EpXAlpha,
             |b, l| b.a2a_in_peer(l),
             stage,
             |b, l| ((l / b.pod + 1) * b.pod + (l % b.pod)) % b.stride,
@@ -287,14 +359,13 @@ impl<'a> Builder<'a> {
         };
         match to {
             Some(dst_stage) => {
-                let out_lat = self.cluster.domain(Domain::ScaleOut).latency_s;
-                let d = self.delay(out_lat, ep_ends.clone());
-                let mut ids = Vec::with_capacity(self.map.par.tp);
-                for l in 0..self.map.par.tp {
+                let d = self.delay(Slot::OutLat, ep_ends.clone());
+                let mut ids = Vec::with_capacity(tp);
+                for l in 0..tp {
                     ids.push(self.flow(
                         self.gid(stage, l),
                         self.gid(dst_stage, l),
-                        self.pp_bytes,
+                        Slot::PpBytes,
                         vec![d],
                     ));
                 }
@@ -310,86 +381,73 @@ impl<'a> Builder<'a> {
     /// all-gather) plus the expert-set ring, as in
     /// `collectives::hierarchical_all_reduce_time`.
     fn build_dp(&mut self, stage: usize, prev: &[usize]) -> Vec<usize> {
-        let c = self.cluster;
-        let up_lat = c.domain(Domain::ScaleUp).latency_s;
-        let out_lat = c.domain(Domain::ScaleOut).latency_s;
-        let dp_span = self.map.dp_span_gpus().min(c.spec.n_gpus);
-        let b_sh = self.shared_grad_bytes;
-        let pod = self.pod;
         // proxy target for flows whose true peers are outside the slice
         let nxt = if self.pp > 1 { (stage + 1) % self.pp } else { self.pp };
         let mut tail: Vec<usize> = prev.to_vec();
-        if dp_span > 1 {
-            if dp_span <= pod {
-                let n = dp_span as f64;
-                let dp_deps = tail.clone();
-                let ends = self.comm_group(
-                    stage,
-                    &dp_deps,
-                    2.0 * (n - 1.0) / n * b_sh,
-                    2.0 * (n - 1.0) * up_lat,
-                    0.0,
-                    0.0,
-                    |b, l| b.pod_neighbor(l),
-                    stage,
-                    |_, l| l,
-                );
-                self.record(stage, Phase::DpComm, &ends, &dp_deps);
-                tail = ends;
-            } else {
-                let podf = pod as f64;
-                let npd = dp_span.div_ceil(pod) as f64;
-                let rs_deps = tail.clone();
-                let rs = self.comm_group(
-                    stage,
-                    &rs_deps,
-                    (podf - 1.0) / podf * b_sh,
-                    (podf - 1.0) * up_lat,
-                    0.0,
-                    0.0,
-                    |b, l| b.pod_neighbor(l),
-                    stage,
-                    |_, l| l,
-                );
-                self.record(stage, Phase::DpComm, &rs, &rs_deps);
-                let xr = self.comm_group(
-                    stage,
-                    &rs,
-                    0.0,
-                    0.0,
-                    2.0 * (npd - 1.0) / npd * b_sh / podf,
-                    2.0 * (npd - 1.0) * out_lat,
-                    |_, l| l,
-                    nxt,
-                    |_, l| l,
-                );
-                self.record(stage, Phase::DpComm, &xr, &rs);
-                let ag = self.comm_group(
-                    stage,
-                    &xr,
-                    (podf - 1.0) / podf * b_sh,
-                    (podf - 1.0) * up_lat,
-                    0.0,
-                    0.0,
-                    |b, l| b.pod_neighbor(l),
-                    stage,
-                    |_, l| l,
-                );
-                self.record(stage, Phase::DpComm, &ag, &xr);
-                tail = ag;
-            }
+        if self.dp_branch == 1 {
+            let dp_deps = tail.clone();
+            let ends = self.comm_group(
+                stage,
+                &dp_deps,
+                Slot::DpRingBytes,
+                Slot::DpRingAlpha,
+                Slot::Zero,
+                Slot::Zero,
+                |b, l| b.pod_neighbor(l),
+                stage,
+                |_, l| l,
+            );
+            self.record(stage, Phase::DpComm, &ends, &dp_deps);
+            tail = ends;
+        } else if self.dp_branch == 2 {
+            let rs_deps = tail.clone();
+            let rs = self.comm_group(
+                stage,
+                &rs_deps,
+                Slot::DpPodBytes,
+                Slot::DpPodAlpha,
+                Slot::Zero,
+                Slot::Zero,
+                |b, l| b.pod_neighbor(l),
+                stage,
+                |_, l| l,
+            );
+            self.record(stage, Phase::DpComm, &rs, &rs_deps);
+            let xr = self.comm_group(
+                stage,
+                &rs,
+                Slot::Zero,
+                Slot::Zero,
+                Slot::DpXBytes,
+                Slot::DpXAlpha,
+                |_, l| l,
+                nxt,
+                |_, l| l,
+            );
+            self.record(stage, Phase::DpComm, &xr, &rs);
+            let ag = self.comm_group(
+                stage,
+                &xr,
+                Slot::DpPodBytes,
+                Slot::DpPodAlpha,
+                Slot::Zero,
+                Slot::Zero,
+                |b, l| b.pod_neighbor(l),
+                stage,
+                |_, l| l,
+            );
+            self.record(stage, Phase::DpComm, &ag, &xr);
+            tail = ag;
         }
-        let n_sets = self.map.n_complete_expert_sets();
-        if n_sets > 1 {
-            let ns = n_sets as f64;
+        if self.expert_ring {
             let ex_deps = tail.clone();
             let ex = self.comm_group(
                 stage,
                 &ex_deps,
-                0.0,
-                0.0,
-                2.0 * (ns - 1.0) / ns * self.expert_grad_bytes,
-                2.0 * (ns - 1.0) * out_lat,
+                Slot::Zero,
+                Slot::Zero,
+                Slot::ExBytes,
+                Slot::ExAlpha,
                 |_, l| l,
                 nxt,
                 |_, l| l,
@@ -401,15 +459,16 @@ impl<'a> Builder<'a> {
     }
 }
 
-/// Build the step DAG. Preconditions (divisibility) are the same as
-/// [`crate::perf::evaluate`]'s; callers go through
-/// [`crate::perf::check_feasible`] first.
-pub fn lower_step(
+/// Compute the structural geometry and the full [`Slot`] value table for a
+/// candidate — everything [`build_from_params`] needs, with no further
+/// reference to the cluster or mapping. Errors on oversized lowerings
+/// (same guard [`lower_step`] always had).
+pub(crate) fn step_params(
     w: &Workload,
     cluster: &Cluster,
     map: &Mapping,
     knobs: &PerfKnobs,
-) -> Result<StepDag, String> {
+) -> Result<StepParams, String> {
     let vols = step_volumes(w, cluster, map, knobs);
     let est = estimate_nodes(map, vols.n_micro);
     if est > MAX_DAG_NODES {
@@ -427,23 +486,23 @@ pub fn lower_step(
     let n_blocks = if pp > 1 { pp } else { 2 };
     let up = cluster.domain(Domain::ScaleUp);
     let out = cluster.domain(Domain::ScaleOut);
-    let net = Network::two_level(
-        n_blocks * stride,
-        pod,
-        up.gbps_per_gpu,
-        out.gbps_per_gpu,
-        0.0, // α terms are explicit Delay nodes
-    );
+
+    let mut params = [0.0f64; N_SLOTS];
+    params[Slot::ComputeF as usize] = vols.compute_per_micro / 3.0;
+    params[Slot::ComputeB as usize] = 2.0 * vols.compute_per_micro / 3.0;
+    params[Slot::PpBytes as usize] = vols.pp_bytes;
+    params[Slot::OutLat as usize] = out.latency_s;
 
     let tp = map.par.tp;
     let etp = map.expert_tp();
     let l = vols.layers_per_stage;
     // Per-direction TP wire bytes: the ring all-reduce after attention
     // (tp ranks) and after the expert FFN (expert-TP subgroup), per layer.
-    let tp_bytes = l
+    params[Slot::TpBytes as usize] = l
         * (2.0 * (tp as f64 - 1.0) / tp as f64 + 2.0 * (etp as f64 - 1.0) / etp as f64)
         * vols.act_bytes;
-    let tp_alpha = l * (2.0 * (tp as f64 - 1.0) + 2.0 * (etp as f64 - 1.0)) * up.latency_s;
+    params[Slot::TpAlpha as usize] =
+        l * (2.0 * (tp as f64 - 1.0) + 2.0 * (etp as f64 - 1.0)) * up.latency_s;
 
     // Per-direction EP bytes: dispatch + combine (2 a2a) per layer, split
     // into the in-pod and pod-crossing parts, inflated by the calibrated
@@ -454,43 +513,102 @@ pub fn lower_step(
     } else {
         1.0 - cross
     };
-    let ep_in_bytes = 2.0 * l * in_frac * vols.a2a_bytes / up.a2a_efficiency;
-    let ep_x_bytes = 2.0 * l * cross * vols.a2a_bytes / out.a2a_efficiency;
-    let ep_in_alpha = 2.0 * l * a2a_alpha(up.latency_s, span.min(pod));
-    let ep_x_alpha =
+    params[Slot::EpInBytes as usize] = 2.0 * l * in_frac * vols.a2a_bytes / up.a2a_efficiency;
+    params[Slot::EpXBytes as usize] = 2.0 * l * cross * vols.a2a_bytes / out.a2a_efficiency;
+    params[Slot::EpInAlpha as usize] = 2.0 * l * a2a_alpha(up.latency_s, span.min(pod));
+    params[Slot::EpXAlpha as usize] =
         if span > pod { 2.0 * l * a2a_alpha(out.latency_s, span) } else { 0.0 };
 
-    let mut b = Builder {
-        cluster,
-        map,
-        nodes: Vec::with_capacity(est),
-        chain: Vec::new(),
+    // DP gradient sync, as in collectives::hierarchical_all_reduce_time:
+    // one ring inside the pod when the DP group fits, otherwise in-pod
+    // reduce-scatter → inter-pod ring → in-pod all-gather.
+    let dp_span = map.dp_span_gpus().min(cluster.spec.n_gpus);
+    let b_sh = vols.shared_grad_bytes;
+    let dp_branch: u8 = if dp_span <= 1 {
+        0
+    } else if dp_span <= pod {
+        1
+    } else {
+        2
+    };
+    match dp_branch {
+        1 => {
+            let n = dp_span as f64;
+            params[Slot::DpRingBytes as usize] = 2.0 * (n - 1.0) / n * b_sh;
+            params[Slot::DpRingAlpha as usize] = 2.0 * (n - 1.0) * up.latency_s;
+        }
+        2 => {
+            let podf = pod as f64;
+            let npd = dp_span.div_ceil(pod) as f64;
+            params[Slot::DpPodBytes as usize] = (podf - 1.0) / podf * b_sh;
+            params[Slot::DpPodAlpha as usize] = (podf - 1.0) * up.latency_s;
+            params[Slot::DpXBytes as usize] = 2.0 * (npd - 1.0) / npd * b_sh / podf;
+            params[Slot::DpXAlpha as usize] = 2.0 * (npd - 1.0) * out.latency_s;
+        }
+        _ => {}
+    }
+    let n_sets = map.n_complete_expert_sets();
+    let expert_ring = n_sets > 1;
+    if expert_ring {
+        let ns = n_sets as f64;
+        params[Slot::ExBytes as usize] = 2.0 * (ns - 1.0) / ns * vols.expert_grad_bytes;
+        params[Slot::ExAlpha as usize] = 2.0 * (ns - 1.0) * out.latency_s;
+    }
+
+    Ok(StepParams {
         pod,
         span,
         stride,
         pp,
-        compute_per_micro: vols.compute_per_micro,
-        pp_bytes: vols.pp_bytes,
-        shared_grad_bytes: vols.shared_grad_bytes,
-        expert_grad_bytes: vols.expert_grad_bytes,
-        tp_bytes,
-        tp_alpha,
-        ep_in_bytes,
-        ep_in_alpha,
-        ep_x_bytes,
-        ep_x_alpha,
+        tp,
+        n_blocks,
+        dp_branch,
+        expert_ring,
+        up_gbps: up.gbps_per_gpu,
+        out_gbps: out.gbps_per_gpu,
+        est,
+        params,
+        vols,
+    })
+}
+
+/// Build the DAG from a prepared parameter table. Deliberately has no
+/// access to the workload/cluster/mapping: every branch below depends only
+/// on `sp`'s structural fields and the zero-pattern of `sp.params`, which
+/// is what lets [`super::SkeletonCache`] key skeletons on exactly those.
+pub(crate) fn build_from_params(sp: StepParams) -> (StepDag, Vec<u8>) {
+    let net = Network::two_level(
+        sp.n_blocks * sp.stride,
+        sp.pod,
+        sp.up_gbps,
+        sp.out_gbps,
+        0.0, // α terms are explicit Delay nodes
+    );
+    let pp = sp.pp;
+    let n_micro = sp.vols.n_micro;
+    let mut b = Builder {
+        nodes: Vec::with_capacity(sp.est),
+        tags: Vec::with_capacity(sp.est),
+        chain: Vec::new(),
+        pod: sp.pod,
+        span: sp.span,
+        stride: sp.stride,
+        pp,
+        tp: sp.tp,
+        dp_branch: sp.dp_branch,
+        expert_ring: sp.expert_ring,
+        params: sp.params,
     };
 
     // Multi-pass 1F1B construction: a stage's next block can be built once
     // the pipeline transfer it waits on exists (F needs the upstream F's
     // send, B the downstream B's send) — the same dependency sweep
     // coordinator::pipeline::simulate_slots runs.
-    let schedules: Vec<Vec<Action>> =
-        (0..pp).map(|s| one_f_one_b(pp, s, vols.n_micro)).collect();
+    let schedules: Vec<Vec<Action>> = (0..pp).map(|s| one_f_one_b(pp, s, n_micro)).collect();
     // ppf[s][i] / ppb[s][i]: node ids of stage s's pipeline send for
     // microbatch i (empty until built)
-    let mut ppf = vec![vec![Vec::<usize>::new(); vols.n_micro]; pp];
-    let mut ppb = vec![vec![Vec::<usize>::new(); vols.n_micro]; pp];
+    let mut ppf = vec![vec![Vec::<usize>::new(); n_micro]; pp];
+    let mut ppb = vec![vec![Vec::<usize>::new(); n_micro]; pp];
     let mut cursor = vec![0usize; pp];
     let mut tails: Vec<Vec<usize>> = vec![Vec::new(); pp];
     let mut dp_done = vec![false; pp];
@@ -539,7 +657,19 @@ pub fn lower_step(
         "1F1B DAG construction deadlocked"
     );
 
-    Ok(StepDag { net, nodes: b.nodes, chain: b.chain, vols })
+    (StepDag { net, nodes: b.nodes, chain: b.chain, vols: sp.vols }, b.tags)
+}
+
+/// Build the step DAG. Preconditions (divisibility) are the same as
+/// [`crate::perf::evaluate`]'s; callers go through
+/// [`crate::perf::check_feasible`] first.
+pub fn lower_step(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+) -> Result<StepDag, String> {
+    Ok(build_from_params(step_params(w, cluster, map, knobs)?).0)
 }
 
 #[cfg(test)]

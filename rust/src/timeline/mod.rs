@@ -30,8 +30,10 @@
 //! re-simulation cheap enough to sit inside the planner's search loop
 //! (`lumos plan --rerank-sim`).
 
+mod cache;
 mod lower;
 
+pub use cache::{SkeletonCache, MAX_CACHED_SKELETONS};
 pub use lower::{estimate_nodes, lower_step, ChainTask, Phase, StepDag, MAX_DAG_NODES};
 
 use crate::model::Workload;
@@ -171,6 +173,24 @@ pub fn simulate_step_with(
     Ok(simulate_lowered(w, &dag, tweak))
 }
 
+/// [`simulate_step`] through a caller-owned [`SkeletonCache`]: candidates
+/// sharing a DAG skeleton skip [`lower_step`] and pay only slot-value
+/// rewriting plus simulation. Bit-identical to [`simulate_step`]
+/// regardless of cache state (the cache's re-parameterization is bit-equal
+/// to fresh lowering by construction, pinned by its property test), which
+/// is why the planner can hand each pool worker its own cache without
+/// perturbing deterministic output.
+pub fn simulate_step_cached(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    cache: &mut SkeletonCache,
+) -> Result<TimelineReport, TimelineError> {
+    let dag = cache.lower(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
+    Ok(simulate_on(w, dag))
+}
+
 /// Simulate an already-lowered step DAG, applying `tweak` to a copy of its
 /// slice network first. The lowering is reusable across fabric states, so
 /// callers that re-simulate one mapping under several degradations (the
@@ -183,7 +203,17 @@ pub fn simulate_lowered(
 ) -> TimelineReport {
     let mut net = dag.net.clone();
     tweak(&mut net);
-    let result = simulate_dag(&net, &dag.nodes);
+    simulate_attributed(w, dag, &net)
+}
+
+/// Simulate a lowered DAG on its own (untweaked) slice network, skipping
+/// the defensive network clone — the planner's hot path.
+fn simulate_on(w: &Workload, dag: &StepDag) -> TimelineReport {
+    simulate_attributed(w, dag, &dag.net)
+}
+
+fn simulate_attributed(w: &Workload, dag: &StepDag, net: &crate::netsim::Network) -> TimelineReport {
+    let result = simulate_dag(net, &dag.nodes);
 
     // Attribution walk over the stage-0 chain: the chain is serialized, so
     // each instant belongs to exactly one task (bucketed by phase) or to
@@ -403,6 +433,24 @@ mod tests {
         }
         // deterministic
         assert_eq!(deep, deep_candidates(&w, &c, 3));
+    }
+
+    #[test]
+    fn cached_simulation_is_bit_identical_to_fresh() {
+        let w = Workload::paper_gpt_4p7t(4);
+        let c = Cluster::passage_512(32_768);
+        let m = Mapping::new(Parallelism::paper(), MoeConfig::paper_config(4));
+        let knobs = PerfKnobs::default();
+        let fresh = simulate_step(&w, &c, &m, &knobs).unwrap();
+        let mut cache = SkeletonCache::new();
+        // first call lowers, second re-parameterizes the cached skeleton;
+        // both must be bit-identical to the uncached path
+        for _ in 0..2 {
+            let cached = simulate_step_cached(&w, &c, &m, &knobs, &mut cache).unwrap();
+            assert_eq!(cached.step_time.to_bits(), fresh.step_time.to_bits());
+            assert_eq!(cached.events, fresh.events);
+            assert_eq!(cached.phases.bubble.to_bits(), fresh.phases.bubble.to_bits());
+        }
     }
 
     #[test]

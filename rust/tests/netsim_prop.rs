@@ -8,14 +8,17 @@
 //! adds the incremental dependency engine's contract: on randomized DAGs
 //! (random topologies × dependency shapes) `simulate_dag` agrees with the
 //! full-recompute `simulate_dag_reference` oracle to ≤ 1e-9 relative, per
-//! node. Uses the in-tree `util::prop` framework (seeded, shrinking;
-//! override with `LUMOS_PROP_SEED`).
+//! node. ISSUE 7 swaps the heap engine in behind `simulate_dag` and adds
+//! the triangle contract — heap == scan == reference on random DAGs, plus
+//! a rate-churn stress aimed at the heap's lazy invalidation. Uses the
+//! in-tree `util::prop` framework (seeded, shrinking; override with
+//! `LUMOS_PROP_SEED`).
 
 use lumos::collectives as coll;
 use lumos::netsim::{
     fair_rates, replay_schedule, replay_schedule_dependent, schedule_chain_dag, simulate,
-    simulate_dag, simulate_dag_reference, simulate_reference, DagNode, DagSimulator, Flow,
-    Network,
+    simulate_dag, simulate_dag_reference, simulate_dag_scan, simulate_reference, DagNode,
+    DagSimulator, Flow, Network,
 };
 use lumos::prop_assert;
 use lumos::util::prop::{check, Gen};
@@ -290,6 +293,89 @@ fn prop_incremental_dag_matches_reference() {
             slow.finish.len()
         );
         for (i, (a, b)) in fast.finish.iter().zip(&slow.finish).enumerate() {
+            prop_assert!((a - b).abs() <= tol(*b), "node {i}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+/// Rate-churn DAG: long-lived flows out of one hot rank, admitted in
+/// waves behind a delay chain. Every admission and completion changes the
+/// rate of *every* active flow (they all share the hot rank's uplink), so
+/// the lazy heap's timed completion entries go stale constantly — the
+/// worst case for generation-based invalidation and the settlement hook.
+fn rate_churn_dag(g: &mut Gen, net: &Network) -> Vec<DagNode> {
+    let hot = g.usize(0, net.n_nodes - 1);
+    let n_waves = g.usize(3, 8);
+    let mut nodes: Vec<DagNode> = Vec::new();
+    let mut prev_delay: Option<usize> = None;
+    for _ in 0..n_waves {
+        let deps = prev_delay.map(|d| vec![d]).unwrap_or_default();
+        nodes.push(DagNode::delay(g.f64(1e-6, 1e-4), deps));
+        let delay_idx = nodes.len() - 1;
+        for _ in 0..g.usize(1, 6) {
+            let dst = g.usize(0, net.n_nodes - 1);
+            nodes.push(DagNode::flow(hot, dst, g.f64(1e5, 1e8), vec![delay_idx]));
+        }
+        prev_delay = Some(delay_idx);
+    }
+    nodes
+}
+
+#[test]
+fn prop_heap_dag_matches_scan_and_reference() {
+    // The ISSUE-7 acceptance contract for the lazy completion-time heap:
+    // on randomized DAGs it agrees with both the PR 5 incremental dt-scan
+    // engine and the full-recompute oracle to ≤ 1e-9 relative, node by
+    // node. (`simulate_dag` *is* the heap engine; the scan survives as
+    // `simulate_dag_scan` exactly so this triangle stays checkable.)
+    check("heap == scan == reference on random DAGs", 64, |g| {
+        let net = random_net(g);
+        let dag = random_dag(g, &net);
+        let heap = simulate_dag(&net, &dag);
+        let scan = simulate_dag_scan(&net, &dag);
+        let slow = simulate_dag_reference(&net, &dag);
+        let tol = |x: f64| 1e-9 * x.abs().max(1e-12);
+        prop_assert!(
+            (heap.makespan - slow.makespan).abs() <= tol(slow.makespan),
+            "heap vs ref makespan {} vs {}",
+            heap.makespan,
+            slow.makespan
+        );
+        prop_assert!(
+            (heap.makespan - scan.makespan).abs() <= tol(scan.makespan),
+            "heap vs scan makespan {} vs {}",
+            heap.makespan,
+            scan.makespan
+        );
+        for (i, (a, b)) in heap.finish.iter().zip(&slow.finish).enumerate() {
+            prop_assert!((a - b).abs() <= tol(*b), "heap vs ref node {i}: {a} vs {b}");
+        }
+        for (i, (a, b)) in heap.finish.iter().zip(&scan.finish).enumerate() {
+            prop_assert!((a - b).abs() <= tol(*b), "heap vs scan node {i}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_heap_dag_survives_rate_churn() {
+    // Stress the heap's lazy invalidation specifically: shared-bottleneck
+    // DAGs where every event re-rates every active flow, so almost every
+    // heap entry is stale by the time it surfaces.
+    check("heap == reference under rate churn", 48, |g| {
+        let net = random_net(g);
+        let dag = rate_churn_dag(g, &net);
+        let heap = simulate_dag(&net, &dag);
+        let slow = simulate_dag_reference(&net, &dag);
+        let tol = |x: f64| 1e-9 * x.abs().max(1e-12);
+        prop_assert!(
+            (heap.makespan - slow.makespan).abs() <= tol(slow.makespan),
+            "makespan {} vs {}",
+            heap.makespan,
+            slow.makespan
+        );
+        for (i, (a, b)) in heap.finish.iter().zip(&slow.finish).enumerate() {
             prop_assert!((a - b).abs() <= tol(*b), "node {i}: {a} vs {b}");
         }
         Ok(())

@@ -1,0 +1,108 @@
+//! Property tests for the timeline lowering path (ISSUE 7): the skeleton
+//! cache's in-place re-parameterization must be *bit-equal* to a fresh
+//! `lower_step` on every candidate — across (TP, PP)-sharing candidate
+//! pairs (cache hits), shape changes (misses) and evictions — and the
+//! simulated report of a cached lowering must match the uncached
+//! `simulate_step` path exactly. This is the invariant that makes
+//! per-worker caches safe in `lumos plan --objective sim`: results never
+//! depend on cache state, so they never depend on which worker simulated
+//! which candidate. Uses the in-tree `util::prop` framework (seeded;
+//! override with `LUMOS_PROP_SEED`).
+
+use lumos::model::{MoeConfig, Workload};
+use lumos::netsim::DagWork;
+use lumos::parallel::{Mapping, Parallelism};
+use lumos::perf::PerfKnobs;
+use lumos::prop_assert;
+use lumos::timeline::{lower_step, simulate_step, simulate_step_cached, SkeletonCache, StepDag};
+use lumos::topology::cluster::Cluster;
+use lumos::util::prop::{check, Gen};
+
+/// A random *valid* Passage-512 mapping: tp·pp·dp covers the 32 768 GPUs
+/// and the microbatch grain divides the per-rank batch. tp/pp stay in the
+/// planner's neighborhood of the paper mapping so DAGs stay mid-sized.
+fn random_mapping(g: &mut Gen) -> Mapping {
+    let tp = *g.choose(&[8usize, 16]);
+    let pp = *g.choose(&[8usize, 16]);
+    let dp = 32_768 / (tp * pp);
+    let mb = *g.choose(&[1usize, 2, 4, 8]);
+    Mapping::try_with_microbatch(Parallelism { tp, pp, dp }, MoeConfig::paper_config(4), mb)
+        .expect("grid mappings are valid on Passage-512")
+}
+
+fn random_knobs(g: &mut Gen) -> PerfKnobs {
+    PerfKnobs {
+        mfu: *g.choose(&[0.3, 0.4, 0.55]),
+        comm_dtype_bytes: *g.choose(&[2.0, 4.0]),
+        ..PerfKnobs::default()
+    }
+}
+
+fn dags_bit_equal(a: &StepDag, b: &StepDag) -> Result<(), String> {
+    prop_assert!(a.nodes.len() == b.nodes.len(), "{} vs {} nodes", a.nodes.len(), b.nodes.len());
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        prop_assert!(x.deps == y.deps, "node {i}: deps differ");
+        match (&x.work, &y.work) {
+            (DagWork::Delay(dx), DagWork::Delay(dy)) => {
+                prop_assert!(dx.to_bits() == dy.to_bits(), "node {i}: delay {dx} vs {dy}");
+            }
+            (
+                DagWork::Flow { src: sx, dst: dx, bytes: bx },
+                DagWork::Flow { src: sy, dst: dy, bytes: by },
+            ) => {
+                prop_assert!((sx, dx) == (sy, dy), "node {i}: endpoints differ");
+                prop_assert!(bx.to_bits() == by.to_bits(), "node {i}: bytes {bx} vs {by}");
+            }
+            _ => prop_assert!(false, "node {i}: kind mismatch"),
+        }
+    }
+    prop_assert!(a.net.n_nodes == b.net.n_nodes, "network size differs");
+    prop_assert!(a.chain.len() == b.chain.len(), "chain length differs");
+    Ok(())
+}
+
+#[test]
+fn prop_cached_lowering_is_bit_equal_to_fresh() {
+    // One shared cache fed a random candidate sequence (random shapes ×
+    // random knobs → a mix of hits, misses and evictions) must hand back
+    // exactly what a fresh lowering builds, candidate by candidate.
+    let w = Workload::paper_gpt_4p7t(4);
+    let cluster = Cluster::passage_512(32_768);
+    check("cache.lower == lower_step bit-for-bit", 16, |g| {
+        let mut cache = SkeletonCache::new();
+        for _ in 0..g.usize(2, 5) {
+            let m = random_mapping(g);
+            let knobs = random_knobs(g);
+            let fresh = lower_step(&w, &cluster, &m, &knobs).expect("grid mapping lowers");
+            let cached = cache.lower(&w, &cluster, &m, &knobs).expect("grid mapping lowers");
+            dags_bit_equal(cached, &fresh)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_simulation_matches_uncached_path() {
+    // End to end: simulate_step_cached (what the sim-objective planner
+    // workers run) reports the same step time as the uncached
+    // simulate_step, bit for bit, on (TP, PP)-sharing candidate pairs.
+    let w = Workload::paper_gpt_4p7t(4);
+    let cluster = Cluster::passage_512(32_768);
+    check("simulate_step_cached == simulate_step", 8, |g| {
+        let mut cache = SkeletonCache::new();
+        let shape = random_mapping(g);
+        for _ in 0..2 {
+            let knobs = random_knobs(g);
+            let cached =
+                simulate_step_cached(&w, &cluster, &shape, &knobs, &mut cache).expect("simulates");
+            let fresh = simulate_step(&w, &cluster, &shape, &knobs).expect("simulates");
+            prop_assert!(
+                cached.step_time.to_bits() == fresh.step_time.to_bits(),
+                "step time {} vs {}",
+                cached.step_time,
+                fresh.step_time
+            );
+        }
+        Ok(())
+    });
+}
