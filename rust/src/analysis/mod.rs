@@ -98,6 +98,55 @@ pub fn lint_paths(paths: &[PathBuf], only: &[String], jobs: usize) -> Result<Lin
     Ok(report)
 }
 
+/// Modules allowed to read the host clock at all (DESIGN.md
+/// §Observability): the quarantined [`crate::obs::profile`] timers plus
+/// the bench/runtime/trainer measurement harnesses. Matched as
+/// `/`-normalized path suffixes.
+pub const WALLCLOCK_ALLOWED: &[&str] = &[
+    "obs/profile.rs",
+    "runtime/engine.rs",
+    "trainer/mod.rs",
+    "util/bench.rs",
+];
+
+/// The `lumos lint --audit-wallclock` gate: every wall-clock read site
+/// under `paths` whose file is *not* in [`WALLCLOCK_ALLOWED`] — annotated
+/// or not. Inline `lumos: allow(wallclock)` directives justify a site to
+/// the regular lint; the audit additionally pins *where* such sites may
+/// exist, so a new clock consumer needs a deliberate allowlist change,
+/// not just an annotation.
+pub fn wallclock_audit(paths: &[PathBuf], jobs: usize) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for p in paths {
+        ensure!(p.exists(), "no such path: {}", p.display());
+        files.extend(collect_rs_files(p)?);
+    }
+    files.sort();
+    files.dedup();
+    ensure!(!files.is_empty(), "no .rs files under the given paths");
+    let allowed = |label: &str| {
+        let norm = label.replace('\\', "/");
+        WALLCLOCK_ALLOWED.iter().any(|a| norm.ends_with(a))
+    };
+    let mut sources = Vec::with_capacity(files.len());
+    for f in &files {
+        sources.push(
+            std::fs::read_to_string(f).with_context(|| format!("reading {}", f.display()))?,
+        );
+    }
+    let labels: Vec<String> = files.iter().map(|f| f.display().to_string()).collect();
+    let per_file = run_indexed(files.len(), jobs, |i| {
+        if allowed(&labels[i]) {
+            Vec::new()
+        } else {
+            rules::wallclock_sites(&labels[i], &lexer::lex(&sources[i]))
+        }
+    });
+    let mut out: Vec<Finding> = per_file.into_iter().flatten().collect();
+    out.sort();
+    Ok(out)
+}
+
 /// All `.rs` files under `path` (itself, if it is a file), sorted.
 pub fn collect_rs_files(path: &Path) -> Result<Vec<PathBuf>> {
     let mut out = Vec::new();
@@ -194,6 +243,30 @@ mod tests {
         let arr = j.get("findings").as_arr().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("rule").as_str(), Some("panic-path"));
+    }
+
+    #[test]
+    fn tree_passes_the_wallclock_audit() {
+        // the whole crate keeps host-clock reads inside WALLCLOCK_ALLOWED;
+        // jobs=2 also exercises the index-ordered fan-out
+        let root = default_root().unwrap();
+        let fs = wallclock_audit(&[root], 2).unwrap();
+        assert!(fs.is_empty(), "clock reads outside the allowlist: {fs:?}");
+    }
+
+    #[test]
+    fn audit_reports_non_allowlisted_sites() {
+        // this very file is not allowlisted: a clock read here would fail
+        // the audit even though it is in a test (the audit masks tests, so
+        // instead feed the scanner a synthetic non-test source)
+        let lexed = lexer::lex("fn f() { let t = Instant::now(); }\n");
+        let sites = rules::wallclock_sites("netsim/dep.rs", &lexed);
+        assert_eq!(sites.len(), 1);
+        let allowed = |label: &str| {
+            WALLCLOCK_ALLOWED.iter().any(|a| label.replace('\\', "/").ends_with(a))
+        };
+        assert!(!allowed("rust/src/netsim/dep.rs"));
+        assert!(allowed("rust/src/obs/profile.rs"));
     }
 
     #[test]

@@ -126,6 +126,23 @@ pub fn scan_lexed(file: &str, lexed: &Lexed, only: &[String]) -> (Vec<Finding>, 
     (kept, suppressed)
 }
 
+/// Every wall-clock read site in `lexed`, with suppression directives
+/// deliberately ignored (test-masked code stays excluded): the input of
+/// the `--audit-wallclock` gate ([`super::wallclock_audit`]), which then
+/// checks each site's file against the module allowlist. An *annotated*
+/// clock read in a non-allowlisted module passes the regular lint but
+/// fails the audit — the quarantine is a module boundary, not a per-site
+/// judgment call.
+pub fn wallclock_sites(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    let toks = &lexed.tokens;
+    let masked = test_mask(toks);
+    let mut out = Vec::new();
+    rule_wallclock(file, toks, &masked, &mut out);
+    out.sort();
+    out.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    out
+}
+
 // ---------------------------------------------------------------------
 // Token-tree helpers
 // ---------------------------------------------------------------------
@@ -629,6 +646,22 @@ mod tests {
         // run_indexed's own shape: receiver iterated, results stored by index
         let src = "fn f() { for (i, r) in res_rx { out[i] = Some(r); } }\n";
         assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn wallclock_sites_ignore_suppression_but_mask_tests() {
+        let src = "// lumos: allow(wallclock) -- annotated harness\n\
+                   fn f() { let t = Instant::now(); }\n\
+                   #[test]\n\
+                   fn t() { let s = Instant::now(); }\n";
+        // the regular lint accepts the annotated site...
+        let (fs, sup) = scan_lexed("t.rs", &lex(src), &["wallclock".to_string()]);
+        assert!(fs.is_empty());
+        assert_eq!(sup, 1);
+        // ...the audit still reports it; the test item stays masked
+        let sites = wallclock_sites("t.rs", &lex(src));
+        assert_eq!(sites.len(), 1);
+        assert_eq!((sites[0].line, sites[0].rule), (2, "wallclock"));
     }
 
     #[test]

@@ -35,10 +35,13 @@
 //!   [`runtime`] (PJRT).
 //! - **Substrate**: [`util`] (JSON, RNG, property testing, CLI, stats,
 //!   tables, bench harness — the vendored crate set is minimal: the only
-//!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API),
-//!   and [`analysis`], the determinism & concurrency lint (`lumos lint`)
+//!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API);
+//!   [`analysis`], the determinism & concurrency lint (`lumos lint`)
 //!   that makes the byte-identical `--jobs N` / seeded-reproducibility
-//!   contract structural instead of conventional.
+//!   contract structural instead of conventional; and [`obs`],
+//!   deterministic simulated-time tracing (Perfetto-loadable Chrome trace
+//!   JSON, `lumos trace`), the `"metrics"` counters of every `--json`
+//!   output, and the quarantined opt-in wall-clock profiler.
 
 pub mod analysis;
 pub mod collectives;
@@ -47,6 +50,7 @@ pub mod coordinator;
 pub mod hw;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod parallel;
 pub mod perf;
 pub mod planner;

@@ -21,8 +21,18 @@
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
 //! - `train`    run real MoE training from AOT artifacts (single or DP)
+//! - `trace`    deterministic Chrome/Perfetto trace of one simulated
+//!   training step (`--out step.json`, loadable at ui.perfetto.dev;
+//!   byte-identical for any `--jobs`; `--check <file>` runs the in-tree
+//!   schema checker over an existing trace instead)
 //! - `lint`     determinism & concurrency static analysis over the repo's
-//!   own sources (non-zero exit on findings; `--json` for the CI gate)
+//!   own sources (non-zero exit on findings; `--json` for the CI gate;
+//!   `--audit-wallclock` additionally fails on host-clock reads outside
+//!   the allowlisted modules, annotated or not)
+//!
+//! `plan`, `validate` and `resilience` also take `--trace <path>` to write
+//! the trace of the point they ran (the winning mapping's step, the first
+//! validated mapping's step, a seeded failure/repair/checkpoint timeline).
 
 use std::process::ExitCode;
 
@@ -108,6 +118,7 @@ fn cli() -> Command {
                      analytical TTT (default 1.25; inf disables the prefilter)",
                 )
                 .flag("availability", "rank on failure-adjusted effective TTT (resilience)")
+                .opt("trace", "write a Chrome/Perfetto trace of the winner's simulated step here")
                 .flag("json", "machine-readable output (util::json, deterministic)"),
         )
         .sub(
@@ -137,6 +148,10 @@ fn cli() -> Command {
                 "also validate the deep-PP x fine-microbatch grid the pre-incremental \
                  engine rejected (DAG estimate > 300k nodes)",
             )
+            .opt(
+                "trace",
+                "write a Chrome/Perfetto trace of the first validated mapping's step here",
+            )
             .flag("json", "machine-readable output (util::json, deterministic)"),
         )
         .sub(
@@ -164,7 +179,37 @@ fn cli() -> Command {
             .opt_default("jobs", "worker threads for the trial pool", "1")
             .opt("knobs", "JSON file with calibration knob overrides")
             .opt("csv", "also write the result table to this CSV file")
+            .opt(
+                "trace",
+                "write a Chrome/Perfetto failure/repair/checkpoint trace (seeded, 48h \
+                 horizon) here",
+            )
             .flag("json", "machine-readable output (util::json, deterministic)"),
+        )
+        .sub(
+            Command::new(
+                "trace",
+                "deterministic Chrome/Perfetto trace of one simulated training step",
+            )
+            .opt(
+                "cluster",
+                "passage-512 | electrical-512 | electrical-144 (default passage-512)",
+            )
+            .opt("gpus", "custom cluster: total GPUs (with --pod-size and --gbps)")
+            .opt("pod-size", "custom cluster: GPUs per scale-up pod")
+            .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
+            .opt_default("config", "MoE config index 1..4", "4")
+            .opt_default(
+                "jobs",
+                "accepted for interface uniformity (the trace build is serial; output is \
+                 byte-identical for any value)",
+                "1",
+            )
+            .opt("knobs", "JSON file with calibration knob overrides")
+            .opt("out", "write the Chrome trace-event JSON here (omit for the summary only)")
+            .opt("profile", "also write wall-clock stage timings (BENCH-style side file) here")
+            .opt("check", "schema-check an existing trace file and exit (CI smoke path)")
+            .flag("events", "include per-flow admit/settle/finish instants (large traces)"),
         )
         .sub(
             Command::new("netsim", "discrete-event fabric validation")
@@ -183,6 +228,11 @@ fn cli() -> Command {
             Command::new("lint", "determinism & concurrency static analysis")
                 .opt("rule", "run only this rule id (repeatable; see --list)")
                 .opt_default("jobs", "worker threads for the file scan", "1")
+                .flag(
+                    "audit-wallclock",
+                    "also fail on host-clock reads outside the allowlisted modules, \
+                     even when annotated",
+                )
                 .flag("json", "machine-readable report (util::json, deterministic)")
                 .flag("list", "list the rule registry and exit"),
         )
@@ -214,6 +264,7 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
         Some("plan") => plan_cmd(args),
         Some("validate") => validate_cmd(args),
         Some("resilience") => resilience_cmd(args),
+        Some("trace") => trace_cmd(args),
         Some("netsim") => netsim_cmd(),
         Some("hw") => {
             let (t7, _) = sweep::fig7();
@@ -373,6 +424,111 @@ fn write_csv(args: &Args, table: &Table) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Write `trace` as Chrome trace-event JSON to `path`. The confirmation
+/// goes to stderr so stdout stays byte-identical across invocations.
+fn write_trace(path: &str, trace: &lumos::obs::Trace) -> anyhow::Result<()> {
+    trace.write(path).with_context(|| format!("writing {path}"))?;
+    eprintln!("trace written to {path} ({} events)", trace.len());
+    Ok(())
+}
+
+/// `--trace <path>` for `plan` and `validate`: build the step trace of
+/// `map` and write it. No-op when the flag is absent.
+fn emit_step_trace(
+    args: &Args,
+    w: &lumos::model::Workload,
+    cluster: &lumos::topology::cluster::Cluster,
+    map: &lumos::parallel::Mapping,
+    knobs: &PerfKnobs,
+) -> anyhow::Result<()> {
+    if let Some(path) = args.get("trace") {
+        let st = lumos::obs::step_trace(w, cluster, map, knobs, false).map_err(|e| {
+            anyhow::anyhow!(
+                "--trace: cannot trace TP{}xPP{}xDP{}: {e}",
+                map.par.tp,
+                map.par.pp,
+                map.par.dp
+            )
+        })?;
+        write_trace(path, &st.trace)?;
+    }
+    Ok(())
+}
+
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    use lumos::obs;
+
+    // --check: schema-check an existing trace file and exit (the CI smoke
+    // path; pure Rust, no external tooling).
+    if let Some(path) = args.get("check") {
+        let doc = Json::parse(&std::fs::read_to_string(path)?).map_err(anyhow::Error::msg)?;
+        let c = obs::check_chrome_trace(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "{path}: ok — {} event(s): {} span(s) on {} track(s), {} counter sample(s), \
+             {} instant(s)",
+            c.events, c.spans, c.tracks, c.counters, c.instants
+        );
+        return Ok(());
+    }
+
+    let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
+    // --jobs is accepted (and validated) for interface uniformity only:
+    // the trace build is serial and byte-identical for any value.
+    let _jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let knobs = knobs_from_args(args)?;
+    let key = cluster_key_from_args(args)?;
+    let cache = ClusterCache::new();
+    let cluster = cache.get(&key);
+    // Opt-in wall-clock self-profiling: the only host-clock consumer on
+    // this path, quarantined to the --profile side file.
+    let mut prof = args.get("profile").map(|_| obs::StageProfiler::start());
+    let workload = lumos::model::Workload::paper_gpt_4p7t(cfg);
+    let map =
+        lumos::resilience::default_mapping(&workload, &cluster).map_err(anyhow::Error::msg)?;
+    let st = obs::step_trace(&workload, &cluster, &map, &knobs, args.flag("events")).map_err(
+        |e| {
+            anyhow::anyhow!(
+                "cannot trace TP{}xPP{}xDP{}: {e}",
+                map.par.tp,
+                map.par.pp,
+                map.par.dp
+            )
+        },
+    )?;
+    if let Some(p) = prof.as_mut() {
+        p.stage("lower+simulate+build");
+    }
+    let p = &st.report.phases;
+    println!("step trace: Config {cfg} on {}", cluster.spec.name);
+    println!(
+        "  mapping        : TP{}xPP{}xDP{}",
+        map.par.tp, map.par.pp, map.par.dp
+    );
+    println!("  simulated step : {}", fmt_time(st.report.step_time));
+    println!("  stage tracks   : {}", st.stages.len());
+    println!("  dag nodes      : {}", st.report.nodes);
+    println!("  trace events   : {}", st.trace.len());
+    println!(
+        "  stage-0 spans  : compute {} | tp {} | ep {} | pp {} | dp {} | bubble {}",
+        fmt_time(p.compute),
+        fmt_time(p.tp_comm),
+        fmt_time(p.ep_comm),
+        fmt_time(p.pp_comm),
+        fmt_time(p.dp_comm),
+        fmt_time(p.bubble),
+    );
+    if let Some(path) = args.get("out") {
+        write_trace(path, &st.trace)?;
+    }
+    if let (Some(p), Some(path)) = (prof.as_mut(), args.get("profile")) {
+        p.stage("emit");
+        p.write(path).with_context(|| format!("writing {path}"))?;
+        eprintln!("wall-clock profile written to {path}");
+    }
+    Ok(())
+}
+
 fn sweep_cmd(args: &Args) -> anyhow::Result<()> {
     let knobs = PerfKnobs::default();
     let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
@@ -518,6 +674,13 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         }
         let sim = planner::plan_simulated(&outcome, &req.workload, &cluster, &knobs, margin, jobs);
         let table = planner::sim_table(&sim, top);
+        match sim.scored.first() {
+            Some(s) => emit_step_trace(args, &req.workload, &cluster, &s.plan.mapping, &knobs)?,
+            None => anyhow::ensure!(
+                args.get("trace").is_none(),
+                "--trace: no simulated plan to trace (every admitted candidate was skipped)"
+            ),
+        }
         if args.flag("json") {
             if top > 0 {
                 outcome.ranked.truncate(top);
@@ -540,6 +703,7 @@ fn plan_cmd(args: &Args) -> anyhow::Result<()> {
         println!("{}", table.render());
         return write_csv(args, &table);
     }
+    emit_step_trace(args, &req.workload, &cluster, &outcome.ranked[0].mapping, &knobs)?;
     if args.flag("json") {
         let rerank_results = (rerank > 0).then(|| {
             planner::rerank_simulated(&outcome, rerank, &req.workload, &cluster, &knobs)
@@ -661,6 +825,7 @@ fn validate_cmd(args: &Args) -> anyhow::Result<()> {
         "nothing to validate: the paper mapping does not fit this cluster; \
          use --plan-top K to validate planner-found mappings"
     );
+    emit_step_trace(args, &workload, &cluster, &rows[0].mapping, &knobs)?;
     let config_name = rows[0].analytical.config_name.clone();
     let table = timeline::validation_table(&cluster.spec.name, &config_name, &rows);
     if args.flag("json") {
@@ -711,6 +876,28 @@ fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
         }
     };
 
+    // --trace: one seeded failure/repair/checkpoint timeline over a fixed
+    // 48-hour horizon, written as Chrome trace-event JSON. Deterministic:
+    // the fault trace is a pure function of (fabric, repair, seed).
+    const TRACE_HORIZON_H: f64 = 48.0;
+    let emit_fault_trace = |fabric: &FabricReliability,
+                            n_gpus: usize,
+                            ckpt_s: f64|
+     -> anyhow::Result<()> {
+        if let Some(path) = args.get("trace") {
+            let events = resilience::sample_trace(
+                fabric,
+                &spec.repair,
+                n_gpus,
+                TRACE_HORIZON_H,
+                lumos::util::rng::Rng::new(seed),
+            );
+            let tr = lumos::obs::resilience_trace(&events, ckpt_s, TRACE_HORIZON_H);
+            write_trace(path, &tr)?;
+        }
+        Ok(())
+    };
+
     let custom = [args.get("gpus"), args.get("pod-size"), args.get("gbps")];
     if args.get("cluster").is_none() && custom.iter().all(Option::is_none) {
         // The headline comparison: Passage (external-laser optics) vs the
@@ -724,6 +911,11 @@ fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
             warn_fallback(&r.passage);
             warn_fallback(&r.electrical);
         }
+        emit_fault_trace(
+            &FabricReliability::passage(),
+            cache.get(&ClusterKey::Passage512).spec.n_gpus,
+            rows[0].passage.expected.checkpoint_interval_s,
+        )?;
         let table = resilience::speedup_table(&rows);
         if args.flag("json") {
             println!("{}", resilience::paired_json(&rows, seed, trials).to_string_pretty());
@@ -754,14 +946,13 @@ fn resilience_cmd(args: &Args) -> anyhow::Result<()> {
         warn_fallback(&a);
         rows.push(a);
     }
+    emit_fault_trace(&fabric, cluster.spec.n_gpus, rows[0].expected.checkpoint_interval_s)?;
     let table = resilience::assessment_table(&rows);
     if args.flag("json") {
-        let json = Json::obj(vec![
-            ("seed", Json::num(seed as f64)),
-            ("trials", Json::num(trials as f64)),
-            ("rows", Json::Arr(rows.iter().map(resilience::assessment_json).collect())),
-        ]);
-        println!("{}", json.to_string_pretty());
+        println!(
+            "{}",
+            resilience::assessments_json(&rows, seed, trials).to_string_pretty()
+        );
         return write_csv(args, &table);
     }
     println!("{}", table.render());
@@ -875,10 +1066,24 @@ fn lint_cmd(args: &Args) -> anyhow::Result<()> {
             report.suppressed
         );
     }
+    let audit = if args.flag("audit-wallclock") {
+        analysis::wallclock_audit(&paths, jobs)?
+    } else {
+        Vec::new()
+    };
+    for f in &audit {
+        println!("{f} [outside the wallclock allowlist]");
+    }
     anyhow::ensure!(
         report.findings.is_empty(),
         "{} lint finding(s) — fix, or justify with `// lumos: allow(<rule>) -- <reason>`",
         report.findings.len()
+    );
+    anyhow::ensure!(
+        audit.is_empty(),
+        "{} wall-clock site(s) outside the allowlisted modules \
+         (analysis::WALLCLOCK_ALLOWED) — annotations do not satisfy the audit",
+        audit.len()
     );
     Ok(())
 }

@@ -103,6 +103,68 @@ pub struct DagResult {
     pub events: usize,
 }
 
+/// Deterministic work counters for one engine run — how much admission,
+/// component re-fill, and lazy-heap maintenance a simulation actually did.
+///
+/// Every field is an order-independent `u64` tally of the *serial* event
+/// loop, so sums over simulations merged in a fixed (index) order are
+/// byte-stable across `--jobs N`; this is what the `"metrics"` key of the
+/// JSON outputs aggregates. Reset at the start of every run; read back via
+/// [`DagSimulator::stats`] or the [`simulate_dag_stats`] /
+/// [`simulate_dag_observed`] wrappers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DepStats {
+    /// Flows admitted into the fluid network (zero-byte/self flows that
+    /// degenerate to latency pseudo-delays are not counted).
+    pub admitted_flows: u64,
+    /// Positive-duration delays admitted (compute, software latency).
+    pub admitted_delays: u64,
+    /// Component re-fills (one per event instant with dirty links).
+    pub refills: u64,
+    /// Total flows touched across all re-fills (component sizes summed).
+    pub refill_flows: u64,
+    /// Largest single re-fill component, in flows.
+    pub refill_flows_max: u64,
+    /// Lazy-heap settlements: flows whose rate changed in a re-fill and
+    /// had their completion prediction re-aimed.
+    pub settlements: u64,
+    /// Superseded heap entries discarded on pop (generation mismatch).
+    pub stale_pops: u64,
+}
+
+/// Hooks into the dependency engine's event loop, for tracing.
+///
+/// Every method defaults to a no-op, so [`NoObserver`] monomorphizes the
+/// production loop to exactly the un-instrumented code. Times are
+/// *simulated* seconds and node ids are DAG indices — everything an
+/// observer sees is deterministic and independent of `--jobs`.
+pub trait DepObserver {
+    /// When true, the engine computes the mean utilization of the links it
+    /// just re-filled (one extra pass over the component's links) before
+    /// each [`DepObserver::refill`] call. Off by default so observers that
+    /// ignore utilization keep the hot path free of the cost.
+    const UTILIZATION: bool = false;
+
+    /// A flow joined the max-min allocation at `now`.
+    fn flow_admitted(&mut self, _node: usize, _now: f64) {}
+    /// A re-fill changed the flow's rate at `now`; `rate` is the new one.
+    fn flow_settled(&mut self, _node: usize, _now: f64, _rate: f64) {}
+    /// The flow's last byte completed at `now` (latency tail may follow).
+    fn flow_finished(&mut self, _node: usize, _now: f64) {}
+    /// A component re-fill finished at `now`. `active_flows` counts all
+    /// in-flight flows, `touched_links` the re-filled component's links,
+    /// and `mean_util` their mean utilization (0.0 unless
+    /// [`DepObserver::UTILIZATION`]).
+    fn refill(&mut self, _now: f64, _active_flows: usize, _touched_links: usize, _mean_util: f64) {}
+}
+
+/// The default do-nothing observer: [`DagSimulator::simulate`] with
+/// `NoObserver` compiles to the un-instrumented production loop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoObserver;
+
+impl DepObserver for NoObserver {}
+
 // ---------------------------------------------------------------------------
 // Incremental engine (the production fast path)
 // ---------------------------------------------------------------------------
@@ -199,6 +261,8 @@ pub struct DagSimulator {
     upd: Vec<f64>,
     gen: Vec<u32>,
     heap: BinaryHeap<Reverse<HeapEntry>>,
+    // deterministic work counters for the current run (see [`DepStats`])
+    stats: DepStats,
 }
 
 impl DagSimulator {
@@ -277,6 +341,7 @@ impl DagSimulator {
         self.gen.clear();
         self.gen.resize(n, 0);
         self.heap.clear();
+        self.stats = DepStats::default();
         for (i, node) in nodes.iter().enumerate() {
             self.indeg[i] = node.deps.len();
             for &d in &node.deps {
@@ -349,7 +414,13 @@ impl DagSimulator {
     /// bit-identical keep their old entry — linear extrapolation from
     /// `upd[i]` stays exact under an unchanged rate, so the entry is still
     /// the true completion time and the heap is untouched.
-    fn fill(&mut self, net: &Network, now: f64, lazy: bool) {
+    fn fill<O: DepObserver>(&mut self, net: &Network, now: f64, lazy: bool, obs: &mut O) {
+        self.stats.refills += 1;
+        let component = self.set_flows.len() as u64;
+        self.stats.refill_flows += component;
+        if component > self.stats.refill_flows_max {
+            self.stats.refill_flows_max = component;
+        }
         self.set_links.sort_unstable();
         for &l in &self.set_links {
             self.link_cap[l] = net.links[l].capacity;
@@ -405,6 +476,8 @@ impl DagSimulator {
                         self.remaining[fi] -= old * (now - self.upd[fi]);
                         self.upd[fi] = now;
                         self.gen[fi] = self.gen[fi].wrapping_add(1);
+                        self.stats.settlements += 1;
+                        obs.flow_settled(fi, now, share);
                         if share > 0.0 {
                             self.heap.push(Reverse(HeapEntry {
                                 time: now + self.remaining[fi] / share,
@@ -435,6 +508,19 @@ impl DagSimulator {
     /// heap; everything else keeps its prediction. Agreement with the
     /// oracle ≤ 1e-9 relative is pinned in `tests/netsim_prop.rs`.
     pub fn simulate(&mut self, net: &Network, nodes: &[DagNode]) -> DagResult {
+        self.simulate_with(net, nodes, &mut NoObserver)
+    }
+
+    /// [`DagSimulator::simulate`] with tracing hooks: `obs` sees every
+    /// flow admission, settlement, and completion plus every component
+    /// re-fill, all keyed on simulated time. With [`NoObserver`] the hooks
+    /// monomorphize away and this *is* the production loop.
+    pub fn simulate_with<O: DepObserver>(
+        &mut self,
+        net: &Network,
+        nodes: &[DagNode],
+        obs: &mut O,
+    ) -> DagResult {
         self.reset(net, nodes);
         let n = nodes.len();
         let mut now = 0.0f64;
@@ -473,6 +559,7 @@ impl DagSimulator {
                         } else {
                             self.upd[i] = now;
                             live_delays += 1;
+                            self.stats.admitted_delays += 1;
                             self.heap.push(Reverse(HeapEntry {
                                 time: now + d,
                                 node: i,
@@ -511,6 +598,8 @@ impl DagSimulator {
                             self.paths[i] = path;
                             self.upd[i] = now;
                             live_flows += 1;
+                            self.stats.admitted_flows += 1;
+                            obs.flow_admitted(i, now);
                         }
                     }
                 }
@@ -528,7 +617,19 @@ impl DagSimulator {
             // --- re-fill only the component(s) the admits/finishes touched
             if !self.dirty_links.is_empty() {
                 self.seed_dirty_component();
-                self.fill(net, now, true);
+                self.fill(net, now, true, obs);
+                // after `fill`, `link_cap` holds each set link's residual
+                // capacity, so utilization is 1 - residual/capacity
+                let mean_util = if O::UTILIZATION && !self.set_links.is_empty() {
+                    let mut acc = 0.0;
+                    for &l in &self.set_links {
+                        acc += 1.0 - self.link_cap[l] / net.links[l].capacity;
+                    }
+                    acc / self.set_links.len() as f64
+                } else {
+                    0.0
+                };
+                obs.refill(now, live_flows, self.set_links.len(), mean_util);
             }
 
             // --- advance to the next predicted completion ----------------
@@ -537,6 +638,7 @@ impl DagSimulator {
                     Some(&Reverse(e)) if e.gen == self.gen[e.node] => break e.time,
                     Some(_) => {
                         self.heap.pop();
+                        self.stats.stale_pops += 1;
                     }
                     // lumos: allow(panic-path) -- zero-rate deadlock, the same contract violation the scan loop's dt assert catches
                     None => panic!("deadlocked flows (zero rate)"),
@@ -555,6 +657,7 @@ impl DagSimulator {
             while let Some(&Reverse(e)) = self.heap.peek() {
                 if e.gen != self.gen[e.node] {
                     self.heap.pop();
+                    self.stats.stale_pops += 1;
                     continue;
                 }
                 let i = e.node;
@@ -584,6 +687,7 @@ impl DagSimulator {
                     complete!(i);
                 } else {
                     live_flows -= 1;
+                    obs.flow_finished(i, now);
                     self.rate[i] = 0.0;
                     for &l in &self.paths[i] {
                         if let Some(pos) = self.link_flows[l].iter().position(|&x| x == i) {
@@ -654,6 +758,7 @@ impl DagSimulator {
                             complete!(i);
                         } else {
                             self.active_delays.push(i);
+                            self.stats.admitted_delays += 1;
                         }
                     }
                     DagWork::Flow { src, dst, bytes } => {
@@ -678,6 +783,7 @@ impl DagSimulator {
                             }
                             self.paths[i] = path;
                             self.active_flows.push(i);
+                            self.stats.admitted_flows += 1;
                         }
                     }
                 }
@@ -695,7 +801,7 @@ impl DagSimulator {
             // --- re-fill only the component(s) the admits/finishes touched
             if !self.dirty_links.is_empty() {
                 self.seed_dirty_component();
-                self.fill(net, now, false);
+                self.fill(net, now, false, &mut NoObserver);
             }
 
             // --- advance to the next completion ---------------------------
@@ -769,6 +875,11 @@ impl DagSimulator {
         let makespan = self.finish.iter().cloned().fold(0.0f64, f64::max);
         DagResult { makespan, finish: self.finish.clone(), events }
     }
+
+    /// Work counters of the most recent run (reset at the start of each).
+    pub fn stats(&self) -> DepStats {
+        self.stats
+    }
 }
 
 /// Execute `nodes` on `net` with the incremental engine (see
@@ -780,11 +891,42 @@ impl DagSimulator {
 /// every per-run field, pinned by the reuse property test in
 /// `tests/netsim_prop.rs`.
 pub fn simulate_dag(net: &Network, nodes: &[DagNode]) -> DagResult {
-    thread_local! {
-        static SIM: std::cell::RefCell<DagSimulator> =
-            std::cell::RefCell::new(DagSimulator::new());
-    }
     SIM.with(|sim| sim.borrow_mut().simulate(net, nodes))
+}
+
+thread_local! {
+    /// Shared reusable simulator for [`simulate_dag`] and its stats/
+    /// observer variants, so mixed callers on one thread still reuse the
+    /// same grown buffers.
+    static SIM: std::cell::RefCell<DagSimulator> =
+        std::cell::RefCell::new(DagSimulator::new());
+}
+
+/// [`simulate_dag`] plus the run's deterministic work counters
+/// ([`DepStats`]) — the pair every `"metrics"`-emitting caller wants.
+pub fn simulate_dag_stats(net: &Network, nodes: &[DagNode]) -> (DagResult, DepStats) {
+    SIM.with(|sim| {
+        let mut sim = sim.borrow_mut();
+        let result = sim.simulate(net, nodes);
+        let stats = sim.stats();
+        (result, stats)
+    })
+}
+
+/// [`simulate_dag`] with tracing hooks: `obs` sees every admission,
+/// settlement, completion, and component re-fill on simulated time (see
+/// [`DepObserver`]). Returns the run's [`DepStats`] alongside the result.
+pub fn simulate_dag_observed<O: DepObserver>(
+    net: &Network,
+    nodes: &[DagNode],
+    obs: &mut O,
+) -> (DagResult, DepStats) {
+    SIM.with(|sim| {
+        let mut sim = sim.borrow_mut();
+        let result = sim.simulate_with(net, nodes, obs);
+        let stats = sim.stats();
+        (result, stats)
+    })
 }
 
 /// [`simulate_dag`] on the eager dt-scan loop
@@ -1220,6 +1362,74 @@ mod tests {
         let second = sim.simulate(&net, &dag);
         assert_eq!(first.makespan, second.makespan);
         assert_eq!(first.finish, second.finish);
+    }
+
+    #[test]
+    fn stats_count_engine_work_deterministically() {
+        let net = Network::cluster(16, 4, 800.0, 100.0, 2.0, 5e-6);
+        let mut ops = Vec::new();
+        for step in 0..6usize {
+            for s in 0..16usize {
+                let d = (s * 5 + step * 3 + 1) % 16;
+                ops.push(coll::CommOp {
+                    step,
+                    src: s,
+                    dst: d,
+                    bytes: 1e6 * (1 + (s * 7 + d * 3 + step) % 11) as f64,
+                });
+            }
+        }
+        let sched = coll::CommSchedule::new("staggered", 16, ops);
+        let dag = schedule_rank_dag(&sched);
+        let (r1, s1) = simulate_dag_stats(&net, &dag);
+        let (r2, s2) = simulate_dag_stats(&net, &dag);
+        assert_eq!(r1.makespan, r2.makespan, "reused simulator must be pure");
+        assert_eq!(s1, s2, "work counters must be run-deterministic");
+        // every op is a real flow here, and each gets at least one
+        // settlement (its first rate assignment)
+        assert_eq!(s1.admitted_flows as usize, dag.len());
+        assert_eq!(s1.admitted_delays, 0);
+        assert!(s1.refills > 0);
+        assert!(s1.settlements >= s1.admitted_flows);
+        assert!(s1.refill_flows >= s1.refill_flows_max);
+        assert!(s1.refill_flows_max >= 1);
+    }
+
+    #[test]
+    fn observer_hooks_fire_in_simulated_time_order() {
+        #[derive(Default)]
+        struct Rec {
+            admits: Vec<(usize, f64)>,
+            finishes: Vec<(usize, f64)>,
+            refill_utils: Vec<f64>,
+        }
+        impl DepObserver for Rec {
+            const UTILIZATION: bool = true;
+            fn flow_admitted(&mut self, node: usize, now: f64) {
+                self.admits.push((node, now));
+            }
+            fn flow_finished(&mut self, node: usize, now: f64) {
+                self.finishes.push((node, now));
+            }
+            fn refill(&mut self, _now: f64, _active: usize, links: usize, mean_util: f64) {
+                assert!(links > 0, "refill observed with no touched links");
+                self.refill_utils.push(mean_util);
+            }
+        }
+        let net = Network::cluster(12, 4, 800.0, 100.0, 2.0, 5e-6);
+        let sched = coll::pairwise_a2a_schedule(12, 8e6);
+        let dag = schedule_rank_dag(&sched);
+        let mut rec = Rec::default();
+        let (result, stats) = simulate_dag_observed(&net, &dag, &mut rec);
+        let plain = simulate_dag(&net, &dag);
+        assert_eq!(result.makespan, plain.makespan, "observer must not perturb the run");
+        assert_eq!(rec.admits.len() as u64, stats.admitted_flows);
+        assert_eq!(rec.finishes.len() as u64, stats.admitted_flows);
+        assert_eq!(rec.refill_utils.len() as u64, stats.refills);
+        for w in [&rec.admits, &rec.finishes] {
+            assert!(w.windows(2).all(|p| p[0].1 <= p[1].1), "hook times must be non-decreasing");
+        }
+        assert!(rec.refill_utils.iter().all(|&u| (0.0..=1.0).contains(&u)));
     }
 
     #[test]

@@ -40,7 +40,8 @@ use crate::collectives::CommSchedule;
 
 pub use dep::{
     replay_schedule_dependent, schedule_chain_dag, schedule_rank_dag, simulate_dag,
-    simulate_dag_reference, simulate_dag_scan, DagNode, DagResult, DagSimulator, DagWork,
+    simulate_dag_observed, simulate_dag_reference, simulate_dag_scan, simulate_dag_stats, DagNode,
+    DagResult, DagSimulator, DagWork, DepObserver, DepStats, NoObserver,
 };
 
 /// Directed link with finite capacity.

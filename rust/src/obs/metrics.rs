@@ -1,0 +1,197 @@
+//! Deterministic monotonic counters and histograms.
+//!
+//! A [`Metrics`] set is a sorted map of named counters (`u64`, monotonic
+//! by construction: [`Metrics::inc`] only adds) and histograms
+//! (count/sum/min/max summaries fed by [`Metrics::observe`]). Everything
+//! about it is deterministic:
+//!
+//! - storage is `BTreeMap`, so serialization order is key-sorted, never
+//!   insertion- or hash-ordered;
+//! - merging ([`Metrics::merge`]) is performed by the *caller* in item
+//!   index order — the same contract `sweep::engine::run_indexed` gives
+//!   its results — so `--jobs N` cannot reorder float accumulation;
+//! - values are derived from simulated quantities or item counts, never
+//!   from wall-clock time (that lives in [`crate::obs::profile`]).
+//!
+//! Surfaced under the stable `"metrics"` key of every `--json` artifact
+//! (`lumos plan|validate|resilience --json`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Count/sum/min/max summary of a series of observations.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Hist {
+    fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    fn merge(&mut self, other: &Hist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// A named set of monotonic counters and histograms (see module docs for
+/// the determinism contract).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `by` to counter `name` (creating it at zero). Counters only
+    /// ever increase — monotonicity is structural.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record one observation into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Current value of counter `name` (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram summary for `name`, if any observation was recorded.
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Fold `other` into `self`. Callers aggregating per-item metric
+    /// deltas must call this in item index order (the `run_indexed`
+    /// result order) so float sums are order-stable across `--jobs N`.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// True when no counter or histogram was ever touched.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.hists.is_empty()
+    }
+
+    /// The `"metrics"` JSON object: counters as numbers, histograms as
+    /// `{count, sum, min, max}` objects; keys sorted.
+    pub fn to_json(&self) -> Json {
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        for (k, v) in &self.counters {
+            obj.insert(k.clone(), Json::num(*v as f64));
+        }
+        for (k, h) in &self.hists {
+            obj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count as f64)),
+                    ("sum", Json::num(h.sum)),
+                    ("min", Json::num(h.min)),
+                    ("max", Json::num(h.max)),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotonic_and_merge_adds() {
+        let mut a = Metrics::new();
+        a.inc("x", 2);
+        a.inc("x", 3);
+        assert_eq!(a.counter("x"), 5);
+        let mut b = Metrics::new();
+        b.inc("x", 1);
+        b.inc("y", 7);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 6);
+        assert_eq!(a.counter("y"), 7);
+        assert_eq!(a.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histograms_summarize_and_merge() {
+        let mut m = Metrics::new();
+        for v in [3.0, 1.0, 2.0] {
+            m.observe("sz", v);
+        }
+        let h = m.hist("sz").unwrap();
+        assert_eq!((h.count, h.sum, h.min, h.max), (3, 6.0, 1.0, 3.0));
+        assert_eq!(h.mean(), 2.0);
+        let mut n = Metrics::new();
+        n.observe("sz", 10.0);
+        m.merge(&n);
+        let h = m.hist("sz").unwrap();
+        assert_eq!((h.count, h.max), (4, 10.0));
+    }
+
+    #[test]
+    fn json_is_key_sorted_and_stable() {
+        let mut m = Metrics::new();
+        m.inc("zeta", 1);
+        m.inc("alpha", 2);
+        m.observe("mid", 4.5);
+        let s = m.to_json().to_string_compact();
+        let a = s.find("\"alpha\"").unwrap();
+        let mid = s.find("\"mid\"").unwrap();
+        let z = s.find("\"zeta\"").unwrap();
+        assert!(a < mid && mid < z, "{s}");
+        assert_eq!(s, m.clone().to_json().to_string_compact());
+    }
+}

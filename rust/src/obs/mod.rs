@@ -1,0 +1,34 @@
+//! Observability: deterministic tracing, counters, and opt-in wall-clock
+//! profiling for the planner/simulator stack.
+//!
+//! Three layers with sharply different determinism contracts:
+//!
+//! - [`trace`] — spans/instants/counters keyed on **simulated** time and
+//!   logical ids (rank, pipeline stage, link, fault lane), sunk to Chrome
+//!   trace-event JSON that Perfetto and `chrome://tracing` load directly.
+//!   Byte-identical for any `--jobs N`: nothing in a trace depends on the
+//!   host, the clock, or scheduling.
+//! - [`metrics`] — monotonic counters and min/max/sum histograms of work
+//!   the tools actually did (DAG nodes lowered, simulator events, cache
+//!   reuse). Aggregated in deterministic (worker-index) order and surfaced
+//!   under the stable `"metrics"` key of every `--json` output.
+//! - [`profile`] — the one place allowed to read the host clock: opt-in
+//!   wall-clock stage timers feeding `BENCH_*.json`-style side files,
+//!   never the deterministic artifacts. The `lumos lint` wallclock audit
+//!   keeps every other module clock-free.
+//!
+//! The trace event schema and the determinism argument are documented in
+//! `rust/DESIGN.md` §Observability; `tests/obs_prop.rs` pins byte-identity
+//! across job counts, span-nesting well-formedness, and the agreement of
+//! per-stage span sums with `lumos validate`'s phase breakdown.
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{Hist, Metrics};
+pub use profile::StageProfiler;
+pub use trace::{
+    check_chrome_trace, resilience_trace, step_trace, StepTrace, Trace, TraceCheck, TraceEvent,
+    PID_FABRIC, PID_RESILIENCE, PID_STEP,
+};

@@ -1,0 +1,87 @@
+//! Opt-in wall-clock stage timers — the *only* place outside the bench
+//! and runtime harnesses allowed to read the host clock.
+//!
+//! Everything else in `obs` is keyed on simulated time so traces and
+//! metrics stay byte-identical across `--jobs N` and across machines.
+//! Self-profiling (how long did lowering vs. simulation vs. emission
+//! take *on this host*) is inherently wall-clock, so it is quarantined
+//! here behind explicit opt-in flags (`lumos trace --profile <path>`),
+//! written to `BENCH_*.json`-style side files, and never mixed into
+//! deterministic stdout/trace artifacts. The `lumos lint` wallclock
+//! audit (`--audit-wallclock`) enforces the quarantine: clock reads
+//! outside the allowlisted modules fail CI even when annotated.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Wall-clock stage timer: mark the end of each pipeline stage and get a
+/// named duration series, in stage order.
+#[derive(Debug)]
+pub struct StageProfiler {
+    last: Instant,
+    stages: Vec<(String, f64)>,
+}
+
+impl StageProfiler {
+    /// Start the clock.
+    pub fn start() -> StageProfiler {
+        // lumos: allow(wallclock) -- opt-in self-profiling harness; output is quarantined to BENCH side files
+        let now = Instant::now();
+        StageProfiler { last: now, stages: Vec::new() }
+    }
+
+    /// End the current stage, recording the wall time since the previous
+    /// mark (or since [`StageProfiler::start`]) under `name`.
+    pub fn stage(&mut self, name: &str) {
+        // lumos: allow(wallclock) -- opt-in self-profiling harness; output is quarantined to BENCH side files
+        let now = Instant::now();
+        let secs = now.duration_since(self.last).as_secs_f64();
+        self.stages.push((name.to_string(), secs));
+        self.last = now;
+    }
+
+    /// Stage names and durations, in stage order.
+    pub fn stages(&self) -> &[(String, f64)] {
+        &self.stages
+    }
+
+    /// `BENCH_*.json`-style artifact: `{"series": [{"name", "secs"}],
+    /// "total_s": ...}` where `total_s` sums the recorded stages.
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|(name, secs)| {
+                Json::obj(vec![("name", Json::str(name)), ("secs", Json::num(*secs))])
+            })
+            .collect();
+        let total: f64 = self.stages.iter().map(|(_, s)| s).sum();
+        Json::obj(vec![("series", Json::Arr(series)), ("total_s", Json::num(total))])
+    }
+
+    /// Write the artifact to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_accumulate_in_order() {
+        let mut p = StageProfiler::start();
+        p.stage("lower");
+        p.stage("simulate");
+        let names: Vec<&str> = p.stages().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["lower", "simulate"]);
+        assert!(p.stages().iter().all(|&(_, s)| s >= 0.0));
+        let j = p.to_json();
+        assert_eq!(j.get("series").as_arr().map(|a| a.len()), Some(2));
+        assert!(j.get("total_s").as_f64().is_some());
+    }
+}

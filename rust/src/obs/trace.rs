@@ -1,0 +1,642 @@
+//! Deterministic event tracing with a Chrome trace-event sink.
+//!
+//! A [`Trace`] is an ordered list of spans, instants and counter samples
+//! keyed on **simulated** time and logical ids (stage, link, task,
+//! phase) — never wall-clock — so the serialized artifact is
+//! byte-identical across `--jobs N` and across machines. The sink is the
+//! Chrome trace-event JSON format (a `{"traceEvents": [...]}` object of
+//! `ph: "X" | "i" | "C" | "M"` records, timestamps in microseconds),
+//! loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`; since it is built on [`crate::util::json::Json`]
+//! the same value doubles as the repo-native JSON artifact.
+//!
+//! High-level builders:
+//!
+//! - [`step_trace`] — the per-stage 1F1B task timeline of one simulated
+//!   training step (tracks partition the step exactly; the stage-0 track
+//!   *is* `lumos validate`'s phase breakdown), plus fabric counter
+//!   samples taken at the dependency engine's settlement points.
+//! - [`resilience_trace`] — failure/repair intervals and checkpoint
+//!   instants from a seeded fault trace.
+//!
+//! [`check_chrome_trace`] is the minimal in-tree schema checker CI runs
+//! against every emitted trace: event-level field/type checks, `B`/`E`
+//! balance, and per-track span nesting well-formedness.
+
+use std::collections::BTreeMap;
+
+use crate::model::Workload;
+use crate::netsim::{simulate_dag_observed, DepObserver};
+use crate::parallel::Mapping;
+use crate::perf::PerfKnobs;
+use crate::resilience::{FaultEvent, FaultKind};
+use crate::timeline::{
+    lower_step_traced, stage_spans, spans_breakdown, Phase, PhaseBreakdown, TimelineError,
+    TimelineReport,
+};
+use crate::topology::cluster::Cluster;
+use crate::util::json::Json;
+
+/// One trace record (see [`Trace`] for the model).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: String,
+    /// Chrome phase: `'X'` complete span, `'i'` instant, `'C'` counter.
+    pub ph: char,
+    /// Simulated start time, seconds.
+    pub ts_s: f64,
+    /// Span duration, seconds (`'X'` only).
+    pub dur_s: f64,
+    pub pid: usize,
+    pub tid: usize,
+    pub args: Vec<(String, f64)>,
+}
+
+/// An ordered, deterministic event timeline (module docs have the
+/// contract; [`Trace::to_chrome_json`] is the sink).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    processes: Vec<(usize, String)>,
+    threads: Vec<(usize, usize, String)>,
+    events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Name a process (a top-level track group).
+    pub fn process(&mut self, pid: usize, name: &str) {
+        self.processes.push((pid, name.to_string()));
+    }
+
+    /// Name a thread (one track inside a process).
+    pub fn thread(&mut self, pid: usize, tid: usize, name: &str) {
+        self.threads.push((pid, tid, name.to_string()));
+    }
+
+    /// A complete span (`ph: "X"`) over simulated `[start_s, end_s]`.
+    pub fn span(&mut self, pid: usize, tid: usize, name: &str, cat: &str, start_s: f64, end_s: f64) {
+        self.span_args(pid, tid, name, cat, start_s, end_s, &[]);
+    }
+
+    /// [`Trace::span`] with numeric args attached.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_args(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        cat: &str,
+        start_s: f64,
+        end_s: f64,
+        args: &[(&str, f64)],
+    ) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: 'X',
+            ts_s: start_s,
+            dur_s: end_s - start_s,
+            pid,
+            tid,
+            args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// A thread-scoped instant event (`ph: "i"`).
+    pub fn instant(&mut self, pid: usize, tid: usize, name: &str, cat: &str, ts_s: f64) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: 'i',
+            ts_s,
+            dur_s: 0.0,
+            pid,
+            tid,
+            args: Vec::new(),
+        });
+    }
+
+    /// A counter sample (`ph: "C"`): the named counter track takes value
+    /// `value` at simulated `ts_s`.
+    pub fn counter(&mut self, pid: usize, name: &str, ts_s: f64, value: f64) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat: "counter".to_string(),
+            ph: 'C',
+            ts_s,
+            dur_s: 0.0,
+            pid,
+            tid: 0,
+            args: vec![("value".to_string(), value)],
+        });
+    }
+
+    /// Number of recorded events (metadata excluded).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialize to the Chrome trace-event JSON object: metadata records
+    /// first (process/thread names), then events in recording order,
+    /// timestamps converted to microseconds.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        for (pid, name) in &self.processes {
+            evs.push(Json::obj(vec![
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(*pid as f64)),
+                ("tid", Json::num(0.0)),
+            ]));
+        }
+        for (pid, tid, name) in &self.threads {
+            evs.push(Json::obj(vec![
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(*pid as f64)),
+                ("tid", Json::num(*tid as f64)),
+            ]));
+        }
+        for e in &self.events {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("cat", Json::str(&e.cat)),
+                ("name", Json::str(&e.name)),
+                ("ph", Json::str(&e.ph.to_string())),
+                ("pid", Json::num(e.pid as f64)),
+                ("tid", Json::num(e.tid as f64)),
+                ("ts", Json::num(e.ts_s * 1e6)),
+            ];
+            if e.ph == 'X' {
+                fields.push(("dur", Json::num(e.dur_s * 1e6)));
+            }
+            if e.ph == 'i' {
+                // thread scope
+                fields.push(("s", Json::str("t")));
+            }
+            if !e.args.is_empty() {
+                let args: Vec<(&str, Json)> =
+                    e.args.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+                fields.push(("args", Json::obj(args)));
+            }
+            evs.push(Json::obj(fields));
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Arr(evs)),
+        ])
+    }
+
+    /// Write the Chrome trace-event JSON to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut text = self.to_chrome_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
+// ---- schema checker --------------------------------------------------------
+
+/// What [`check_chrome_trace`] counted while validating.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Non-metadata events.
+    pub events: usize,
+    pub spans: usize,
+    pub counters: usize,
+    pub instants: usize,
+    /// Distinct `(pid, tid)` span tracks.
+    pub tracks: usize,
+}
+
+fn field_num(e: &Json, key: &str, i: usize) -> Result<f64, String> {
+    e.get(key)
+        .as_f64()
+        .filter(|v| v.is_finite())
+        .ok_or_else(|| format!("event {i}: missing/non-finite numeric \"{key}\""))
+}
+
+/// Minimal in-tree Chrome trace-event schema checker (pure Rust): field
+/// and type checks per event, `B`/`E` balance per track, and — for `X`
+/// spans — per-track nesting well-formedness (spans may nest or be
+/// disjoint, never partially overlap). Returns counts on success.
+pub fn check_chrome_trace(doc: &Json) -> Result<TraceCheck, String> {
+    let evs = doc
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| "top level must be an object with a \"traceEvents\" array".to_string())?;
+    let mut check = TraceCheck::default();
+    let mut spans: BTreeMap<(i64, i64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut open: BTreeMap<(i64, i64), usize> = BTreeMap::new();
+    for (i, e) in evs.iter().enumerate() {
+        if e.as_obj().is_none() {
+            return Err(format!("event {i}: not an object"));
+        }
+        let name = e
+            .get("name")
+            .as_str()
+            .ok_or_else(|| format!("event {i}: missing string \"name\""))?;
+        let ph = e
+            .get("ph")
+            .as_str()
+            .ok_or_else(|| format!("event {i}: missing string \"ph\""))?;
+        let pid = field_num(e, "pid", i)? as i64;
+        if ph == "M" {
+            let known = ["process_name", "thread_name", "process_sort_index", "thread_sort_index"];
+            if !known.contains(&name) {
+                return Err(format!("event {i}: unknown metadata record \"{name}\""));
+            }
+            if name.ends_with("_name") && e.get("args").get("name").as_str().is_none() {
+                return Err(format!("event {i}: metadata \"{name}\" lacks args.name"));
+            }
+            continue;
+        }
+        let tid = field_num(e, "tid", i)? as i64;
+        let ts = field_num(e, "ts", i)?;
+        check.events += 1;
+        match ph {
+            "X" => {
+                let dur = field_num(e, "dur", i)?;
+                if dur < 0.0 {
+                    return Err(format!("event {i}: negative dur {dur}"));
+                }
+                spans.entry((pid, tid)).or_default().push((ts, ts + dur));
+                check.spans += 1;
+            }
+            "B" => {
+                *open.entry((pid, tid)).or_insert(0) += 1;
+                check.spans += 1;
+            }
+            "E" => {
+                let depth = open.entry((pid, tid)).or_insert(0);
+                if *depth == 0 {
+                    return Err(format!("event {i}: E without a matching B on pid {pid} tid {tid}"));
+                }
+                *depth -= 1;
+            }
+            "i" => {
+                check.instants += 1;
+            }
+            "C" => {
+                let args = e
+                    .get("args")
+                    .as_obj()
+                    .ok_or_else(|| format!("event {i}: counter lacks args object"))?;
+                if args.is_empty() || args.values().any(|v| v.as_f64().is_none()) {
+                    return Err(format!("event {i}: counter args must be non-empty numerics"));
+                }
+                check.counters += 1;
+            }
+            other => return Err(format!("event {i}: unsupported ph \"{other}\"")),
+        }
+    }
+    if let Some(((pid, tid), depth)) = open.iter().find(|(_, &d)| d > 0) {
+        return Err(format!("{depth} unmatched B event(s) on pid {pid} tid {tid}"));
+    }
+    // Per-track nesting: sorted by (start asc, end desc), a stack walk
+    // must never see a span that starts inside the enclosing span but
+    // ends outside it.
+    let scale = spans
+        .values()
+        .flatten()
+        .map(|&(_, e)| e.abs())
+        .fold(1.0f64, f64::max);
+    let tol = 1e-9 * scale;
+    for ((pid, tid), track) in &mut spans {
+        track.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut stack: Vec<f64> = Vec::new();
+        for &(s, e) in track.iter() {
+            if e < s - tol {
+                return Err(format!("span ends before it starts on pid {pid} tid {tid}"));
+            }
+            while let Some(&top) = stack.last() {
+                if s >= top - tol {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&top) = stack.last() {
+                if e > top + tol {
+                    return Err(format!(
+                        "partial span overlap on pid {pid} tid {tid}: \
+                         [{s}, {e}] vs enclosing end {top}"
+                    ));
+                }
+            }
+            stack.push(e);
+        }
+    }
+    check.tracks = spans.len();
+    Ok(check)
+}
+
+// ---- step trace ------------------------------------------------------------
+
+/// Process id of the per-stage 1F1B task timeline.
+pub const PID_STEP: usize = 1;
+/// Process id of the fabric counter tracks.
+pub const PID_FABRIC: usize = 2;
+/// Process id of the resilience failure/repair/checkpoint tracks.
+pub const PID_RESILIENCE: usize = 3;
+
+/// One fabric allocation sample, taken at a settlement point.
+struct FillSample {
+    t: f64,
+    active: usize,
+    mean_util: f64,
+}
+
+/// [`DepObserver`] that records settlement-point allocation samples and
+/// (optionally) per-flow admit/settle/finish instants.
+struct FabricRecorder {
+    want_flows: bool,
+    samples: Vec<FillSample>,
+    /// `(t, kind, node)` with kind `"admit" | "settle" | "finish"`.
+    flow_events: Vec<(f64, &'static str, usize)>,
+}
+
+impl DepObserver for FabricRecorder {
+    const UTILIZATION: bool = true;
+
+    fn flow_admitted(&mut self, node: usize, now: f64) {
+        if self.want_flows {
+            self.flow_events.push((now, "admit", node));
+        }
+    }
+
+    fn flow_settled(&mut self, node: usize, now: f64, _rate: f64) {
+        if self.want_flows {
+            self.flow_events.push((now, "settle", node));
+        }
+    }
+
+    fn flow_finished(&mut self, node: usize, now: f64) {
+        if self.want_flows {
+            self.flow_events.push((now, "finish", node));
+        }
+    }
+
+    fn refill(&mut self, now: f64, active_flows: usize, _touched_links: usize, mean_util: f64) {
+        self.samples.push(FillSample { t: now, active: active_flows, mean_util });
+    }
+}
+
+fn span_label(phase: Option<Phase>) -> (&'static str, &'static str) {
+    match phase {
+        None => ("bubble", "bubble"),
+        Some(Phase::Compute) => ("compute", "compute"),
+        Some(Phase::TpComm) => ("tp all-reduce", "tp"),
+        Some(Phase::EpComm) => ("ep all-to-all", "ep"),
+        Some(Phase::PpComm) => ("pp send", "pp"),
+        Some(Phase::DpComm) => ("dp sync", "dp"),
+    }
+}
+
+/// A traced simulated training step: the Chrome-exportable [`Trace`], the
+/// step report (bit-identical to `timeline::simulate_step` on the same
+/// point), and the per-stage phase breakdowns behind the tracks.
+pub struct StepTrace {
+    pub trace: Trace,
+    pub report: TimelineReport,
+    /// Per-stage breakdowns, index = pipeline stage; entry 0 equals
+    /// `report.phases` (the `lumos validate` attribution).
+    pub stages: Vec<PhaseBreakdown>,
+}
+
+/// Lower `(w, map)` on `cluster` with the full per-stage chain, simulate
+/// it once on the dependency engine with a recording observer, and build
+/// the step timeline: one span track per pipeline stage whose
+/// compute/TP/EP/PP/DP/bubble spans partition `[0, step_time]` exactly,
+/// plus fabric counter tracks (active flows, mean link utilization of the
+/// re-filled component) sampled at settlement points. With `flow_events`,
+/// per-flow admit/settle/finish instants are included as well.
+pub fn step_trace(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+    flow_events: bool,
+) -> Result<StepTrace, TimelineError> {
+    let dag = lower_step_traced(w, cluster, map, knobs).map_err(TimelineError::TooLarge)?;
+    let mut rec =
+        FabricRecorder { want_flows: flow_events, samples: Vec::new(), flow_events: Vec::new() };
+    let (result, dep) = simulate_dag_observed(&dag.net, &dag.nodes, &mut rec);
+
+    let n_stages = dag.chain.iter().map(|t| t.stage + 1).max().unwrap_or(1);
+    let mut trace = Trace::new();
+    trace.process(PID_STEP, "step timeline (1F1B pipeline stages)");
+    trace.process(PID_FABRIC, "fabric");
+    let mut stages: Vec<PhaseBreakdown> = Vec::with_capacity(n_stages);
+    for s in 0..n_stages {
+        trace.thread(PID_STEP, s, &format!("stage {s}"));
+        let spans = stage_spans(&dag.chain, s, &result.finish, result.makespan);
+        for sp in &spans {
+            let (name, cat) = span_label(sp.phase);
+            trace.span(PID_STEP, s, name, cat, sp.start, sp.end);
+        }
+        stages.push(spans_breakdown(&spans));
+    }
+    trace.thread(PID_FABRIC, 0, "allocation");
+    for s in &rec.samples {
+        trace.counter(PID_FABRIC, "active flows", s.t, s.active as f64);
+        trace.counter(PID_FABRIC, "mean link utilization", s.t, s.mean_util);
+    }
+    for &(t, kind, node) in &rec.flow_events {
+        trace.instant(PID_FABRIC, 0, &format!("{kind} flow {node}"), kind, t);
+    }
+
+    let report = TimelineReport {
+        step_time: result.makespan,
+        time_to_train_s: result.makespan * w.steps_to_target(),
+        phases: stages.first().cloned().unwrap_or_default(),
+        nodes: dag.nodes.len(),
+        events: result.events,
+        dep,
+    };
+    Ok(StepTrace { trace, report, stages })
+}
+
+// ---- resilience trace ------------------------------------------------------
+
+fn fault_label(kind: FaultKind) -> &'static str {
+    match kind {
+        FaultKind::ScaleUpLink => "scale-up link fault",
+        FaultKind::ScaleOutLink => "scale-out link fault",
+        FaultKind::GpuTray => "gpu tray fault",
+    }
+}
+
+/// At most this many checkpoint instants are emitted (a short Young/Daly
+/// interval over a long horizon would otherwise flood the track).
+pub const MAX_CHECKPOINT_EVENTS: usize = 1_000;
+
+/// Build the failure/repair/checkpoint timeline of one seeded fault
+/// trace: a span per fault covering its repair window (overlapping
+/// repairs of the same kind are laid out on extra lanes so every track
+/// stays well-nested) and an instant per Young/Daly checkpoint, capped
+/// at [`MAX_CHECKPOINT_EVENTS`].
+pub fn resilience_trace(events: &[FaultEvent], ckpt_interval_s: f64, horizon_h: f64) -> Trace {
+    let mut trace = Trace::new();
+    trace.process(PID_RESILIENCE, "resilience (failure/repair/checkpoint)");
+    // Greedy lane assignment per kind: deterministic first-fit over the
+    // time-ordered events keeps overlapping repair windows on separate
+    // tids. Lane tids: kind_index * LANES + lane; checkpoints after.
+    const LANES: usize = 64;
+    let kinds = [FaultKind::ScaleUpLink, FaultKind::ScaleOutLink, FaultKind::GpuTray];
+    let mut lane_ends: Vec<Vec<f64>> = vec![Vec::new(); kinds.len()];
+    let mut named: Vec<Vec<bool>> = vec![Vec::new(); kinds.len()];
+    for ev in events {
+        let k = match ev.kind {
+            FaultKind::ScaleUpLink => 0,
+            FaultKind::ScaleOutLink => 1,
+            FaultKind::GpuTray => 2,
+        };
+        let start = ev.at_h * 3600.0;
+        let end = (ev.at_h + ev.repair_h) * 3600.0;
+        let lanes = &mut lane_ends[k];
+        let lane = match lanes.iter().position(|&e| e <= start) {
+            Some(i) => i,
+            None => {
+                lanes.push(0.0);
+                lanes.len() - 1
+            }
+        };
+        if lane >= LANES {
+            // saturated: drop the event (64 concurrent repairs of one
+            // kind is far beyond any sampled horizon)
+            continue;
+        }
+        lanes[lane] = end;
+        let tid = k * LANES + lane;
+        if named[k].len() <= lane {
+            named[k].resize(lane + 1, false);
+        }
+        if !named[k][lane] {
+            let suffix = if lane == 0 { String::new() } else { format!(" (lane {lane})") };
+            trace.thread(PID_RESILIENCE, tid, &format!("{}{suffix}", fault_label(ev.kind)));
+            named[k][lane] = true;
+        }
+        trace.span_args(
+            PID_RESILIENCE,
+            tid,
+            fault_label(ev.kind),
+            "fault",
+            start,
+            end,
+            &[("gpu", ev.gpu as f64), ("repair_h", ev.repair_h)],
+        );
+    }
+    let ckpt_tid = kinds.len() * LANES;
+    trace.thread(PID_RESILIENCE, ckpt_tid, "checkpoints (Young/Daly)");
+    if ckpt_interval_s > 0.0 {
+        let horizon_s = horizon_h * 3600.0;
+        let mut t = ckpt_interval_s;
+        let mut count = 0usize;
+        while t <= horizon_s && count < MAX_CHECKPOINT_EVENTS {
+            trace.instant(PID_RESILIENCE, ckpt_tid, "checkpoint", "checkpoint", t);
+            t += ckpt_interval_s;
+            count += 1;
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_sink_and_checker_roundtrip() {
+        let mut tr = Trace::new();
+        tr.process(1, "p");
+        tr.thread(1, 0, "t0");
+        tr.span(1, 0, "outer", "c", 0.0, 10.0);
+        tr.span(1, 0, "inner", "c", 2.0, 5.0);
+        tr.span(1, 0, "later", "c", 6.0, 9.0);
+        tr.instant(1, 0, "mark", "c", 3.0);
+        tr.counter(2, "flows", 1.0, 4.0);
+        let doc = tr.to_chrome_json();
+        let check = check_chrome_trace(&doc).unwrap();
+        assert_eq!(check.spans, 3);
+        assert_eq!(check.instants, 1);
+        assert_eq!(check.counters, 1);
+        assert_eq!(check.tracks, 1);
+        // serialization is stable
+        assert_eq!(doc.to_string_pretty(), tr.to_chrome_json().to_string_pretty());
+        // and parses back
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert!(check_chrome_trace(&parsed).is_ok());
+    }
+
+    #[test]
+    fn checker_rejects_malformed_traces() {
+        // not an object / missing traceEvents
+        assert!(check_chrome_trace(&Json::Arr(vec![])).is_err());
+        // partial overlap
+        let mut tr = Trace::new();
+        tr.span(1, 0, "a", "c", 0.0, 5.0);
+        tr.span(1, 0, "b", "c", 3.0, 8.0);
+        let err = check_chrome_trace(&tr.to_chrome_json()).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+        // negative duration
+        let mut tr = Trace::new();
+        tr.span(1, 0, "a", "c", 5.0, 3.0);
+        assert!(check_chrome_trace(&tr.to_chrome_json()).is_err());
+        // unmatched B
+        let doc = Json::parse(
+            r#"{"traceEvents": [{"name": "x", "ph": "B", "ts": 0, "pid": 1, "tid": 1}]}"#,
+        )
+        .unwrap();
+        let err = check_chrome_trace(&doc).unwrap_err();
+        assert!(err.contains("unmatched B"), "{err}");
+        // B/E balance accepted
+        let doc = Json::parse(
+            r#"{"traceEvents": [
+                {"name": "x", "ph": "B", "ts": 0, "pid": 1, "tid": 1},
+                {"name": "x", "ph": "E", "ts": 4, "pid": 1, "tid": 1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(check_chrome_trace(&doc).is_ok());
+        // counter without numeric args
+        let doc = Json::parse(
+            r#"{"traceEvents": [{"name": "c", "ph": "C", "ts": 0, "pid": 1, "tid": 0,
+                                 "args": {"v": "high"}}]}"#,
+        )
+        .unwrap();
+        assert!(check_chrome_trace(&doc).is_err());
+    }
+
+    #[test]
+    fn resilience_trace_lanes_never_partially_overlap() {
+        use crate::resilience::{sample_trace, FabricReliability, RepairModel};
+        use crate::util::rng::Rng;
+        let events = sample_trace(
+            &FabricReliability::passage(),
+            &RepairModel::default(),
+            32_768,
+            48.0,
+            Rng::new(7),
+        );
+        assert!(!events.is_empty());
+        let tr = resilience_trace(&events, 1800.0, 48.0);
+        let check = check_chrome_trace(&tr.to_chrome_json()).unwrap();
+        assert!(check.spans > 0 && check.instants > 0);
+        // byte-identical on rebuild (pure function of the sampled trace)
+        let again = resilience_trace(&events, 1800.0, 48.0);
+        assert_eq!(
+            tr.to_chrome_json().to_string_pretty(),
+            again.to_chrome_json().to_string_pretty()
+        );
+    }
+}

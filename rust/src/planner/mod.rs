@@ -364,6 +364,45 @@ impl SimScored {
     }
 }
 
+/// Why the simulator could not score a plan. One typed value rendered
+/// identically everywhere it surfaces — the table row, the stderr skip
+/// line, and the JSON `skipped_reason` — replacing the stringly-typed
+/// reason that let the three renderings drift.
+#[derive(Debug, Clone)]
+pub enum SkipReason {
+    /// The lowered DAG would exceed [`timeline::MAX_DAG_NODES`]
+    /// (the message carries the estimate).
+    DagTooLarge(String),
+    /// The mapping fails the perf model's feasibility predicate.
+    Infeasible(String),
+}
+
+impl SkipReason {
+    fn from_timeline(e: &timeline::TimelineError) -> SkipReason {
+        match e {
+            timeline::TimelineError::TooLarge(msg) => SkipReason::DagTooLarge(msg.clone()),
+            timeline::TimelineError::Infeasible(inf) => SkipReason::Infeasible(inf.to_string()),
+        }
+    }
+
+    /// Stable machine-readable code (the JSON `skipped_code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SkipReason::DagTooLarge(_) => "dag-too-large",
+            SkipReason::Infeasible(_) => "infeasible",
+        }
+    }
+}
+
+impl std::fmt::Display for SkipReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SkipReason::DagTooLarge(msg) => write!(f, "{msg}"),
+            SkipReason::Infeasible(msg) => write!(f, "infeasible mapping: {msg}"),
+        }
+    }
+}
+
 /// A plan the simulated re-rank could not score (with the reason): after
 /// the `MAX_DAG_NODES` lift the guard only fires on truly pathological
 /// lowerings, but when it does the plan must stay visible in the output —
@@ -376,7 +415,7 @@ pub struct SkippedPlan {
     /// The un-simulated plan, analytical report included, so the rendered
     /// row still carries everything the analytical ranking knew.
     pub plan: RankedPlan,
-    pub reason: String,
+    pub reason: SkipReason,
 }
 
 /// Re-rank the top `k` ranked plans on *simulated* step time (`lumos plan
@@ -403,7 +442,7 @@ pub fn rerank_simulated(
             Err(e) => skipped.push(SkippedPlan {
                 ana_rank: i + 1,
                 plan: p.clone(),
-                reason: e.to_string(),
+                reason: SkipReason::from_timeline(&e),
             }),
         }
     }
@@ -506,6 +545,14 @@ pub struct SimPlan {
     pub prefiltered: usize,
     /// The admission margin used (see [`DEFAULT_SIM_MARGIN`]).
     pub margin: f64,
+    /// Serial-equivalent [`timeline::SkeletonCache`] hits over the
+    /// admitted sequence ([`timeline::replay_reuse`]): what a single-cache
+    /// serial run would have reused. Reported instead of the per-worker
+    /// thread-local counters, whose split depends on `--jobs` and would
+    /// break byte-identical output.
+    pub cache_hits: u64,
+    /// Serial-equivalent cache misses (see [`SimPlan::cache_hits`]).
+    pub cache_misses: u64,
 }
 
 impl SimPlan {
@@ -552,6 +599,11 @@ pub fn plan_simulated(
         .collect();
     let prefiltered = outcome.ranked.len() - admitted.len();
 
+    // Jobs-invariant cache accounting: replay the admitted sequence
+    // against a serial-equivalent LRU (key arithmetic only, no lowering).
+    let admitted_maps: Vec<&Mapping> = admitted.iter().map(|(_, p)| &p.mapping).collect();
+    let (cache_hits, cache_misses) = timeline::replay_reuse(workload, cluster, &admitted_maps, knobs);
+
     use std::cell::RefCell;
     thread_local! {
         static SIM_CACHE: RefCell<timeline::SkeletonCache> =
@@ -572,7 +624,7 @@ pub fn plan_simulated(
             Err(e) => skipped.push(SkippedPlan {
                 ana_rank: rank0 + 1,
                 plan: p.clone(),
-                reason: e.to_string(),
+                reason: SkipReason::from_timeline(&e),
             }),
         }
     }
@@ -582,7 +634,7 @@ pub fn plan_simulated(
             .total_cmp(&b.sim.time_to_train_s)
             .then_with(|| mapping_key(&a.plan.mapping).cmp(&mapping_key(&b.plan.mapping)))
     });
-    SimPlan { scored, skipped, prefiltered, margin }
+    SimPlan { scored, skipped, prefiltered, margin, cache_hits, cache_misses }
 }
 
 /// Render a [`SimPlan`] (`lumos plan --objective sim`). Shows the best
@@ -689,7 +741,8 @@ fn sim_rows_json(scored: &[SimScored], skipped: &[SkippedPlan]) -> Json {
                 ]),
             ),
             ("analytical_step_s", Json::num(s.plan.report.step_time)),
-            ("skipped_reason", Json::str(&s.reason)),
+            ("skipped_code", Json::str(s.reason.code())),
+            ("skipped_reason", Json::str(&s.reason.to_string())),
         ]));
     }
     Json::Arr(rows)
@@ -705,6 +758,9 @@ pub struct SimSection<'a> {
     pub skipped: &'a [SkippedPlan],
     pub prefiltered: usize,
     pub margin: Option<f64>,
+    /// Serial-equivalent skeleton-cache (hits, misses) when the run went
+    /// through the cached path (`--objective sim`).
+    pub cache: Option<(u64, u64)>,
 }
 
 impl<'a> SimSection<'a> {
@@ -716,13 +772,47 @@ impl<'a> SimSection<'a> {
             skipped: &sim.skipped,
             prefiltered: sim.prefiltered,
             margin: Some(sim.margin),
+            cache: Some((sim.cache_hits, sim.cache_misses)),
         }
     }
 
     /// The section for a top-K [`rerank_simulated`] result.
     pub fn from_rerank(scored: &'a [SimScored], skipped: &'a [SkippedPlan]) -> SimSection<'a> {
-        SimSection { mode: "rerank-sim", scored, skipped, prefiltered: 0, margin: None }
+        SimSection { mode: "rerank-sim", scored, skipped, prefiltered: 0, margin: None, cache: None }
     }
+}
+
+/// The `"metrics"` object of `lumos plan --json`: search-space accounting
+/// plus — when a simulated section is present — simulator work counters
+/// summed over the scored rows in simulated-rank order (deterministic for
+/// any `--jobs N`; cache reuse is the serial-equivalent replay, see
+/// [`SimPlan::cache_hits`]).
+pub fn outcome_metrics(outcome: &PlanOutcome, sim: Option<&SimSection<'_>>) -> crate::obs::Metrics {
+    let mut m = crate::obs::Metrics::new();
+    m.inc("enumerated", outcome.enumerated as u64);
+    m.inc("pruned", outcome.pruned as u64);
+    m.inc("feasible", (outcome.enumerated - outcome.pruned) as u64);
+    m.inc("ranked", outcome.ranked.len() as u64);
+    if let Some(s) = sim {
+        m.inc("sim_scored", s.scored.len() as u64);
+        m.inc("sim_skipped", s.skipped.len() as u64);
+        m.inc("sim_prefiltered", s.prefiltered as u64);
+        if let Some((hits, misses)) = s.cache {
+            m.inc("sim_cache_hits", hits);
+            m.inc("sim_cache_misses", misses);
+        }
+        for row in s.scored {
+            m.inc("sim_dag_nodes", row.sim.nodes as u64);
+            m.inc("sim_events", row.sim.events as u64);
+            let d = &row.sim.dep;
+            m.inc("sim_admitted_flows", d.admitted_flows);
+            m.inc("sim_refills", d.refills);
+            m.inc("sim_heap_settlements", d.settlements);
+            m.inc("sim_heap_stale_pops", d.stale_pops);
+            m.observe("sim_refill_component_flows_max", d.refill_flows_max as f64);
+        }
+    }
+    m
 }
 
 /// Machine-readable form of a plan outcome (`lumos plan --json`):
@@ -780,6 +870,7 @@ pub fn outcome_json(outcome: &PlanOutcome, sim: Option<&SimSection<'_>>) -> Json
         ("enumerated", Json::num(outcome.enumerated as f64)),
         ("pruned", Json::num(outcome.pruned as f64)),
         ("feasible", Json::num((outcome.enumerated - outcome.pruned) as f64)),
+        ("metrics", outcome_metrics(outcome, sim).to_json()),
         ("paper_baseline", baseline),
         ("ranked", Json::Arr(ranked)),
     ];
@@ -880,6 +971,13 @@ mod tests {
         assert!(top.get("time_to_train_s").as_f64().unwrap() > 0.0);
         assert!(top.get("mapping").get("tp").as_usize().unwrap() > 0);
         assert!(j.get("paper_baseline").get("step_time_s").as_f64().is_some());
+        // the stable "metrics" key mirrors the search accounting
+        let metrics = j.get("metrics");
+        assert_eq!(
+            metrics.get("enumerated").as_usize(),
+            j.get("enumerated").as_usize()
+        );
+        assert_eq!(metrics.get("feasible").as_usize(), j.get("feasible").as_usize());
     }
 
     #[test]
@@ -987,6 +1085,14 @@ mod tests {
             outcome_json(&out, Some(&SimSection::from_plan(&sim1))).to_string_pretty(),
             outcome_json(&out, Some(&SimSection::from_plan(&sim4))).to_string_pretty()
         );
+        // cache accounting is the jobs-invariant serial replay: every
+        // simulatable candidate is either a hit or a miss
+        assert_eq!(sim1.cache_hits + sim1.cache_misses, sim1.scored.len() as u64);
+        assert_eq!((sim4.cache_hits, sim4.cache_misses), (sim1.cache_hits, sim1.cache_misses));
+        let j = outcome_json(&out, Some(&SimSection::from_plan(&sim1)));
+        let metrics = j.get("metrics");
+        assert_eq!(metrics.get("sim_cache_hits").as_usize(), Some(sim1.cache_hits as usize));
+        assert!(metrics.get("sim_events").as_f64().unwrap_or(0.0) > 0.0);
         // ranked on simulated TTT
         for pair in sim1.scored.windows(2) {
             assert!(pair[0].sim.time_to_train_s <= pair[1].sim.time_to_train_s);
@@ -1076,7 +1182,20 @@ mod tests {
         assert!(scored.is_empty());
         assert_eq!(skipped.len(), 1);
         assert_eq!(skipped[0].ana_rank, 1);
-        assert!(skipped[0].reason.contains("too large"), "{}", skipped[0].reason);
+        assert!(
+            skipped[0].reason.to_string().contains("too large"),
+            "{}",
+            skipped[0].reason
+        );
+        assert_eq!(skipped[0].reason.code(), "dag-too-large");
+        // the typed reason renders identically in JSON
+        let j = outcome_json(&outcome, Some(&SimSection::from_rerank(&scored, &skipped)));
+        let row = j.get("simulated").get("rows").at(0);
+        assert_eq!(row.get("skipped_code").as_str(), Some("dag-too-large"));
+        assert_eq!(
+            row.get("skipped_reason").as_str(),
+            Some(skipped[0].reason.to_string().as_str())
+        );
         let rendered = rerank_table(&scored, &skipped).render();
         assert!(rendered.contains("skipped"), "{rendered}");
         assert!(rendered.contains("120"), "{rendered}");

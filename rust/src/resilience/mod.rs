@@ -570,6 +570,44 @@ pub fn serviceability_table(rows: &[Assessment]) -> Table {
     t
 }
 
+/// The degrade-source summary the tables report, shared with the JSON
+/// artifacts: the uniform source name, or `"mixed"` when assessments
+/// disagree (some point fell back to analytical pricing).
+pub fn degrade_summary<'a>(mut rows: impl Iterator<Item = &'a Assessment>) -> &'static str {
+    match rows.next() {
+        None => "analytical",
+        Some(first) => {
+            if rows.all(|a| a.degrade_source == first.degrade_source) {
+                first.degrade_source.name()
+            } else {
+                "mixed"
+            }
+        }
+    }
+}
+
+/// Deterministic run counters over a set of assessments — the `"metrics"`
+/// key of the resilience JSON artifacts. Carries what the tables already
+/// report (trial pool size, degrade-mode fallbacks) in machine-readable
+/// form, aggregated in row order.
+pub fn assessment_metrics<'a>(rows: impl Iterator<Item = &'a Assessment>) -> crate::obs::Metrics {
+    let mut m = crate::obs::Metrics::new();
+    for a in rows {
+        m.inc("assessments", 1);
+        m.inc("mc_trials", a.trials as u64);
+        match a.degrade_source {
+            DegradeSource::Analytical => m.inc("degrade_analytical", 1),
+            DegradeSource::Simulated => m.inc("degrade_simulated", 1),
+        }
+        if a.degrade_note.is_some() {
+            m.inc("degrade_fallbacks", 1);
+        }
+        m.observe("healthy_step_s", a.steps.healthy_step);
+        m.observe("availability", a.expected.availability);
+    }
+    m
+}
+
 /// Detailed per-assessment table (the `lumos resilience --cluster ...`
 /// payload): one row per config.
 pub fn assessment_table(rows: &[Assessment]) -> Table {
@@ -577,13 +615,7 @@ pub fn assessment_table(rows: &[Assessment]) -> Table {
         .first()
         .map(|a| (a.cluster.clone(), a.fabric.clone()))
         .unwrap_or_default();
-    let src = match rows.first() {
-        Some(first) if rows.iter().all(|a| a.degrade_source == first.degrade_source) => {
-            first.degrade_source.name()
-        }
-        Some(_) => "mixed",
-        None => "analytical",
-    };
+    let src = degrade_summary(rows.iter());
     let mut t = Table::new(
         &format!("Resilience: {cluster} under {fabric} ({src} degraded steps)"),
         &[
@@ -674,10 +706,31 @@ pub fn paired_json(rows: &[PairedRow], seed: u64, trials: usize) -> Json {
             ])
         })
         .collect();
+    let all = rows.iter().flat_map(|r| [&r.passage, &r.electrical]);
     Json::obj(vec![
         ("seed", Json::num(seed as f64)),
         ("trials", Json::num(trials as f64)),
+        (
+            "degrade_source",
+            Json::str(degrade_summary(rows.iter().flat_map(|r| [&r.passage, &r.electrical]))),
+        ),
+        ("metrics", assessment_metrics(all).to_json()),
         ("rows", Json::Arr(rows_json)),
+    ])
+}
+
+/// Machine-readable form of a per-cluster assessment run
+/// (`lumos resilience --cluster ... --json`): the seed, trial pool size,
+/// degrade summary and `"metrics"` alongside the rows — previously the
+/// CLI emitted a bare row array that dropped everything the table header
+/// reports.
+pub fn assessments_json(rows: &[Assessment], seed: u64, trials: usize) -> Json {
+    Json::obj(vec![
+        ("seed", Json::num(seed as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("degrade_source", Json::str(degrade_summary(rows.iter()))),
+        ("metrics", assessment_metrics(rows.iter()).to_json()),
+        ("rows", Json::Arr(rows.iter().map(assessment_json).collect())),
     ])
 }
 
@@ -771,6 +824,17 @@ mod tests {
         let j = assessment_json(&pods[0]).to_string_pretty();
         assert!(j.contains("\"effective_ttt_s\""), "{j}");
         assert!(j.contains("\"degrade_source\""), "{j}");
+        // the paired and per-cluster JSON artifacts carry what the table
+        // headers report: trials, degrade summary, and run metrics
+        let p = paired_json(&rows, 7, 0);
+        assert_eq!(p.get("trials").as_f64(), Some(0.0));
+        assert_eq!(p.get("degrade_source").as_str(), Some("analytical"));
+        assert_eq!(p.get("metrics").get("assessments").as_f64(), Some(4.0));
+        let c = assessments_json(&pods, 7, 0);
+        assert_eq!(c.get("degrade_source").as_str(), Some("simulated"));
+        assert_eq!(c.get("metrics").get("degrade_fallbacks").as_f64(), None);
+        assert_eq!(c.get("metrics").get("degrade_simulated").as_f64(), Some(3.0));
+        assert_eq!(c.get("rows").as_arr().map(|r| r.len()), Some(3));
     }
 
     #[test]

@@ -144,7 +144,7 @@ impl SkeletonCache {
             return Ok(&self.entries[idx].dag);
         }
         self.misses += 1;
-        let (dag, tags) = build_from_params(sp);
+        let (dag, tags) = build_from_params(sp, false);
         if self.entries.len() >= MAX_CACHED_SKELETONS {
             // evict the least-recently-used skeleton
             if let Some(lru) = self
@@ -161,6 +161,47 @@ impl SkeletonCache {
         let idx = self.entries.len() - 1;
         Ok(&self.entries[idx].dag)
     }
+}
+
+/// Serial-equivalent cache accounting: replay the candidates' skeleton
+/// keys, in the given order, against an LRU of [`MAX_CACHED_SKELETONS`]
+/// entries — the `(hits, misses)` a *single serial* [`SkeletonCache`]
+/// would report on this sequence. The actual per-worker thread-local
+/// caches see worker-dependent subsequences, so their counters vary with
+/// `--jobs`; this replay is worker-count-invariant by construction, which
+/// is why the planner's `"metrics"` JSON reports it instead. Candidates
+/// the size guard rejects are skipped (counted as neither). Cost is
+/// [`step_params`] arithmetic only — nothing is lowered.
+pub fn replay_reuse(
+    w: &Workload,
+    cluster: &Cluster,
+    maps: &[&Mapping],
+    knobs: &PerfKnobs,
+) -> (u64, u64) {
+    let mut lru: Vec<(SkeletonKey, u64)> = Vec::new();
+    let mut clock = 0u64;
+    let (mut hits, mut misses) = (0u64, 0u64);
+    for map in maps {
+        let Ok(sp) = step_params(w, cluster, map, knobs) else {
+            continue;
+        };
+        let key = key_of(&sp);
+        clock += 1;
+        if let Some(e) = lru.iter_mut().find(|e| e.0 == key) {
+            e.1 = clock;
+            hits += 1;
+            continue;
+        }
+        misses += 1;
+        if lru.len() >= MAX_CACHED_SKELETONS {
+            // same eviction rule as SkeletonCache::lower
+            if let Some(i) = lru.iter().enumerate().min_by_key(|(_, e)| e.1).map(|(i, _)| i) {
+                lru.swap_remove(i);
+            }
+        }
+        lru.push((key, clock));
+    }
+    (hits, misses)
 }
 
 #[cfg(test)]
@@ -237,6 +278,26 @@ mod tests {
         let cached = cache.lower(&w, &c, &m, &knobs).unwrap();
         assert_dags_bit_equal(cached, &fresh);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn replay_reuse_matches_a_serial_cache() {
+        let (w, c, m) = paper_setup();
+        let knobs = PerfKnobs::default();
+        let deep = Mapping::try_with_microbatch(
+            Parallelism { tp: 8, pp: 64, dp: 64 },
+            MoeConfig::paper_config(4),
+            1,
+        )
+        .unwrap();
+        let seq = [&m, &deep, &m, &m, &deep];
+        let mut cache = SkeletonCache::new();
+        for mp in &seq {
+            cache.lower(&w, &c, mp, &knobs).unwrap();
+        }
+        let (hits, misses) = replay_reuse(&w, &c, &seq, &knobs);
+        assert_eq!((hits, misses), (cache.hits(), cache.misses()));
+        assert_eq!((hits, misses), (3, 2));
     }
 
     #[test]

@@ -53,11 +53,16 @@ pub enum Phase {
     DpComm,
 }
 
-/// One serialized task on the stage-0 chain (the attribution spine):
+/// One serialized task on a stage's chain (the attribution spine):
 /// `ends` are the node ids whose completion ends the task, `deps` the node
-/// ids whose completion allowed it to start.
+/// ids whose completion allowed it to start. [`lower_step`] records stage
+/// 0 only (the attribution walk's input); [`lower_step_traced`] records
+/// every stage, tagged by `stage`, for per-rank event timelines.
 #[derive(Debug, Clone)]
 pub struct ChainTask {
+    /// Pipeline stage this task ran on (0 for every task on the
+    /// [`lower_step`] chain).
+    pub stage: usize,
     pub phase: Phase,
     pub ends: Vec<usize>,
     pub deps: Vec<usize>,
@@ -173,6 +178,10 @@ struct Builder {
     /// re-parameterization map the skeleton cache replays.
     tags: Vec<u8>,
     chain: Vec<ChainTask>,
+    /// Record chain entries for every stage (trace lowering) instead of
+    /// stage 0 only. Not part of the skeleton key: it changes only the
+    /// attribution chain, never the node/flow structure.
+    full_chain: bool,
     /// stage-local geometry (all part of the skeleton key)
     pod: usize,
     span: usize,
@@ -206,10 +215,11 @@ impl Builder {
         self.nodes.len() - 1
     }
 
-    /// Record an attribution entry for stage 0 only.
+    /// Record an attribution entry — stage 0 only unless `full_chain`
+    /// (the planner's hot path never pays the pp× chain memory).
     fn record(&mut self, stage: usize, phase: Phase, ends: &[usize], deps: &[usize]) {
-        if stage == 0 {
-            self.chain.push(ChainTask { phase, ends: ends.to_vec(), deps: deps.to_vec() });
+        if stage == 0 || self.full_chain {
+            self.chain.push(ChainTask { stage, phase, ends: ends.to_vec(), deps: deps.to_vec() });
         }
     }
 
@@ -576,7 +586,9 @@ pub(crate) fn step_params(
 /// access to the workload/cluster/mapping: every branch below depends only
 /// on `sp`'s structural fields and the zero-pattern of `sp.params`, which
 /// is what lets [`super::SkeletonCache`] key skeletons on exactly those.
-pub(crate) fn build_from_params(sp: StepParams) -> (StepDag, Vec<u8>) {
+/// `full_chain` records attribution entries for every stage (trace
+/// lowering) instead of stage 0 only; it does not affect the nodes.
+pub(crate) fn build_from_params(sp: StepParams, full_chain: bool) -> (StepDag, Vec<u8>) {
     let net = Network::two_level(
         sp.n_blocks * sp.stride,
         sp.pod,
@@ -590,6 +602,7 @@ pub(crate) fn build_from_params(sp: StepParams) -> (StepDag, Vec<u8>) {
         nodes: Vec::with_capacity(sp.est),
         tags: Vec::with_capacity(sp.est),
         chain: Vec::new(),
+        full_chain,
         pod: sp.pod,
         span: sp.span,
         stride: sp.stride,
@@ -669,7 +682,22 @@ pub fn lower_step(
     map: &Mapping,
     knobs: &PerfKnobs,
 ) -> Result<StepDag, String> {
-    Ok(build_from_params(step_params(w, cluster, map, knobs)?).0)
+    Ok(build_from_params(step_params(w, cluster, map, knobs)?, false).0)
+}
+
+/// [`lower_step`] with the full per-stage attribution chain: every stage's
+/// tasks are recorded in `chain` (tagged with [`ChainTask::stage`]), which
+/// is what `obs::trace::step_trace` turns into one span track per
+/// pipeline stage. The nodes — and therefore the simulation — are
+/// bit-identical to [`lower_step`]'s; only the chain grows (×pp), so the
+/// planner's hot path keeps using [`lower_step`] / the skeleton cache.
+pub fn lower_step_traced(
+    w: &Workload,
+    cluster: &Cluster,
+    map: &Mapping,
+    knobs: &PerfKnobs,
+) -> Result<StepDag, String> {
+    Ok(build_from_params(step_params(w, cluster, map, knobs)?, true).0)
 }
 
 #[cfg(test)]

@@ -33,11 +33,13 @@
 mod cache;
 mod lower;
 
-pub use cache::{SkeletonCache, MAX_CACHED_SKELETONS};
-pub use lower::{estimate_nodes, lower_step, ChainTask, Phase, StepDag, MAX_DAG_NODES};
+pub use cache::{replay_reuse, SkeletonCache, MAX_CACHED_SKELETONS};
+pub use lower::{
+    estimate_nodes, lower_step, lower_step_traced, ChainTask, Phase, StepDag, MAX_DAG_NODES,
+};
 
 use crate::model::Workload;
-use crate::netsim::simulate_dag;
+use crate::netsim::{simulate_dag_stats, DepStats};
 use crate::parallel::{enumerate_candidates, Mapping};
 use crate::perf::memory::MemoryBreakdown;
 use crate::perf::{evaluate_feasible, Infeasible, PerfKnobs, PerfReport};
@@ -120,6 +122,10 @@ pub struct TimelineReport {
     /// DAG size / event count (simulation cost accounting).
     pub nodes: usize,
     pub events: usize,
+    /// Dependency-engine work counters for this simulation run
+    /// (settlements, re-fills, component sizes — deterministic, fed into
+    /// the `"metrics"` JSON key).
+    pub dep: DepStats,
 }
 
 /// Why a point cannot be simulated.
@@ -213,39 +219,77 @@ fn simulate_on(w: &Workload, dag: &StepDag) -> TimelineReport {
 }
 
 fn simulate_attributed(w: &Workload, dag: &StepDag, net: &crate::netsim::Network) -> TimelineReport {
-    let result = simulate_dag(net, &dag.nodes);
-
-    // Attribution walk over the stage-0 chain: the chain is serialized, so
-    // each instant belongs to exactly one task (bucketed by phase) or to
-    // the bubble (waiting on another stage's pipeline transfer).
-    let mut phases = PhaseBreakdown::default();
-    let mut cursor = 0.0f64;
-    let fin = |ids: &[usize]| ids.iter().map(|&i| result.finish[i]).fold(0.0f64, f64::max);
-    for task in &dag.chain {
-        let start = fin(&task.deps).max(cursor);
-        let end = fin(&task.ends);
-        if end > cursor {
-            phases.bubble += start - cursor;
-            let bucket = match task.phase {
-                Phase::Compute => &mut phases.compute,
-                Phase::TpComm => &mut phases.tp_comm,
-                Phase::EpComm => &mut phases.ep_comm,
-                Phase::PpComm => &mut phases.pp_comm,
-                Phase::DpComm => &mut phases.dp_comm,
-            };
-            *bucket += end - start;
-            cursor = end;
-        }
-    }
-    phases.bubble += result.makespan - cursor;
-
+    let (result, dep) = simulate_dag_stats(net, &dag.nodes);
+    let phases = spans_breakdown(&stage_spans(&dag.chain, 0, &result.finish, result.makespan));
     TimelineReport {
         step_time: result.makespan,
         time_to_train_s: result.makespan * w.steps_to_target(),
         phases,
         nodes: dag.nodes.len(),
         events: result.events,
+        dep,
     }
+}
+
+/// One attributed interval on a stage's serialized chain: a phase task,
+/// or pipeline bubble when `phase` is `None`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSpan {
+    pub phase: Option<Phase>,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Attribution walk over `stage`'s chain entries: the stage's chain is
+/// serialized, so each instant belongs to exactly one task (a phase span)
+/// or to the bubble (waiting on another stage). The returned spans
+/// partition `[0, makespan]` exactly — `obs::trace` renders them as one
+/// Perfetto track per stage, and [`spans_breakdown`] folds them into the
+/// `lumos validate` per-phase columns (bit-identical to the historical
+/// inline walk for stage 0).
+pub fn stage_spans(
+    chain: &[ChainTask],
+    stage: usize,
+    finish: &[f64],
+    makespan: f64,
+) -> Vec<StageSpan> {
+    let fin = |ids: &[usize]| ids.iter().map(|&i| finish[i]).fold(0.0f64, f64::max);
+    let mut spans = Vec::new();
+    let mut cursor = 0.0f64;
+    for task in chain.iter().filter(|t| t.stage == stage) {
+        let start = fin(&task.deps).max(cursor);
+        let end = fin(&task.ends);
+        if end > cursor {
+            if start > cursor {
+                spans.push(StageSpan { phase: None, start: cursor, end: start });
+            }
+            spans.push(StageSpan { phase: Some(task.phase), start, end });
+            cursor = end;
+        }
+    }
+    if makespan > cursor {
+        spans.push(StageSpan { phase: None, start: cursor, end: makespan });
+    }
+    spans
+}
+
+/// Fold [`stage_spans`] output into a [`PhaseBreakdown`] (span durations
+/// accumulate per bucket in span order, so the sums are bit-equal to the
+/// pre-refactor inline accumulation).
+pub fn spans_breakdown(spans: &[StageSpan]) -> PhaseBreakdown {
+    let mut p = PhaseBreakdown::default();
+    for s in spans {
+        let bucket = match s.phase {
+            None => &mut p.bubble,
+            Some(Phase::Compute) => &mut p.compute,
+            Some(Phase::TpComm) => &mut p.tp_comm,
+            Some(Phase::EpComm) => &mut p.ep_comm,
+            Some(Phase::PpComm) => &mut p.pp_comm,
+            Some(Phase::DpComm) => &mut p.dp_comm,
+        };
+        *bucket += s.end - s.start;
+    }
+    p
 }
 
 /// One mapping's analytical-vs-simulated comparison.
@@ -355,8 +399,30 @@ pub fn validation_json(cluster: &str, config: &str, rows: &[Validation]) -> Json
     Json::obj(vec![
         ("cluster", Json::str(cluster)),
         ("config", Json::str(config)),
+        ("metrics", validation_metrics(rows).to_json()),
         ("rows", Json::Arr(rows_json)),
     ])
+}
+
+/// Deterministic counters for a validation run (the `"metrics"` key of
+/// `lumos validate --json`): DAG sizes, simulator event counts, and the
+/// dependency engine's work counters summed over the rows in row order.
+pub fn validation_metrics(rows: &[Validation]) -> crate::obs::Metrics {
+    let mut m = crate::obs::Metrics::new();
+    m.inc("rows", rows.len() as u64);
+    for v in rows {
+        m.inc("dag_nodes", v.simulated.nodes as u64);
+        m.inc("sim_events", v.simulated.events as u64);
+        let d = &v.simulated.dep;
+        m.inc("sim_admitted_flows", d.admitted_flows);
+        m.inc("sim_admitted_delays", d.admitted_delays);
+        m.inc("sim_refills", d.refills);
+        m.inc("sim_refill_flows", d.refill_flows);
+        m.inc("sim_heap_settlements", d.settlements);
+        m.inc("sim_heap_stale_pops", d.stale_pops);
+        m.observe("sim_refill_component_flows_max", d.refill_flows_max as f64);
+    }
+    m
 }
 
 #[cfg(test)]
