@@ -98,23 +98,57 @@ pub fn lint_paths(paths: &[PathBuf], only: &[String], jobs: usize) -> Result<Lin
     Ok(report)
 }
 
-/// Modules allowed to read the host clock at all (DESIGN.md
-/// §Observability): the quarantined [`crate::obs::profile`] timers plus
-/// the bench/runtime/trainer measurement harnesses. Matched as
-/// `/`-normalized path suffixes.
-pub const WALLCLOCK_ALLOWED: &[&str] = &[
-    "obs/profile.rs",
-    "runtime/engine.rs",
-    "trainer/mod.rs",
-    "util/bench.rs",
-];
+/// Modules allowed to read the host clock anywhere in the file
+/// (DESIGN.md §Observability): the quarantined [`crate::obs::profile`]
+/// timers and the bench harness. Matched as `/`-normalized path
+/// suffixes. The runtime/trainer measurement paths route through
+/// [`crate::obs::record::Stopwatch`] and are deliberately *not* here.
+pub const WALLCLOCK_ALLOWED: &[&str] = &["obs/profile.rs", "util/bench.rs"];
+
+/// Files where clock reads are allowed only inside explicit
+/// `lumos: wallclock-capture-begin` / `-end` marker comments: the flight
+/// recorder's capture helper. A clock read in these files *outside* a
+/// marked region still fails the audit.
+pub const WALLCLOCK_CAPTURE_SCOPED: &[&str] = &["obs/record.rs"];
+
+const CAPTURE_BEGIN: &str = "lumos: wallclock-capture-begin";
+const CAPTURE_END: &str = "lumos: wallclock-capture-end";
+
+/// The marker-bounded capture regions of a source file, as inclusive
+/// 1-indexed `(begin_line, end_line)` pairs. An unclosed `begin` extends
+/// to EOF (conservative: the region is where reads are *allowed*, and an
+/// unmatched marker is caught by [`wallclock_audit`]'s error below).
+pub fn wallclock_capture_regions(src: &str) -> Result<Vec<(usize, usize)>> {
+    let mut out = Vec::new();
+    let mut open: Option<usize> = None;
+    let mut last = 0usize;
+    for (i, line) in src.lines().enumerate() {
+        let n = i + 1;
+        last = n;
+        let t = line.trim_start();
+        let marked = |m: &str| t.starts_with("//") && t[2..].trim_start().starts_with(m);
+        if marked(CAPTURE_BEGIN) {
+            ensure!(open.is_none(), "line {n}: nested wallclock-capture-begin");
+            open = Some(n);
+        } else if marked(CAPTURE_END) {
+            let b = open.take().context(format!("line {n}: wallclock-capture-end without begin"))?;
+            out.push((b, n));
+        }
+    }
+    if let Some(b) = open {
+        out.push((b, last));
+    }
+    Ok(out)
+}
 
 /// The `lumos lint --audit-wallclock` gate: every wall-clock read site
 /// under `paths` whose file is *not* in [`WALLCLOCK_ALLOWED`] — annotated
-/// or not. Inline `lumos: allow(wallclock)` directives justify a site to
-/// the regular lint; the audit additionally pins *where* such sites may
-/// exist, so a new clock consumer needs a deliberate allowlist change,
-/// not just an annotation.
+/// or not — plus any site in a [`WALLCLOCK_CAPTURE_SCOPED`] file that
+/// falls outside its marker-bounded capture regions. Inline
+/// `lumos: allow(wallclock)` directives justify a site to the regular
+/// lint; the audit additionally pins *where* such sites may exist, so a
+/// new clock consumer needs a deliberate allowlist change, not just an
+/// annotation.
 pub fn wallclock_audit(paths: &[PathBuf], jobs: usize) -> Result<Vec<Finding>> {
     let mut files = Vec::new();
     for p in paths {
@@ -124,9 +158,9 @@ pub fn wallclock_audit(paths: &[PathBuf], jobs: usize) -> Result<Vec<Finding>> {
     files.sort();
     files.dedup();
     ensure!(!files.is_empty(), "no .rs files under the given paths");
-    let allowed = |label: &str| {
+    let suffix_match = |label: &str, list: &[&str]| {
         let norm = label.replace('\\', "/");
-        WALLCLOCK_ALLOWED.iter().any(|a| norm.ends_with(a))
+        list.iter().any(|a| norm.ends_with(a))
     };
     let mut sources = Vec::with_capacity(files.len());
     for f in &files {
@@ -136,13 +170,24 @@ pub fn wallclock_audit(paths: &[PathBuf], jobs: usize) -> Result<Vec<Finding>> {
     }
     let labels: Vec<String> = files.iter().map(|f| f.display().to_string()).collect();
     let per_file = run_indexed(files.len(), jobs, |i| {
-        if allowed(&labels[i]) {
-            Vec::new()
-        } else {
-            rules::wallclock_sites(&labels[i], &lexer::lex(&sources[i]))
+        if suffix_match(&labels[i], WALLCLOCK_ALLOWED) {
+            return Ok(Vec::new());
         }
+        let sites = rules::wallclock_sites(&labels[i], &lexer::lex(&sources[i]));
+        if !suffix_match(&labels[i], WALLCLOCK_CAPTURE_SCOPED) {
+            return Ok(sites);
+        }
+        let regions = wallclock_capture_regions(&sources[i])
+            .with_context(|| format!("bad capture markers in {}", labels[i]))?;
+        Ok(sites
+            .into_iter()
+            .filter(|f| !regions.iter().any(|&(b, e)| b <= f.line && f.line <= e))
+            .collect())
     });
-    let mut out: Vec<Finding> = per_file.into_iter().flatten().collect();
+    let mut out: Vec<Finding> = Vec::new();
+    for r in per_file {
+        out.extend(r?);
+    }
     out.sort();
     Ok(out)
 }
@@ -267,6 +312,67 @@ mod tests {
         };
         assert!(!allowed("rust/src/netsim/dep.rs"));
         assert!(allowed("rust/src/obs/profile.rs"));
+        // the former blanket entries now route through the recorder
+        assert!(!allowed("rust/src/runtime/engine.rs"));
+        assert!(!allowed("rust/src/trainer/mod.rs"));
+    }
+
+    #[test]
+    fn capture_regions_parse_markers() {
+        let src = "a\n// lumos: wallclock-capture-begin\nb\nc\n// lumos: wallclock-capture-end\nd\n";
+        assert_eq!(wallclock_capture_regions(src).unwrap(), vec![(2, 5)]);
+        assert_eq!(wallclock_capture_regions("no markers\n").unwrap(), vec![]);
+        // unclosed begin extends to EOF
+        let open = "x\n// lumos: wallclock-capture-begin\ny\n";
+        assert_eq!(wallclock_capture_regions(open).unwrap(), vec![(2, 3)]);
+        // end without begin is an error
+        assert!(wallclock_capture_regions("// lumos: wallclock-capture-end\n").is_err());
+    }
+
+    #[test]
+    fn scoped_file_permits_reads_only_inside_markers() {
+        // mirror of the audit's filtering logic on a synthetic record.rs
+        let src = "\
+// lumos: wallclock-capture-begin
+fn inside() -> std::time::Instant { std::time::Instant::now() }
+// lumos: wallclock-capture-end
+fn outside() -> std::time::Instant { std::time::Instant::now() }
+";
+        let sites = rules::wallclock_sites("obs/record.rs", &lexer::lex(src));
+        assert_eq!(sites.len(), 2, "{sites:?}");
+        let regions = wallclock_capture_regions(src).unwrap();
+        let escaped: Vec<&Finding> = sites
+            .iter()
+            .filter(|f| !regions.iter().any(|&(b, e)| b <= f.line && f.line <= e))
+            .collect();
+        assert_eq!(escaped.len(), 1);
+        assert_eq!(escaped[0].line, 4);
+    }
+
+    #[test]
+    fn the_real_recorder_keeps_reads_inside_its_markers() {
+        // the canary contract CI relies on: obs/record.rs has marked
+        // regions, its clock reads all sit inside them, and a read
+        // appended at EOF would escape.
+        let root = default_root().unwrap();
+        let path = root.join("obs").join("record.rs");
+        let src = std::fs::read_to_string(&path).unwrap();
+        let regions = wallclock_capture_regions(&src).unwrap();
+        assert!(!regions.is_empty());
+        let sites = rules::wallclock_sites("obs/record.rs", &lexer::lex(&src));
+        assert!(!sites.is_empty(), "the capture helper reads the clock");
+        for f in &sites {
+            assert!(
+                regions.iter().any(|&(b, e)| b <= f.line && f.line <= e),
+                "clock read at line {} escapes the capture region",
+                f.line
+            );
+        }
+        let n_lines = src.lines().count();
+        assert!(
+            regions.iter().all(|&(_, e)| e < n_lines),
+            "capture region must not extend to EOF"
+        );
     }
 
     #[test]

@@ -167,6 +167,37 @@ impl Endpoint {
         out
     }
 
+    /// Pairwise all-to-all restricted to a subgroup of the fabric:
+    /// `group` lists the participating global ranks (every member calls
+    /// with the same list, which must contain its own rank) and
+    /// `chunks[i]` goes to `group[i]`. Returns the chunks received,
+    /// indexed by group position. This is the EP dispatch/combine
+    /// primitive of the mapped driver: each pipeline stage's DP peers
+    /// form one expert-parallel group.
+    pub fn all_to_all_group(
+        &mut self,
+        group: &[usize],
+        mut chunks: Vec<Vec<f32>>,
+        tag_base: u64,
+    ) -> Vec<Vec<f32>> {
+        let n = group.len();
+        assert_eq!(chunks.len(), n, "need one chunk per group member");
+        let me = group
+            .iter()
+            .position(|&r| r == self.rank)
+            // lumos: allow(panic-path) -- caller bug: a rank outside the group joined its collective
+            .expect("calling rank not in group");
+        let mut out: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
+        out[me] = std::mem::take(&mut chunks[me]);
+        for step in 1..n {
+            let di = (me + step) % n;
+            let si = (me + n - step) % n;
+            self.send(group[di], tag_base + step as u64, std::mem::take(&mut chunks[di]));
+            out[si] = self.recv(group[si], tag_base + step as u64);
+        }
+        out
+    }
+
     /// Broadcast from `root` (linear; used for small control payloads).
     pub fn broadcast(&mut self, root: usize, data: &mut Vec<f32>, tag: u64) {
         if self.rank == root {
@@ -294,6 +325,39 @@ mod tests {
         for (rank, r) in results.iter().enumerate() {
             for (src, chunk) in r.iter().enumerate() {
                 assert_eq!(chunk.len(), rank, "src {src}");
+                assert!(chunk.iter().all(|&v| v == src as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn group_all_to_all_transposes_within_groups() {
+        // Two disjoint groups over one 4-rank fabric: {0, 2} and {1, 3}.
+        // Each member sends [rank, dst] to every group peer; concurrent
+        // groups must not cross-talk even on the same tag base.
+        let results = run_workers(4, |mut ep| {
+            let group: Vec<usize> = if ep.rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+            let chunks: Vec<Vec<f32>> =
+                group.iter().map(|&d| vec![ep.rank as f32, d as f32]).collect();
+            (group.clone(), ep.all_to_all_group(&group, chunks, 11))
+        });
+        for (rank, (group, got)) in results.iter().enumerate() {
+            for (i, chunk) in got.iter().enumerate() {
+                assert_eq!(chunk, &[group[i] as f32, rank as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn group_all_to_all_carries_ragged_chunks() {
+        let results = run_workers(3, |mut ep| {
+            let group = [0usize, 1, 2];
+            let chunks: Vec<Vec<f32>> = (0..3).map(|d| vec![ep.rank as f32; d + 1]).collect();
+            ep.all_to_all_group(&group, chunks, 17)
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for (src, chunk) in got.iter().enumerate() {
+                assert_eq!(chunk.len(), rank + 1, "src {src}");
                 assert!(chunk.iter().all(|&v| v == src as f32));
             }
         }

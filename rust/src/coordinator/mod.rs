@@ -21,4 +21,4 @@ pub mod router;
 
 pub use comm::{chunk_ranges, fabric, run_workers, Endpoint, Msg};
 pub use pipeline::{one_f_one_b, simulate_slots, Action};
-pub use router::{Assignment, RouteResult, Router, RouterConfig};
+pub use router::{unpack_a2a_manifest, Assignment, RoutedToken, RouteResult, Router, RouterConfig};

@@ -10,6 +10,43 @@ pub enum Action {
     Backward(usize),
 }
 
+impl Action {
+    /// Stable display label ("fwd 3" / "bwd 3"): the span-name stem the
+    /// execution flight recorder uses, so recorded traces stay
+    /// comparable across hosts and runs.
+    pub fn label(&self) -> String {
+        match self {
+            Action::Forward(i) => format!("fwd {i}"),
+            Action::Backward(i) => format!("bwd {i}"),
+        }
+    }
+
+    pub fn micro(&self) -> usize {
+        match self {
+            Action::Forward(i) | Action::Backward(i) => *i,
+        }
+    }
+}
+
+/// Message-tag purposes for the mapped driver's sends. Combined with
+/// [`tag`], these give every (step, microbatch, purpose) a disjoint tag
+/// range so out-of-order arrivals park under the right key.
+pub const TAG_FWD: u64 = 1;
+pub const TAG_BWD: u64 = 2;
+pub const TAG_DISPATCH: u64 = 3;
+pub const TAG_COMBINE: u64 = 4;
+pub const TAG_GRADS: u64 = 5;
+pub const TAG_STATS: u64 = 6;
+
+/// Tag-space layout for the mapped driver: step in the high bits, then a
+/// microbatch (or gradient-tensor) slot, then the purpose, with the low
+/// 8 bits left free for a collective's internal hop counter (ring
+/// all-reduce uses `tag_base..tag_base + 2(n-1)`, group all-to-all
+/// `tag_base + 1..tag_base + n` — both fit for fabrics up to 128 ranks).
+pub fn tag(step: usize, slot: usize, purpose: u64) -> u64 {
+    ((step as u64) << 32) | ((slot as u64) << 12) | (purpose << 8)
+}
+
 /// Per-stage ordered action list for 1F1B with `n_micro` microbatches over
 /// `pp` stages: a warmup of `pp-1-stage` forwards, then alternating 1F1B,
 /// then drain.
@@ -182,5 +219,33 @@ mod tests {
     fn single_stage_has_no_bubble() {
         let clocks = simulate_slots(1, 10);
         assert_eq!(clocks[0], 20);
+    }
+
+    #[test]
+    fn action_labels_and_micro() {
+        assert_eq!(Action::Forward(3).label(), "fwd 3");
+        assert_eq!(Action::Backward(0).label(), "bwd 0");
+        assert_eq!(Action::Forward(7).micro(), 7);
+        assert_eq!(Action::Backward(7).micro(), 7);
+    }
+
+    #[test]
+    fn tag_ranges_are_disjoint() {
+        // Distinct (step, slot, purpose) triples must be >= 256 apart so
+        // a collective's internal hop counter never crosses into a
+        // neighboring range.
+        let mut tags: Vec<u64> = Vec::new();
+        for step in 0..3 {
+            for slot in 0..4 {
+                for purpose in [TAG_FWD, TAG_BWD, TAG_DISPATCH, TAG_COMBINE, TAG_GRADS, TAG_STATS]
+                {
+                    tags.push(tag(step, slot, purpose));
+                }
+            }
+        }
+        tags.sort_unstable();
+        for w in tags.windows(2) {
+            assert!(w[1] - w[0] >= 256, "tag ranges overlap: {} {}", w[0], w[1]);
+        }
     }
 }

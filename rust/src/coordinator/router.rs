@@ -146,6 +146,36 @@ impl Router {
         out
     }
 
+    /// Like [`Router::pack_a2a`], but each destination payload is
+    /// self-describing: a manifest header tells the receiving rank which
+    /// (token, expert) pair every feature vector belongs to, so the
+    /// expert owner can run the right expert with no out-of-band
+    /// metadata exchange. Layout per destination rank:
+    ///
+    /// `[n, token_0, expert_0, .., token_{n-1}, expert_{n-1}, feat_0 (d
+    /// floats), .., feat_{n-1}]`
+    ///
+    /// Header values ride in the f32 payload itself, which is exact
+    /// below 2^24 — far above any microbatch token index or expert id.
+    /// Entries appear in route order (the same order `pack_a2a` uses),
+    /// so the sender can pair the combine-phase reply chunks with its
+    /// own per-rank assignment list positionally.
+    pub fn pack_a2a_manifest(&self, result: &RouteResult, features: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let n_ranks = self.cfg.n_ranks();
+        let mut out: Vec<Vec<f32>> = (0..n_ranks).map(|_| Vec::new()).collect();
+        for (r, buf) in out.iter_mut().enumerate() {
+            buf.push(result.per_rank_tokens[r] as f32);
+        }
+        for a in &result.assignments {
+            out[a.rank].push(a.token as f32);
+            out[a.rank].push(a.expert as f32);
+        }
+        for a in &result.assignments {
+            out[a.rank].extend_from_slice(&features[a.token]);
+        }
+        out
+    }
+
     /// Draw top-k expert choices from a Zipf popularity distribution
     /// (workload generator for router/bench/netsim studies).
     pub fn synthetic_choices(
@@ -171,6 +201,33 @@ impl Router {
             })
             .collect()
     }
+}
+
+/// One routed token instance as decoded by the receiving rank from a
+/// [`Router::pack_a2a_manifest`] payload. `token` is the *sender's*
+/// token index; the receiver treats it as an opaque correlation id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutedToken {
+    pub token: usize,
+    pub expert: usize,
+    pub features: Vec<f32>,
+}
+
+/// Inverse of [`Router::pack_a2a_manifest`] for one received payload
+/// with feature dimension `d`. Panics on a malformed payload — peers
+/// are in-process workers, so a bad frame is a programming error.
+pub fn unpack_a2a_manifest(payload: &[f32], d: usize) -> Vec<RoutedToken> {
+    assert!(!payload.is_empty(), "manifest payload missing count header");
+    let n = payload[0] as usize;
+    assert_eq!(payload.len(), 1 + n * (2 + d), "malformed manifest payload");
+    let feats = &payload[1 + 2 * n..];
+    (0..n)
+        .map(|i| RoutedToken {
+            token: payload[1 + 2 * i] as usize,
+            expert: payload[2 + 2 * i] as usize,
+            features: feats[i * d..(i + 1) * d].to_vec(),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -254,6 +311,43 @@ mod tests {
         assert_eq!(packed.len(), 2);
         let total: usize = packed.iter().map(Vec::len).sum();
         assert_eq!(total, res.assignments.len() * 2);
+    }
+
+    #[test]
+    fn manifest_round_trips_per_rank() {
+        let r = Router::new(cfg(4, 2, 2, 10));
+        let choices = vec![vec![0, 2], vec![3, 1], vec![2, 0]];
+        let res = r.route(&choices);
+        let d = 3;
+        let feats: Vec<Vec<f32>> =
+            (0..3).map(|t| (0..d).map(|j| (10 * t + j) as f32).collect()).collect();
+        let packed = r.pack_a2a_manifest(&res, &feats);
+        assert_eq!(packed.len(), 2);
+        for (rank, payload) in packed.iter().enumerate() {
+            let got = unpack_a2a_manifest(payload, d);
+            let want: Vec<RoutedToken> = res
+                .assignments
+                .iter()
+                .filter(|a| a.rank == rank)
+                .map(|a| RoutedToken {
+                    token: a.token,
+                    expert: a.expert,
+                    features: feats[a.token].clone(),
+                })
+                .collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn empty_manifest_payload_unpacks_to_nothing() {
+        let r = Router::new(cfg(2, 1, 1, 4));
+        // both tokens pick expert 0 -> rank 1 receives nothing
+        let res = r.route(&[vec![0], vec![0]]);
+        let feats = vec![vec![1.0f32], vec![2.0]];
+        let packed = r.pack_a2a_manifest(&res, &feats);
+        assert_eq!(packed[1], vec![0.0]);
+        assert!(unpack_a2a_manifest(&packed[1], 1).is_empty());
     }
 
     #[test]

@@ -20,11 +20,17 @@
 //!   vs closed-form degraded-step pricing)
 //! - `netsim`   validate Hockney collectives against the packet simulator
 //! - `hw`       hardware design-space numbers (energy/area/power)
-//! - `train`    run real MoE training from AOT artifacts (single or DP)
+//! - `train`    run real MoE training from AOT artifacts (single or DP;
+//!   `--preset host` uses the in-process host-math backend)
+//! - `run`      execute the planner's winning mapping as a flight-recorded
+//!   host-backend miniature and report the three-way per-phase gap:
+//!   analytical vs simulated vs executed (`--trace exec.json` writes the
+//!   merged per-rank recording as a Chrome trace)
 //! - `trace`    deterministic Chrome/Perfetto trace of one simulated
 //!   training step (`--out step.json`, loadable at ui.perfetto.dev;
 //!   byte-identical for any `--jobs`; `--check <file>` runs the in-tree
-//!   schema checker over an existing trace instead)
+//!   schema checker over an existing trace instead; `--diff A B` aligns
+//!   two trace artifacts and reports per-phase share deltas)
 //! - `lint`     determinism & concurrency static analysis over the repo's
 //!   own sources (non-zero exit on findings; `--json` for the CI gate;
 //!   `--audit-wallclock` additionally fails on host-clock reads outside
@@ -209,6 +215,12 @@ fn cli() -> Command {
             .opt("out", "write the Chrome trace-event JSON here (omit for the summary only)")
             .opt("profile", "also write wall-clock stage timings (BENCH-style side file) here")
             .opt("check", "schema-check an existing trace file and exit (CI smoke path)")
+            .flag(
+                "diff",
+                "diff two trace files given as positionals (simulated vs executed, or \
+                 any pair) and exit",
+            )
+            .flag("json", "with --diff: machine-readable diff (util::json, deterministic)")
             .flag("events", "include per-flow admit/settle/finish instants (large traces)"),
         )
         .sub(
@@ -218,11 +230,42 @@ fn cli() -> Command {
         .sub(Command::new("hw", "hardware design-space summary"))
         .sub(
             Command::new("train", "run real AOT-compiled MoE training")
-                .opt_default("preset", "artifact preset (tiny | e2e)", "tiny")
+                .opt_default(
+                    "preset",
+                    "artifact preset (tiny | e2e | host — host needs no AOT artifacts)",
+                    "tiny",
+                )
                 .opt_default("steps", "training steps", "50")
                 .opt_default("workers", "data-parallel workers (1 = fused single)", "1")
                 .opt_default("seed", "rng seed", "42")
                 .opt("csv", "write the loss curve to this CSV file"),
+        )
+        .sub(
+            Command::new(
+                "run",
+                "execute the planner's mapping as a flight-recorded host miniature",
+            )
+            .opt(
+                "cluster",
+                "passage-512 | electrical-512 | electrical-144 (default passage-512)",
+            )
+            .opt("gpus", "custom cluster: total GPUs (with --pod-size and --gbps)")
+            .opt("pod-size", "custom cluster: GPUs per scale-up pod")
+            .opt("gbps", "custom cluster: scale-up Gb/s per GPU")
+            .opt_default("config", "MoE config index 1..4", "4")
+            .opt_default("ranks", "miniature fabric size (worker threads)", "4")
+            .opt_default("steps", "training steps to execute", "4")
+            .opt_default("micro", "1F1B microbatches per step", "2")
+            .opt_default("seed", "rng seed", "42")
+            .opt_default("jobs", "worker threads for the planner scoring grid", "1")
+            .opt("knobs", "JSON file with calibration knob overrides")
+            .opt(
+                "trace",
+                "write the merged per-rank flight recording (Chrome trace JSON) here",
+            )
+            .flag("verbose", "per-step progress to stderr")
+            .flag("json", "machine-readable output (wall-clock values live only under \
+                 executed keys: report, executed phases, metrics)"),
         )
         .sub(
             Command::new("lint", "determinism & concurrency static analysis")
@@ -277,6 +320,7 @@ fn run(sub: Option<&str>, args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("train") => train(args),
+        Some("run") => run_cmd(args),
         Some("lint") => lint_cmd(args),
         _ => {
             println!("{}", cli().help_text());
@@ -457,6 +501,31 @@ fn emit_step_trace(
 
 fn trace_cmd(args: &Args) -> anyhow::Result<()> {
     use lumos::obs;
+
+    // --diff A B: align two trace artifacts (simulated vs executed, or
+    // any pair) by (track, span name, occurrence) and report per-phase
+    // share deltas. Output is a pure function of the two files.
+    if args.flag("diff") {
+        anyhow::ensure!(
+            args.positional.len() == 2,
+            "--diff takes exactly two trace files: lumos trace --diff A.json B.json \
+             (got {})",
+            args.positional.len()
+        );
+        let (pa, pb) = (&args.positional[0], &args.positional[1]);
+        let read = |p: &str| -> anyhow::Result<Json> {
+            Json::parse(&std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?)
+                .map_err(|e| anyhow::anyhow!("{p}: {e}"))
+        };
+        let d = obs::diff_traces(&read(pa)?, &read(pb)?).map_err(anyhow::Error::msg)?;
+        if args.flag("json") {
+            println!("{}", obs::diff_json(&d, pa, pb).to_string_pretty());
+        } else {
+            println!("trace diff: A = {pa}, B = {pb}");
+            print!("{}", obs::diff_table(&d, "A", "B"));
+        }
+        return Ok(());
+    }
 
     // --check: schema-check an existing trace file and exit (the CI smoke
     // path; pure Rust, no external tooling).
@@ -1006,8 +1075,13 @@ fn train(args: &Args) -> anyhow::Result<()> {
     let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(1);
     let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(42) as u64;
 
-    let art = Artifact::load(artifacts_root()?.join(preset))?;
-    let engine = Engine::cpu()?;
+    // `host` is artifact-free: the miniature MoE block computed by the
+    // in-process host-math backend (the same pair `lumos run` executes).
+    let (art, engine) = if preset == "host" {
+        (Artifact::host_miniature(), Engine::host())
+    } else {
+        (Artifact::load(artifacts_root()?.join(preset))?, Engine::cpu()?)
+    };
     println!(
         "training '{preset}' ({} arrays, {:.1}M params) for {steps} steps, {workers} worker(s)",
         art.n_params,
@@ -1030,6 +1104,180 @@ fn train(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("csv") {
         std::fs::write(path, report.to_csv()).with_context(|| format!("writing {path}"))?;
         println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+/// `(secs, share)` objects per phase, in the canonical phase order.
+fn phase_json(p: &lumos::timeline::PhaseBreakdown) -> Json {
+    Json::obj(
+        p.rows()
+            .into_iter()
+            .map(|(k, secs, share)| {
+                (k, Json::obj(vec![("secs", Json::num(secs)), ("share", Json::num(share))]))
+            })
+            .collect(),
+    )
+}
+
+fn run_cmd(args: &Args) -> anyhow::Result<()> {
+    use lumos::obs;
+    use lumos::timeline;
+    use lumos::trainer::MiniMapping;
+
+    let cfg = args.get_usize("config").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=4).contains(&cfg), "--config must be 1..4, got {cfg}");
+    let ranks = args.get_usize("ranks").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!((1..=64).contains(&ranks), "--ranks must be 1..64, got {ranks}");
+    let steps = args.get_usize("steps").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    anyhow::ensure!(steps > 0, "--steps must be nonzero");
+    let n_micro = args.get_usize("micro").map_err(anyhow::Error::msg)?.unwrap_or(2);
+    anyhow::ensure!(n_micro > 0, "--micro must be nonzero");
+    let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(42) as u64;
+    let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let knobs = knobs_from_args(args)?;
+    let key = cluster_key_from_args(args)?;
+    let cache = ClusterCache::new();
+    let cluster = cache.get(&key);
+
+    // The planner picks the mapping shape; the miniature executes it.
+    let req = planner::PlanRequest::paper(key, cfg, &knobs).with_top(1);
+    let outcome = planner::plan_with_cache(&req, jobs, &cache);
+    anyhow::ensure!(
+        !outcome.ranked.is_empty(),
+        "no feasible mapping for this (workload, cluster) pair \
+         ({} candidates enumerated, all pruned)",
+        outcome.enumerated
+    );
+    let win = &outcome.ranked[0];
+    let map = &win.mapping;
+    let m = MiniMapping::scale(map.par.pp, ranks, n_micro);
+
+    let engine = Engine::host();
+    let art = Artifact::host_miniature();
+    let out = trainer::run_mapped(&engine, &art, m, steps, seed, args.flag("verbose"))?;
+
+    // Three views of where one training step's time goes: the closed
+    // form, the discrete-event simulation of the planner's mapping, and
+    // the span totals the flight recorder measured on the miniature.
+    // Absolute magnitudes differ by design (frontier step vs laptop
+    // step); the comparable currency is each phase's share.
+    let workload = lumos::model::Workload::paper_gpt_4p7t(cfg);
+    let analytical = timeline::analytical_phases(&win.report.breakdown, &knobs);
+    let st = obs::step_trace(&workload, &cluster, map, &knobs, false).map_err(|e| {
+        anyhow::anyhow!(
+            "cannot simulate TP{}xPP{}xDP{}: {e}",
+            map.par.tp,
+            map.par.pp,
+            map.par.dp
+        )
+    })?;
+    let executed = timeline::phases_from_cat_totals(&out.cat_totals());
+
+    if let Some(path) = args.get("trace") {
+        write_trace(path, &obs::to_trace(&out.recordings))?;
+    }
+
+    if args.flag("json") {
+        // Wall-clock-dependent values appear only under executed-side
+        // keys: "report", "phases"."executed", and "metrics".
+        let metrics = Json::Obj(
+            engine
+                .entry_stats()
+                .into_iter()
+                .map(|(name, s)| {
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("executions", Json::num(s.executions as f64)),
+                            ("total_secs", Json::num(s.total_secs)),
+                            ("compiles", Json::num(s.compiles as f64)),
+                            ("cache_hits", Json::num(s.cache_hits as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let j = Json::obj(vec![
+            ("cluster", Json::str(&cluster.spec.name)),
+            ("config", Json::str(&outcome.config_name)),
+            (
+                "planner_mapping",
+                Json::obj(vec![
+                    ("tp", Json::num(map.par.tp as f64)),
+                    ("pp", Json::num(map.par.pp as f64)),
+                    ("dp", Json::num(map.par.dp as f64)),
+                ]),
+            ),
+            (
+                "miniature",
+                Json::obj(vec![
+                    ("pp", Json::num(m.pp as f64)),
+                    ("dp", Json::num(m.dp as f64)),
+                    ("n_micro", Json::num(m.n_micro as f64)),
+                    ("ranks", Json::num(m.ranks() as f64)),
+                ]),
+            ),
+            ("report", out.report.to_json()),
+            (
+                "phases",
+                Json::obj(vec![
+                    ("analytical", phase_json(&analytical)),
+                    ("simulated", phase_json(&st.report.phases)),
+                    ("executed", phase_json(&executed)),
+                ]),
+            ),
+            ("metrics", metrics),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "run: Config {cfg} on {} — planner winner TP{}xPP{}xDP{}",
+        cluster.spec.name, map.par.tp, map.par.pp, map.par.dp
+    );
+    println!(
+        "  miniature      : pp{} x dp{} x mb{} on {} rank(s), {} step(s)",
+        m.pp,
+        m.dp,
+        m.n_micro,
+        m.ranks(),
+        steps
+    );
+    let r = &out.report;
+    println!(
+        "  loss           : {:.4} -> {:.4} ({} mode, {:.2}s total)",
+        r.first_loss(),
+        r.last_loss(),
+        r.mode,
+        r.total_secs
+    );
+    let stats = engine.entry_stats();
+    let execs: u64 = stats.iter().map(|(_, s)| s.executions).sum();
+    let hits: u64 = stats.iter().map(|(_, s)| s.cache_hits).sum();
+    println!(
+        "  engine         : {} entries, {} executions, {} cache hits",
+        stats.len(),
+        execs,
+        hits
+    );
+    println!("three-way phase shares (% of each view's own step):");
+    println!(
+        "  {:<8}  {:>10}  {:>10}  {:>10}",
+        "phase", "analytical", "simulated", "executed"
+    );
+    let ana = analytical.rows();
+    let sim = st.report.phases.rows();
+    let exe = executed.rows();
+    for ((a, s), e) in ana.iter().zip(&sim).zip(&exe) {
+        println!(
+            "  {:<8}  {:>9.1}%  {:>9.1}%  {:>9.1}%",
+            a.0,
+            100.0 * a.2,
+            100.0 * s.2,
+            100.0 * e.2
+        );
     }
     Ok(())
 }

@@ -1,0 +1,369 @@
+//! Trace diff: align two Chrome trace-event artifacts and report
+//! per-phase deltas and unmatched spans.
+//!
+//! Both sides of a diff are artifacts this repo emits — the simulated
+//! step timeline ([`crate::obs::trace::step_trace`]), the executed
+//! flight recording ([`crate::obs::record::to_trace`]), or any prior
+//! copy of either — so the alignment key is the contract those builders
+//! share: **(track, span name, occurrence index)**, where a track is the
+//! metadata-resolved `process/thread` name pair (logical ids: pipeline
+//! stage, rank), and the occurrence index is the span's ordinal among
+//! same-named spans on its track ordered by start time. Nothing aligns
+//! on timestamps, so traces with wildly different time bases (simulated
+//! seconds vs. host-miniature wall seconds) still pair span-for-span.
+//!
+//! Durations aggregate by span category into the repo's six step phases
+//! (`compute` / `tp` / `ep` / `pp` / `dp` / `bubble`, anything else
+//! under `other`), mirroring `timeline::PhaseBreakdown` — the per-phase
+//! table is therefore directly comparable with `lumos validate` output.
+//! Because absolute magnitudes differ across sides, the table leads with
+//! each phase's **share of its own trace's total**; the delta column is
+//! the share delta in percentage points.
+//!
+//! `diff(A, A)` is empty (zero deltas, no unmatched spans) and
+//! `diff(A, B)` mirrors `diff(B, A)` up to sign/side swap — both pinned
+//! in `tests/obs_record_prop.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// The canonical step phases, in report order (`other` collects any
+/// category outside the six).
+pub const PHASE_ORDER: [&str; 7] = ["compute", "tp", "ep", "pp", "dp", "bubble", "other"];
+
+/// One span pulled out of a Chrome trace-event document.
+#[derive(Debug, Clone)]
+pub struct ParsedSpan {
+    /// `process/thread` display names (falls back to `pid N/tid M`).
+    pub track: String,
+    pub name: String,
+    pub cat: String,
+    pub ts_s: f64,
+    pub dur_s: f64,
+}
+
+/// The span content of one trace artifact (metadata resolved, counters
+/// and instants dropped — the diff is about where time went).
+#[derive(Debug, Clone, Default)]
+pub struct ParsedTrace {
+    pub spans: Vec<ParsedSpan>,
+}
+
+/// Extract the `ph: "X"` spans of a Chrome trace-event document,
+/// resolving pid/tid to display names via the `M` metadata records.
+pub fn parse_chrome_trace(doc: &Json) -> Result<ParsedTrace, String> {
+    let evs = doc
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| "top level must be an object with a \"traceEvents\" array".to_string())?;
+    let mut procs: BTreeMap<i64, String> = BTreeMap::new();
+    let mut threads: BTreeMap<(i64, i64), String> = BTreeMap::new();
+    for e in evs {
+        if e.get("ph").as_str() != Some("M") {
+            continue;
+        }
+        let pid = e.get("pid").as_f64().unwrap_or(0.0) as i64;
+        let tid = e.get("tid").as_f64().unwrap_or(0.0) as i64;
+        if let Some(name) = e.get("args").get("name").as_str() {
+            match e.get("name").as_str() {
+                Some("process_name") => {
+                    procs.insert(pid, name.to_string());
+                }
+                Some("thread_name") => {
+                    threads.insert((pid, tid), name.to_string());
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut spans = Vec::new();
+    for (i, e) in evs.iter().enumerate() {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let name = e
+            .get("name")
+            .as_str()
+            .ok_or_else(|| format!("event {i}: span lacks a string \"name\""))?;
+        let ts = e
+            .get("ts")
+            .as_f64()
+            .ok_or_else(|| format!("event {i}: span lacks numeric \"ts\""))?;
+        let dur = e
+            .get("dur")
+            .as_f64()
+            .ok_or_else(|| format!("event {i}: span lacks numeric \"dur\""))?;
+        let pid = e.get("pid").as_f64().unwrap_or(0.0) as i64;
+        let tid = e.get("tid").as_f64().unwrap_or(0.0) as i64;
+        let pname = procs.get(&pid).cloned().unwrap_or_else(|| format!("pid {pid}"));
+        let tname = threads
+            .get(&(pid, tid))
+            .cloned()
+            .unwrap_or_else(|| format!("tid {tid}"));
+        spans.push(ParsedSpan {
+            track: format!("{pname}/{tname}"),
+            name: name.to_string(),
+            cat: e.get("cat").as_str().unwrap_or("").to_string(),
+            ts_s: ts / 1e6,
+            dur_s: dur / 1e6,
+        });
+    }
+    Ok(ParsedTrace { spans })
+}
+
+/// Per-phase durations on both sides, seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseDelta {
+    pub a_s: f64,
+    pub b_s: f64,
+}
+
+impl PhaseDelta {
+    /// Share of this phase in `total` (0 if the trace is empty).
+    fn share(secs: f64, total: f64) -> f64 {
+        if total > 0.0 {
+            secs / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The aligned diff of two traces (module docs have the alignment key).
+#[derive(Debug, Clone, Default)]
+pub struct TraceDiff {
+    /// Phase → durations, keyed by [`PHASE_ORDER`] entries.
+    pub phases: BTreeMap<String, PhaseDelta>,
+    /// Spans paired by (track, name, occurrence).
+    pub matched: usize,
+    /// `(track/name, count)` of spans only present in A, sorted.
+    pub only_a: Vec<(String, usize)>,
+    /// Likewise for B.
+    pub only_b: Vec<(String, usize)>,
+}
+
+impl TraceDiff {
+    /// Total span seconds on side A.
+    pub fn total_a(&self) -> f64 {
+        self.phases.values().map(|p| p.a_s).sum()
+    }
+
+    /// Total span seconds on side B.
+    pub fn total_b(&self) -> f64 {
+        self.phases.values().map(|p| p.b_s).sum()
+    }
+
+    /// True when nothing differs structurally and every phase delta is
+    /// exactly zero — the `diff(A, A)` case.
+    pub fn is_empty(&self) -> bool {
+        self.only_a.is_empty()
+            && self.only_b.is_empty()
+            && self.phases.values().all(|p| p.a_s == p.b_s)
+    }
+}
+
+fn canonical_phase(cat: &str) -> &'static str {
+    PHASE_ORDER[..6].iter().find(|p| **p == cat).copied().unwrap_or("other")
+}
+
+fn unmatched(
+    counts: &BTreeMap<(String, String), (usize, usize)>,
+    side_a: bool,
+) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for ((track, name), (na, nb)) in counts {
+        let extra = if side_a { na.saturating_sub(*nb) } else { nb.saturating_sub(*na) };
+        if extra > 0 {
+            out.push((format!("{track}/{name}"), extra));
+        }
+    }
+    out
+}
+
+/// Align `a` and `b` by (track, name, occurrence) and aggregate matched
+/// span durations per phase; excess occurrences on either side are
+/// reported unmatched (their durations still count toward their own
+/// side's phase totals, so phase shares describe the whole trace).
+pub fn diff_parsed(a: &ParsedTrace, b: &ParsedTrace) -> TraceDiff {
+    let mut counts: BTreeMap<(String, String), (usize, usize)> = BTreeMap::new();
+    for s in &a.spans {
+        counts.entry((s.track.clone(), s.name.clone())).or_default().0 += 1;
+    }
+    for s in &b.spans {
+        counts.entry((s.track.clone(), s.name.clone())).or_default().1 += 1;
+    }
+    let mut diff = TraceDiff::default();
+    for p in PHASE_ORDER {
+        diff.phases.insert(p.to_string(), PhaseDelta::default());
+    }
+    for s in &a.spans {
+        if let Some(p) = diff.phases.get_mut(canonical_phase(&s.cat)) {
+            p.a_s += s.dur_s;
+        }
+    }
+    for s in &b.spans {
+        if let Some(p) = diff.phases.get_mut(canonical_phase(&s.cat)) {
+            p.b_s += s.dur_s;
+        }
+    }
+    diff.matched = counts.values().map(|(na, nb)| na.min(nb)).sum();
+    diff.only_a = unmatched(&counts, true);
+    diff.only_b = unmatched(&counts, false);
+    diff
+}
+
+/// [`diff_parsed`] over raw Chrome trace-event documents.
+pub fn diff_traces(a: &Json, b: &Json) -> Result<TraceDiff, String> {
+    Ok(diff_parsed(&parse_chrome_trace(a)?, &parse_chrome_trace(b)?))
+}
+
+/// Render the diff as a fixed-width table. Durations are each side's
+/// absolute seconds; `share` columns are the phase's fraction of its own
+/// trace total, and `Δshare` is their difference in percentage points —
+/// the cross-time-base comparison the module docs motivate.
+pub fn diff_table(d: &TraceDiff, label_a: &str, label_b: &str) -> String {
+    let (ta, tb) = (d.total_a(), d.total_b());
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8}  {:>12}  {:>7}  {:>12}  {:>7}  {:>8}\n",
+        "phase",
+        format!("{label_a} (s)"),
+        "share",
+        format!("{label_b} (s)"),
+        "share",
+        "Δshare"
+    ));
+    for key in PHASE_ORDER {
+        let p = d.phases.get(key).copied().unwrap_or_default();
+        if key == "other" && p.a_s == 0.0 && p.b_s == 0.0 {
+            continue;
+        }
+        let sa = PhaseDelta::share(p.a_s, ta);
+        let sb = PhaseDelta::share(p.b_s, tb);
+        out.push_str(&format!(
+            "{:<8}  {:>12.6}  {:>6.1}%  {:>12.6}  {:>6.1}%  {:>+7.1}pp\n",
+            key,
+            p.a_s,
+            100.0 * sa,
+            p.b_s,
+            100.0 * sb,
+            100.0 * (sb - sa)
+        ));
+    }
+    out.push_str(&format!(
+        "{:<8}  {:>12.6}  {:>6.1}%  {:>12.6}  {:>6.1}%\n",
+        "total", ta, 100.0, tb, 100.0
+    ));
+    out.push_str(&format!("matched spans: {}\n", d.matched));
+    for (what, list) in [(label_a, &d.only_a), (label_b, &d.only_b)] {
+        if !list.is_empty() {
+            let items: Vec<String> =
+                list.iter().map(|(k, n)| format!("{k} ×{n}")).collect();
+            out.push_str(&format!("only in {}: {}\n", what, items.join(", ")));
+        }
+    }
+    out
+}
+
+/// JSON artifact form of the diff (same content as [`diff_table`]).
+pub fn diff_json(d: &TraceDiff, label_a: &str, label_b: &str) -> Json {
+    let (ta, tb) = (d.total_a(), d.total_b());
+    let mut phases: Vec<(&str, Json)> = Vec::new();
+    for key in PHASE_ORDER {
+        let p = d.phases.get(key).copied().unwrap_or_default();
+        phases.push((
+            key,
+            Json::obj(vec![
+                ("a_s", Json::num(p.a_s)),
+                ("b_s", Json::num(p.b_s)),
+                ("a_share", Json::num(PhaseDelta::share(p.a_s, ta))),
+                ("b_share", Json::num(PhaseDelta::share(p.b_s, tb))),
+            ]),
+        ));
+    }
+    let side = |list: &[(String, usize)]| {
+        Json::Arr(
+            list.iter()
+                .map(|(k, n)| {
+                    Json::obj(vec![("span", Json::str(k)), ("count", Json::num(*n as f64))])
+                })
+                .collect(),
+        )
+    };
+    Json::obj(vec![
+        ("a", Json::str(label_a)),
+        ("b", Json::str(label_b)),
+        ("total_a_s", Json::num(ta)),
+        ("total_b_s", Json::num(tb)),
+        ("phases", Json::obj(phases)),
+        ("matched_spans", Json::num(d.matched as f64)),
+        ("only_a", side(&d.only_a)),
+        ("only_b", side(&d.only_b)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::record::{to_trace, Recorder};
+
+    fn sample(ranks: usize) -> Json {
+        let mut recs = Vec::new();
+        for rank in 0..ranks {
+            let mut r = Recorder::start(rank);
+            r.cut("fwd 0", "compute");
+            r.cut("dispatch a2a 0", "ep");
+            r.cut("bwd 0", "compute");
+            r.cut("grad all-reduce", "dp");
+            recs.push(r.finish());
+        }
+        to_trace(&recs).to_chrome_json()
+    }
+
+    #[test]
+    fn self_diff_is_empty() {
+        let doc = sample(2);
+        let d = diff_traces(&doc, &doc).expect("parse");
+        assert!(d.is_empty());
+        assert_eq!(d.matched, 8);
+        for p in d.phases.values() {
+            assert_eq!(p.a_s, p.b_s);
+        }
+    }
+
+    #[test]
+    fn diff_is_symmetric_up_to_side_swap() {
+        let da = diff_traces(&sample(2), &sample(3)).expect("parse");
+        let db = diff_traces(&sample(3), &sample(2)).expect("parse");
+        assert_eq!(da.matched, db.matched);
+        assert_eq!(da.only_a, db.only_b);
+        assert_eq!(da.only_b, db.only_a);
+        for key in PHASE_ORDER {
+            let pa = da.phases[key];
+            let pb = db.phases[key];
+            assert_eq!(pa.a_s, pb.b_s);
+            assert_eq!(pa.b_s, pb.a_s);
+        }
+    }
+
+    #[test]
+    fn unmatched_spans_are_reported_per_track() {
+        let da = diff_traces(&sample(2), &sample(3)).expect("parse");
+        assert!(da.only_a.is_empty());
+        assert_eq!(da.only_b.len(), 4);
+        assert!(da.only_b.iter().all(|(k, n)| k.starts_with("exec/rank 2/") && *n == 1));
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let d = diff_traces(&sample(2), &sample(3)).expect("parse");
+        let table = diff_table(&d, "sim", "exec");
+        assert!(table.contains("compute"));
+        assert!(table.contains("matched spans: 8"));
+        assert!(table.contains("only in exec"));
+        let j = diff_json(&d, "sim", "exec");
+        assert_eq!(j.get("matched_spans").as_f64(), Some(8.0));
+        assert!(j.get("phases").get("ep").get("a_s").as_f64().is_some());
+    }
+}

@@ -12,22 +12,37 @@
 //!   the tools actually did (DAG nodes lowered, simulator events, cache
 //!   reuse). Aggregated in deterministic (worker-index) order and surfaced
 //!   under the stable `"metrics"` key of every `--json` output.
-//! - [`profile`] — the one place allowed to read the host clock: opt-in
-//!   wall-clock stage timers feeding `BENCH_*.json`-style side files,
-//!   never the deterministic artifacts. The `lumos lint` wallclock audit
-//!   keeps every other module clock-free.
+//! - [`profile`] — opt-in wall-clock stage timers feeding
+//!   `BENCH_*.json`-style side files, never the deterministic artifacts.
+//! - [`record`] — the execution flight recorder: per-rank wall-clock
+//!   deltas captured by ONE quarantined [`record::Stopwatch`] helper and
+//!   normalized *at capture* to origin-relative time and logical ids
+//!   (rank/stage/expert), so recorded traces are schema-valid and
+//!   structurally identical across hosts (only durations vary). Together
+//!   with [`profile`] these are the only modules allowed to read the
+//!   host clock; the `lumos lint --audit-wallclock` gate keeps every
+//!   other module clock-free.
+//! - [`diff`] — aligns two trace artifacts (simulated vs executed, or
+//!   any pair) by (track, span name, occurrence) and reports per-phase
+//!   deltas plus unmatched spans (`lumos trace --diff`).
 //!
 //! The trace event schema and the determinism argument are documented in
-//! `rust/DESIGN.md` §Observability; `tests/obs_prop.rs` pins byte-identity
-//! across job counts, span-nesting well-formedness, and the agreement of
-//! per-stage span sums with `lumos validate`'s phase breakdown.
+//! `rust/DESIGN.md` §Observability and §Execution observability;
+//! `tests/obs_prop.rs` pins byte-identity across job counts,
+//! span-nesting well-formedness, and the agreement of per-stage span
+//! sums with `lumos validate`'s phase breakdown; `tests/obs_record_prop.rs`
+//! pins the recorder/diff invariants.
 
+pub mod diff;
 pub mod metrics;
 pub mod profile;
+pub mod record;
 pub mod trace;
 
+pub use diff::{diff_json, diff_parsed, diff_table, diff_traces, parse_chrome_trace, TraceDiff};
 pub use metrics::{Hist, Metrics};
 pub use profile::StageProfiler;
+pub use record::{to_trace, Recorder, Recording, Stopwatch, PID_EXEC};
 pub use trace::{
     check_chrome_trace, resilience_trace, step_trace, StepTrace, Trace, TraceCheck, TraceEvent,
     PID_FABRIC, PID_RESILIENCE, PID_STEP,

@@ -1,0 +1,269 @@
+//! Execution flight recorder: wall-clock capture quarantined behind a
+//! normalize-at-capture boundary.
+//!
+//! This is the first module where *real* time enters the repo's
+//! artifacts, so the boundary is explicit and lint-audited:
+//!
+//! - The only clock reads live in [`Stopwatch`], inside the
+//!   `wallclock-capture-begin` / `wallclock-capture-end` marker comments
+//!   below. `lumos lint --audit-wallclock` rejects a clock-read site in
+//!   this file *outside* that region (see
+//!   `analysis::wallclock_capture_regions`), and rejects one in any
+//!   other module not on `analysis::WALLCLOCK_ALLOWED` at all.
+//! - **Normalize at capture:** a [`Recorder`] never stores absolute
+//!   timestamps. Every lap is folded into a logical cursor relative to
+//!   the recording origin, and every span/instant/counter is keyed on
+//!   logical ids (rank, stage, microbatch, expert) — so a recorded trace
+//!   has the same shape on every host (same tracks, names, categories,
+//!   event counts and ordering; only the float durations differ) and is
+//!   schema-valid under [`crate::obs::check_chrome_trace`].
+//! - **Partition by construction:** [`Recorder::cut`] closes the span
+//!   `[cursor, cursor + lap]` and advances the cursor, so the spans of
+//!   one rank's track tile `[0, end]` exactly — the same invariant the
+//!   simulated step trace guarantees, which is what makes recorded and
+//!   simulated traces diffable phase-by-phase (`obs::diff`).
+//!
+//! Per-rank [`Recording`]s are merged (in rank order) into one
+//! [`Trace`] under [`PID_EXEC`] by [`to_trace`].
+
+use crate::obs::trace::Trace;
+
+/// Process id of executed per-rank tracks (the simulated step uses
+/// [`crate::obs::trace::PID_STEP`]; 1–3 are taken).
+pub const PID_EXEC: usize = 4;
+
+// lumos: wallclock-capture-begin
+//
+// The ONLY clock reads allowed in this file. Everything below the
+// matching `end` marker sees time exclusively as `f64` deltas already
+// normalized to the recording origin.
+
+/// Monotonic lap timer: the single normalize-at-capture helper. Reads
+/// the host clock, hands out only origin-relative `f64` seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    origin: std::time::Instant,
+    last: std::time::Instant,
+}
+
+impl Stopwatch {
+    /// Start the watch; the origin of all reported times.
+    pub fn start() -> Stopwatch {
+        // lumos: allow(wallclock) -- the flight recorder's quarantined capture helper
+        let now = std::time::Instant::now();
+        Stopwatch { origin: now, last: now }
+    }
+
+    /// Seconds since the previous `lap()` (or since `start`), and reset
+    /// the lap marker. Non-negative by `Instant`'s monotonicity.
+    pub fn lap(&mut self) -> f64 {
+        // lumos: allow(wallclock) -- the flight recorder's quarantined capture helper
+        let now = std::time::Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+
+    /// Seconds since `start`, without resetting the lap marker.
+    pub fn total(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+// lumos: wallclock-capture-end
+
+/// One recorded span, origin-relative seconds.
+#[derive(Debug, Clone)]
+pub struct RecSpan {
+    pub name: String,
+    pub cat: String,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub args: Vec<(String, f64)>,
+}
+
+/// One rank's finished flight recording: spans partition
+/// `[0, end_s]`, instants and counter samples ride along.
+#[derive(Debug, Clone)]
+pub struct Recording {
+    pub rank: usize,
+    /// Logical end of the recording = sum of all lap deltas.
+    pub end_s: f64,
+    pub spans: Vec<RecSpan>,
+    /// `(name, cat, ts)` thread-scoped instants.
+    pub instants: Vec<(String, String, f64)>,
+    /// `(name, ts, value)` counter samples.
+    pub counters: Vec<(String, f64, f64)>,
+}
+
+/// Per-rank flight recorder (module docs have the capture contract).
+///
+/// Drivers call [`Recorder::cut`] after each phase of work; the elapsed
+/// wall time since the previous cut becomes that phase's span. Time is
+/// never attributed twice and never dropped: whatever ran between two
+/// cuts belongs to the second cut's label.
+#[derive(Debug)]
+pub struct Recorder {
+    rank: usize,
+    watch: Stopwatch,
+    cursor: f64,
+    spans: Vec<RecSpan>,
+    instants: Vec<(String, String, f64)>,
+    counters: Vec<(String, f64, f64)>,
+}
+
+impl Recorder {
+    /// Start recording rank `rank`; time zero is now.
+    pub fn start(rank: usize) -> Recorder {
+        Recorder {
+            rank,
+            watch: Stopwatch::start(),
+            cursor: 0.0,
+            spans: Vec::new(),
+            instants: Vec::new(),
+            counters: Vec::new(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Logical time of the recording cursor (sum of laps so far).
+    pub fn now(&self) -> f64 {
+        self.cursor
+    }
+
+    /// Close the span covering everything since the previous cut.
+    pub fn cut(&mut self, name: &str, cat: &str) {
+        self.cut_args(name, cat, &[]);
+    }
+
+    /// [`Recorder::cut`] with numeric args attached to the span.
+    pub fn cut_args(&mut self, name: &str, cat: &str, args: &[(&str, f64)]) {
+        let dt = self.watch.lap();
+        let start = self.cursor;
+        self.cursor = start + dt;
+        self.spans.push(RecSpan {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            start_s: start,
+            end_s: self.cursor,
+            args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Drop a zero-duration instant at the cursor (does not lap: the
+    /// elapsed time stays attributed to the next cut).
+    pub fn mark(&mut self, name: &str, cat: &str) {
+        self.instants.push((name.to_string(), cat.to_string(), self.cursor));
+    }
+
+    /// Sample a counter track at the cursor.
+    pub fn counter(&mut self, name: &str, value: f64) {
+        self.counters.push((name.to_string(), self.cursor, value));
+    }
+
+    /// Finish: the recording ends at the current cursor. Any wall time
+    /// after the last cut is deliberately not attributed.
+    pub fn finish(self) -> Recording {
+        Recording {
+            rank: self.rank,
+            end_s: self.cursor,
+            spans: self.spans,
+            instants: self.instants,
+            counters: self.counters,
+        }
+    }
+}
+
+/// Merge per-rank recordings into one executed-step [`Trace`]: process
+/// [`PID_EXEC`], one span track per rank (tid = rank), counter tracks
+/// named by the recording. Recordings are sorted by rank so the artifact
+/// layout is independent of worker completion order.
+pub fn to_trace(recordings: &[Recording]) -> Trace {
+    let mut order: Vec<&Recording> = recordings.iter().collect();
+    order.sort_by_key(|r| r.rank);
+    let mut t = Trace::new();
+    t.process(PID_EXEC, "exec");
+    for rec in &order {
+        t.thread(PID_EXEC, rec.rank, &format!("rank {}", rec.rank));
+    }
+    for rec in &order {
+        for s in &rec.spans {
+            let args: Vec<(&str, f64)> = s.args.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            t.span_args(PID_EXEC, rec.rank, &s.name, &s.cat, s.start_s, s.end_s, &args);
+        }
+        for (name, cat, ts) in &rec.instants {
+            t.instant(PID_EXEC, rec.rank, name, cat, *ts);
+        }
+        for (name, ts, value) in &rec.counters {
+            t.counter(PID_EXEC, &format!("rank {} {}", rec.rank, name), *ts, *value);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::check_chrome_trace;
+
+    #[test]
+    fn laps_are_non_negative_and_sum_to_total() {
+        let mut w = Stopwatch::start();
+        let mut sum = 0.0;
+        for _ in 0..100 {
+            let dt = w.lap();
+            assert!(dt >= 0.0);
+            sum += dt;
+        }
+        assert!(w.total() >= sum);
+    }
+
+    #[test]
+    fn cuts_partition_the_recording() {
+        let mut r = Recorder::start(3);
+        r.mark("step 0", "step");
+        for i in 0..50 {
+            let mut x = 1.0f64;
+            for k in 0..100 {
+                x += (k as f64).sqrt();
+            }
+            r.cut_args(&format!("phase {}", i % 5), "compute", &[("x", x)]);
+            r.counter("work", i as f64);
+        }
+        let rec = r.finish();
+        assert_eq!(rec.rank, 3);
+        assert_eq!(rec.spans.len(), 50);
+        // Exact contiguity: each span starts where the previous ended.
+        let mut cursor = 0.0;
+        for s in &rec.spans {
+            assert_eq!(s.start_s, cursor);
+            assert!(s.end_s >= s.start_s);
+            cursor = s.end_s;
+        }
+        assert_eq!(cursor, rec.end_s);
+    }
+
+    #[test]
+    fn merged_trace_passes_the_schema_checker() {
+        let mut recs = Vec::new();
+        for rank in (0..4).rev() {
+            let mut r = Recorder::start(rank);
+            r.mark("step 0", "step");
+            r.cut("fwd", "compute");
+            r.cut("a2a", "ep");
+            r.counter("bytes sent", 128.0);
+            r.cut("bwd", "compute");
+            recs.push(r.finish());
+        }
+        let trace = to_trace(&recs);
+        let doc = trace.to_chrome_json();
+        let check = check_chrome_trace(&doc).expect("recorded trace is schema-valid");
+        assert_eq!(check.spans, 12);
+        assert_eq!(check.tracks, 4);
+        assert_eq!(check.instants, 4);
+        assert_eq!(check.counters, 4);
+    }
+}

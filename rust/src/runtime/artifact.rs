@@ -104,6 +104,40 @@ impl Artifact {
         })
     }
 
+    /// The in-memory manifest of the pure-Rust host miniature (see
+    /// [`crate::runtime::host`]): same entrypoint names, state layout
+    /// and config keys as an on-disk artifact, but nothing on disk —
+    /// `file` fields carry the `"<builtin>"` sentinel and
+    /// [`Artifact::hlo_path`] must never be consulted (the host engine
+    /// does not).
+    pub fn host_miniature() -> Artifact {
+        Self::host_with(crate::runtime::host::HostCfg::miniature())
+    }
+
+    /// [`Artifact::host_miniature`] with explicit model dims.
+    pub fn host_with(cfg: crate::runtime::host::HostCfg) -> Artifact {
+        let entrypoints = crate::runtime::host::entry_specs(&cfg);
+        let param_names: Vec<String> =
+            cfg.param_shapes().into_iter().map(|(n, _)| n.to_string()).collect();
+        let num = |v: usize| Json::num(v as f64);
+        Artifact {
+            dir: PathBuf::from("<host>"),
+            n_params: param_names.len(),
+            total_param_elements: cfg.total_param_elements(),
+            param_names,
+            entrypoints,
+            config: Json::obj(vec![
+                ("vocab", num(cfg.vocab)),
+                ("d_model", num(cfg.d_model)),
+                ("d_ff", num(cfg.d_ff)),
+                ("n_experts", num(cfg.n_experts)),
+                ("top_k", num(cfg.top_k)),
+                ("batch", num(cfg.batch)),
+                ("seq_len", num(cfg.seq_len)),
+            ]),
+        }
+    }
+
     pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
         self.entrypoints
             .get(name)
@@ -178,6 +212,28 @@ mod tests {
         let d = std::env::temp_dir().join(format!("lumos-artifact-test-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&d);
         d
+    }
+
+    #[test]
+    fn host_miniature_is_a_complete_artifact() {
+        let a = Artifact::host_miniature();
+        assert_eq!(a.n_params, 7);
+        assert_eq!(a.state_len(), 22);
+        assert_eq!(a.param_names.len(), a.n_params);
+        for name in ["init", "grad_step", "apply_update", "train_step"] {
+            let e = a.entry(name).unwrap();
+            assert_eq!(e.file, "<builtin>");
+        }
+        assert_eq!(a.cfg_usize("batch").unwrap(), 2);
+        assert_eq!(a.cfg_usize("seq_len").unwrap(), 16);
+        assert_eq!(a.cfg_usize("vocab").unwrap(), 64);
+        let init = a.entry("init").unwrap();
+        assert_eq!(init.outputs.len(), a.state_len());
+        let total: usize = init.outputs[..a.n_params]
+            .iter()
+            .map(|s| s.elements())
+            .sum();
+        assert_eq!(total, a.total_param_elements);
     }
 
     #[test]

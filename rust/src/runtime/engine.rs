@@ -1,17 +1,29 @@
-//! PJRT execution engine: compile HLO-text artifacts once, execute many
-//! times from the (Python-free) hot path.
+//! Execution engine: compile artifacts once, execute many times from the
+//! (Python-free) hot path.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Two backends behind one API:
+//!
+//! - **PJRT** ([`Engine::cpu`]) wraps the `xla` crate (xla_extension
+//!   0.5.1, CPU PJRT): `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`.
+//! - **Host** ([`Engine::host`]) dispatches the same entry names to the
+//!   pure-Rust miniature in [`crate::runtime::host`] — no PJRT, no HLO
+//!   files, same manifest-validated [`Tensor`] contract.
+//!
+//! Per-entry [`EntryStats`] count compiles, cache hits and executions
+//! with wall time routed through the quarantined
+//! [`crate::obs::record::Stopwatch`] capture helper (`lumos run --json`
+//! surfaces them under `"metrics"`).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::record::Stopwatch;
 use crate::runtime::artifact::{Artifact, EntrySpec};
+use crate::runtime::host::{self, HostCfg, HostEntry};
 use crate::runtime::tensor::Tensor;
 use crate::util::sync::lock;
 
@@ -25,10 +37,11 @@ use crate::util::sync::lock;
 /// return only plain host data ([`Tensor`]). That makes the `unsafe impl
 /// Send/Sync` below sound: the wrapped values are never touched
 /// concurrently. (The coordinator's DP workers lose no real parallelism —
-/// XLA:CPU already parallelizes one execution across cores.)
+/// XLA:CPU already parallelizes one execution across cores. The host
+/// backend holds no xla values and never takes this lock.)
 static XLA_LOCK: Mutex<()> = Mutex::new(());
 
-/// Shared PJRT client + compile cache. Cheap to clone.
+/// Shared backend + compile cache. Cheap to clone.
 #[derive(Clone)]
 pub struct Engine {
     inner: Arc<EngineInner>,
@@ -41,17 +54,27 @@ unsafe impl Sync for Engine {}
 unsafe impl Send for CompiledEntry {}
 unsafe impl Sync for CompiledEntry {}
 
+enum Backend {
+    Pjrt(xla::PjRtClient),
+    Host,
+}
+
 struct EngineInner {
-    client: xla::PjRtClient,
+    backend: Backend,
     /// entry name -> compiled executable (compilation is expensive; cache).
     cache: Mutex<BTreeMap<String, Arc<CompiledEntry>>>,
+}
+
+enum EntryExe {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Host { kind: HostEntry, cfg: HostCfg },
 }
 
 /// A compiled entrypoint bound to its manifest spec.
 pub struct CompiledEntry {
     pub spec: EntrySpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// Execution statistics (for EXPERIMENTS.md §Perf).
+    exe: EntryExe,
+    /// Execution statistics (for EXPERIMENTS.md §Perf and `run --json`).
     stats: Mutex<EntryStats>,
 }
 
@@ -59,6 +82,23 @@ pub struct CompiledEntry {
 pub struct EntryStats {
     pub executions: u64,
     pub total_secs: f64,
+    /// Times this entry was actually compiled/bound (1 per cache entry).
+    pub compiles: u64,
+    /// Cache hits served by [`Engine::load`] after the first load.
+    pub cache_hits: u64,
+}
+
+/// Read the host-miniature model dims out of an artifact's config echo.
+fn host_cfg(artifact: &Artifact) -> Result<HostCfg> {
+    Ok(HostCfg {
+        vocab: artifact.cfg_usize("vocab")?,
+        d_model: artifact.cfg_usize("d_model")?,
+        d_ff: artifact.cfg_usize("d_ff")?,
+        n_experts: artifact.cfg_usize("n_experts")?,
+        top_k: artifact.cfg_usize("top_k")?,
+        batch: artifact.cfg_usize("batch")?,
+        seq_len: artifact.cfg_usize("seq_len")?,
+    })
 }
 
 impl Engine {
@@ -66,12 +106,29 @@ impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine {
-            inner: Arc::new(EngineInner { client, cache: Mutex::new(BTreeMap::new()) }),
+            inner: Arc::new(EngineInner {
+                backend: Backend::Pjrt(client),
+                cache: Mutex::new(BTreeMap::new()),
+            }),
         })
     }
 
+    /// Create the pure-Rust host engine (always available; see
+    /// [`crate::runtime::host`]).
+    pub fn host() -> Engine {
+        Engine {
+            inner: Arc::new(EngineInner {
+                backend: Backend::Host,
+                cache: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
     pub fn platform(&self) -> String {
-        self.inner.client.platform_name()
+        match &self.inner.backend {
+            Backend::Pjrt(client) => client.platform_name(),
+            Backend::Host => "host".to_string(),
+        }
     }
 
     /// Load + compile an entrypoint (cached per engine by artifact-dir+name).
@@ -79,34 +136,49 @@ impl Engine {
         let entry = artifact.entry(entry_name)?.clone();
         let key = format!("{}::{}", artifact.dir.display(), entry_name);
         if let Some(hit) = lock(&self.inner.cache).get(&key) {
+            lock(&hit.stats).cache_hits += 1;
             return Ok(hit.clone());
         }
-        let _xla = lock(&XLA_LOCK);
-        let path = artifact.hlo_path(&entry);
-        // lumos: allow(wallclock) -- compile-time reporting to stderr, not part of any result
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .inner
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling entry '{entry_name}'"))?;
-        let compiled = Arc::new(CompiledEntry {
-            spec: entry,
-            exe,
-            stats: Mutex::new(EntryStats::default()),
-        });
-        eprintln!(
-            "[runtime] compiled '{entry_name}' ({}) in {:.2}s",
-            path.file_name().unwrap_or_default().to_string_lossy(),
-            t0.elapsed().as_secs_f64()
-        );
+        let mut stats = EntryStats { compiles: 1, ..EntryStats::default() };
+        let exe = match &self.inner.backend {
+            Backend::Host => EntryExe::Host {
+                kind: HostEntry::from_name(entry_name)?,
+                cfg: host_cfg(artifact)?,
+            },
+            Backend::Pjrt(client) => {
+                let _xla = lock(&XLA_LOCK);
+                let path = artifact.hlo_path(&entry);
+                let mut watch = Stopwatch::start();
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 artifact path")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling entry '{entry_name}'"))?;
+                let compile_secs = watch.lap();
+                stats.total_secs += compile_secs;
+                eprintln!(
+                    "[runtime] compiled '{entry_name}' ({}) in {compile_secs:.2}s",
+                    path.file_name().unwrap_or_default().to_string_lossy(),
+                );
+                EntryExe::Pjrt(exe)
+            }
+        };
+        let compiled =
+            Arc::new(CompiledEntry { spec: entry, exe, stats: Mutex::new(stats) });
         lock(&self.inner.cache).insert(key, compiled.clone());
         Ok(compiled)
+    }
+
+    /// Snapshot of every cached entry's stats, in cache-key order (the
+    /// `"metrics"` payload of `lumos run --json`).
+    pub fn entry_stats(&self) -> Vec<(String, EntryStats)> {
+        lock(&self.inner.cache)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.stats()))
+            .collect()
     }
 }
 
@@ -136,9 +208,16 @@ impl LitVal {
 }
 
 impl CompiledEntry {
+    fn record_execution(&self, elapsed: f64) {
+        let mut st = lock(&self.stats);
+        st.executions += 1;
+        st.total_secs += elapsed;
+    }
+
     /// Execute with literal-form values: the hot-loop path. Skips the
-    /// Tensor<->Vec conversions of [`CompiledEntry::execute`] (the
-    /// remaining copies are PJRT's own host<->device transfers).
+    /// Tensor<->Vec conversions of [`CompiledEntry::execute`] on PJRT
+    /// (the remaining copies are PJRT's own host<->device transfers); on
+    /// the host backend it simply round-trips through [`Tensor`].
     /// Arity is checked; shapes are trusted (they come from a previous
     /// execution or a validated tensor).
     pub fn execute_literals(&self, inputs: &[&LitVal]) -> Result<Vec<LitVal>> {
@@ -150,17 +229,22 @@ impl CompiledEntry {
                 self.spec.inputs.len()
             );
         }
+        let exe = match &self.exe {
+            EntryExe::Host { kind, cfg } => {
+                let tensors: Vec<Tensor> =
+                    inputs.iter().map(|v| v.to_tensor()).collect::<Result<_>>()?;
+                let mut watch = Stopwatch::start();
+                let out = host::execute_entry(cfg, *kind, &tensors)?;
+                self.record_execution(watch.lap());
+                return out.iter().map(LitVal::from_tensor).collect();
+            }
+            EntryExe::Pjrt(exe) => exe,
+        };
         let _xla = lock(&XLA_LOCK);
         let literals: Vec<&xla::Literal> = inputs.iter().map(|v| &v.0).collect();
-        // lumos: allow(wallclock) -- EntryStats execution timing is the measurement payload
-        let t0 = Instant::now();
-        let mut replicas = self.exe.execute::<&xla::Literal>(&literals)?;
-        let elapsed = t0.elapsed().as_secs_f64();
-        {
-            let mut st = lock(&self.stats);
-            st.executions += 1;
-            st.total_secs += elapsed;
-        }
+        let mut watch = Stopwatch::start();
+        let mut replicas = exe.execute::<&xla::Literal>(&literals)?;
+        self.record_execution(watch.lap());
         if replicas.is_empty() || replicas[0].is_empty() {
             bail!("entry '{}': empty execution result", self.spec.name);
         }
@@ -213,57 +297,62 @@ impl CompiledEntry {
                 );
             }
         }
-        let _xla = lock(&XLA_LOCK);
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(Tensor::to_literal)
-            .collect::<Result<_>>()?;
-
-        // lumos: allow(wallclock) -- EntryStats execution timing is the measurement payload
-        let t0 = Instant::now();
-        let mut replicas = self.exe.execute::<xla::Literal>(&literals)?;
-        let elapsed = t0.elapsed().as_secs_f64();
-        {
-            let mut st = lock(&self.stats);
-            st.executions += 1;
-            st.total_secs += elapsed;
-        }
-
-        if replicas.is_empty() || replicas[0].is_empty() {
-            bail!("entry '{}': empty execution result", self.spec.name);
-        }
-        let outputs = replicas.remove(0);
-
-        // jax lowers with return_tuple=True: a single tuple buffer comes
-        // back; decompose it into the manifest's flattened outputs. If the
-        // runtime ever hands back untupled buffers, pass them through.
-        let mut literals_out: Vec<xla::Literal> = Vec::with_capacity(self.spec.outputs.len());
-        if outputs.len() == 1 && self.spec.outputs.len() != 1 {
-            let mut root = outputs[0].to_literal_sync()?;
-            literals_out.extend(root.decompose_tuple()?);
-        } else {
-            for buf in &outputs {
-                let mut lit = buf.to_literal_sync()?;
-                // A 1-output entry lowered with return_tuple=True still
-                // wraps the value in a 1-tuple.
-                match lit.decompose_tuple() {
-                    Ok(elems) if !elems.is_empty() => literals_out.extend(elems),
-                    _ => literals_out.push(lit),
-                }
+        let tensors = match &self.exe {
+            EntryExe::Host { kind, cfg } => {
+                let mut watch = Stopwatch::start();
+                let out = host::execute_entry(cfg, *kind, inputs)?;
+                self.record_execution(watch.lap());
+                out
             }
-        }
-        if literals_out.len() != self.spec.outputs.len() {
-            bail!(
-                "entry '{}': got {} outputs, manifest expects {}",
-                self.spec.name,
-                literals_out.len(),
-                self.spec.outputs.len()
-            );
-        }
-        let tensors: Vec<Tensor> = literals_out
-            .iter()
-            .map(Tensor::from_literal)
-            .collect::<Result<_>>()?;
+            EntryExe::Pjrt(exe) => {
+                let _xla = lock(&XLA_LOCK);
+                let literals: Vec<xla::Literal> = inputs
+                    .iter()
+                    .map(Tensor::to_literal)
+                    .collect::<Result<_>>()?;
+
+                let mut watch = Stopwatch::start();
+                let mut replicas = exe.execute::<xla::Literal>(&literals)?;
+                self.record_execution(watch.lap());
+
+                if replicas.is_empty() || replicas[0].is_empty() {
+                    bail!("entry '{}': empty execution result", self.spec.name);
+                }
+                let outputs = replicas.remove(0);
+
+                // jax lowers with return_tuple=True: a single tuple buffer comes
+                // back; decompose it into the manifest's flattened outputs. If the
+                // runtime ever hands back untupled buffers, pass them through.
+                let mut literals_out: Vec<xla::Literal> =
+                    Vec::with_capacity(self.spec.outputs.len());
+                if outputs.len() == 1 && self.spec.outputs.len() != 1 {
+                    let mut root = outputs[0].to_literal_sync()?;
+                    literals_out.extend(root.decompose_tuple()?);
+                } else {
+                    for buf in &outputs {
+                        let mut lit = buf.to_literal_sync()?;
+                        // A 1-output entry lowered with return_tuple=True still
+                        // wraps the value in a 1-tuple.
+                        match lit.decompose_tuple() {
+                            Ok(elems) if !elems.is_empty() => literals_out.extend(elems),
+                            _ => literals_out.push(lit),
+                        }
+                    }
+                }
+                if literals_out.len() != self.spec.outputs.len() {
+                    bail!(
+                        "entry '{}': got {} outputs, manifest expects {}",
+                        self.spec.name,
+                        literals_out.len(),
+                        self.spec.outputs.len()
+                    );
+                }
+                literals_out
+                    .iter()
+                    .map(Tensor::from_literal)
+                    .collect::<Result<Vec<Tensor>>>()?
+            }
+        };
         for (t, s) in tensors.iter().zip(&self.spec.outputs) {
             if !t.matches(s) {
                 bail!(
@@ -282,5 +371,56 @@ impl CompiledEntry {
 
     pub fn stats(&self) -> EntryStats {
         lock(&self.stats).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Artifact;
+
+    #[test]
+    fn host_engine_runs_the_trainer_contract() {
+        let engine = Engine::host();
+        assert_eq!(engine.platform(), "host");
+        let art = Artifact::host_miniature();
+        let init = engine.load(&art, "init").unwrap();
+        let state = init.execute(&[Tensor::scalar_u32(1)]).unwrap();
+        assert_eq!(state.len(), art.state_len());
+        // cache: second load of the same entry is a hit
+        let again = engine.load(&art, "init").unwrap();
+        let st = again.stats();
+        assert_eq!(st.compiles, 1);
+        assert_eq!(st.cache_hits, 1);
+        assert_eq!(st.executions, 1);
+        assert!(st.total_secs >= 0.0);
+        let stats = engine.entry_stats();
+        assert_eq!(stats.len(), 1);
+        assert!(stats[0].0.ends_with("::init"));
+    }
+
+    #[test]
+    fn host_engine_rejects_bad_shapes() {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let init = engine.load(&art, "init").unwrap();
+        let err = init.execute(&[Tensor::scalar_i32(1)]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+        assert!(engine.load(&art, "nope").is_err());
+    }
+
+    #[test]
+    fn host_engine_literal_path_matches_tensor_path() {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let init = engine.load(&art, "init").unwrap();
+        let seed = Tensor::scalar_u32(5);
+        let direct = init.execute(&[seed.clone()]).unwrap();
+        let lit = LitVal::from_tensor(&seed).unwrap();
+        let via_lit = init.execute_literals(&[&lit]).unwrap();
+        assert_eq!(via_lit.len(), direct.len());
+        for (a, b) in via_lit.iter().zip(&direct) {
+            assert_eq!(&a.to_tensor().unwrap(), b);
+        }
     }
 }

@@ -1,0 +1,671 @@
+//! Pure-Rust host backend: a miniature MoE language model whose
+//! entrypoints mirror the AOT artifact contract (`init` / `grad_step` /
+//! `apply_update` / `train_step`), so the whole `trainer` stack — and
+//! `lumos run`'s planner-mapped driver — executes offline, with no PJRT
+//! and no `artifacts/` directory.
+//!
+//! The model is one MoE block: token embedding → softmax gate → top-k of
+//! `n_experts` two-layer ReLU experts (gate-weighted, renormalized over
+//! the selected k) → residual → tied-style output projection →
+//! cross-entropy on the next token. The backward pass is exact manual
+//! backprop, *including* the gate path (renormalized-top-k jacobian
+//! through the softmax); the only non-differentiated term is the
+//! switch-style load-balance metric reported as `aux` (matching how the
+//! seed's Python model reports but does not weight it). A
+//! finite-difference check in the unit tests pins every parameter
+//! tensor's gradient.
+//!
+//! Token-level pieces (embed / gate / expert forward / combine / output
+//! CE) are public so `trainer::mapped` can run the *same* math split
+//! across ranks — dispatching real expert payloads through
+//! `coordinator::comm` — and assert the distributed forward agrees with
+//! the fused entry.
+//!
+//! Everything is `f64` internally and `f32` at the tensor boundary, and
+//! nothing here reads a clock or ambient entropy: `init` derives all
+//! parameters from the seed via [`crate::util::rng::Rng`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::artifact::EntrySpec;
+use crate::runtime::tensor::{DType, Tensor, TensorSpec};
+use crate::util::rng::Rng;
+
+/// Parameter tensor order (the flat state is `[params, m, v, step]`).
+pub const N_PARAMS: usize = 7;
+const P_EMBED: usize = 0;
+const P_WG: usize = 1;
+const P_W1: usize = 2;
+const P_B1: usize = 3;
+const P_W2: usize = 4;
+const P_B2: usize = 5;
+const P_WO: usize = 6;
+
+/// Adam hyperparameters (fixed, like the AOT artifacts bake theirs in).
+const LR: f64 = 1e-2;
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+/// Model dimensions of the host miniature.
+#[derive(Debug, Clone, Copy)]
+pub struct HostCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl HostCfg {
+    /// The default host-executable miniature (~10.8k parameters).
+    pub fn miniature() -> HostCfg {
+        HostCfg { vocab: 64, d_model: 16, d_ff: 32, n_experts: 8, top_k: 2, batch: 2, seq_len: 16 }
+    }
+
+    /// `(name, shape)` of each parameter tensor, in state order.
+    pub fn param_shapes(&self) -> Vec<(&'static str, Vec<usize>)> {
+        let (v, d, f, e) = (self.vocab, self.d_model, self.d_ff, self.n_experts);
+        vec![
+            ("embed", vec![v, d]),
+            ("router/wg", vec![e, d]),
+            ("experts/w1", vec![e, f, d]),
+            ("experts/b1", vec![e, f]),
+            ("experts/w2", vec![e, d, f]),
+            ("experts/b2", vec![e, d]),
+            ("out/wo", vec![v, d]),
+        ]
+    }
+
+    pub fn total_param_elements(&self) -> usize {
+        self.param_shapes().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Predictions per batch (`tokens` carries `seq_len + 1` ids per row).
+    pub fn predictions(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+/// The parameters as flat `f64` buffers, state order (accumulation and
+/// the finite-difference tests both want full double precision; tensors
+/// at the entry boundary are `f32`).
+#[derive(Debug, Clone)]
+pub struct HostParams {
+    pub t: Vec<Vec<f64>>,
+}
+
+impl HostParams {
+    pub fn from_tensors(params: &[Tensor]) -> Result<HostParams> {
+        if params.len() != N_PARAMS {
+            bail!("host params: got {} tensors, want {N_PARAMS}", params.len());
+        }
+        let mut t = Vec::with_capacity(N_PARAMS);
+        for p in params {
+            t.push(p.as_f32()?.iter().map(|&x| x as f64).collect());
+        }
+        Ok(HostParams { t })
+    }
+}
+
+/// Zeroed gradient buffers matching [`HostCfg::param_shapes`].
+pub fn zero_grads(cfg: &HostCfg) -> Vec<Vec<f64>> {
+    cfg.param_shapes().iter().map(|(_, s)| vec![0.0; s.iter().product()]).collect()
+}
+
+// ---- token-level forward pieces (shared with trainer::mapped) -------------
+
+/// Embedding row of token `tok`.
+pub fn embed_vec(cfg: &HostCfg, p: &HostParams, tok: usize) -> Vec<f64> {
+    let d = cfg.d_model;
+    p.t[P_EMBED][tok * d..(tok + 1) * d].to_vec()
+}
+
+/// Softmax router probabilities over the experts for activation `x`.
+pub fn gate_probs(cfg: &HostCfg, p: &HostParams, x: &[f64]) -> Vec<f64> {
+    let d = cfg.d_model;
+    let mut scores = Vec::with_capacity(cfg.n_experts);
+    for e in 0..cfg.n_experts {
+        let w = &p.t[P_WG][e * d..(e + 1) * d];
+        scores.push(w.iter().zip(x).map(|(a, b)| a * b).sum::<f64>());
+    }
+    softmax(&mut scores);
+    scores
+}
+
+/// Top-k expert ids in preference order: descending probability,
+/// ascending index on ties — fully deterministic.
+pub fn top_k_experts(probs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Combine weights: the selected probabilities renormalized to sum 1.
+pub fn renorm_weights(probs: &[f64], topk: &[usize]) -> Vec<f64> {
+    let sum: f64 = topk.iter().map(|&e| probs[e]).sum();
+    topk.iter().map(|&e| probs[e] / sum).collect()
+}
+
+/// One expert's two-layer ReLU MLP on `x` (forward only).
+pub fn expert_forward(cfg: &HostCfg, p: &HostParams, e: usize, x: &[f64]) -> Vec<f64> {
+    expert_fwd_full(cfg, p, e, x).0
+}
+
+/// `(y, pre)` where `pre` is the pre-ReLU hidden (backward needs it).
+fn expert_fwd_full(cfg: &HostCfg, p: &HostParams, e: usize, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let w1 = &p.t[P_W1][e * f * d..(e + 1) * f * d];
+    let b1 = &p.t[P_B1][e * f..(e + 1) * f];
+    let w2 = &p.t[P_W2][e * d * f..(e + 1) * d * f];
+    let b2 = &p.t[P_B2][e * d..(e + 1) * d];
+    let mut pre = Vec::with_capacity(f);
+    for fi in 0..f {
+        let row = &w1[fi * d..(fi + 1) * d];
+        pre.push(b1[fi] + row.iter().zip(x).map(|(a, b)| a * b).sum::<f64>());
+    }
+    let mut y = Vec::with_capacity(d);
+    for di in 0..d {
+        let row = &w2[di * f..(di + 1) * f];
+        let mut acc = b2[di];
+        for fi in 0..f {
+            acc += row[fi] * pre[fi].max(0.0);
+        }
+        y.push(acc);
+    }
+    (y, pre)
+}
+
+/// Output logits over the vocab for the post-residual activation `h`.
+pub fn output_logits(cfg: &HostCfg, p: &HostParams, h: &[f64]) -> Vec<f64> {
+    let d = cfg.d_model;
+    let mut logits = Vec::with_capacity(cfg.vocab);
+    for v in 0..cfg.vocab {
+        let row = &p.t[P_WO][v * d..(v + 1) * d];
+        logits.push(row.iter().zip(h).map(|(a, b)| a * b).sum::<f64>());
+    }
+    logits
+}
+
+/// Cross-entropy of the next-token prediction from activation `h`.
+pub fn output_ce(cfg: &HostCfg, p: &HostParams, h: &[f64], target: usize) -> f64 {
+    let mut q = output_logits(cfg, p, h);
+    softmax(&mut q);
+    -q[target].max(1e-30).ln()
+}
+
+fn softmax(v: &mut [f64]) {
+    let max = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for x in v.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+// ---- fused loss / gradients ------------------------------------------------
+
+/// Mean cross-entropy + aux metric over `tokens` (`batch` rows of
+/// `seq_len + 1` ids). Forward only.
+pub fn loss_only(cfg: &HostCfg, p: &HostParams, tokens: &[i32]) -> Result<(f64, f64)> {
+    let (_, ce, aux) = loss_and_grads(cfg, p, tokens)?;
+    Ok((ce, aux))
+}
+
+/// Full forward + exact manual backward over one batch. Returns
+/// per-parameter gradient buffers (state order), the mean cross-entropy,
+/// and the (non-differentiated) load-balance aux metric.
+pub fn loss_and_grads(
+    cfg: &HostCfg,
+    p: &HostParams,
+    tokens: &[i32],
+) -> Result<(Vec<Vec<f64>>, f64, f64)> {
+    let (vsz, d, f) = (cfg.vocab, cfg.d_model, cfg.d_ff);
+    let row = cfg.seq_len + 1;
+    if tokens.len() != cfg.batch * row {
+        bail!("host tokens: got {} ids, want {}x{}", tokens.len(), cfg.batch, row);
+    }
+    let n = cfg.predictions() as f64;
+    let w = 1.0 / n;
+    let mut g = zero_grads(cfg);
+    let mut ce_total = 0.0;
+    // aux bookkeeping: expert slot counts + mean router probability.
+    let mut slot_counts = vec![0.0f64; cfg.n_experts];
+    let mut prob_sums = vec![0.0f64; cfg.n_experts];
+
+    for b in 0..cfg.batch {
+        for t in 0..cfg.seq_len {
+            let tok = tokens[b * row + t] as usize;
+            let target = tokens[b * row + t + 1] as usize;
+            if tok >= vsz || target >= vsz {
+                bail!("host tokens: id out of vocab range");
+            }
+            // forward
+            let x = embed_vec(cfg, p, tok);
+            let probs = gate_probs(cfg, p, &x);
+            let topk = top_k_experts(&probs, cfg.top_k);
+            let what = renorm_weights(&probs, &topk);
+            let ssum: f64 = topk.iter().map(|&e| probs[e]).sum();
+            let experts: Vec<(Vec<f64>, Vec<f64>)> =
+                topk.iter().map(|&e| expert_fwd_full(cfg, p, e, &x)).collect();
+            let mut y = vec![0.0; d];
+            for (we, (ye, _)) in what.iter().zip(&experts) {
+                for (yd, v) in y.iter_mut().zip(ye) {
+                    *yd += we * v;
+                }
+            }
+            let h: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+            let mut q = output_logits(cfg, p, &h);
+            softmax(&mut q);
+            ce_total += -q[target].max(1e-30).ln();
+            for (e, pe) in probs.iter().enumerate() {
+                prob_sums[e] += pe;
+            }
+            for &e in &topk {
+                slot_counts[e] += 1.0;
+            }
+
+            // backward (upstream scale w = 1/N)
+            let mut dh = vec![0.0; d];
+            for v in 0..vsz {
+                let dl = (q[v] - if v == target { 1.0 } else { 0.0 }) * w;
+                let wo = &p.t[P_WO][v * d..(v + 1) * d];
+                for di in 0..d {
+                    g[P_WO][v * d + di] += dl * h[di];
+                    dh[di] += dl * wo[di];
+                }
+            }
+            let mut dx = dh.clone(); // residual path
+            let dy = &dh;
+
+            // experts + combine weights
+            let mut a = vec![0.0; cfg.top_k]; // dL/d(what_j)
+            for (j, (ye, _)) in experts.iter().enumerate() {
+                a[j] = ye.iter().zip(dy).map(|(p0, p1)| p0 * p1).sum();
+            }
+            for (j, &e) in topk.iter().enumerate() {
+                let (_, pre) = &experts[j];
+                let dye: Vec<f64> = dy.iter().map(|v| v * what[j]).collect();
+                let w2 = &p.t[P_W2][e * d * f..(e + 1) * d * f];
+                let mut dh1 = vec![0.0; f];
+                for di in 0..d {
+                    g[P_B2][e * d + di] += dye[di];
+                    for fi in 0..f {
+                        g[P_W2][e * d * f + di * f + fi] += dye[di] * pre[fi].max(0.0);
+                        dh1[fi] += dye[di] * w2[di * f + fi];
+                    }
+                }
+                let w1 = &p.t[P_W1][e * f * d..(e + 1) * f * d];
+                for fi in 0..f {
+                    if pre[fi] <= 0.0 {
+                        continue;
+                    }
+                    let dpre = dh1[fi];
+                    g[P_B1][e * f + fi] += dpre;
+                    for di in 0..d {
+                        g[P_W1][e * f * d + fi * d + di] += dpre * x[di];
+                        dx[di] += dpre * w1[fi * d + di];
+                    }
+                }
+            }
+
+            // gate: what_j = p_j / ssum for j in topk, then softmax jacobian
+            let wa: f64 = what.iter().zip(&a).map(|(p0, p1)| p0 * p1).sum();
+            let mut gprob = vec![0.0; cfg.n_experts]; // dL/dp_e
+            for (j, &e) in topk.iter().enumerate() {
+                gprob[e] = (a[j] - wa) / ssum;
+            }
+            let gdot: f64 = probs.iter().zip(&gprob).map(|(p0, p1)| p0 * p1).sum();
+            for e in 0..cfg.n_experts {
+                let dscore = probs[e] * (gprob[e] - gdot);
+                let wg = &p.t[P_WG][e * d..(e + 1) * d];
+                for di in 0..d {
+                    g[P_WG][e * d + di] += dscore * x[di];
+                    dx[di] += dscore * wg[di];
+                }
+            }
+
+            for di in 0..d {
+                g[P_EMBED][tok * d + di] += dx[di];
+            }
+        }
+    }
+
+    // switch-style load balance: E * sum_e f_e * P_e (1.0 at balance)
+    let slots = n * cfg.top_k as f64;
+    let aux = (cfg.n_experts as f64)
+        * slot_counts
+            .iter()
+            .zip(&prob_sums)
+            .map(|(c, s)| (c / slots) * (s / n))
+            .sum::<f64>();
+    Ok((g, ce_total * w, aux))
+}
+
+// ---- state / entries -------------------------------------------------------
+
+/// Seed-deterministic parameter init (state order, `f32` tensors).
+pub fn init_params(cfg: &HostCfg, seed: u32) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed as u64 ^ 0x1005_7A61);
+    let d_in = |shape: &[usize]| *shape.last().unwrap_or(&1) as f64;
+    let mut out = Vec::with_capacity(N_PARAMS);
+    for (i, (_, shape)) in cfg.param_shapes().into_iter().enumerate() {
+        let n: usize = shape.iter().product();
+        let scale = match i {
+            P_EMBED => 0.5,
+            P_B1 | P_B2 => 0.0,
+            _ => 1.0 / d_in(&shape).sqrt(),
+        };
+        let data: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+        out.push(Tensor::F32(data, shape));
+    }
+    out
+}
+
+/// Fresh optimizer state: `[params, m=0, v=0, step=0]` (22 tensors).
+pub fn init_state(cfg: &HostCfg, seed: u32) -> Vec<Tensor> {
+    let params = init_params(cfg, seed);
+    let mut state = params.clone();
+    for _ in 0..2 {
+        for p in &params {
+            state.push(Tensor::F32(vec![0.0; p.elements()], p.shape().to_vec()));
+        }
+    }
+    state.push(Tensor::F32(vec![0.0], vec![]));
+    state
+}
+
+/// One Adam step: `state' = adam(state, grads)` (bias-corrected, state
+/// order `[params, m, v, step]`).
+pub fn adam_update(state: &[Tensor], grads: &[Tensor]) -> Result<Vec<Tensor>> {
+    if state.len() != 3 * N_PARAMS + 1 || grads.len() != N_PARAMS {
+        bail!("adam: got {} state / {} grad tensors", state.len(), grads.len());
+    }
+    let step = state[3 * N_PARAMS].scalar_value()? + 1.0;
+    let bc1 = 1.0 - BETA1.powf(step);
+    let bc2 = 1.0 - BETA2.powf(step);
+    let mut out = state.to_vec();
+    for i in 0..N_PARAMS {
+        let g: Vec<f64> = grads[i].as_f32()?.iter().map(|&x| x as f64).collect();
+        let mut pv: Vec<f64> = out[i].as_f32()?.iter().map(|&x| x as f64).collect();
+        let mut mv: Vec<f64> =
+            out[N_PARAMS + i].as_f32()?.iter().map(|&x| x as f64).collect();
+        let mut vv: Vec<f64> =
+            out[2 * N_PARAMS + i].as_f32()?.iter().map(|&x| x as f64).collect();
+        for k in 0..g.len() {
+            mv[k] = BETA1 * mv[k] + (1.0 - BETA1) * g[k];
+            vv[k] = BETA2 * vv[k] + (1.0 - BETA2) * g[k] * g[k];
+            let mhat = mv[k] / bc1;
+            let vhat = vv[k] / bc2;
+            pv[k] -= LR * mhat / (vhat.sqrt() + EPS);
+        }
+        write_f32(&mut out[i], &pv)?;
+        write_f32(&mut out[N_PARAMS + i], &mv)?;
+        write_f32(&mut out[2 * N_PARAMS + i], &vv)?;
+    }
+    out[3 * N_PARAMS] = Tensor::F32(vec![step as f32], vec![]);
+    Ok(out)
+}
+
+fn write_f32(t: &mut Tensor, data: &[f64]) -> Result<()> {
+    let dst = t.as_f32_mut()?;
+    for (d, s) in dst.iter_mut().zip(data) {
+        *d = *s as f32;
+    }
+    Ok(())
+}
+
+/// Entry kinds the host backend can execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostEntry {
+    Init,
+    GradStep,
+    ApplyUpdate,
+    TrainStep,
+}
+
+impl HostEntry {
+    pub fn from_name(name: &str) -> Result<HostEntry> {
+        match name {
+            "init" => Ok(HostEntry::Init),
+            "grad_step" => Ok(HostEntry::GradStep),
+            "apply_update" => Ok(HostEntry::ApplyUpdate),
+            "train_step" => Ok(HostEntry::TrainStep),
+            other => Err(anyhow!("host backend has no entrypoint '{other}'")),
+        }
+    }
+}
+
+fn scalar_f32(v: f64) -> Tensor {
+    Tensor::F32(vec![v as f32], vec![])
+}
+
+/// Execute a host entrypoint on validated inputs (the engine checks
+/// shapes against the manifest before calling this).
+pub fn execute_entry(cfg: &HostCfg, kind: HostEntry, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    match kind {
+        HostEntry::Init => {
+            let seed = inputs[0].scalar_value()? as u32;
+            Ok(init_state(cfg, seed))
+        }
+        HostEntry::GradStep => {
+            let p = HostParams::from_tensors(&inputs[..N_PARAMS])?;
+            let tokens = inputs[N_PARAMS].as_i32()?;
+            let (g, ce, aux) = loss_and_grads(cfg, &p, tokens)?;
+            let mut out = grads_to_tensors(cfg, &g);
+            out.push(scalar_f32(ce));
+            out.push(scalar_f32(aux));
+            Ok(out)
+        }
+        HostEntry::ApplyUpdate => {
+            let state = &inputs[..3 * N_PARAMS + 1];
+            let grads = &inputs[3 * N_PARAMS + 1..];
+            adam_update(state, grads)
+        }
+        HostEntry::TrainStep => {
+            let state = &inputs[..3 * N_PARAMS + 1];
+            let tokens = inputs[3 * N_PARAMS + 1].as_i32()?;
+            let p = HostParams::from_tensors(&state[..N_PARAMS])?;
+            let (g, ce, aux) = loss_and_grads(cfg, &p, tokens)?;
+            let grads = grads_to_tensors(cfg, &g);
+            let mut out = adam_update(state, &grads)?;
+            out.push(scalar_f32(ce));
+            out.push(scalar_f32(aux));
+            Ok(out)
+        }
+    }
+}
+
+fn grads_to_tensors(cfg: &HostCfg, g: &[Vec<f64>]) -> Vec<Tensor> {
+    cfg.param_shapes()
+        .into_iter()
+        .zip(g)
+        .map(|((_, shape), buf)| {
+            Tensor::F32(buf.iter().map(|&x| x as f32).collect(), shape)
+        })
+        .collect()
+}
+
+/// The manifest-style entrypoint specs of the host miniature, keyed by
+/// name (`file` is the `"<builtin>"` sentinel — nothing is on disk).
+pub fn entry_specs(cfg: &HostCfg) -> BTreeMap<String, EntrySpec> {
+    let f32s = |name: &str, shape: Vec<usize>| TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: DType::F32,
+    };
+    let params: Vec<TensorSpec> =
+        cfg.param_shapes().into_iter().map(|(n, s)| f32s(n, s)).collect();
+    let mut state: Vec<TensorSpec> = params.clone();
+    for prefix in ["m", "v"] {
+        for p in &params {
+            state.push(f32s(&format!("{prefix}/{}", p.name), p.shape.clone()));
+        }
+    }
+    state.push(f32s("step", vec![]));
+    let grads: Vec<TensorSpec> =
+        params.iter().map(|p| f32s(&format!("grad/{}", p.name), p.shape.clone())).collect();
+    let tokens = TensorSpec {
+        name: "tokens".to_string(),
+        shape: vec![cfg.batch, cfg.seq_len + 1],
+        dtype: DType::I32,
+    };
+    let seed = TensorSpec { name: "seed".to_string(), shape: vec![], dtype: DType::U32 };
+    let entry = |name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| EntrySpec {
+        name: name.to_string(),
+        file: "<builtin>".to_string(),
+        inputs,
+        outputs,
+    };
+    let mut out = BTreeMap::new();
+    out.insert("init".to_string(), entry("init", vec![seed], state.clone()));
+    let mut gs_in = params.clone();
+    gs_in.push(tokens.clone());
+    let mut gs_out = grads.clone();
+    gs_out.push(f32s("ce", vec![]));
+    gs_out.push(f32s("aux", vec![]));
+    out.insert("grad_step".to_string(), entry("grad_step", gs_in, gs_out));
+    let mut ap_in = state.clone();
+    ap_in.extend(grads.clone());
+    out.insert("apply_update".to_string(), entry("apply_update", ap_in, state.clone()));
+    let mut ts_in = state.clone();
+    ts_in.push(tokens);
+    let mut ts_out = state;
+    ts_out.push(f32s("ce", vec![]));
+    ts_out.push(f32s("aux", vec![]));
+    out.insert("train_step".to_string(), entry("train_step", ts_in, ts_out));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens(cfg: &HostCfg, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..cfg.batch * (cfg.seq_len + 1))
+            .map(|_| rng.below(cfg.vocab as u64) as i32)
+            .collect()
+    }
+
+    fn params(cfg: &HostCfg) -> HostParams {
+        HostParams::from_tensors(&init_params(cfg, 7)).unwrap()
+    }
+
+    #[test]
+    fn finite_difference_gradient_check() {
+        let cfg = HostCfg {
+            vocab: 12,
+            d_model: 6,
+            d_ff: 8,
+            n_experts: 4,
+            top_k: 2,
+            batch: 1,
+            seq_len: 5,
+        };
+        let p = params(&cfg);
+        let toks = tokens(&cfg, 42);
+        let (g, _, _) = loss_and_grads(&cfg, &p, &toks).unwrap();
+        let mut rng = Rng::new(1);
+        let mut checked = 0usize;
+        for pi in 0..N_PARAMS {
+            for _ in 0..6 {
+                let k = rng.below(p.t[pi].len() as u64) as usize;
+                let h = 1e-5;
+                let mut pp = p.clone();
+                pp.t[pi][k] += h;
+                let (up, _) = loss_only(&cfg, &pp, &toks).unwrap();
+                pp.t[pi][k] -= 2.0 * h;
+                let (dn, _) = loss_only(&cfg, &pp, &toks).unwrap();
+                let fd = (up - dn) / (2.0 * h);
+                let an = g[pi][k];
+                let tol = 1e-4 * an.abs().max(fd.abs()).max(1e-3);
+                assert!(
+                    (fd - an).abs() <= tol,
+                    "param {pi} idx {k}: fd {fd:.8} vs analytic {an:.8}"
+                );
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 6 * N_PARAMS);
+    }
+
+    #[test]
+    fn train_step_entry_decreases_loss() {
+        let cfg = HostCfg::miniature();
+        let mut state = init_state(&cfg, 3);
+        let toks = Tensor::I32(tokens(&cfg, 9), vec![cfg.batch, cfg.seq_len + 1]);
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for step in 0..12 {
+            let mut inputs = state.clone();
+            inputs.push(toks.clone());
+            let mut out = execute_entry(&cfg, HostEntry::TrainStep, &inputs).unwrap();
+            let aux = out.pop().unwrap().scalar_value().unwrap();
+            let ce = out.pop().unwrap().scalar_value().unwrap();
+            assert!(aux.is_finite() && aux > 0.0);
+            state = out;
+            if step == 0 {
+                first = ce;
+            }
+            last = ce;
+        }
+        assert!(first.is_finite() && last.is_finite());
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn grad_step_matches_train_step_losses() {
+        let cfg = HostCfg::miniature();
+        let state = init_state(&cfg, 5);
+        let toks = Tensor::I32(tokens(&cfg, 11), vec![cfg.batch, cfg.seq_len + 1]);
+        let mut gs_in = state[..N_PARAMS].to_vec();
+        gs_in.push(toks.clone());
+        let mut gout = execute_entry(&cfg, HostEntry::GradStep, &gs_in).unwrap();
+        let aux_g = gout.pop().unwrap().scalar_value().unwrap();
+        let ce_g = gout.pop().unwrap().scalar_value().unwrap();
+        let mut ts_in = state.clone();
+        ts_in.push(toks);
+        let mut tout = execute_entry(&cfg, HostEntry::TrainStep, &ts_in).unwrap();
+        let aux_t = tout.pop().unwrap().scalar_value().unwrap();
+        let ce_t = tout.pop().unwrap().scalar_value().unwrap();
+        assert!((ce_g - ce_t).abs() < 1e-9);
+        assert!((aux_g - aux_t).abs() < 1e-9);
+        // and apply_update(state, grads) == train_step's state output
+        let mut ap_in = state;
+        ap_in.extend(gout);
+        let applied = execute_entry(&cfg, HostEntry::ApplyUpdate, &ap_in).unwrap();
+        assert_eq!(applied.len(), 3 * N_PARAMS + 1);
+        for (a, b) in applied.iter().zip(&tout) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn specs_cover_every_entry_and_match_execution() {
+        let cfg = HostCfg::miniature();
+        let specs = entry_specs(&cfg);
+        assert_eq!(specs.len(), 4);
+        let init = &specs["init"];
+        assert_eq!(init.outputs.len(), 3 * N_PARAMS + 1);
+        let out = execute_entry(&cfg, HostEntry::Init, &[Tensor::scalar_u32(1)]).unwrap();
+        assert_eq!(out.len(), init.outputs.len());
+        for (t, s) in out.iter().zip(&init.outputs) {
+            assert!(t.matches(s), "init output {} mismatch", s.name);
+        }
+    }
+
+    #[test]
+    fn top_k_is_deterministic_on_ties() {
+        assert_eq!(top_k_experts(&[0.25, 0.25, 0.25, 0.25], 2), vec![0, 1]);
+        assert_eq!(top_k_experts(&[0.1, 0.4, 0.1, 0.4], 2), vec![1, 3]);
+    }
+}

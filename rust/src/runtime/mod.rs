@@ -1,5 +1,14 @@
-//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute them
+//! Runtime: load AOT artifacts (HLO text + manifest) and execute them
 //! from the Rust hot path. Python never runs here.
+//!
+//! Two backends behind one [`Engine`]:
+//!
+//! - [`Engine::cpu`] — PJRT via the `xla` crate (requires the real
+//!   `xla_extension` build; the vendored offline shim errors cleanly).
+//! - [`Engine::host`] — the pure-Rust MoE miniature in [`host`], whose
+//!   entrypoints mirror the artifact contract exactly, so every trainer
+//!   path (and `lumos run`) works with no PJRT and no `artifacts/` dir
+//!   via [`Artifact::host_miniature`].
 //!
 //! ```no_run
 //! use lumos::runtime::{artifacts_root, Artifact, Engine, Tensor};
@@ -12,8 +21,10 @@
 
 mod artifact;
 mod engine;
+pub mod host;
 mod tensor;
 
 pub use artifact::{artifacts_root, Artifact, EntrySpec};
 pub use engine::{CompiledEntry, Engine, EntryStats, LitVal};
+pub use host::HostCfg;
 pub use tensor::{DType, Tensor, TensorSpec};

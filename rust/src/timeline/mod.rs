@@ -109,6 +109,57 @@ impl PhaseBreakdown {
     pub fn total(&self) -> f64 {
         self.compute + self.tp_comm + self.ep_comm + self.pp_comm + self.dp_comm + self.bubble
     }
+
+    /// `(label, seconds, share-of-total)` rows in the canonical phase
+    /// order shared with `obs::diff::PHASE_ORDER` — the common currency
+    /// of the three-way (analytical / simulated / executed) gap report.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total();
+        let share = |x: f64| if total > 0.0 { x / total } else { 0.0 };
+        vec![
+            ("compute", self.compute, share(self.compute)),
+            ("tp", self.tp_comm, share(self.tp_comm)),
+            ("ep", self.ep_comm, share(self.ep_comm)),
+            ("pp", self.pp_comm, share(self.pp_comm)),
+            ("dp", self.dp_comm, share(self.dp_comm)),
+            ("bubble", self.bubble, share(self.bubble)),
+        ]
+    }
+}
+
+/// The analytical model's own per-phase split of its step time: the
+/// closed form prices `(n_micro + pp - 1)` microbatch slots plus the
+/// non-overlapped DP sync, so `n_micro` slots' worth of each phase is
+/// "real" work and the remaining `(pp - 1)` slots are the 1F1B bubble.
+/// Sums to `PerfReport::step_time` up to float round-off — the
+/// analytical column of the three-way gap report.
+pub fn analytical_phases(b: &crate::perf::StepBreakdown, knobs: &PerfKnobs) -> PhaseBreakdown {
+    let n = b.n_micro as f64;
+    PhaseBreakdown {
+        compute: n * b.compute_per_micro,
+        tp_comm: n * b.tp_comm_per_micro,
+        ep_comm: n * b.ep_a2a_per_micro,
+        pp_comm: n * b.pp_comm_per_micro,
+        dp_comm: (1.0 - knobs.dp_overlap) * b.dp_comm_per_step,
+        bubble: (b.pp - 1) as f64 * b.micro_time(),
+    }
+}
+
+/// Fold per-category span totals (as produced by a parsed Chrome trace
+/// or `trainer::RunOutcome::cat_totals`) into a [`PhaseBreakdown`]. The
+/// category names are the shared span vocabulary: `compute`, `tp`, `ep`,
+/// `pp`, `dp`, `bubble`; anything else (e.g. the executed trace's
+/// `step` instants) is ignored.
+pub fn phases_from_cat_totals(totals: &std::collections::BTreeMap<String, f64>) -> PhaseBreakdown {
+    let g = |k: &str| totals.get(k).copied().unwrap_or(0.0);
+    PhaseBreakdown {
+        compute: g("compute"),
+        tp_comm: g("tp"),
+        ep_comm: g("ep"),
+        pp_comm: g("pp"),
+        dp_comm: g("dp"),
+        bubble: g("bubble"),
+    }
 }
 
 /// Result of simulating one training step.
@@ -455,6 +506,38 @@ mod tests {
             assert!(x >= 0.0, "{name} negative: {x}");
         }
         assert!(p.compute > 0.0 && p.tp_comm > 0.0 && p.bubble > 0.0);
+    }
+
+    #[test]
+    fn analytical_phases_sum_to_the_analytical_step() {
+        let v = paper_validation(4);
+        let knobs = PerfKnobs::default();
+        let p = analytical_phases(&v.analytical.breakdown, &knobs);
+        let ana = v.analytical.step_time;
+        let rel = (p.total() - ana).abs() / ana;
+        assert!(rel <= 1e-9, "analytical phases sum {} vs step {ana}", p.total());
+        assert!(p.compute > 0.0 && p.ep_comm > 0.0 && p.bubble > 0.0);
+        let rows = p.rows();
+        assert_eq!(rows.len(), 6);
+        let share_sum: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9);
+        assert_eq!(rows[0].0, "compute");
+        assert_eq!(rows[5].0, "bubble");
+    }
+
+    #[test]
+    fn cat_totals_fold_into_phases() {
+        let mut t = std::collections::BTreeMap::new();
+        t.insert("compute".to_string(), 2.0);
+        t.insert("ep".to_string(), 0.5);
+        t.insert("bubble".to_string(), 0.25);
+        t.insert("step".to_string(), 99.0); // ignored: not a phase
+        let p = phases_from_cat_totals(&t);
+        assert_eq!(p.compute, 2.0);
+        assert_eq!(p.ep_comm, 0.5);
+        assert_eq!(p.bubble, 0.25);
+        assert_eq!(p.tp_comm, 0.0);
+        assert_eq!(p.total(), 2.75);
     }
 
     #[test]

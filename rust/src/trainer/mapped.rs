@@ -1,0 +1,553 @@
+//! `lumos run`'s execution driver: a planner-chosen PP×DP mapping
+//! executed rank-for-rank on the miniature cluster, every phase timed by
+//! the per-rank flight recorder ([`crate::obs::record`]).
+//!
+//! Rank layout is stage-major: `rank = stage * dp + group`, so a
+//! pipeline stage's DP peers (`stage` fixed, `group` varying) are
+//! contiguous and form that stage's expert-parallel group — experts are
+//! partitioned `n_experts / dp` per peer, dispatch/combine run as real
+//! group all-to-alls ([`Endpoint::all_to_all_group`]) with
+//! manifest-carrying payloads, and the stage follows its 1F1B schedule
+//! ([`crate::coordinator::pipeline::one_f_one_b`]) with real blocking
+//! p2p activation/gradient sends between stages.
+//!
+//! **Miniature simplification (by design):** the host model is one MoE
+//! block, so pipeline stages cannot split layers. Every rank holds the
+//! full model; stages of one DP group run the *same* microbatch (the
+//! tokens are a pure function of `(group, step, micro)`), and the
+//! inter-stage payloads are real activation-sized tensors that enforce
+//! the schedule's dependencies without being consumed numerically. The
+//! stage decomposition therefore shapes the *schedule and
+//! communication* — what the flight recorder observes — while the
+//! numerics stay pure data-parallel: gradients are averaged over
+//! microbatches, ring-all-reduced over the full fabric, and applied as
+//! identical Adam updates, exactly like [`super::train_dp`]. The driver
+//! cross-checks itself every backward: the distributed forward's
+//! cross-entropy (through routing, dispatch, expert MLPs, combine) must
+//! match the fused `grad_step` entry's loss on the same microbatch.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::comm::{self, Endpoint};
+use crate::coordinator::pipeline::{self, one_f_one_b, Action};
+use crate::coordinator::router::{unpack_a2a_manifest, Router, RouterConfig};
+use crate::obs::record::{Recorder, Recording};
+use crate::runtime::{host, Artifact, Engine, HostCfg, Tensor};
+use crate::trainer::{Corpus, StepLog, TrainReport};
+use crate::util::rng::Rng;
+
+/// A miniature execution mapping: `pp` pipeline stages × `dp`
+/// data-parallel groups (= expert-parallel width), `n_micro`
+/// microbatches per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MiniMapping {
+    pub pp: usize,
+    pub dp: usize,
+    pub n_micro: usize,
+}
+
+impl MiniMapping {
+    pub fn ranks(&self) -> usize {
+        self.pp * self.dp
+    }
+
+    pub fn stage_of(&self, rank: usize) -> usize {
+        rank / self.dp
+    }
+
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank % self.dp
+    }
+
+    pub fn rank_of(&self, stage: usize, group: usize) -> usize {
+        stage * self.dp + group
+    }
+
+    /// The expert-parallel group of `rank`: its stage's DP peers, in
+    /// ascending rank order. Position in the group == `group_of`.
+    pub fn ep_group(&self, rank: usize) -> Vec<usize> {
+        let s = self.stage_of(rank);
+        (0..self.dp).map(|g| self.rank_of(s, g)).collect()
+    }
+
+    /// Scale a planner-chosen pipeline depth down to `ranks` host
+    /// workers: the largest divisor of `ranks` not exceeding
+    /// `target_pp` becomes `pp`, the rest is DP width.
+    pub fn scale(target_pp: usize, ranks: usize, n_micro: usize) -> MiniMapping {
+        assert!(ranks >= 1 && n_micro >= 1);
+        let mut pp = 1;
+        for d in 1..=ranks {
+            if ranks % d == 0 && d <= target_pp.max(1) {
+                pp = d;
+            }
+        }
+        MiniMapping { pp, dp: ranks / pp, n_micro }
+    }
+}
+
+/// What one mapped run produces: the loss trajectory plus every rank's
+/// flight recording (merge with [`crate::obs::record::to_trace`]).
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub report: TrainReport,
+    pub recordings: Vec<Recording>,
+}
+
+impl RunOutcome {
+    /// Total recorded seconds per span category, summed over all ranks —
+    /// the executed-side column of the three-way gap report.
+    pub fn cat_totals(&self) -> BTreeMap<String, f64> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for rec in &self.recordings {
+            for s in &rec.spans {
+                *out.entry(s.cat.clone()).or_default() += s.end_s - s.start_s;
+            }
+        }
+        out
+    }
+}
+
+/// Per-worker context shared by the forward/backward handlers.
+struct Worker {
+    cfg: HostCfg,
+    m: MiniMapping,
+    stage: usize,
+    group: usize,
+    ep_group: Vec<usize>,
+    router: Router,
+}
+
+/// Forward state handed from a microbatch's forward to its backward.
+struct MicroFwd {
+    dist_ce: f64,
+}
+
+impl Worker {
+    /// The microbatch token tensor: a pure function of
+    /// `(group, step, micro)`, so all stages of one DP group see
+    /// identical data while groups shard the corpus.
+    fn micro_tokens(&self, corpus: &Corpus, seed: u64, step: usize, micro: usize) -> Tensor {
+        let mix = 0x9E37_79B9_7F4A_7C15u64
+            .wrapping_mul(1 + self.group as u64)
+            .wrapping_add((step as u64) << 24)
+            .wrapping_add(micro as u64);
+        let mut rng = Rng::new(seed ^ mix);
+        let row = self.cfg.seq_len + 1;
+        let mut data = Vec::with_capacity(self.cfg.batch * row);
+        for _ in 0..self.cfg.batch {
+            data.extend(corpus.sample_sequence(row, &mut rng).into_iter().map(|t| t as i32));
+        }
+        Tensor::I32(data, vec![self.cfg.batch, row])
+    }
+
+    /// The distributed forward of one microbatch: gate locally, dispatch
+    /// tokens to their expert owners over the group all-to-all, run the
+    /// local experts, combine the returns, and score the next-token
+    /// cross-entropy. Every phase is a recorder cut.
+    fn forward(
+        &self,
+        ep: &mut Endpoint,
+        rec: &mut Recorder,
+        params: &host::HostParams,
+        tokens: &Tensor,
+        step: usize,
+        micro: usize,
+    ) -> Result<MicroFwd> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let ids = tokens.as_i32()?;
+        let row = cfg.seq_len + 1;
+
+        if self.stage > 0 {
+            let src = self.m.rank_of(self.stage - 1, self.group);
+            let _upstream = ep.recv(src, pipeline::tag(step, micro, pipeline::TAG_FWD));
+            rec.cut(&format!("recv fwd {micro}"), "bubble");
+        }
+
+        // Gate every prediction position: embedding, router softmax,
+        // deterministic top-k.
+        let n_tok = cfg.predictions();
+        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(n_tok);
+        let mut probs: Vec<Vec<f64>> = Vec::with_capacity(n_tok);
+        let mut choices: Vec<Vec<usize>> = Vec::with_capacity(n_tok);
+        for b in 0..cfg.batch {
+            for t in 0..cfg.seq_len {
+                let tok = ids[b * row + t] as usize;
+                let x = host::embed_vec(cfg, params, tok);
+                let pr = host::gate_probs(cfg, params, &x);
+                choices.push(host::top_k_experts(&pr, cfg.top_k));
+                probs.push(pr);
+                xs.push(x);
+            }
+        }
+        rec.cut(&format!("gate {micro}"), "compute");
+
+        // Dispatch: manifest-carrying all-to-all to the expert owners.
+        let route = self.router.route(&choices);
+        let feats: Vec<Vec<f32>> =
+            xs.iter().map(|x| x.iter().map(|&v| v as f32).collect()).collect();
+        let packed = self.router.pack_a2a_manifest(&route, &feats);
+        let tag = pipeline::tag(step, micro, pipeline::TAG_DISPATCH);
+        let recvd = ep.all_to_all_group(&self.ep_group, packed, tag);
+        rec.cut(&format!("dispatch a2a {micro}"), "ep");
+
+        // Expert compute on everything received, reply in sender order.
+        let mut replies: Vec<Vec<f32>> = Vec::with_capacity(recvd.len());
+        let mut n_routed = 0usize;
+        for payload in &recvd {
+            let routed = unpack_a2a_manifest(payload, d);
+            let mut out = Vec::with_capacity(routed.len() * d);
+            for rt in &routed {
+                let x: Vec<f64> = rt.features.iter().map(|&v| v as f64).collect();
+                let y = host::expert_forward(cfg, params, rt.expert, &x);
+                out.extend(y.iter().map(|&v| v as f32));
+                n_routed += 1;
+            }
+            replies.push(out);
+        }
+        rec.cut_args(
+            &format!("expert fwd {micro}"),
+            "compute",
+            &[("routed_tokens", n_routed as f64)],
+        );
+
+        let tag = pipeline::tag(step, micro, pipeline::TAG_COMBINE);
+        let returned = ep.all_to_all_group(&self.ep_group, replies, tag);
+        rec.cut(&format!("combine a2a {micro}"), "ep");
+
+        // Combine: pair each reply chunk with this rank's assignments in
+        // route order, weight by the renormalized gate, add residual,
+        // score cross-entropy.
+        let mut ys: Vec<Vec<f64>> = vec![vec![0.0; d]; n_tok];
+        let mut pos = vec![0usize; self.ep_group.len()];
+        for a in &route.assignments {
+            let off = pos[a.rank] * d;
+            pos[a.rank] += 1;
+            let chunk = &returned[a.rank][off..off + d];
+            let topk = &choices[a.token];
+            let w = host::renorm_weights(&probs[a.token], topk);
+            let wi = topk
+                .iter()
+                .position(|&e| e == a.expert)
+                // lumos: allow(panic-path) -- the router only grants experts the token chose
+                .expect("assignment expert not in the token's top-k");
+            for (di, &v) in chunk.iter().enumerate() {
+                ys[a.token][di] += w[wi] * v as f64;
+            }
+        }
+        let mut ce = 0.0;
+        let mut h_flat: Vec<f32> = Vec::with_capacity(n_tok * d);
+        for (ti, x) in xs.iter().enumerate() {
+            let (b, t) = (ti / cfg.seq_len, ti % cfg.seq_len);
+            let target = ids[b * row + t + 1] as usize;
+            let h: Vec<f64> = x.iter().zip(&ys[ti]).map(|(a, b)| a + b).collect();
+            ce += host::output_ce(cfg, params, &h, target);
+            h_flat.extend(h.iter().map(|&v| v as f32));
+        }
+        ce /= n_tok as f64;
+        rec.cut_args(
+            &format!("fwd {micro}"),
+            "compute",
+            &[("ce", ce), ("dropped", route.dropped.len() as f64)],
+        );
+
+        if self.stage + 1 < self.m.pp {
+            let dst = self.m.rank_of(self.stage + 1, self.group);
+            ep.send(dst, pipeline::tag(step, micro, pipeline::TAG_FWD), h_flat);
+            rec.cut(&format!("send fwd {micro}"), "pp");
+        }
+        Ok(MicroFwd { dist_ce: ce })
+    }
+}
+
+/// Execute `steps` training steps of `art` under mapping `m` on
+/// `m.ranks()` worker threads. Returns rank-0's report plus every
+/// rank's flight recording.
+pub fn run_mapped(
+    engine: &Engine,
+    art: &Artifact,
+    m: MiniMapping,
+    steps: usize,
+    seed: u64,
+    verbose: bool,
+) -> Result<RunOutcome> {
+    if m.pp == 0 || m.dp == 0 || m.n_micro == 0 {
+        bail!("mapping must have pp, dp, n_micro >= 1");
+    }
+    let cfg = HostCfg {
+        vocab: art.cfg_usize("vocab")?,
+        d_model: art.cfg_usize("d_model")?,
+        d_ff: art.cfg_usize("d_ff")?,
+        n_experts: art.cfg_usize("n_experts")?,
+        top_k: art.cfg_usize("top_k")?,
+        batch: art.cfg_usize("batch")?,
+        seq_len: art.cfg_usize("seq_len")?,
+    };
+    if cfg.total_param_elements() != art.total_param_elements {
+        bail!("mapped driver needs a host-shaped artifact (param layout mismatch)");
+    }
+    if cfg.n_experts % m.dp != 0 {
+        bail!("dp={} must divide n_experts={} for expert placement", m.dp, cfg.n_experts);
+    }
+
+    let init = engine.load(art, "init")?;
+    let grad = engine.load(art, "grad_step")?;
+    let apply = engine.load(art, "apply_update")?;
+    let n_params = art.n_params;
+    let n_ranks = m.ranks();
+
+    // Identical initial state on every rank (same seed through init).
+    let state0 = Arc::new(init.execute(&[Tensor::scalar_u32(seed as u32)])?);
+
+    let results = comm::run_workers(n_ranks, move |mut ep| -> Result<(Vec<StepLog>, Recording)> {
+        let rank = ep.rank;
+        let w = Worker {
+            cfg,
+            m,
+            stage: m.stage_of(rank),
+            group: m.group_of(rank),
+            ep_group: m.ep_group(rank),
+            router: Router::new(RouterConfig {
+                n_experts: cfg.n_experts,
+                top_k: cfg.top_k,
+                experts_per_rank: cfg.n_experts / m.dp,
+                // every token fits: a token hits an expert at most once
+                capacity: cfg.predictions(),
+                max_devices_per_token: None,
+            }),
+        };
+        let corpus = Corpus::markov(cfg.vocab, seed ^ 0xC0FFEE);
+        let sched = one_f_one_b(m.pp, w.stage, m.n_micro);
+        let mut state: Vec<Tensor> = (*state0).clone();
+        let mut rec = Recorder::start(rank);
+        let mut logs = Vec::with_capacity(steps);
+
+        for step in 0..steps {
+            let step_t0 = rec.now();
+            let bytes0 = ep.bytes_sent;
+            rec.mark(&format!("step {step}"), "step");
+            let params = host::HostParams::from_tensors(&state[..n_params])?;
+            let mut grads_acc = host::zero_grads(&cfg);
+            let mut fwd: Vec<Option<MicroFwd>> = (0..m.n_micro).map(|_| None).collect();
+            let (mut ce_sum, mut aux_sum) = (0.0, 0.0);
+
+            for action in &sched {
+                let micro = action.micro();
+                match action {
+                    Action::Forward(_) => {
+                        let tokens = w.micro_tokens(&corpus, seed, step, micro);
+                        fwd[micro] =
+                            Some(w.forward(&mut ep, &mut rec, &params, &tokens, step, micro)?);
+                    }
+                    Action::Backward(_) => {
+                        if w.stage + 1 < m.pp {
+                            let src = m.rank_of(w.stage + 1, w.group);
+                            let _g = ep.recv(src, pipeline::tag(step, micro, pipeline::TAG_BWD));
+                            rec.cut(&format!("recv bwd {micro}"), "bubble");
+                        }
+                        let tokens = w.micro_tokens(&corpus, seed, step, micro);
+                        let mut inputs: Vec<Tensor> = state[..n_params].to_vec();
+                        inputs.push(tokens);
+                        let mut gout = grad.execute(&inputs)?;
+                        let aux = gout.pop().context("aux")?.scalar_value()?;
+                        let ce = gout.pop().context("ce")?.scalar_value()?;
+                        // Self-check: the distributed forward and the
+                        // fused entry saw the same microbatch — their
+                        // losses must agree.
+                        let dist = fwd[micro].as_ref().context("backward before forward")?;
+                        if (ce - dist.dist_ce).abs() > 1e-3 * ce.abs().max(1e-3) {
+                            bail!(
+                                "rank {rank} step {step} micro {micro}: distributed fwd ce \
+                                 {:.6} != entry ce {ce:.6}",
+                                dist.dist_ce
+                            );
+                        }
+                        ce_sum += ce;
+                        aux_sum += aux;
+                        for (acc, gt) in grads_acc.iter_mut().zip(&gout) {
+                            for (a, &v) in acc.iter_mut().zip(gt.as_f32()?) {
+                                *a += v as f64;
+                            }
+                        }
+                        rec.cut_args(&format!("bwd {micro}"), "compute", &[("ce", ce)]);
+                        if w.stage > 0 {
+                            let dst = m.rank_of(w.stage - 1, w.group);
+                            let proxy = vec![0.0f32; cfg.predictions() * cfg.d_model];
+                            ep.send(dst, pipeline::tag(step, micro, pipeline::TAG_BWD), proxy);
+                            rec.cut(&format!("send bwd {micro}"), "pp");
+                        }
+                    }
+                }
+            }
+
+            // Average over microbatches, all-reduce over the full fabric
+            // (stages hold duplicate grads; /n_ranks yields the mean over
+            // the dp data shards), identical Adam update everywhere.
+            let mut grad_tensors: Vec<Tensor> = grads_acc
+                .iter()
+                .zip(cfg.param_shapes())
+                .map(|(buf, (_, shape))| {
+                    let data = buf.iter().map(|&v| (v / m.n_micro as f64) as f32).collect();
+                    Tensor::F32(data, shape)
+                })
+                .collect();
+            for (gi, gt) in grad_tensors.iter_mut().enumerate() {
+                let data = gt.as_f32_mut()?;
+                ep.all_reduce_sum(data, pipeline::tag(step, gi, pipeline::TAG_GRADS));
+                for v in data.iter_mut() {
+                    *v /= n_ranks as f32;
+                }
+            }
+            rec.cut("grad all-reduce", "dp");
+            let mut inputs = state.clone();
+            inputs.extend(grad_tensors);
+            state = apply.execute(&inputs)?;
+            rec.cut("apply", "compute");
+
+            let nm = m.n_micro as f64;
+            let mut stats = vec![(ce_sum / nm) as f32, (aux_sum / nm) as f32];
+            ep.all_reduce_sum(&mut stats, pipeline::tag(step, n_params, pipeline::TAG_STATS));
+            rec.cut("stats all-reduce", "dp");
+            rec.counter("bytes sent", ep.bytes_sent as f64);
+
+            let log = StepLog {
+                step,
+                ce_loss: (stats[0] / n_ranks as f32) as f64,
+                aux_loss: (stats[1] / n_ranks as f32) as f64,
+                wall_secs: rec.now() - step_t0,
+                comm_bytes: ep.bytes_sent - bytes0,
+            };
+            if verbose && rank == 0 && (step < 5 || step % 10 == 0) {
+                eprintln!(
+                    "[run pp{} dp{} mb{}] step {:>4}  ce {:.4}  aux {:.4}  ({:.3}s, {} kB comm)",
+                    m.pp,
+                    m.dp,
+                    m.n_micro,
+                    step,
+                    log.ce_loss,
+                    log.aux_loss,
+                    log.wall_secs,
+                    log.comm_bytes / 1000
+                );
+            }
+            logs.push(log);
+        }
+        Ok((logs, rec.finish()))
+    });
+
+    let mut per_rank: Vec<Vec<StepLog>> = Vec::with_capacity(n_ranks);
+    let mut recordings: Vec<Recording> = Vec::with_capacity(n_ranks);
+    for r in results {
+        let (logs, rec) = r?;
+        per_rank.push(logs);
+        recordings.push(rec);
+    }
+    // Every rank all-reduced the same stats: trajectories must agree.
+    for r in 1..per_rank.len() {
+        for (a, b) in per_rank[0].iter().zip(&per_rank[r]) {
+            if (a.ce_loss - b.ce_loss).abs() > 1e-4 * a.ce_loss.abs().max(1.0) {
+                bail!("rank {r} diverged at step {}: {} vs {}", a.step, a.ce_loss, b.ce_loss);
+            }
+        }
+    }
+    let total_secs = recordings.iter().map(|r| r.end_s).fold(0.0, f64::max);
+    Ok(RunOutcome {
+        report: TrainReport {
+            mode: format!("mapped pp{} dp{} mb{}", m.pp, m.dp, m.n_micro),
+            steps: per_rank.swap_remove(0),
+            total_secs,
+        },
+        recordings,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_picks_largest_divisor_within_target() {
+        assert_eq!(MiniMapping::scale(4, 4, 2), MiniMapping { pp: 4, dp: 1, n_micro: 2 });
+        assert_eq!(MiniMapping::scale(3, 4, 2), MiniMapping { pp: 2, dp: 2, n_micro: 2 });
+        assert_eq!(MiniMapping::scale(8, 6, 1), MiniMapping { pp: 6, dp: 1, n_micro: 1 });
+        assert_eq!(MiniMapping::scale(1, 6, 1), MiniMapping { pp: 1, dp: 6, n_micro: 1 });
+    }
+
+    #[test]
+    fn rank_layout_is_stage_major() {
+        let m = MiniMapping { pp: 2, dp: 3, n_micro: 1 };
+        assert_eq!(m.ranks(), 6);
+        assert_eq!(m.stage_of(4), 1);
+        assert_eq!(m.group_of(4), 1);
+        assert_eq!(m.rank_of(1, 1), 4);
+        assert_eq!(m.ep_group(4), vec![3, 4, 5]);
+        assert_eq!(m.ep_group(1), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn mapped_run_trains_and_records() {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let m = MiniMapping { pp: 2, dp: 2, n_micro: 2 };
+        let out = run_mapped(&engine, &art, m, 8, 11, false).unwrap();
+
+        assert_eq!(out.report.steps.len(), 8);
+        assert!(
+            out.report.last_loss() < out.report.first_loss(),
+            "loss should fall: {} -> {}",
+            out.report.first_loss(),
+            out.report.last_loss()
+        );
+        assert_eq!(out.recordings.len(), 4);
+        for rec in &out.recordings {
+            // spans tile [0, end] exactly (partition by construction)
+            let mut cursor = 0.0;
+            for s in &rec.spans {
+                assert_eq!(s.start_s, cursor);
+                cursor = s.end_s;
+            }
+            assert_eq!(cursor, rec.end_s);
+            assert!(rec.spans.iter().any(|s| s.cat == "ep"));
+            assert!(rec.spans.iter().any(|s| s.cat == "dp"));
+        }
+        // with pp=2 every rank is on an interior pipeline edge: stage 0
+        // sends forward activations, stage 1 sends backward gradients
+        for r in 0..4 {
+            assert!(
+                out.recordings[r].spans.iter().any(|s| s.cat == "pp"),
+                "rank {r} has no pp span"
+            );
+            assert!(
+                out.recordings[r].spans.iter().any(|s| s.cat == "bubble"),
+                "rank {r} has no bubble span"
+            );
+        }
+        let totals = out.cat_totals();
+        assert!(totals.contains_key("compute") && totals.contains_key("ep"));
+    }
+
+    #[test]
+    fn single_rank_mapping_degenerates_to_dp1() {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let m = MiniMapping { pp: 1, dp: 1, n_micro: 2 };
+        let out = run_mapped(&engine, &art, m, 3, 7, false).unwrap();
+        assert_eq!(out.recordings.len(), 1);
+        // no pipeline edges, no bubble waits
+        assert!(out.recordings[0].spans.iter().all(|s| s.cat != "pp" && s.cat != "bubble"));
+        assert!(out.report.last_loss().is_finite());
+    }
+
+    #[test]
+    fn invalid_mappings_are_rejected() {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let bad_dp = MiniMapping { pp: 1, dp: 3, n_micro: 1 }; // 3 does not divide 8 experts
+        assert!(run_mapped(&engine, &art, bad_dp, 1, 0, false).is_err());
+        let zero = MiniMapping { pp: 0, dp: 1, n_micro: 1 };
+        assert!(run_mapped(&engine, &art, zero, 1, 0, false).is_err());
+    }
+}

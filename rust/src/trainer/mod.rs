@@ -1,28 +1,37 @@
 //! End-to-end training driver: real MoE training steps (AOT-compiled JAX +
 //! Pallas, executed via PJRT) orchestrated by the Rust coordinator.
 //!
-//! Two modes:
+//! Three modes:
 //! - [`train_single`]: one worker runs the fused `train_step` executable.
 //! - [`train_dp`]: N data-parallel workers each run `grad_step` on their
 //!   own shard of the synthetic corpus, ring-all-reduce the gradients
 //!   through [`crate::coordinator::comm`] (real Rust collectives, real
 //!   f32 payloads), then apply identical Adam updates via `apply_update`
 //!   — the miniature version of the paper's DP dimension.
+//! - [`mapped::run_mapped`]: a planner-chosen PP×DP mapping executed
+//!   rank-for-rank (1F1B schedule, expert dispatch/combine over real
+//!   all-to-alls) with a per-rank flight recorder — `lumos run`.
 //!
-//! Python never runs here: everything executes from `artifacts/`.
+//! Python never runs here: everything executes from `artifacts/` (PJRT)
+//! or the always-available pure-Rust host backend
+//! ([`crate::runtime::Engine::host`]). Step wall times are captured via
+//! the quarantined [`crate::obs::record::Stopwatch`] helper.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::comm;
+use crate::obs::record::Stopwatch;
 use crate::runtime::{Artifact, CompiledEntry, Engine, LitVal, Tensor};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 pub mod corpus;
+pub mod mapped;
 
 pub use corpus::Corpus;
+pub use mapped::{run_mapped, MiniMapping, RunOutcome};
 
 /// One logged training step.
 #[derive(Debug, Clone)]
@@ -59,6 +68,42 @@ impl TrainReport {
             return self.steps.first().map_or(0.0, |s| s.wall_secs);
         }
         tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// JSON artifact form: summary fields + per-step rows (same columns
+    /// as [`TrainReport::to_csv`]), consistent with every other `--json`
+    /// surface. NaN-valued summaries (empty runs) are omitted — the
+    /// repo's JSON writer has no NaN representation.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("mode", Json::str(&self.mode)),
+            ("n_steps", Json::num(self.steps.len() as f64)),
+            ("total_secs", Json::num(self.total_secs)),
+        ];
+        for (key, v) in [
+            ("first_loss", self.first_loss()),
+            ("last_loss", self.last_loss()),
+            ("steady_step_secs", self.steady_step_secs()),
+        ] {
+            if v.is_finite() {
+                fields.push((key, Json::num(v)));
+            }
+        }
+        let rows: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("step", Json::num(s.step as f64)),
+                    ("ce_loss", Json::num(s.ce_loss)),
+                    ("aux_loss", Json::num(s.aux_loss)),
+                    ("wall_secs", Json::num(s.wall_secs)),
+                    ("comm_bytes", Json::num(s.comm_bytes as f64)),
+                ])
+            })
+            .collect();
+        fields.push(("steps", Json::Arr(rows)));
+        Json::obj(fields)
     }
 
     /// CSV of the loss curve (EXPERIMENTS.md appendix).
@@ -98,8 +143,7 @@ pub fn train_single(
     let corpus = Corpus::markov(vocab, seed ^ 0xC0FFEE);
     let mut rng = Rng::new(seed);
 
-    // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
-    let t_all = Instant::now();
+    let watch_all = Stopwatch::start();
     // Literal-form state loop (§Perf-L3: skips Tensor<->Vec copies of the
     // ~3P-array state every step; see EXPERIMENTS.md).
     let mut state: Vec<LitVal> = init
@@ -109,8 +153,7 @@ pub fn train_single(
         .collect::<Result<_>>()?;
     let mut logs = Vec::with_capacity(steps);
     for step in 0..steps {
-        // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
-        let t0 = Instant::now();
+        let mut step_watch = Stopwatch::start();
         let tokens = LitVal::from_tensor(&batch_tensor(art, &corpus, &mut rng)?)?;
         let mut inputs: Vec<&LitVal> = state.iter().collect();
         inputs.push(&tokens);
@@ -122,7 +165,7 @@ pub fn train_single(
             step,
             ce_loss: ce,
             aux_loss: aux,
-            wall_secs: t0.elapsed().as_secs_f64(),
+            wall_secs: step_watch.lap(),
             comm_bytes: 0,
         };
         if verbose && (step < 5 || step % 10 == 0) {
@@ -133,11 +176,7 @@ pub fn train_single(
         }
         logs.push(log);
     }
-    Ok(TrainReport {
-        mode: "single".into(),
-        steps: logs,
-        total_secs: t_all.elapsed().as_secs_f64(),
-    })
+    Ok(TrainReport { mode: "single".into(), steps: logs, total_secs: watch_all.total() })
 }
 
 /// Data-parallel training: `n_workers` threads, each with its own corpus
@@ -163,8 +202,7 @@ pub fn train_dp(
     // Identical initial state on every worker (same seed through init).
     let state0 = init.execute(&[Tensor::scalar_u32(seed as u32)])?;
 
-    // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
-    let t_all = Instant::now();
+    let watch_all = Stopwatch::start();
     let art = Arc::new(art.clone());
     let grad: Arc<CompiledEntry> = grad;
     let apply: Arc<CompiledEntry> = apply;
@@ -179,8 +217,7 @@ pub fn train_dp(
         let mut logs = Vec::with_capacity(steps);
 
         for step in 0..steps {
-            // lumos: allow(wallclock) -- wall-clock step timing is the training report's payload
-            let t0 = Instant::now();
+            let mut step_watch = Stopwatch::start();
             let bytes_before = ep.bytes_sent;
             let tokens = batch_tensor(&art, &corpus, &mut rng)?;
 
@@ -213,7 +250,7 @@ pub fn train_dp(
                 step,
                 ce_loss: (stats[0] / nw) as f64,
                 aux_loss: (stats[1] / nw) as f64,
-                wall_secs: t0.elapsed().as_secs_f64(),
+                wall_secs: step_watch.lap(),
                 comm_bytes: ep.bytes_sent - bytes_before,
             };
             if verbose && rank == 0 && (step < 5 || step % 10 == 0) {
@@ -253,7 +290,7 @@ pub fn train_dp(
     Ok(TrainReport {
         mode: format!("dp{n_workers}"),
         steps: per_rank.swap_remove(0),
-        total_secs: t_all.elapsed().as_secs_f64(),
+        total_secs: watch_all.total(),
     })
 }
 
@@ -278,5 +315,21 @@ mod tests {
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("step,"));
+        let j = r.to_json();
+        assert_eq!(j.get("mode").as_str(), Some("single"));
+        assert_eq!(j.get("n_steps").as_f64(), Some(3.0));
+        assert_eq!(j.get("first_loss").as_f64(), Some(5.0));
+        assert_eq!(j.get("last_loss").as_f64(), Some(3.0));
+        let rows = j.get("steps").as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1].get("comm_bytes").as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn empty_report_json_omits_nan_summaries() {
+        let r = TrainReport { mode: "single".into(), steps: Vec::new(), total_secs: 0.0 };
+        let j = r.to_json();
+        assert!(j.get("first_loss").as_f64().is_none());
+        assert_eq!(j.get("n_steps").as_f64(), Some(0.0));
     }
 }
