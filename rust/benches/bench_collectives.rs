@@ -18,7 +18,7 @@ fn bench_real_allreduce(b: &mut Bencher, n_workers: usize, elems: usize) {
         || {
             let out = run_workers(n_workers, move |mut ep| {
                 let mut data = vec![ep.rank as f32; elems];
-                ep.all_reduce_sum(&mut data, 1);
+                ep.all_reduce_sum(&mut data, 1).unwrap();
                 data[0]
             });
             black_box(out);
@@ -36,7 +36,7 @@ fn bench_real_a2a(b: &mut Bencher, n_workers: usize, elems_per_peer: usize) {
             let out = run_workers(n_workers, move |mut ep| {
                 let chunks: Vec<Vec<f32>> =
                     (0..ep.n_ranks).map(|d| vec![d as f32; elems_per_peer]).collect();
-                ep.all_to_all(chunks, 1).len()
+                ep.all_to_all(chunks, 1).unwrap().len()
             });
             black_box(out);
         },

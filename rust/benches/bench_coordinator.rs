@@ -18,6 +18,7 @@ fn main() {
         experts_per_rank: 8,
         capacity: 4096,
         max_devices_per_token: None,
+        remap: None,
     };
     let router = Router::new(cfg);
     let mut rng = Rng::new(1);

@@ -5,17 +5,126 @@
 //! These are the same algorithms whose Hockney costs drive the performance
 //! model and whose schedules the netsim replays — here they move real
 //! `f32` payloads (gradients, routed tokens) between the PJRT executables.
+//!
+//! Under chaos supervision ([`Endpoint::enable_chaos`]) the fabric grows a
+//! fault/repair protocol (DESIGN.md §Chaos & supervision): every frame
+//! carries an FNV checksum and a failover **epoch**; receives poll with a
+//! bounded logical retry budget instead of blocking forever; repair
+//! requests ([`MsgKind::Resend`]) double as liveness probes; and a dead
+//! peer (closed channel) turns into a broadcast [`MsgKind::Failover`]
+//! notice that surfaces as [`CommError::Failover`] so the trainer can
+//! rewind and continue degraded. All abort paths are typed
+//! [`CommError`]s — the fabric itself never panics on a peer failure.
 
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use crate::chaos::{FaultKind, PlannedFault};
+
+/// Poll interval of a supervised receive. The *deadline* is the logical
+/// retry budget (poll count), not a wall-time duration — see DESIGN.md.
+const POLL_MS: u64 = 5;
+/// Send a repair-request/liveness probe every this many empty polls.
+const NACK_EVERY: u64 = 20;
+/// Default logical retry budget: 1200 polls (~6 s at 5 ms/poll).
+const DEFAULT_RETRY_BUDGET: u64 = 1200;
+/// Control tag that releases a parked (retired) rank at end of run.
+pub const TAG_SHUTDOWN: u64 = u64::MAX;
+
+/// Wire kind of a fabric frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Payload frame (collectives, p2p activations).
+    Data,
+    /// Repair request for (requester, tag); also the liveness probe.
+    Resend,
+    /// `dead` has been detected dead; abort the step and fail over.
+    Failover { dead: usize },
+}
 
 /// A tagged message between ranks.
 #[derive(Debug)]
 pub struct Msg {
     pub src: usize,
     pub tag: u64,
+    /// Failover epoch the frame belongs to; stale-epoch frames are
+    /// discarded after a rewind.
+    pub epoch: u64,
+    pub kind: MsgKind,
+    /// FNV-1a checksum of `data` (0 = unchecked, healthy fast path).
+    pub crc: u64,
     pub data: Vec<f32>,
+}
+
+/// Typed communication failure. Every variant is reachable by design
+/// under fault injection; none indicates a caller bug except
+/// [`CommError::NotInGroup`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// The channel to `peer` is closed (peer thread exited).
+    Closed { peer: usize },
+    /// A supervised receive exhausted its logical retry budget.
+    Timeout { src: usize, tag: u64, attempts: u64 },
+    /// Rank `dead` was detected dead; the step must be abandoned and the
+    /// fabric reformed without its DP group.
+    Failover { dead: usize },
+    /// The calling rank is not a member of the collective's group.
+    NotInGroup { rank: usize },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Closed { peer } => write!(f, "channel to rank {peer} closed"),
+            CommError::Timeout { src, tag, attempts } => write!(
+                f,
+                "recv from rank {src} tag {tag:#x} timed out after {attempts} poll(s)"
+            ),
+            CommError::Failover { dead } => {
+                write!(f, "rank {dead} declared dead; failover required")
+            }
+            CommError::NotInGroup { rank } => {
+                write!(f, "rank {rank} is not a member of the collective group")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+pub type CommResult<T> = Result<T, CommError>;
+
+/// FNV-1a over the payload's f32 bit patterns — the frame checksum that
+/// catches injected corruption.
+fn checksum(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in data {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    // 0 means "unchecked"; keep real checksums nonzero.
+    h | 1
+}
+
+/// Supervision state of a chaos-enabled endpoint.
+struct SupState {
+    /// planned faults for this rank (fired flag consumes each once).
+    faults: Vec<(PlannedFault, bool)>,
+    /// frames withheld by an injected drop/corrupt, kept for repair:
+    /// (dst, tag) -> original payload.
+    withheld: BTreeMap<(usize, u64), Vec<f32>>,
+    /// ranks this endpoint knows are dead (failover completed).
+    dead: BTreeSet<usize>,
+    /// chaos event log, drained into the flight recorder by the trainer.
+    marks: Vec<String>,
+    injected: BTreeMap<&'static str, usize>,
+    corruptions_detected: usize,
+    repairs_served: usize,
+    retry_budget: u64,
 }
 
 /// Per-rank endpoint of the fabric.
@@ -24,9 +133,12 @@ pub struct Endpoint {
     pub n_ranks: usize,
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
-    /// out-of-order arrivals parked until matched
-    parked: BTreeMap<(usize, u64), VecDeque<Vec<f32>>>,
+    /// out-of-order arrivals parked until matched: (epoch, src, tag).
+    parked: BTreeMap<(u64, usize, u64), VecDeque<Vec<f32>>>,
     barrier: Arc<Barrier>,
+    /// current failover epoch (bumped by [`Endpoint::complete_failover`]).
+    epoch: u64,
+    sup: Option<Box<SupState>>,
     /// bytes sent (metrics)
     pub bytes_sent: u64,
 }
@@ -52,34 +164,368 @@ pub fn fabric(n: usize) -> Vec<Endpoint> {
             inbox,
             parked: BTreeMap::new(),
             barrier: barrier.clone(),
+            epoch: 0,
+            sup: None,
             bytes_sent: 0,
         })
         .collect()
 }
 
 impl Endpoint {
-    pub fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) {
+    // ---------------------------------------------------------------------
+    // Supervision surface
+    // ---------------------------------------------------------------------
+
+    /// Arm chaos supervision with this rank's planned faults. Also turns
+    /// on frame checksums, epoch tracking, and bounded-retry receives.
+    pub fn enable_chaos(&mut self, faults: Vec<PlannedFault>) {
+        self.sup = Some(Box::new(SupState {
+            faults: faults.into_iter().map(|f| (f, false)).collect(),
+            withheld: BTreeMap::new(),
+            dead: BTreeSet::new(),
+            marks: Vec::new(),
+            injected: BTreeMap::new(),
+            corruptions_detected: 0,
+            repairs_served: 0,
+            retry_budget: DEFAULT_RETRY_BUDGET,
+        }));
+    }
+
+    pub fn is_supervised(&self) -> bool {
+        self.sup.is_some()
+    }
+
+    /// Override the logical retry budget (polls, not seconds). Tests use
+    /// a small budget to exercise the timeout path quickly.
+    pub fn set_retry_budget(&mut self, polls: u64) {
+        if let Some(sup) = self.sup.as_mut() {
+            sup.retry_budget = polls.max(1);
+        }
+    }
+
+    /// Drain the chaos event log (inject/detect/repair/failover marks).
+    pub fn take_chaos_marks(&mut self) -> Vec<String> {
+        self.sup.as_mut().map(|s| std::mem::take(&mut s.marks)).unwrap_or_default()
+    }
+
+    /// (injected per kind, corruptions detected, repairs served).
+    pub fn chaos_counters(&self) -> (BTreeMap<String, usize>, usize, usize) {
+        match self.sup.as_ref() {
+            Some(s) => (
+                s.injected.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+                s.corruptions_detected,
+                s.repairs_served,
+            ),
+            None => (BTreeMap::new(), 0, 0),
+        }
+    }
+
+    /// Finish a failover: record `dead`, drop repair state, discard every
+    /// frame of the aborted epoch, and open the next epoch. All survivors
+    /// call this exactly once per unique dead rank (duplicate Failover
+    /// notices are discarded by the known-dead check), so epochs stay in
+    /// lockstep without a clock.
+    pub fn complete_failover(&mut self, dead: usize) {
+        let epoch = self.epoch;
+        if let Some(sup) = self.sup.as_mut() {
+            sup.dead.insert(dead);
+            sup.withheld.clear();
+            sup.marks.push(format!("failover complete: rank {dead} out, epoch {epoch} -> {}", epoch + 1));
+        }
+        self.parked.retain(|&(e, _, _), _| e > epoch);
+        self.epoch += 1;
+    }
+
+    /// Detect a dead peer: log it, notify every other rank, and return
+    /// the [`CommError::Failover`] the caller propagates.
+    fn declare_dead(&mut self, dead: usize) -> CommError {
+        let rank = self.rank;
+        let epoch = self.epoch;
+        let mut fresh = false;
+        if let Some(sup) = self.sup.as_mut() {
+            if !sup.dead.contains(&dead) {
+                fresh = true;
+                sup.marks.push(format!("detect dead rank {dead} at rank {rank}"));
+            }
+        }
+        if fresh {
+            for dst in 0..self.n_ranks {
+                if dst != rank && dst != dead {
+                    // best-effort: a peer that is itself dead is fine
+                    let _ = self.senders[dst].send(Msg {
+                        src: rank,
+                        tag: 0,
+                        epoch,
+                        kind: MsgKind::Failover { dead },
+                        crc: 0,
+                        data: Vec::new(),
+                    });
+                }
+            }
+        }
+        CommError::Failover { dead }
+    }
+
+    /// Park a retired rank: keep the mailbox open (so late frames from
+    /// the failover window never hit a closed channel and cascade into
+    /// spurious death declarations) and drain everything until the
+    /// survivors' end-of-run [`Endpoint::send_shutdown`].
+    pub fn park_until_shutdown(&mut self) {
+        loop {
+            match self.inbox.recv() {
+                Ok(m) => {
+                    if m.tag == TAG_SHUTDOWN {
+                        return;
+                    }
+                }
+                // every sender gone: the run is over anyway
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Release a parked rank (best-effort; a crashed rank's channel is
+    /// already closed and that is fine).
+    pub fn send_shutdown(&mut self, dst: usize) {
+        let _ = self.senders[dst].send(Msg {
+            src: self.rank,
+            tag: TAG_SHUTDOWN,
+            epoch: self.epoch,
+            kind: MsgKind::Data,
+            crc: 0,
+            data: Vec::new(),
+        });
+    }
+
+    // ---------------------------------------------------------------------
+    // Point-to-point
+    // ---------------------------------------------------------------------
+
+    pub fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> CommResult<()> {
+        if self.sup.is_some() {
+            return self.send_supervised(dst, tag, data);
+        }
         self.bytes_sent += (data.len() * 4) as u64;
         self.senders[dst]
-            .send(Msg { src: self.rank, tag, data })
-            // lumos: allow(panic-path) -- a closed channel means a peer already panicked; propagate the abort
-            .expect("peer hung up");
+            .send(Msg { src: self.rank, tag, epoch: self.epoch, kind: MsgKind::Data, crc: 0, data })
+            .map_err(|_| CommError::Closed { peer: dst })
+    }
+
+    /// Supervised send: match planned drop/corrupt/degrade faults on the
+    /// tag's logical coordinates, withhold originals for repair, checksum
+    /// every frame, and turn a closed channel into a failover.
+    fn send_supervised(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> CommResult<()> {
+        let step = crate::coordinator::pipeline::tag_step(tag);
+        let slot = crate::coordinator::pipeline::tag_slot(tag);
+        let purpose = crate::coordinator::pipeline::tag_purpose(tag);
+        let mut delay_ms = 0u64;
+        let mut drop_frame = false;
+        let mut flip_bit: Option<u64> = None;
+        if let Some(sup) = self.sup.as_mut() {
+            let rank = self.rank;
+            for (f, fired) in sup.faults.iter_mut() {
+                if f.step != step {
+                    continue;
+                }
+                match f.kind {
+                    FaultKind::Drop if !*fired && f.micro == slot && f.purpose == purpose => {
+                        *fired = true;
+                        *sup.injected.entry("drop").or_insert(0) += 1;
+                        sup.marks
+                            .push(format!("inject drop rank {rank} -> {dst} tag {tag:#x}"));
+                        drop_frame = true;
+                    }
+                    FaultKind::Corrupt if !*fired && f.micro == slot && f.purpose == purpose => {
+                        *fired = true;
+                        *sup.injected.entry("corrupt").or_insert(0) += 1;
+                        sup.marks.push(format!(
+                            "inject corrupt rank {rank} -> {dst} tag {tag:#x} bit {}",
+                            f.amount
+                        ));
+                        flip_bit = Some(f.amount);
+                    }
+                    FaultKind::LinkDegrade => {
+                        if !*fired {
+                            *fired = true;
+                            *sup.injected.entry("degrade").or_insert(0) += 1;
+                            sup.marks.push(format!(
+                                "inject degrade rank {rank} step {step} +{} ms/frame",
+                                f.amount
+                            ));
+                        }
+                        delay_ms += f.amount;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let crc = checksum(&data);
+        if drop_frame || flip_bit.is_some() {
+            if let Some(sup) = self.sup.as_mut() {
+                sup.withheld.insert((dst, tag), data.clone());
+            }
+        }
+        if drop_frame {
+            // the receiver's repair request will fetch the withheld copy
+            return Ok(());
+        }
+        let mut payload = data;
+        if let Some(bit) = flip_bit {
+            if !payload.is_empty() {
+                let i = (bit as usize) % payload.len();
+                // mantissa bits only: finite stays finite
+                payload[i] = f32::from_bits(payload[i].to_bits() ^ (1u32 << (bit % 23)));
+            }
+        }
+        if delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(delay_ms));
+        }
+        let nbytes = (payload.len() * 4) as u64;
+        let m = Msg { src: self.rank, tag, epoch: self.epoch, kind: MsgKind::Data, crc, data: payload };
+        if self.senders[dst].send(m).is_err() {
+            return Err(self.declare_dead(dst));
+        }
+        self.bytes_sent += nbytes;
+        Ok(())
     }
 
     /// Receive the message with (src, tag), parking unrelated arrivals.
-    pub fn recv(&mut self, src: usize, tag: u64) -> Vec<f32> {
-        if let Some(q) = self.parked.get_mut(&(src, tag)) {
+    pub fn recv(&mut self, src: usize, tag: u64) -> CommResult<Vec<f32>> {
+        if let Some(q) = self.parked.get_mut(&(self.epoch, src, tag)) {
             if let Some(m) = q.pop_front() {
-                return m;
+                return Ok(m);
             }
         }
+        if self.sup.is_some() {
+            return self.recv_supervised(src, tag);
+        }
         loop {
-            // lumos: allow(panic-path) -- a closed fabric means a peer already panicked; propagate the abort
-            let m = self.inbox.recv().expect("fabric closed");
-            if m.src == src && m.tag == tag {
-                return m.data;
+            let m = self.inbox.recv().map_err(|_| CommError::Closed { peer: src })?;
+            if let Some(data) = self.admit(m, src, tag)? {
+                return Ok(data);
             }
-            self.parked.entry((m.src, m.tag)).or_default().push_back(m.data);
+        }
+    }
+
+    /// Supervised receive: poll with a bounded logical retry budget,
+    /// sending a repair-request probe every [`NACK_EVERY`] empty polls.
+    /// The probe doubles as the liveness check — a closed channel is a
+    /// death certificate.
+    fn recv_supervised(&mut self, src: usize, tag: u64) -> CommResult<Vec<f32>> {
+        let budget =
+            self.sup.as_ref().map(|s| s.retry_budget).unwrap_or(DEFAULT_RETRY_BUDGET);
+        let mut attempts: u64 = 0;
+        loop {
+            match self.inbox.recv_timeout(Duration::from_millis(POLL_MS)) {
+                Ok(m) => {
+                    if let Some(data) = self.admit(m, src, tag)? {
+                        return Ok(data);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    attempts = attempts + 1;
+                    if attempts % NACK_EVERY == 0 {
+                        let probe = Msg {
+                            src: self.rank,
+                            tag,
+                            epoch: self.epoch,
+                            kind: MsgKind::Resend,
+                            crc: 0,
+                            data: Vec::new(),
+                        };
+                        if self.senders[src].send(probe).is_err() {
+                            return Err(self.declare_dead(src));
+                        }
+                    }
+                    if attempts >= budget {
+                        return Err(CommError::Timeout { src, tag, attempts });
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(CommError::Closed { peer: src });
+                }
+            }
+        }
+    }
+
+    /// Process one inbound frame. Returns `Ok(Some(data))` when it
+    /// matches (want_src, want_tag) in the current epoch; `Ok(None)` when
+    /// it was parked, served, repaired, or discarded; `Err` on a failover
+    /// notice or a detected death.
+    fn admit(&mut self, m: Msg, want_src: usize, want_tag: u64) -> CommResult<Option<Vec<f32>>> {
+        match m.kind {
+            MsgKind::Failover { dead } => {
+                if let Some(sup) = self.sup.as_mut() {
+                    if sup.dead.contains(&dead) {
+                        return Ok(None); // duplicate notice, already handled
+                    }
+                    sup.marks.push(format!(
+                        "failover notice: rank {dead} declared dead by rank {}",
+                        m.src
+                    ));
+                    return Err(CommError::Failover { dead });
+                }
+                Ok(None)
+            }
+            MsgKind::Resend => {
+                let rank = self.rank;
+                let epoch = self.epoch;
+                let mut served: Option<(usize, u64, Vec<f32>)> = None;
+                if let Some(sup) = self.sup.as_mut() {
+                    if let Some(payload) = sup.withheld.remove(&(m.src, m.tag)) {
+                        sup.repairs_served += 1;
+                        sup.marks
+                            .push(format!("repair: resend tag {:#x} to rank {}", m.tag, m.src));
+                        served = Some((m.src, m.tag, payload));
+                    }
+                }
+                if let Some((dst, tag, payload)) = served {
+                    self.bytes_sent += (payload.len() * 4) as u64;
+                    let crc = checksum(&payload);
+                    // requester death surfaces through its own failover
+                    let _ = self.senders[dst].send(Msg {
+                        src: rank,
+                        tag,
+                        epoch,
+                        kind: MsgKind::Data,
+                        crc,
+                        data: payload,
+                    });
+                }
+                Ok(None)
+            }
+            MsgKind::Data => {
+                if m.epoch < self.epoch {
+                    return Ok(None); // stale frame from a rolled-back epoch
+                }
+                if self.sup.is_some() && m.crc != 0 && checksum(&m.data) != m.crc {
+                    let rank = self.rank;
+                    if let Some(sup) = self.sup.as_mut() {
+                        sup.corruptions_detected += 1;
+                        sup.marks.push(format!(
+                            "detect corrupt frame src {} tag {:#x} at rank {rank}",
+                            m.src, m.tag
+                        ));
+                    }
+                    let nack = Msg {
+                        src: rank,
+                        tag: m.tag,
+                        epoch: self.epoch,
+                        kind: MsgKind::Resend,
+                        crc: 0,
+                        data: Vec::new(),
+                    };
+                    if self.senders[m.src].send(nack).is_err() {
+                        return Err(self.declare_dead(m.src));
+                    }
+                    return Ok(None);
+                }
+                if m.src == want_src && m.tag == want_tag && m.epoch == self.epoch {
+                    return Ok(Some(m.data));
+                }
+                self.parked.entry((m.epoch, m.src, m.tag)).or_default().push_back(m.data);
+                Ok(None)
+            }
         }
     }
 
@@ -91,26 +537,46 @@ impl Endpoint {
     // Collectives (ring algorithms over the mailboxes)
     // ---------------------------------------------------------------------
 
-    /// In-place ring all-reduce (sum). All ranks must pass equal lengths.
-    /// Reduce-scatter phase then all-gather phase; 2(n-1) hops, exactly the
-    /// schedule `collectives::ring_all_reduce_schedule` costs.
-    pub fn all_reduce_sum(&mut self, data: &mut [f32], tag_base: u64) {
-        let n = self.n_ranks;
-        if n == 1 {
-            return;
+    /// In-place ring all-reduce (sum) over the full fabric. All ranks
+    /// must pass equal lengths. Reduce-scatter phase then all-gather
+    /// phase; 2(n-1) hops, exactly the schedule
+    /// `collectives::ring_all_reduce_schedule` costs.
+    pub fn all_reduce_sum(&mut self, data: &mut [f32], tag_base: u64) -> CommResult<()> {
+        let full: Vec<usize> = (0..self.n_ranks).collect();
+        self.all_reduce_sum_group(&full, data, tag_base)
+    }
+
+    /// Ring all-reduce restricted to a subgroup of the fabric (every
+    /// member passes the same sorted `group` containing its own rank).
+    /// With `group == 0..n_ranks` this is bit-identical to
+    /// [`Endpoint::all_reduce_sum`]; after a failover the trainer passes
+    /// the surviving ranks.
+    pub fn all_reduce_sum_group(
+        &mut self,
+        group: &[usize],
+        data: &mut [f32],
+        tag_base: u64,
+    ) -> CommResult<()> {
+        let n = group.len();
+        if n <= 1 {
+            return Ok(());
         }
-        let next = (self.rank + 1) % n;
-        let prev = (self.rank + n - 1) % n;
+        let me = group
+            .iter()
+            .position(|&r| r == self.rank)
+            .ok_or(CommError::NotInGroup { rank: self.rank })?;
+        let next = group[(me + 1) % n];
+        let prev = group[(me + n - 1) % n];
         let chunks = chunk_ranges(data.len(), n);
 
-        // reduce-scatter: after n-1 steps, rank r owns the full sum of
-        // chunk (r+1) mod n.
+        // reduce-scatter: after n-1 steps, position p owns the full sum of
+        // chunk (p+1) mod n.
         for step in 0..n - 1 {
-            let send_idx = (self.rank + n - step) % n;
-            let recv_idx = (self.rank + n - step - 1) % n;
+            let send_idx = (me + n - step) % n;
+            let recv_idx = (me + n - step - 1) % n;
             let out = data[chunks[send_idx].clone()].to_vec();
-            self.send(next, tag_base + step as u64, out);
-            let inc = self.recv(prev, tag_base + step as u64);
+            self.send(next, tag_base + step as u64, out)?;
+            let inc = self.recv(prev, tag_base + step as u64)?;
             let dst = &mut data[chunks[recv_idx].clone()];
             debug_assert_eq!(inc.len(), dst.len());
             for (d, s) in dst.iter_mut().zip(&inc) {
@@ -119,24 +585,25 @@ impl Endpoint {
         }
         // all-gather: circulate the finished chunks.
         for step in 0..n - 1 {
-            let send_idx = (self.rank + 1 + n - step) % n;
-            let recv_idx = (self.rank + n - step) % n;
+            let send_idx = (me + 1 + n - step) % n;
+            let recv_idx = (me + n - step) % n;
             let out = data[chunks[send_idx].clone()].to_vec();
-            self.send(next, tag_base + (n + step) as u64, out);
-            let inc = self.recv(prev, tag_base + (n + step) as u64);
+            self.send(next, tag_base + (n + step) as u64, out)?;
+            let inc = self.recv(prev, tag_base + (n + step) as u64)?;
             data[chunks[recv_idx].clone()].copy_from_slice(&inc);
         }
+        Ok(())
     }
 
     /// Ring all-gather: each rank contributes `local`; returns all ranks'
     /// contributions concatenated in rank order (equal lengths required).
-    pub fn all_gather(&mut self, local: &[f32], tag_base: u64) -> Vec<f32> {
+    pub fn all_gather(&mut self, local: &[f32], tag_base: u64) -> CommResult<Vec<f32>> {
         let n = self.n_ranks;
         let len = local.len();
         let mut out = vec![0.0f32; len * n];
         out[self.rank * len..(self.rank + 1) * len].copy_from_slice(local);
         if n == 1 {
-            return out;
+            return Ok(out);
         }
         let next = (self.rank + 1) % n;
         let prev = (self.rank + n - 1) % n;
@@ -144,16 +611,20 @@ impl Endpoint {
             let send_idx = (self.rank + n - step) % n;
             let recv_idx = (self.rank + n - step - 1) % n;
             let buf = out[send_idx * len..(send_idx + 1) * len].to_vec();
-            self.send(next, tag_base + step as u64, buf);
-            let inc = self.recv(prev, tag_base + step as u64);
+            self.send(next, tag_base + step as u64, buf)?;
+            let inc = self.recv(prev, tag_base + step as u64)?;
             out[recv_idx * len..(recv_idx + 1) * len].copy_from_slice(&inc);
         }
-        out
+        Ok(out)
     }
 
     /// Pairwise all-to-all: `chunks[d]` goes to rank d; returns the chunks
     /// received from every rank (index = source). Chunk lengths may vary.
-    pub fn all_to_all(&mut self, mut chunks: Vec<Vec<f32>>, tag_base: u64) -> Vec<Vec<f32>> {
+    pub fn all_to_all(
+        &mut self,
+        mut chunks: Vec<Vec<f32>>,
+        tag_base: u64,
+    ) -> CommResult<Vec<Vec<f32>>> {
         let n = self.n_ranks;
         assert_eq!(chunks.len(), n, "need one chunk per destination");
         let mut out: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
@@ -161,10 +632,10 @@ impl Endpoint {
         for step in 1..n {
             let dst = (self.rank + step) % n;
             let src = (self.rank + n - step) % n;
-            self.send(dst, tag_base + step as u64, std::mem::take(&mut chunks[dst]));
-            out[src] = self.recv(src, tag_base + step as u64);
+            self.send(dst, tag_base + step as u64, std::mem::take(&mut chunks[dst]))?;
+            out[src] = self.recv(src, tag_base + step as u64)?;
         }
-        out
+        Ok(out)
     }
 
     /// Pairwise all-to-all restricted to a subgroup of the fabric:
@@ -179,36 +650,36 @@ impl Endpoint {
         group: &[usize],
         mut chunks: Vec<Vec<f32>>,
         tag_base: u64,
-    ) -> Vec<Vec<f32>> {
+    ) -> CommResult<Vec<Vec<f32>>> {
         let n = group.len();
         assert_eq!(chunks.len(), n, "need one chunk per group member");
         let me = group
             .iter()
             .position(|&r| r == self.rank)
-            // lumos: allow(panic-path) -- caller bug: a rank outside the group joined its collective
-            .expect("calling rank not in group");
+            .ok_or(CommError::NotInGroup { rank: self.rank })?;
         let mut out: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
         out[me] = std::mem::take(&mut chunks[me]);
         for step in 1..n {
             let di = (me + step) % n;
             let si = (me + n - step) % n;
-            self.send(group[di], tag_base + step as u64, std::mem::take(&mut chunks[di]));
-            out[si] = self.recv(group[si], tag_base + step as u64);
+            self.send(group[di], tag_base + step as u64, std::mem::take(&mut chunks[di]))?;
+            out[si] = self.recv(group[si], tag_base + step as u64)?;
         }
-        out
+        Ok(out)
     }
 
     /// Broadcast from `root` (linear; used for small control payloads).
-    pub fn broadcast(&mut self, root: usize, data: &mut Vec<f32>, tag: u64) {
+    pub fn broadcast(&mut self, root: usize, data: &mut Vec<f32>, tag: u64) -> CommResult<()> {
         if self.rank == root {
             for dst in 0..self.n_ranks {
                 if dst != root {
-                    self.send(dst, tag, data.clone());
+                    self.send(dst, tag, data.clone())?;
                 }
             }
         } else {
-            *data = self.recv(root, tag);
+            *data = self.recv(root, tag)?;
         }
+        Ok(())
     }
 }
 
@@ -240,14 +711,18 @@ pub fn run_workers<R: Send + 'static>(
     }
     handles
         .into_iter()
-        // lumos: allow(panic-path) -- run_workers propagates worker panics to the caller by design
-        .map(|h| h.join().expect("worker panicked"))
+        .map(|h| match h.join() {
+            Ok(r) => r,
+            // re-raise the worker's panic payload on the caller thread
+            Err(p) => std::panic::resume_unwind(p),
+        })
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pipeline::{tag, TAG_DISPATCH, TAG_FWD};
 
     #[test]
     fn chunk_ranges_cover_exactly() {
@@ -265,7 +740,7 @@ mod tests {
     fn all_reduce_sums_across_ranks() {
         let results = run_workers(4, |mut ep| {
             let mut data: Vec<f32> = (0..10).map(|i| (ep.rank * 10 + i) as f32).collect();
-            ep.all_reduce_sum(&mut data, 100);
+            ep.all_reduce_sum(&mut data, 100).unwrap();
             data
         });
         // element j: sum over ranks of (r*10 + j) = 60 + 4j
@@ -281,7 +756,7 @@ mod tests {
         // length not divisible by n: chunk_ranges covers the remainder.
         let results = run_workers(3, |mut ep| {
             let mut data = vec![1.0f32; 7];
-            ep.all_reduce_sum(&mut data, 0);
+            ep.all_reduce_sum(&mut data, 0).unwrap();
             data
         });
         for r in &results {
@@ -290,10 +765,38 @@ mod tests {
     }
 
     #[test]
+    fn group_all_reduce_sums_within_groups() {
+        // Two disjoint groups over one 4-rank fabric: {0, 2} and {1, 3}.
+        let results = run_workers(4, |mut ep| {
+            let group: Vec<usize> = if ep.rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+            let mut data = vec![ep.rank as f32; 5];
+            ep.all_reduce_sum_group(&group, &mut data, 100).unwrap();
+            data
+        });
+        for (rank, r) in results.iter().enumerate() {
+            let want = if rank % 2 == 0 { 2.0 } else { 4.0 }; // 0+2 / 1+3
+            assert!(r.iter().all(|&v| v == want), "rank {rank}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn group_all_reduce_rejects_non_members() {
+        let results = run_workers(2, |mut ep| {
+            if ep.rank == 0 {
+                let mut d = vec![1.0];
+                ep.all_reduce_sum_group(&[1], &mut d, 0)
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(results[0], Err(CommError::NotInGroup { rank: 0 }));
+    }
+
+    #[test]
     fn all_gather_orders_by_rank() {
         let results = run_workers(3, |mut ep| {
             let local = vec![ep.rank as f32; 2];
-            ep.all_gather(&local, 7)
+            ep.all_gather(&local, 7).unwrap()
         });
         for r in &results {
             assert_eq!(r, &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
@@ -306,7 +809,7 @@ mod tests {
             // send [rank, dst] to each dst
             let chunks: Vec<Vec<f32>> =
                 (0..4).map(|d| vec![ep.rank as f32, d as f32]).collect();
-            ep.all_to_all(chunks, 9)
+            ep.all_to_all(chunks, 9).unwrap()
         });
         for (rank, r) in results.iter().enumerate() {
             for (src, chunk) in r.iter().enumerate() {
@@ -320,7 +823,7 @@ mod tests {
         let results = run_workers(3, |mut ep| {
             let chunks: Vec<Vec<f32>> =
                 (0..3).map(|d| vec![ep.rank as f32; d]).collect(); // len = dst
-            ep.all_to_all(chunks, 3)
+            ep.all_to_all(chunks, 3).unwrap()
         });
         for (rank, r) in results.iter().enumerate() {
             for (src, chunk) in r.iter().enumerate() {
@@ -339,7 +842,7 @@ mod tests {
             let group: Vec<usize> = if ep.rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
             let chunks: Vec<Vec<f32>> =
                 group.iter().map(|&d| vec![ep.rank as f32, d as f32]).collect();
-            (group.clone(), ep.all_to_all_group(&group, chunks, 11))
+            (group.clone(), ep.all_to_all_group(&group, chunks, 11).unwrap())
         });
         for (rank, (group, got)) in results.iter().enumerate() {
             for (i, chunk) in got.iter().enumerate() {
@@ -353,7 +856,7 @@ mod tests {
         let results = run_workers(3, |mut ep| {
             let group = [0usize, 1, 2];
             let chunks: Vec<Vec<f32>> = (0..3).map(|d| vec![ep.rank as f32; d + 1]).collect();
-            ep.all_to_all_group(&group, chunks, 17)
+            ep.all_to_all_group(&group, chunks, 17).unwrap()
         });
         for (rank, got) in results.iter().enumerate() {
             for (src, chunk) in got.iter().enumerate() {
@@ -367,7 +870,7 @@ mod tests {
     fn broadcast_from_root() {
         let results = run_workers(4, |mut ep| {
             let mut data = if ep.rank == 2 { vec![42.0, 7.0] } else { vec![] };
-            ep.broadcast(2, &mut data, 5);
+            ep.broadcast(2, &mut data, 5).unwrap();
             data
         });
         for r in results {
@@ -379,13 +882,13 @@ mod tests {
     fn out_of_order_tags_are_parked() {
         let results = run_workers(2, |mut ep| {
             if ep.rank == 0 {
-                ep.send(1, 2, vec![2.0]);
-                ep.send(1, 1, vec![1.0]);
+                ep.send(1, 2, vec![2.0]).unwrap();
+                ep.send(1, 1, vec![1.0]).unwrap();
                 vec![]
             } else {
                 // request tag 1 first even though tag 2 arrives first
-                let a = ep.recv(0, 1);
-                let b = ep.recv(0, 2);
+                let a = ep.recv(0, 1).unwrap();
+                let b = ep.recv(0, 2).unwrap();
                 vec![a[0], b[0]]
             }
         });
@@ -396,11 +899,134 @@ mod tests {
     fn single_rank_collectives_are_noops() {
         let results = run_workers(1, |mut ep| {
             let mut d = vec![5.0];
-            ep.all_reduce_sum(&mut d, 0);
-            let g = ep.all_gather(&d, 1);
+            ep.all_reduce_sum(&mut d, 0).unwrap();
+            let g = ep.all_gather(&d, 1).unwrap();
             (d, g)
         });
         assert_eq!(results[0].0, vec![5.0]);
         assert_eq!(results[0].1, vec![5.0]);
+    }
+
+    // -- supervision ------------------------------------------------------
+
+    #[test]
+    fn supervised_recv_times_out_on_silent_peer() {
+        // budget < NACK_EVERY: exhaust the retry budget before any probe.
+        let results = run_workers(2, |mut ep| {
+            if ep.rank == 1 {
+                ep.enable_chaos(Vec::new());
+                ep.set_retry_budget(8);
+                Some(ep.recv(0, 5))
+            } else {
+                // stay alive past the peer's budget so only the timeout
+                // path (not death detection) can fire
+                std::thread::sleep(Duration::from_millis(200));
+                None
+            }
+        });
+        match results[1] {
+            Some(Err(CommError::Timeout { src: 0, tag: 5, attempts })) => {
+                assert_eq!(attempts, 8);
+            }
+            ref other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dead_peer_detection_fails_over() {
+        let results = run_workers(2, |mut ep| {
+            if ep.rank == 1 {
+                ep.enable_chaos(Vec::new());
+                Some(ep.recv(0, 5))
+            } else {
+                None // exit immediately: channel closes
+            }
+        });
+        assert_eq!(results[1], Some(Err(CommError::Failover { dead: 0 })));
+    }
+
+    #[test]
+    fn drop_fault_recovers_by_resend() {
+        let t = tag(0, 0, TAG_FWD);
+        let ack = tag(0, 1, TAG_FWD);
+        let results = run_workers(2, move |mut ep| {
+            if ep.rank == 0 {
+                ep.enable_chaos(vec![PlannedFault {
+                    rank: 0,
+                    step: 0,
+                    micro: 0,
+                    purpose: TAG_FWD,
+                    kind: FaultKind::Drop,
+                    amount: 0,
+                }]);
+                ep.send(1, t, vec![1.0, 2.0, 3.0]).unwrap();
+                // serving the repair request happens inside this recv
+                let got = ep.recv(1, ack).unwrap();
+                assert_eq!(got, vec![9.0]);
+                let (injected, _, repairs) = ep.chaos_counters();
+                (injected.get("drop").copied(), repairs, Vec::new())
+            } else {
+                ep.enable_chaos(Vec::new());
+                let data = ep.recv(0, t).unwrap();
+                ep.send(0, ack, vec![9.0]).unwrap();
+                (None, 0, data)
+            }
+        });
+        assert_eq!(results[0].0, Some(1), "drop injected");
+        assert_eq!(results[0].1, 1, "repair served");
+        assert_eq!(results[1].2, vec![1.0, 2.0, 3.0], "payload repaired intact");
+    }
+
+    #[test]
+    fn corrupt_fault_detected_and_repaired() {
+        let t = tag(2, 1, TAG_DISPATCH);
+        let ack = tag(2, 2, TAG_DISPATCH);
+        let results = run_workers(2, move |mut ep| {
+            if ep.rank == 0 {
+                ep.enable_chaos(vec![PlannedFault {
+                    rank: 0,
+                    step: 2,
+                    micro: 1,
+                    purpose: TAG_DISPATCH,
+                    kind: FaultKind::Corrupt,
+                    amount: 3,
+                }]);
+                ep.send(1, t, vec![4.0, 5.0]).unwrap();
+                let _ = ep.recv(1, ack).unwrap();
+                let (injected, _, repairs) = ep.chaos_counters();
+                (injected.get("corrupt").copied(), repairs, 0, Vec::new())
+            } else {
+                ep.enable_chaos(Vec::new());
+                let data = ep.recv(0, t).unwrap();
+                ep.send(0, ack, vec![0.0]).unwrap();
+                let (_, corruptions, _) = ep.chaos_counters();
+                (None, 0, corruptions, data)
+            }
+        });
+        assert_eq!(results[0].0, Some(1), "corrupt injected");
+        assert_eq!(results[0].1, 1, "repair served");
+        assert_eq!(results[1].2, 1, "corruption detected by checksum");
+        assert_eq!(results[1].3, vec![4.0, 5.0], "payload repaired intact");
+    }
+
+    #[test]
+    fn complete_failover_purges_stale_epochs() {
+        let mut eps = fabric(2);
+        let mut a = eps.remove(0);
+        let mut b = eps.remove(0);
+        a.enable_chaos(Vec::new());
+        b.enable_chaos(Vec::new());
+        // park an epoch-0 frame at b, then fail over: it must vanish
+        b.send(0, 0, Vec::new()).unwrap(); // keep b's channel warm (self-consistency)
+        a.send(1, 7, vec![1.0]).unwrap();
+        b.set_retry_budget(200);
+        let got = b.recv(0, 7).unwrap();
+        assert_eq!(got, vec![1.0]);
+        a.send(1, 8, vec![2.0]).unwrap();
+        // b parks tag 8 while looking for tag 9... simulate by failing over first
+        b.complete_failover(0);
+        b.set_retry_budget(2);
+        // the stale epoch-0 frame for tag 8 is discarded on arrival
+        assert_eq!(b.recv(0, 8), Err(CommError::Timeout { src: 0, tag: 8, attempts: 2 }));
     }
 }

@@ -19,6 +19,6 @@ pub mod comm;
 pub mod pipeline;
 pub mod router;
 
-pub use comm::{chunk_ranges, fabric, run_workers, Endpoint, Msg};
+pub use comm::{chunk_ranges, fabric, run_workers, CommError, CommResult, Endpoint, Msg, MsgKind};
 pub use pipeline::{one_f_one_b, simulate_slots, Action};
 pub use router::{unpack_a2a_manifest, Assignment, RoutedToken, RouteResult, Router, RouterConfig};

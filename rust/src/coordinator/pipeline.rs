@@ -26,6 +26,15 @@ impl Action {
             Action::Forward(i) | Action::Backward(i) => *i,
         }
     }
+
+    /// The message-tag purpose this action's traffic uses — the logical
+    /// coordinate the chaos fault planner keys worker-side faults on.
+    pub fn purpose(&self) -> u64 {
+        match self {
+            Action::Forward(_) => TAG_FWD,
+            Action::Backward(_) => TAG_BWD,
+        }
+    }
 }
 
 /// Message-tag purposes for the mapped driver's sends. Combined with
@@ -45,6 +54,23 @@ pub const TAG_STATS: u64 = 6;
 /// `tag_base + 1..tag_base + n` — both fit for fabrics up to 128 ranks).
 pub fn tag(step: usize, slot: usize, purpose: u64) -> u64 {
     ((step as u64) << 32) | ((slot as u64) << 12) | (purpose << 8)
+}
+
+/// Inverse of [`tag`]: the step a wire tag belongs to. The chaos layer
+/// uses these to match planned faults against live traffic by logical
+/// coordinate instead of wall time.
+pub fn tag_step(t: u64) -> usize {
+    (t >> 32) as usize
+}
+
+/// Inverse of [`tag`]: the microbatch / gradient-tensor slot.
+pub fn tag_slot(t: u64) -> usize {
+    ((t >> 12) & 0xF_FFFF) as usize
+}
+
+/// Inverse of [`tag`]: the purpose (TAG_FWD .. TAG_STATS).
+pub fn tag_purpose(t: u64) -> u64 {
+    (t >> 8) & 0xF
 }
 
 /// Per-stage ordered action list for 1F1B with `n_micro` microbatches over
@@ -227,6 +253,25 @@ mod tests {
         assert_eq!(Action::Backward(0).label(), "bwd 0");
         assert_eq!(Action::Forward(7).micro(), 7);
         assert_eq!(Action::Backward(7).micro(), 7);
+        assert_eq!(Action::Forward(1).purpose(), TAG_FWD);
+        assert_eq!(Action::Backward(1).purpose(), TAG_BWD);
+    }
+
+    #[test]
+    fn tag_decomposition_round_trips() {
+        for step in [0usize, 1, 7, 4095] {
+            for slot in [0usize, 3, 1023] {
+                for purpose in [TAG_FWD, TAG_BWD, TAG_DISPATCH, TAG_COMBINE, TAG_GRADS, TAG_STATS]
+                {
+                    let t = tag(step, slot, purpose);
+                    assert_eq!(tag_step(t), step);
+                    assert_eq!(tag_slot(t), slot);
+                    assert_eq!(tag_purpose(t), purpose);
+                    // the low 8 hop-counter bits never leak upward
+                    assert_eq!(tag_purpose(t + 255), purpose);
+                }
+            }
+        }
     }
 
     #[test]

@@ -23,15 +23,27 @@ pub struct RouterConfig {
     /// Optional device-limited routing: each token's experts must sit on
     /// at most M distinct ranks (None = unrestricted — the Passage case).
     pub max_devices_per_token: Option<usize>,
+    /// Optional degraded-fabric remap after a failover:
+    /// `(owners, n_peers)` where `owners[expert]` is the group *position*
+    /// now hosting that expert among the `n_peers` surviving EP peers
+    /// (see [`crate::chaos::degraded_owners`]). None = the healthy
+    /// block layout.
+    pub remap: Option<(Vec<usize>, usize)>,
 }
 
 impl RouterConfig {
     pub fn n_ranks(&self) -> usize {
+        if let Some((_, n_peers)) = &self.remap {
+            return *n_peers;
+        }
         assert_eq!(self.n_experts % self.experts_per_rank, 0);
         self.n_experts / self.experts_per_rank
     }
 
     pub fn rank_of_expert(&self, e: usize) -> usize {
+        if let Some((owners, _)) = &self.remap {
+            return owners[e];
+        }
         e / self.experts_per_rank
     }
 }
@@ -243,6 +255,7 @@ mod tests {
             experts_per_rank: epr,
             capacity: cap,
             max_devices_per_token: None,
+            remap: None,
         }
     }
 
@@ -375,6 +388,24 @@ mod tests {
             prop_assert!(rank_sum == res.assignments.len(), "per-rank mismatch");
             Ok(())
         });
+    }
+
+    #[test]
+    fn remap_redirects_experts_to_surviving_peers() {
+        // 4 experts over dp=2 (2 per rank); group 0 retired, group 1
+        // survives alone as position 0 of a 1-peer fabric.
+        let mut c = cfg(4, 2, 2, 10);
+        c.remap = Some((crate::chaos::degraded_owners(4, 2, &[1]), 1));
+        let r = Router::new(c);
+        assert_eq!(r.cfg.n_ranks(), 1);
+        for e in 0..4 {
+            assert_eq!(r.cfg.rank_of_expert(e), 0);
+        }
+        let res = r.route(&[vec![0, 3], vec![1, 2]]);
+        assert_eq!(res.per_rank_tokens, vec![4]);
+        let packed = r.pack_a2a_manifest(&res, &[vec![1.0], vec![2.0]]);
+        assert_eq!(packed.len(), 1);
+        assert_eq!(unpack_a2a_manifest(&packed[0], 1).len(), 4);
     }
 
     #[test]

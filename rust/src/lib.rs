@@ -38,12 +38,16 @@
 //!   dependencies are the `vendor/` shims for `anyhow` and the `xla` API);
 //!   [`analysis`], the determinism & concurrency lint (`lumos lint`)
 //!   that makes the byte-identical `--jobs N` / seeded-reproducibility
-//!   contract structural instead of conventional; and [`obs`],
+//!   contract structural instead of conventional; [`obs`],
 //!   deterministic simulated-time tracing (Perfetto-loadable Chrome trace
 //!   JSON, `lumos trace`), the `"metrics"` counters of every `--json`
-//!   output, and the quarantined opt-in wall-clock profiler.
+//!   output, and the quarantined opt-in wall-clock profiler; and
+//!   [`chaos`], the seeded deterministic fault planner behind
+//!   `lumos run --chaos` — logical-coordinate fault injection with
+//!   supervised recovery, cross-checked against the [`resilience`] model.
 
 pub mod analysis;
+pub mod chaos;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

@@ -25,7 +25,10 @@
 //! - `run`      execute the planner's winning mapping as a flight-recorded
 //!   host-backend miniature and report the three-way per-phase gap:
 //!   analytical vs simulated vs executed (`--trace exec.json` writes the
-//!   merged per-rank recording as a Chrome trace)
+//!   merged per-rank recording as a Chrome trace; `--chaos`/`--faults`
+//!   inject a seeded deterministic fault plan, supervise the recovery —
+//!   checkpoint rewind, DP-replica retirement, message repair — and
+//!   report executed vs modeled recovery next to the resilience model)
 //! - `trace`    deterministic Chrome/Perfetto trace of one simulated
 //!   training step (`--out step.json`, loadable at ui.perfetto.dev;
 //!   byte-identical for any `--jobs`; `--check <file>` runs the in-tree
@@ -258,11 +261,23 @@ fn cli() -> Command {
             .opt_default("micro", "1F1B microbatches per step", "2")
             .opt_default("seed", "rng seed", "42")
             .opt_default("jobs", "worker threads for the planner scoring grid", "1")
+            .opt("pp", "override the miniature pipeline depth (must divide --ranks)")
             .opt("knobs", "JSON file with calibration knob overrides")
             .opt(
                 "trace",
                 "write the merged per-rank flight recording (Chrome trace JSON) here",
             )
+            .flag(
+                "chaos",
+                "inject a seeded fault plan and supervise recovery \
+                 (default spec crash=1,drop=1,stall=1)",
+            )
+            .opt(
+                "faults",
+                "chaos fault spec, e.g. crash=1,drop=2,stall=1 \
+                 (kinds: stall|crash|hang|drop|corrupt|degrade; implies --chaos)",
+            )
+            .opt_default("ckpt-every", "chaos in-memory checkpoint cadence (steps)", "2")
             .flag("verbose", "per-step progress to stderr")
             .flag("json", "machine-readable output (wall-clock values live only under \
                  executed keys: report, executed phases, metrics)"),
@@ -1121,6 +1136,7 @@ fn phase_json(p: &lumos::timeline::PhaseBreakdown) -> Json {
 }
 
 fn run_cmd(args: &Args) -> anyhow::Result<()> {
+    use lumos::chaos;
     use lumos::obs;
     use lumos::timeline;
     use lumos::trainer::MiniMapping;
@@ -1135,6 +1151,10 @@ fn run_cmd(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(n_micro > 0, "--micro must be nonzero");
     let seed = args.get_usize("seed").map_err(anyhow::Error::msg)?.unwrap_or(42) as u64;
     let jobs = args.get_usize("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1);
+    let pp_override = args.get_usize("pp").map_err(anyhow::Error::msg)?;
+    let ckpt_every = args.get_usize("ckpt-every").map_err(anyhow::Error::msg)?.unwrap_or(2);
+    let fault_spec = args.get("faults").map(|s| s.to_string());
+    let chaos_on = args.flag("chaos") || fault_spec.is_some();
     let knobs = knobs_from_args(args)?;
     let key = cluster_key_from_args(args)?;
     let cache = ClusterCache::new();
@@ -1151,11 +1171,41 @@ fn run_cmd(args: &Args) -> anyhow::Result<()> {
     );
     let win = &outcome.ranked[0];
     let map = &win.mapping;
-    let m = MiniMapping::scale(map.par.pp, ranks, n_micro);
+    let m = match pp_override {
+        Some(pp) => {
+            anyhow::ensure!(
+                pp >= 1 && ranks % pp == 0,
+                "--pp {pp} must be >= 1 and divide --ranks {ranks}"
+            );
+            MiniMapping { pp, dp: ranks / pp, n_micro }
+        }
+        None => MiniMapping::scale(map.par.pp, ranks, n_micro),
+    };
+
+    // Materialize the seeded fault plan before the run so both the
+    // injector and the report carry the same digest.
+    let chaos_plan = if chaos_on {
+        let spec = chaos::ChaosSpec::parse(
+            fault_spec.as_deref().unwrap_or("crash=1,drop=1,stall=1"),
+        )?;
+        let plan =
+            chaos::FaultPlan::generate(&spec, seed, m.pp, m.dp, m.n_micro, steps, ckpt_every)?;
+        Some((spec.to_string(), plan))
+    } else {
+        None
+    };
 
     let engine = Engine::host();
     let art = Artifact::host_miniature();
-    let out = trainer::run_mapped(&engine, &art, m, steps, seed, args.flag("verbose"))?;
+    let out = trainer::run_mapped_chaos(
+        &engine,
+        &art,
+        m,
+        steps,
+        seed,
+        args.flag("verbose"),
+        chaos_plan.as_ref().map(|(_, p)| p),
+    )?;
 
     // Three views of where one training step's time goes: the closed
     // form, the discrete-event simulation of the planner's mapping, and
@@ -1198,9 +1248,10 @@ fn run_cmd(args: &Args) -> anyhow::Result<()> {
                 })
                 .collect(),
         );
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("cluster", Json::str(&cluster.spec.name)),
             ("config", Json::str(&outcome.config_name)),
+            ("seed", Json::num(seed as f64)),
             (
                 "planner_mapping",
                 Json::obj(vec![
@@ -1228,7 +1279,39 @@ fn run_cmd(args: &Args) -> anyhow::Result<()> {
                 ]),
             ),
             ("metrics", metrics),
-        ]);
+        ];
+        // Full chaos provenance: everything needed to reproduce the run
+        // and the executed-vs-modeled recovery comparison. Byte-identical
+        // across --jobs and reruns (the CI chaos smoke compares it).
+        if let (Some((spec_text, plan)), Some(report)) = (&chaos_plan, &out.chaos) {
+            let planned: Vec<Json> = plan
+                .faults
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("rank", Json::num(f.rank as f64)),
+                        ("step", Json::num(f.step as f64)),
+                        ("micro", Json::num(f.micro as f64)),
+                        ("purpose", Json::num(f.purpose as f64)),
+                        ("kind", Json::str(f.kind.as_str())),
+                        ("amount", Json::num(f.amount as f64)),
+                    ])
+                })
+                .collect();
+            fields.push((
+                "chaos",
+                Json::obj(vec![
+                    ("seed", Json::num(seed as f64)),
+                    ("spec", Json::str(spec_text)),
+                    ("plan_digest", Json::str(&plan.digest())),
+                    ("ckpt_every", Json::num(plan.ckpt_every as f64)),
+                    ("planned_faults", Json::Arr(planned)),
+                    ("report", report.to_json()),
+                    ("modeled", chaos::modeled_recovery(plan, steps).to_json()),
+                ]),
+            ));
+        }
+        let j = Json::obj(fields);
         println!("{}", j.to_string_pretty());
         return Ok(());
     }
@@ -1262,6 +1345,31 @@ fn run_cmd(args: &Args) -> anyhow::Result<()> {
         execs,
         hits
     );
+    if let (Some((spec_text, plan)), Some(report)) = (&chaos_plan, &out.chaos) {
+        let modeled = chaos::modeled_recovery(plan, steps);
+        println!(
+            "chaos recovery (spec {spec_text}, seed {seed}, plan {}, ckpt every {}):",
+            plan.digest(),
+            plan.ckpt_every
+        );
+        println!("{}", report.table());
+        let exec_ratio = report.degraded_ratio();
+        let lo = modeled.expected_degraded_ratio - modeled.ratio_band;
+        let hi = modeled.expected_degraded_ratio + modeled.ratio_band;
+        let status =
+            if (lo..=hi).contains(&exec_ratio) { "within band" } else { "OUTSIDE band" };
+        println!(
+            "  vs model       : degraded ratio {:.3} executed vs {:.3} ± {:.3} modeled ({status})",
+            exec_ratio, modeled.expected_degraded_ratio, modeled.ratio_band
+        );
+        println!(
+            "  vs model       : {} step(s) rolled back vs {:.1} modeled; {} repair(s) vs {} modeled",
+            report.steps_rolled_back,
+            modeled.expected_rollback_steps,
+            report.repairs_served,
+            modeled.expected_repairs
+        );
+    }
     println!("three-way phase shares (% of each view's own step):");
     println!(
         "  {:<8}  {:>10}  {:>10}  {:>10}",

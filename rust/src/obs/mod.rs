@@ -42,7 +42,7 @@ pub mod trace;
 pub use diff::{diff_json, diff_parsed, diff_table, diff_traces, parse_chrome_trace, TraceDiff};
 pub use metrics::{Hist, Metrics};
 pub use profile::StageProfiler;
-pub use record::{to_trace, Recorder, Recording, Stopwatch, PID_EXEC};
+pub use record::{to_trace, Recorder, Recording, Stopwatch, PID_EXEC, TID_CHAOS_OFFSET};
 pub use trace::{
     check_chrome_trace, resilience_trace, step_trace, StepTrace, Trace, TraceCheck, TraceEvent,
     PID_FABRIC, PID_RESILIENCE, PID_STEP,

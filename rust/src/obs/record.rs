@@ -32,6 +32,12 @@ use crate::obs::trace::Trace;
 /// [`crate::obs::trace::PID_STEP`]; 1–3 are taken).
 pub const PID_EXEC: usize = 4;
 
+/// Tid offset of the per-rank chaos tracks under [`PID_EXEC`]: rank
+/// `r`'s fault/detect/repair/failover instants render on
+/// `TID_CHAOS_OFFSET + r`, separate from its span track so the span
+/// tiling invariant stays visible. Far above any real rank count.
+pub const TID_CHAOS_OFFSET: usize = 1000;
+
 // lumos: wallclock-capture-begin
 //
 // The ONLY clock reads allowed in this file. Everything below the
@@ -179,8 +185,12 @@ impl Recorder {
 
 /// Merge per-rank recordings into one executed-step [`Trace`]: process
 /// [`PID_EXEC`], one span track per rank (tid = rank), counter tracks
-/// named by the recording. Recordings are sorted by rank so the artifact
-/// layout is independent of worker completion order.
+/// named by the recording. A rank with chaos instants (cat `"chaos"`)
+/// additionally gets a `rank N chaos` instant track at
+/// [`TID_CHAOS_OFFSET`]` + N`; chaos *spans* (stall, failover) stay on
+/// the rank's span track so the tiling invariant is preserved.
+/// Recordings are sorted by rank so the artifact layout is independent
+/// of worker completion order.
 pub fn to_trace(recordings: &[Recording]) -> Trace {
     let mut order: Vec<&Recording> = recordings.iter().collect();
     order.sort_by_key(|r| r.rank);
@@ -190,12 +200,19 @@ pub fn to_trace(recordings: &[Recording]) -> Trace {
         t.thread(PID_EXEC, rec.rank, &format!("rank {}", rec.rank));
     }
     for rec in &order {
+        if rec.instants.iter().any(|(_, cat, _)| cat == "chaos") {
+            t.thread(PID_EXEC, TID_CHAOS_OFFSET + rec.rank, &format!("rank {} chaos", rec.rank));
+        }
+    }
+    for rec in &order {
         for s in &rec.spans {
             let args: Vec<(&str, f64)> = s.args.iter().map(|(k, v)| (k.as_str(), *v)).collect();
             t.span_args(PID_EXEC, rec.rank, &s.name, &s.cat, s.start_s, s.end_s, &args);
         }
         for (name, cat, ts) in &rec.instants {
-            t.instant(PID_EXEC, rec.rank, name, cat, *ts);
+            let tid =
+                if cat == "chaos" { TID_CHAOS_OFFSET + rec.rank } else { rec.rank };
+            t.instant(PID_EXEC, tid, name, cat, *ts);
         }
         for (name, ts, value) in &rec.counters {
             t.counter(PID_EXEC, &format!("rank {} {}", rec.rank, name), *ts, *value);
@@ -265,5 +282,31 @@ mod tests {
         assert_eq!(check.tracks, 4);
         assert_eq!(check.instants, 4);
         assert_eq!(check.counters, 4);
+    }
+
+    #[test]
+    fn chaos_instants_land_on_their_own_track() {
+        let mut r = Recorder::start(1);
+        r.mark("step 0", "step");
+        r.cut("fwd", "compute");
+        r.mark("inject drop rank 1 -> 0", "chaos");
+        r.cut("stall", "chaos");
+        r.cut("bwd", "compute");
+        let chaotic = r.finish();
+        let mut q = Recorder::start(0);
+        q.cut("fwd", "compute");
+        let quiet = q.finish();
+
+        let trace = to_trace(&[chaotic, quiet]);
+        let doc = trace.to_chrome_json();
+        let check = check_chrome_trace(&doc).expect("chaos trace is schema-valid");
+        // span tracks: rank 0 and rank 1 (chaos instants carry no spans)
+        assert_eq!(check.tracks, 2);
+        assert_eq!(check.instants, 2);
+        let text = doc.to_string_compact();
+        assert!(text.contains("rank 1 chaos"), "chaos thread registered");
+        assert!(!text.contains("rank 0 chaos"), "quiet rank gets no chaos track");
+        // chaos spans (the stall) stay on the rank's span track
+        assert_eq!(check.spans, 4);
     }
 }

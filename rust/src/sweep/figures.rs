@@ -657,6 +657,7 @@ pub fn routing_restriction_ablation() -> Table {
             experts_per_rank: 2,
             capacity: n_tokens * 8 / 64 + 64,
             max_devices_per_token: limit,
+            remap: None,
         };
         let r = Router::new(cfg);
         let mut rng = Rng::new(4242);

@@ -20,24 +20,52 @@
 //! stage decomposition therefore shapes the *schedule and
 //! communication* — what the flight recorder observes — while the
 //! numerics stay pure data-parallel: gradients are averaged over
-//! microbatches, ring-all-reduced over the full fabric, and applied as
+//! microbatches, ring-all-reduced over the active fabric, and applied as
 //! identical Adam updates, exactly like [`super::train_dp`]. The driver
 //! cross-checks itself every backward: the distributed forward's
 //! cross-entropy (through routing, dispatch, expert MLPs, combine) must
 //! match the fused `grad_step` entry's loss on the same microbatch.
+//!
+//! # Chaos supervision ([`run_mapped_chaos`])
+//!
+//! With a [`FaultPlan`] armed, the driver becomes a supervised system:
+//! every step attempt runs under typed [`CommError`]s instead of
+//! panics, the endpoint injects the plan's message faults
+//! (drop/corrupt/degrade, repaired in the comm layer), and the worker
+//! injects its own stall/crash/hang faults at the planned (step, micro,
+//! purpose) coordinate. Recovery is checkpoint-rewind: every
+//! `ckpt_every` steps each rank snapshots its full state in memory;
+//! when a rank dies, survivors abort the step on the
+//! [`CommError::Failover`] notice, retire the dead rank's whole DP
+//! group, rewind to the **plan-derived** checkpoint
+//! `K * floor((crash_step - 1) / K)` (survivors may observe the notice
+//! one step apart — only a plan-derived target keeps them bit-aligned),
+//! and re-execute one DP replica short with experts re-spilled over the
+//! survivors ([`crate::chaos::degraded_owners`]). Retired ranks park
+//! until the survivors' end-of-run shutdown so no channel closes while
+//! failover frames are in flight. Everything lands in the flight
+//! recorder under the `chaos` category, and the aggregate
+//! [`ChaosReport`] is a pure function of the plan — byte-identical
+//! across `--jobs` and reruns.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::comm::{self, Endpoint};
+use crate::chaos::{degraded_owners, ChaosReport, FaultKind, FaultPlan, PlannedFault};
+use crate::coordinator::comm::{self, CommError, Endpoint};
 use crate::coordinator::pipeline::{self, one_f_one_b, Action};
 use crate::coordinator::router::{unpack_a2a_manifest, Router, RouterConfig};
 use crate::obs::record::{Recorder, Recording};
 use crate::runtime::{host, Artifact, Engine, HostCfg, Tensor};
 use crate::trainer::{Corpus, StepLog, TrainReport};
 use crate::util::rng::Rng;
+
+/// How long an injected hang sleeps: longer than the survivors' default
+/// retry budget, so the unsupervised-fault canary fails in bounded time.
+const HANG_MS: u64 = 10_000;
 
 /// A miniature execution mapping: `pp` pipeline stages × `dp`
 /// data-parallel groups (= expert-parallel width), `n_micro`
@@ -89,11 +117,14 @@ impl MiniMapping {
 }
 
 /// What one mapped run produces: the loss trajectory plus every rank's
-/// flight recording (merge with [`crate::obs::record::to_trace`]).
+/// flight recording (merge with [`crate::obs::record::to_trace`]) and,
+/// for chaos runs, the executed recovery report.
 #[derive(Debug, Clone)]
 pub struct RunOutcome {
     pub report: TrainReport,
     pub recordings: Vec<Recording>,
+    /// Present iff the run was driven by a fault plan.
+    pub chaos: Option<ChaosReport>,
 }
 
 impl RunOutcome {
@@ -110,14 +141,76 @@ impl RunOutcome {
     }
 }
 
+/// Why one step attempt ended early: a typed comm failure the
+/// supervisor can act on (rewind on failover, fail the job on an
+/// exhausted retry budget), or a terminal driver error.
+enum StepErr {
+    Comm(CommError),
+    Other(anyhow::Error),
+}
+
+impl From<CommError> for StepErr {
+    fn from(e: CommError) -> Self {
+        StepErr::Comm(e)
+    }
+}
+
+impl From<anyhow::Error> for StepErr {
+    fn from(e: anyhow::Error) -> Self {
+        StepErr::Other(e)
+    }
+}
+
 /// Per-worker context shared by the forward/backward handlers.
 struct Worker {
     cfg: HostCfg,
     m: MiniMapping,
     stage: usize,
     group: usize,
+    /// Surviving DP group ids, ascending. Starts as `0..dp`; failover
+    /// removes the dead rank's group on every survivor identically.
+    active_groups: Vec<usize>,
+    /// This stage's surviving EP peers (global ranks, ascending).
     ep_group: Vec<usize>,
     router: Router,
+}
+
+/// The expert router for the (possibly degraded) set of active DP
+/// groups: with everyone alive this is the healthy partition; after a
+/// retirement the retired groups' experts are re-spilled round-robin
+/// over the survivors via the router remap.
+fn make_router(cfg: &HostCfg, m: MiniMapping, active: &[usize]) -> Router {
+    let remap = if active.len() == m.dp {
+        None
+    } else {
+        Some((degraded_owners(cfg.n_experts, m.dp, active), active.len()))
+    };
+    Router::new(RouterConfig {
+        n_experts: cfg.n_experts,
+        top_k: cfg.top_k,
+        experts_per_rank: cfg.n_experts / m.dp,
+        // every token fits: a token hits an expert at most once
+        capacity: cfg.predictions(),
+        max_devices_per_token: None,
+        remap,
+    })
+}
+
+/// Match the next unfired worker-side fault (stall/crash/hang) against
+/// this action's logical coordinate; consume and return it.
+fn fire_worker_fault(
+    faults: &mut [(PlannedFault, bool)],
+    step: usize,
+    action: &Action,
+) -> Option<PlannedFault> {
+    for (f, fired) in faults.iter_mut() {
+        if !*fired && f.step == step && f.micro == action.micro() && f.purpose == action.purpose()
+        {
+            *fired = true;
+            return Some(*f);
+        }
+    }
+    None
 }
 
 /// Forward state handed from a microbatch's forward to its backward.
@@ -143,6 +236,29 @@ impl Worker {
         Tensor::I32(data, vec![self.cfg.batch, row])
     }
 
+    /// Retire a DP group after failover: shrink the active set, rebuild
+    /// this stage's EP peer list and the degraded router. Deterministic
+    /// and identical on every survivor.
+    fn retire_group(&mut self, dead_group: usize) {
+        self.active_groups.retain(|&g| g != dead_group);
+        self.ep_group =
+            self.active_groups.iter().map(|&g| self.m.rank_of(self.stage, g)).collect();
+        self.router = make_router(&self.cfg, self.m, &self.active_groups);
+    }
+
+    /// All surviving global ranks (every stage × every active group),
+    /// ascending — the group the data-parallel collectives run over.
+    fn fabric_ranks(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.m.pp * self.active_groups.len());
+        for s in 0..self.m.pp {
+            for &g in &self.active_groups {
+                out.push(self.m.rank_of(s, g));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
     /// The distributed forward of one microbatch: gate locally, dispatch
     /// tokens to their expert owners over the group all-to-all, run the
     /// local experts, combine the returns, and score the next-token
@@ -155,7 +271,7 @@ impl Worker {
         tokens: &Tensor,
         step: usize,
         micro: usize,
-    ) -> Result<MicroFwd> {
+    ) -> Result<MicroFwd, StepErr> {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let ids = tokens.as_i32()?;
@@ -163,7 +279,7 @@ impl Worker {
 
         if self.stage > 0 {
             let src = self.m.rank_of(self.stage - 1, self.group);
-            let _upstream = ep.recv(src, pipeline::tag(step, micro, pipeline::TAG_FWD));
+            let _upstream = ep.recv(src, pipeline::tag(step, micro, pipeline::TAG_FWD))?;
             rec.cut(&format!("recv fwd {micro}"), "bubble");
         }
 
@@ -191,7 +307,7 @@ impl Worker {
             xs.iter().map(|x| x.iter().map(|&v| v as f32).collect()).collect();
         let packed = self.router.pack_a2a_manifest(&route, &feats);
         let tag = pipeline::tag(step, micro, pipeline::TAG_DISPATCH);
-        let recvd = ep.all_to_all_group(&self.ep_group, packed, tag);
+        let recvd = ep.all_to_all_group(&self.ep_group, packed, tag)?;
         rec.cut(&format!("dispatch a2a {micro}"), "ep");
 
         // Expert compute on everything received, reply in sender order.
@@ -215,7 +331,7 @@ impl Worker {
         );
 
         let tag = pipeline::tag(step, micro, pipeline::TAG_COMBINE);
-        let returned = ep.all_to_all_group(&self.ep_group, replies, tag);
+        let returned = ep.all_to_all_group(&self.ep_group, replies, tag)?;
         rec.cut(&format!("combine a2a {micro}"), "ep");
 
         // Combine: pair each reply chunk with this rank's assignments in
@@ -256,16 +372,33 @@ impl Worker {
 
         if self.stage + 1 < self.m.pp {
             let dst = self.m.rank_of(self.stage + 1, self.group);
-            ep.send(dst, pipeline::tag(step, micro, pipeline::TAG_FWD), h_flat);
+            ep.send(dst, pipeline::tag(step, micro, pipeline::TAG_FWD), h_flat)?;
             rec.cut(&format!("send fwd {micro}"), "pp");
         }
         Ok(MicroFwd { dist_ce: ce })
     }
 }
 
+/// What one worker thread hands back to the driver.
+struct WorkerOut {
+    logs: Vec<StepLog>,
+    rec: Recording,
+    crashed: bool,
+    retired: bool,
+    /// Surviving DP group ids at the end of the run.
+    active: Vec<usize>,
+    rewinds: usize,
+    steps_rolled_back: usize,
+    degraded_steps: usize,
+    dead_seen: Vec<usize>,
+    injected: BTreeMap<String, usize>,
+    corruptions: usize,
+    repairs: usize,
+}
+
 /// Execute `steps` training steps of `art` under mapping `m` on
-/// `m.ranks()` worker threads. Returns rank-0's report plus every
-/// rank's flight recording.
+/// `m.ranks()` worker threads. Returns the designated rank's report plus
+/// every rank's flight recording.
 pub fn run_mapped(
     engine: &Engine,
     art: &Artifact,
@@ -273,6 +406,22 @@ pub fn run_mapped(
     steps: usize,
     seed: u64,
     verbose: bool,
+) -> Result<RunOutcome> {
+    run_mapped_chaos(engine, art, m, steps, seed, verbose, None)
+}
+
+/// [`run_mapped`] under chaos supervision: with `plan == None` this is
+/// bit-identical to the plain driver; with a plan, faults are injected
+/// at their logical coordinates and the run must survive every
+/// supervised fault kind (module docs).
+pub fn run_mapped_chaos(
+    engine: &Engine,
+    art: &Artifact,
+    m: MiniMapping,
+    steps: usize,
+    seed: u64,
+    verbose: bool,
+    plan: Option<&FaultPlan>,
 ) -> Result<RunOutcome> {
     if m.pp == 0 || m.dp == 0 || m.n_micro == 0 {
         bail!("mapping must have pp, dp, n_micro >= 1");
@@ -292,175 +441,500 @@ pub fn run_mapped(
     if cfg.n_experts % m.dp != 0 {
         bail!("dp={} must divide n_experts={} for expert placement", m.dp, cfg.n_experts);
     }
+    if let Some(p) = plan {
+        if p.ckpt_every == 0 {
+            bail!("chaos plan needs ckpt_every >= 1");
+        }
+        for f in &p.faults {
+            if f.rank >= m.ranks() || f.step >= steps || f.micro >= m.n_micro {
+                bail!("planned fault {f:?} is outside the (rank, step, micro) grid");
+            }
+            if f.kind == FaultKind::Crash && (m.dp < 2 || f.step == 0) {
+                bail!("a crash fault needs dp >= 2 and a committed step before it");
+            }
+        }
+    }
 
     let init = engine.load(art, "init")?;
     let grad = engine.load(art, "grad_step")?;
     let apply = engine.load(art, "apply_update")?;
     let n_params = art.n_params;
     let n_ranks = m.ranks();
+    let plan_owned: Option<FaultPlan> = plan.cloned();
 
     // Identical initial state on every rank (same seed through init).
     let state0 = Arc::new(init.execute(&[Tensor::scalar_u32(seed as u32)])?);
 
-    let results = comm::run_workers(n_ranks, move |mut ep| -> Result<(Vec<StepLog>, Recording)> {
+    let results = comm::run_workers(n_ranks, move |mut ep| -> Result<WorkerOut> {
         let rank = ep.rank;
-        let w = Worker {
-            cfg,
-            m,
-            stage: m.stage_of(rank),
-            group: m.group_of(rank),
-            ep_group: m.ep_group(rank),
-            router: Router::new(RouterConfig {
-                n_experts: cfg.n_experts,
-                top_k: cfg.top_k,
-                experts_per_rank: cfg.n_experts / m.dp,
-                // every token fits: a token hits an expert at most once
-                capacity: cfg.predictions(),
-                max_devices_per_token: None,
-            }),
-        };
-        let corpus = Corpus::markov(cfg.vocab, seed ^ 0xC0FFEE);
-        let sched = one_f_one_b(m.pp, w.stage, m.n_micro);
-        let mut state: Vec<Tensor> = (*state0).clone();
-        let mut rec = Recorder::start(rank);
-        let mut logs = Vec::with_capacity(steps);
+        let chaos_on = plan_owned.is_some();
+        let out = {
+            let mut body = || -> Result<WorkerOut> {
+                let mut w = Worker {
+                    cfg,
+                    m,
+                    stage: m.stage_of(rank),
+                    group: m.group_of(rank),
+                    active_groups: (0..m.dp).collect(),
+                    ep_group: m.ep_group(rank),
+                    router: make_router(&cfg, m, &(0..m.dp).collect::<Vec<_>>()),
+                };
+                let corpus = Corpus::markov(cfg.vocab, seed ^ 0xC0FFEE);
+                let sched = one_f_one_b(m.pp, w.stage, m.n_micro);
+                let mut state: Vec<Tensor> = (*state0).clone();
+                let mut rec = Recorder::start(rank);
+                let mut logs: Vec<StepLog> = Vec::with_capacity(steps);
 
-        for step in 0..steps {
-            let step_t0 = rec.now();
-            let bytes0 = ep.bytes_sent;
-            rec.mark(&format!("step {step}"), "step");
-            let params = host::HostParams::from_tensors(&state[..n_params])?;
-            let mut grads_acc = host::zero_grads(&cfg);
-            let mut fwd: Vec<Option<MicroFwd>> = (0..m.n_micro).map(|_| None).collect();
-            let (mut ce_sum, mut aux_sum) = (0.0, 0.0);
+                // Chaos arming: the comm layer owns message faults, the
+                // worker owns stall/crash/hang; the fail-stop fault is
+                // read from the *full* plan so every survivor derives
+                // the same rewind target without coordination.
+                let ckpt_every = plan_owned.as_ref().map(|p| p.ckpt_every.max(1)).unwrap_or(1);
+                let failstop: Option<PlannedFault> = plan_owned.as_ref().and_then(|p| {
+                    p.faults
+                        .iter()
+                        .find(|f| matches!(f.kind, FaultKind::Crash | FaultKind::Hang))
+                        .copied()
+                });
+                let mut local_faults: Vec<(PlannedFault, bool)> = Vec::new();
+                if let Some(p) = plan_owned.as_ref() {
+                    let mine = p.for_rank(rank);
+                    ep.enable_chaos(
+                        mine.iter()
+                            .filter(|f| {
+                                matches!(
+                                    f.kind,
+                                    FaultKind::Drop | FaultKind::Corrupt | FaultKind::LinkDegrade
+                                )
+                            })
+                            .copied()
+                            .collect(),
+                    );
+                    local_faults = mine
+                        .into_iter()
+                        .filter(|f| {
+                            matches!(f.kind, FaultKind::Stall | FaultKind::Crash | FaultKind::Hang)
+                        })
+                        .map(|f| (f, false))
+                        .collect();
+                }
+                let mut snaps: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+                let mut local_injected: BTreeMap<String, usize> = BTreeMap::new();
+                let (mut crashed, mut retired) = (false, false);
+                let mut rewinds = 0usize;
+                let mut steps_rolled_back = 0usize;
+                let mut degraded_steps = 0usize;
+                let mut dead_seen: Vec<usize> = Vec::new();
 
-            for action in &sched {
-                let micro = action.micro();
-                match action {
-                    Action::Forward(_) => {
-                        let tokens = w.micro_tokens(&corpus, seed, step, micro);
-                        fwd[micro] =
-                            Some(w.forward(&mut ep, &mut rec, &params, &tokens, step, micro)?);
+                let mut step = 0usize;
+                while step < steps {
+                    if chaos_on && step % ckpt_every == 0 {
+                        // In-memory checkpoint: full state (params +
+                        // optimizer moments). Re-inserted identically on
+                        // re-execution after a rewind.
+                        snaps.insert(step, state.clone());
                     }
-                    Action::Backward(_) => {
-                        if w.stage + 1 < m.pp {
-                            let src = m.rank_of(w.stage + 1, w.group);
-                            let _g = ep.recv(src, pipeline::tag(step, micro, pipeline::TAG_BWD));
-                            rec.cut(&format!("recv bwd {micro}"), "bubble");
-                        }
-                        let tokens = w.micro_tokens(&corpus, seed, step, micro);
-                        let mut inputs: Vec<Tensor> = state[..n_params].to_vec();
-                        inputs.push(tokens);
-                        let mut gout = grad.execute(&inputs)?;
-                        let aux = gout.pop().context("aux")?.scalar_value()?;
-                        let ce = gout.pop().context("ce")?.scalar_value()?;
-                        // Self-check: the distributed forward and the
-                        // fused entry saw the same microbatch — their
-                        // losses must agree.
-                        let dist = fwd[micro].as_ref().context("backward before forward")?;
-                        if (ce - dist.dist_ce).abs() > 1e-3 * ce.abs().max(1e-3) {
-                            bail!(
-                                "rank {rank} step {step} micro {micro}: distributed fwd ce \
-                                 {:.6} != entry ce {ce:.6}",
-                                dist.dist_ce
-                            );
-                        }
-                        ce_sum += ce;
-                        aux_sum += aux;
-                        for (acc, gt) in grads_acc.iter_mut().zip(&gout) {
-                            for (a, &v) in acc.iter_mut().zip(gt.as_f32()?) {
-                                *a += v as f64;
+                    let attempt = {
+                        let mut go = || -> Result<Option<StepLog>, StepErr> {
+                            let act = w.fabric_ranks();
+                            let step_t0 = rec.now();
+                            let bytes0 = ep.bytes_sent;
+                            rec.mark(&format!("step {step}"), "step");
+                            let params = host::HostParams::from_tensors(&state[..n_params])?;
+                            let mut grads_acc = host::zero_grads(&cfg);
+                            let mut fwd: Vec<Option<MicroFwd>> =
+                                (0..m.n_micro).map(|_| None).collect();
+                            let (mut ce_sum, mut aux_sum) = (0.0, 0.0);
+
+                            for action in &sched {
+                                let micro = action.micro();
+                                if let Some(f) = fire_worker_fault(&mut local_faults, step, action)
+                                {
+                                    match f.kind {
+                                        FaultKind::Crash => {
+                                            *local_injected
+                                                .entry("crash".to_string())
+                                                .or_insert(0) += 1;
+                                            rec.mark(
+                                                &format!(
+                                                    "inject crash rank {rank} step {step} at {}",
+                                                    action.label()
+                                                ),
+                                                "chaos",
+                                            );
+                                            // fail-stop: abandon the run;
+                                            // the dropped channel is the
+                                            // peers' death certificate.
+                                            return Ok(None);
+                                        }
+                                        FaultKind::Hang => {
+                                            *local_injected
+                                                .entry("hang".to_string())
+                                                .or_insert(0) += 1;
+                                            rec.mark(
+                                                &format!(
+                                                    "inject hang rank {rank} step {step} at {}",
+                                                    action.label()
+                                                ),
+                                                "chaos",
+                                            );
+                                            std::thread::sleep(Duration::from_millis(HANG_MS));
+                                            return Err(StepErr::Other(anyhow!(
+                                                "rank {rank} hung at step {step} \
+                                                 (unsupervised fault)"
+                                            )));
+                                        }
+                                        FaultKind::Stall => {
+                                            *local_injected
+                                                .entry("stall".to_string())
+                                                .or_insert(0) += 1;
+                                            rec.mark(
+                                                &format!(
+                                                    "inject stall rank {rank} step {step} \
+                                                     +{} ms",
+                                                    f.amount
+                                                ),
+                                                "chaos",
+                                            );
+                                            std::thread::sleep(Duration::from_millis(f.amount));
+                                            rec.cut("stall", "chaos");
+                                        }
+                                        _ => {}
+                                    }
+                                }
+                                match action {
+                                    Action::Forward(_) => {
+                                        let tokens = w.micro_tokens(&corpus, seed, step, micro);
+                                        fwd[micro] = Some(w.forward(
+                                            &mut ep, &mut rec, &params, &tokens, step, micro,
+                                        )?);
+                                    }
+                                    Action::Backward(_) => {
+                                        if w.stage + 1 < m.pp {
+                                            let src = m.rank_of(w.stage + 1, w.group);
+                                            let _g = ep.recv(
+                                                src,
+                                                pipeline::tag(step, micro, pipeline::TAG_BWD),
+                                            )?;
+                                            rec.cut(&format!("recv bwd {micro}"), "bubble");
+                                        }
+                                        let tokens = w.micro_tokens(&corpus, seed, step, micro);
+                                        let mut inputs: Vec<Tensor> = state[..n_params].to_vec();
+                                        inputs.push(tokens);
+                                        let mut gout = grad.execute(&inputs)?;
+                                        let aux = gout.pop().context("aux")?.scalar_value()?;
+                                        let ce = gout.pop().context("ce")?.scalar_value()?;
+                                        // Self-check: the distributed
+                                        // forward and the fused entry saw
+                                        // the same microbatch — their
+                                        // losses must agree.
+                                        let dist = fwd[micro]
+                                            .as_ref()
+                                            .context("backward before forward")?;
+                                        if (ce - dist.dist_ce).abs() > 1e-3 * ce.abs().max(1e-3) {
+                                            return Err(StepErr::Other(anyhow!(
+                                                "rank {rank} step {step} micro {micro}: \
+                                                 distributed fwd ce {:.6} != entry ce {ce:.6}",
+                                                dist.dist_ce
+                                            )));
+                                        }
+                                        ce_sum += ce;
+                                        aux_sum += aux;
+                                        for (acc, gt) in grads_acc.iter_mut().zip(&gout) {
+                                            for (a, &v) in acc.iter_mut().zip(gt.as_f32()?) {
+                                                *a += v as f64;
+                                            }
+                                        }
+                                        rec.cut_args(
+                                            &format!("bwd {micro}"),
+                                            "compute",
+                                            &[("ce", ce)],
+                                        );
+                                        if w.stage > 0 {
+                                            let dst = m.rank_of(w.stage - 1, w.group);
+                                            let proxy =
+                                                vec![0.0f32; cfg.predictions() * cfg.d_model];
+                                            ep.send(
+                                                dst,
+                                                pipeline::tag(step, micro, pipeline::TAG_BWD),
+                                                proxy,
+                                            )?;
+                                            rec.cut(&format!("send bwd {micro}"), "pp");
+                                        }
+                                    }
+                                }
                             }
+
+                            // Average over microbatches, all-reduce over
+                            // the active fabric (stages hold duplicate
+                            // grads; /act.len() yields the mean over the
+                            // surviving dp data shards), identical Adam
+                            // update everywhere.
+                            let mut grad_tensors: Vec<Tensor> = grads_acc
+                                .iter()
+                                .zip(cfg.param_shapes())
+                                .map(|(buf, (_, shape))| {
+                                    let data = buf
+                                        .iter()
+                                        .map(|&v| (v / m.n_micro as f64) as f32)
+                                        .collect();
+                                    Tensor::F32(data, shape)
+                                })
+                                .collect();
+                            for (gi, gt) in grad_tensors.iter_mut().enumerate() {
+                                let data = gt.as_f32_mut()?;
+                                ep.all_reduce_sum_group(
+                                    &act,
+                                    data,
+                                    pipeline::tag(step, gi, pipeline::TAG_GRADS),
+                                )?;
+                                for v in data.iter_mut() {
+                                    *v /= act.len() as f32;
+                                }
+                            }
+                            rec.cut("grad all-reduce", "dp");
+                            let mut inputs = state.clone();
+                            inputs.extend(grad_tensors);
+                            state = apply.execute(&inputs)?;
+                            rec.cut("apply", "compute");
+
+                            let nm = m.n_micro as f64;
+                            let mut stats = vec![(ce_sum / nm) as f32, (aux_sum / nm) as f32];
+                            ep.all_reduce_sum_group(
+                                &act,
+                                &mut stats,
+                                pipeline::tag(step, n_params, pipeline::TAG_STATS),
+                            )?;
+                            rec.cut("stats all-reduce", "dp");
+                            rec.counter("bytes sent", ep.bytes_sent as f64);
+
+                            Ok(Some(StepLog {
+                                step,
+                                ce_loss: (stats[0] / act.len() as f32) as f64,
+                                aux_loss: (stats[1] / act.len() as f32) as f64,
+                                wall_secs: rec.now() - step_t0,
+                                comm_bytes: ep.bytes_sent - bytes0,
+                            }))
+                        };
+                        go()
+                    };
+                    for mk in ep.take_chaos_marks() {
+                        rec.mark(&mk, "chaos");
+                    }
+                    match attempt {
+                        Ok(Some(log)) => {
+                            if w.active_groups.len() < m.dp {
+                                degraded_steps += 1;
+                            }
+                            if verbose && rank == 0 && (step < 5 || step % 10 == 0) {
+                                eprintln!(
+                                    "[run pp{} dp{} mb{}] step {:>4}  ce {:.4}  aux {:.4}  \
+                                     ({:.3}s, {} kB comm)",
+                                    m.pp,
+                                    m.dp,
+                                    m.n_micro,
+                                    step,
+                                    log.ce_loss,
+                                    log.aux_loss,
+                                    log.wall_secs,
+                                    log.comm_bytes / 1000
+                                );
+                            }
+                            logs.push(log);
+                            step += 1;
                         }
-                        rec.cut_args(&format!("bwd {micro}"), "compute", &[("ce", ce)]);
-                        if w.stage > 0 {
-                            let dst = m.rank_of(w.stage - 1, w.group);
-                            let proxy = vec![0.0f32; cfg.predictions() * cfg.d_model];
-                            ep.send(dst, pipeline::tag(step, micro, pipeline::TAG_BWD), proxy);
-                            rec.cut(&format!("send bwd {micro}"), "pp");
+                        Ok(None) => {
+                            crashed = true;
+                            break;
+                        }
+                        Err(StepErr::Comm(CommError::Failover { dead })) => {
+                            if !dead_seen.contains(&dead) {
+                                dead_seen.push(dead);
+                            }
+                            let dead_group = m.group_of(dead);
+                            if dead_group == w.group {
+                                // My own replica lost a stage: the whole
+                                // group retires and parks until the
+                                // survivors' end-of-run shutdown.
+                                rec.mark(
+                                    &format!(
+                                        "retire rank {rank}: DP group {dead_group} leaves \
+                                         with dead rank {dead}"
+                                    ),
+                                    "chaos",
+                                );
+                                rec.cut("failover retire", "chaos");
+                                retired = true;
+                                break;
+                            }
+                            if !w.active_groups.contains(&dead_group) {
+                                return Err(anyhow!(
+                                    "rank {dead}: duplicate failover for already-retired \
+                                     group {dead_group}"
+                                ));
+                            }
+                            let fs = failstop.ok_or_else(|| {
+                                anyhow!("rank {dead} died without a planned fail-stop fault")
+                            })?;
+                            ep.complete_failover(dead);
+                            w.retire_group(dead_group);
+                            // Plan-derived rewind target: survivors can
+                            // observe the death one step apart, so the
+                            // checkpoint is chosen from the planned crash
+                            // step, not from local progress.
+                            let c_star = ckpt_every * (fs.step.saturating_sub(1) / ckpt_every);
+                            let snap = snaps.get(&c_star).ok_or_else(|| {
+                                anyhow!("no snapshot at rewind target step {c_star}")
+                            })?;
+                            state = snap.clone();
+                            logs.truncate(c_star);
+                            step = c_star;
+                            rewinds += 1;
+                            steps_rolled_back += fs.step - c_star;
+                            rec.mark(
+                                &format!(
+                                    "rewind to step {c_star} after rank {dead} died \
+                                     (dp {} -> {})",
+                                    m.dp,
+                                    w.active_groups.len()
+                                ),
+                                "chaos",
+                            );
+                            rec.cut("failover recovery", "chaos");
+                        }
+                        Err(StepErr::Comm(e)) => {
+                            return Err(anyhow!(
+                                "rank {rank} step {step}: unrecoverable comm failure: {e}"
+                            ));
+                        }
+                        Err(StepErr::Other(e)) => return Err(e),
+                    }
+                }
+
+                let (ep_injected, corruptions, repairs) = ep.chaos_counters();
+                let mut injected = local_injected;
+                for (k, v) in ep_injected {
+                    *injected.entry(k).or_insert(0) += v;
+                }
+                for mk in ep.take_chaos_marks() {
+                    rec.mark(&mk, "chaos");
+                }
+                Ok(WorkerOut {
+                    logs,
+                    rec: rec.finish(),
+                    crashed,
+                    retired,
+                    active: w.active_groups.clone(),
+                    rewinds,
+                    steps_rolled_back,
+                    degraded_steps,
+                    dead_seen,
+                    injected,
+                    corruptions,
+                    repairs,
+                })
+            };
+            body()
+        };
+        // Channel hygiene so the join is deadlock-free: retired ranks
+        // park with their mailbox open; every other exit path releases
+        // them (a crashed rank's closed channel is itself the signal).
+        match &out {
+            Ok(wo) if wo.retired => ep.park_until_shutdown(),
+            Ok(wo) if wo.crashed => {}
+            Ok(wo) => {
+                if chaos_on {
+                    let act: Vec<usize> = (0..m.pp)
+                        .flat_map(|s| wo.active.iter().map(move |&g| m.rank_of(s, g)))
+                        .collect();
+                    for r in 0..n_ranks {
+                        if r != rank && !act.contains(&r) {
+                            ep.send_shutdown(r);
                         }
                     }
                 }
             }
-
-            // Average over microbatches, all-reduce over the full fabric
-            // (stages hold duplicate grads; /n_ranks yields the mean over
-            // the dp data shards), identical Adam update everywhere.
-            let mut grad_tensors: Vec<Tensor> = grads_acc
-                .iter()
-                .zip(cfg.param_shapes())
-                .map(|(buf, (_, shape))| {
-                    let data = buf.iter().map(|&v| (v / m.n_micro as f64) as f32).collect();
-                    Tensor::F32(data, shape)
-                })
-                .collect();
-            for (gi, gt) in grad_tensors.iter_mut().enumerate() {
-                let data = gt.as_f32_mut()?;
-                ep.all_reduce_sum(data, pipeline::tag(step, gi, pipeline::TAG_GRADS));
-                for v in data.iter_mut() {
-                    *v /= n_ranks as f32;
+            Err(_) => {
+                if chaos_on {
+                    // best-effort: never leave a parked rank waiting on a
+                    // shutdown that will not come
+                    for r in 0..n_ranks {
+                        if r != rank {
+                            ep.send_shutdown(r);
+                        }
+                    }
                 }
             }
-            rec.cut("grad all-reduce", "dp");
-            let mut inputs = state.clone();
-            inputs.extend(grad_tensors);
-            state = apply.execute(&inputs)?;
-            rec.cut("apply", "compute");
-
-            let nm = m.n_micro as f64;
-            let mut stats = vec![(ce_sum / nm) as f32, (aux_sum / nm) as f32];
-            ep.all_reduce_sum(&mut stats, pipeline::tag(step, n_params, pipeline::TAG_STATS));
-            rec.cut("stats all-reduce", "dp");
-            rec.counter("bytes sent", ep.bytes_sent as f64);
-
-            let log = StepLog {
-                step,
-                ce_loss: (stats[0] / n_ranks as f32) as f64,
-                aux_loss: (stats[1] / n_ranks as f32) as f64,
-                wall_secs: rec.now() - step_t0,
-                comm_bytes: ep.bytes_sent - bytes0,
-            };
-            if verbose && rank == 0 && (step < 5 || step % 10 == 0) {
-                eprintln!(
-                    "[run pp{} dp{} mb{}] step {:>4}  ce {:.4}  aux {:.4}  ({:.3}s, {} kB comm)",
-                    m.pp,
-                    m.dp,
-                    m.n_micro,
-                    step,
-                    log.ce_loss,
-                    log.aux_loss,
-                    log.wall_secs,
-                    log.comm_bytes / 1000
-                );
-            }
-            logs.push(log);
         }
-        Ok((logs, rec.finish()))
+        out
     });
 
-    let mut per_rank: Vec<Vec<StepLog>> = Vec::with_capacity(n_ranks);
-    let mut recordings: Vec<Recording> = Vec::with_capacity(n_ranks);
+    let mut outs: Vec<WorkerOut> = Vec::with_capacity(n_ranks);
     for r in results {
-        let (logs, rec) = r?;
-        per_rank.push(logs);
-        recordings.push(rec);
+        outs.push(r?);
     }
-    // Every rank all-reduced the same stats: trajectories must agree.
-    for r in 1..per_rank.len() {
-        for (a, b) in per_rank[0].iter().zip(&per_rank[r]) {
+    let eligible: Vec<usize> =
+        (0..n_ranks).filter(|&r| !outs[r].crashed && !outs[r].retired).collect();
+    let designated = *eligible.first().context("no surviving rank completed the run")?;
+    if outs[designated].logs.len() != steps {
+        bail!("run committed {} of {steps} step(s)", outs[designated].logs.len());
+    }
+    // Every surviving rank all-reduced the same stats: trajectories must
+    // agree (crashed/retired ranks hold truncated histories and are
+    // exempt).
+    for &r in eligible.iter().skip(1) {
+        for (a, b) in outs[designated].logs.iter().zip(&outs[r].logs) {
             if (a.ce_loss - b.ce_loss).abs() > 1e-4 * a.ce_loss.abs().max(1.0) {
                 bail!("rank {r} diverged at step {}: {} vs {}", a.step, a.ce_loss, b.ce_loss);
             }
         }
     }
+
+    let chaos = plan.map(|p| {
+        let d = &outs[designated];
+        let mut injected: BTreeMap<String, usize> = BTreeMap::new();
+        let mut corruptions = 0usize;
+        let mut repairs = 0usize;
+        let mut dead: Vec<usize> = Vec::new();
+        for o in &outs {
+            for (k, v) in &o.injected {
+                *injected.entry(k.clone()).or_insert(0) += *v;
+            }
+            corruptions += o.corruptions;
+            repairs += o.repairs;
+            for &dr in &o.dead_seen {
+                if !dead.contains(&dr) {
+                    dead.push(dr);
+                }
+            }
+        }
+        dead.sort_unstable();
+        ChaosReport {
+            seed: p.seed,
+            plan_digest: p.digest(),
+            ckpt_every: p.ckpt_every,
+            injected,
+            corruptions_detected: corruptions,
+            repairs_served: repairs,
+            dead_ranks: dead,
+            rewinds: d.rewinds,
+            steps_rolled_back: d.steps_rolled_back,
+            degraded_steps: d.degraded_steps,
+            committed_steps: d.logs.len(),
+            final_dp: d.active.len(),
+        }
+    });
+
+    let recordings: Vec<Recording> = outs.iter().map(|o| o.rec.clone()).collect();
     let total_secs = recordings.iter().map(|r| r.end_s).fold(0.0, f64::max);
     Ok(RunOutcome {
         report: TrainReport {
             mode: format!("mapped pp{} dp{} mb{}", m.pp, m.dp, m.n_micro),
-            steps: per_rank.swap_remove(0),
+            steps: outs[designated].logs.clone(),
             total_secs,
         },
         recordings,
+        chaos,
     })
 }
 
@@ -501,6 +975,7 @@ mod tests {
             out.report.first_loss(),
             out.report.last_loss()
         );
+        assert!(out.chaos.is_none());
         assert_eq!(out.recordings.len(), 4);
         for rec in &out.recordings {
             // spans tile [0, end] exactly (partition by construction)
@@ -549,5 +1024,54 @@ mod tests {
         assert!(run_mapped(&engine, &art, bad_dp, 1, 0, false).is_err());
         let zero = MiniMapping { pp: 0, dp: 1, n_micro: 1 };
         assert!(run_mapped(&engine, &art, zero, 1, 0, false).is_err());
+    }
+
+    #[test]
+    fn retirement_shrinks_group_and_router() {
+        let m = MiniMapping { pp: 2, dp: 2, n_micro: 1 };
+        let cfg = HostCfg {
+            vocab: 17,
+            d_model: 8,
+            d_ff: 16,
+            n_experts: 8,
+            top_k: 2,
+            batch: 1,
+            seq_len: 4,
+        };
+        let mut w = Worker {
+            cfg,
+            m,
+            stage: 1,
+            group: 0,
+            active_groups: vec![0, 1],
+            ep_group: m.ep_group(2),
+            router: make_router(&cfg, m, &[0, 1]),
+        };
+        assert_eq!(w.ep_group, vec![2, 3]);
+        assert_eq!(w.fabric_ranks(), vec![0, 1, 2, 3]);
+        w.retire_group(1);
+        assert_eq!(w.active_groups, vec![0]);
+        assert_eq!(w.ep_group, vec![2]);
+        assert_eq!(w.fabric_ranks(), vec![0, 2]);
+    }
+
+    #[test]
+    fn out_of_grid_plans_are_rejected() {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let m = MiniMapping { pp: 1, dp: 2, n_micro: 1 };
+        let plan = FaultPlan {
+            seed: 1,
+            ckpt_every: 2,
+            faults: vec![PlannedFault {
+                rank: 9,
+                step: 0,
+                micro: 0,
+                purpose: pipeline::TAG_FWD,
+                kind: FaultKind::Stall,
+                amount: 5,
+            }],
+        };
+        assert!(run_mapped_chaos(&engine, &art, m, 2, 0, false, Some(&plan)).is_err());
     }
 }

@@ -31,7 +31,7 @@ pub mod corpus;
 pub mod mapped;
 
 pub use corpus::Corpus;
-pub use mapped::{run_mapped, MiniMapping, RunOutcome};
+pub use mapped::{run_mapped, run_mapped_chaos, MiniMapping, RunOutcome};
 
 /// One logged training step.
 #[derive(Debug, Clone)]
@@ -232,7 +232,7 @@ pub fn train_dp(
             let nw = ep.n_ranks as f32;
             for (gi, gt) in gout.iter_mut().enumerate() {
                 let data = gt.as_f32_mut()?;
-                ep.all_reduce_sum(data, (step as u64) << 20 | (gi as u64) << 4);
+                ep.all_reduce_sum(data, (step as u64) << 20 | (gi as u64) << 4)?;
                 for v in data.iter_mut() {
                     *v /= nw;
                 }
@@ -245,7 +245,7 @@ pub fn train_dp(
 
             // mean losses across workers (tiny all-reduce)
             let mut stats = vec![ce as f32, aux as f32];
-            ep.all_reduce_sum(&mut stats, (step as u64) << 20 | 0xFFF0);
+            ep.all_reduce_sum(&mut stats, (step as u64) << 20 | 0xFFF0)?;
             let log = StepLog {
                 step,
                 ce_loss: (stats[0] / nw) as f64,

@@ -1,0 +1,164 @@
+//! Chaos-harness contract tests (ISSUE 10): fault plans are pure
+//! functions of their seed; a supervised run with an empty plan is
+//! bit-identical to the unsupervised driver; transient (rewind-free)
+//! faults are absorbed without changing the training trajectory; and a
+//! crash recovery terminates, lands inside the resilience model's
+//! calibrated band, and reproduces byte-for-byte on rerun.
+
+use lumos::chaos::{modeled_recovery, ChaosSpec, FaultPlan};
+use lumos::runtime::{Artifact, Engine};
+use lumos::trainer::{run_mapped, run_mapped_chaos, MiniMapping, RunOutcome};
+
+fn chaotic(steps: usize, seed: u64, plan: Option<&FaultPlan>) -> RunOutcome {
+    let engine = Engine::host();
+    let art = Artifact::host_miniature();
+    let m = MiniMapping { pp: 2, dp: 2, n_micro: 2 };
+    run_mapped_chaos(&engine, &art, m, steps, seed, false, plan).expect("chaos run")
+}
+
+#[test]
+fn same_seed_same_plan_and_digest() {
+    let spec = ChaosSpec::parse("crash=1,drop=1,stall=1,corrupt=1,degrade=1").unwrap();
+    for seed in [0u64, 7, 42, 0xDEAD_BEEF] {
+        let a = FaultPlan::generate(&spec, seed, 2, 2, 2, 8, 2).unwrap();
+        let b = FaultPlan::generate(&spec, seed, 2, 2, 2, 8, 2).unwrap();
+        assert_eq!(a, b, "seed {seed}: plan not a pure function of its inputs");
+        assert_eq!(a.digest(), b.digest());
+    }
+    let a = FaultPlan::generate(&spec, 7, 2, 2, 2, 8, 2).unwrap();
+    let c = FaultPlan::generate(&spec, 8, 2, 2, 2, 8, 2).unwrap();
+    assert_ne!(a.digest(), c.digest(), "digest blind to the seed");
+    // Dropping one kind from the spec must not reshuffle the others'
+    // coordinates (per-kind forked rng streams).
+    let partial = ChaosSpec::parse("crash=1,stall=1").unwrap();
+    let p = FaultPlan::generate(&partial, 7, 2, 2, 2, 8, 2).unwrap();
+    for f in &p.faults {
+        assert!(a.faults.contains(f), "removing kinds moved {f:?}");
+    }
+}
+
+#[test]
+fn supervised_empty_plan_run_is_bit_identical_to_plain() {
+    let spec = ChaosSpec::parse("").unwrap();
+    assert!(spec.is_empty());
+    let plan = FaultPlan::generate(&spec, 7, 2, 2, 2, 3, 2).unwrap();
+    assert!(plan.is_empty());
+
+    let plain = {
+        let engine = Engine::host();
+        let art = Artifact::host_miniature();
+        let m = MiniMapping { pp: 2, dp: 2, n_micro: 2 };
+        run_mapped(&engine, &art, m, 3, 7, false).expect("plain run")
+    };
+    let supervised = chaotic(3, 7, Some(&plan));
+
+    // The training trajectory is bit-identical: supervision only changes
+    // the error path, never the data path or the bytes accounting.
+    assert_eq!(plain.report.steps.len(), supervised.report.steps.len());
+    for (a, b) in plain.report.steps.iter().zip(&supervised.report.steps) {
+        assert_eq!(a.ce_loss.to_bits(), b.ce_loss.to_bits(), "step {}", a.step);
+        assert_eq!(a.aux_loss.to_bits(), b.aux_loss.to_bits(), "step {}", a.step);
+        assert_eq!(a.comm_bytes, b.comm_bytes, "step {}", a.step);
+    }
+    // Same recorded structure: identical (name, cat) span sequences per
+    // rank (durations are wall-clock and may differ).
+    assert_eq!(plain.recordings.len(), supervised.recordings.len());
+    for (ra, rb) in plain.recordings.iter().zip(&supervised.recordings) {
+        assert_eq!(ra.rank, rb.rank);
+        let names = |r: &lumos::obs::Recording| {
+            r.spans.iter().map(|s| (s.name.clone(), s.cat.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(names(ra), names(rb), "rank {}", ra.rank);
+        assert!(rb.instants.iter().all(|(_, cat, _)| cat != "chaos"));
+    }
+    // A report is produced, and every chaos counter is zero.
+    assert!(plain.chaos.is_none());
+    let rep = supervised.chaos.expect("supervised run reports");
+    assert_eq!(rep.plan_digest, plan.digest());
+    assert!(rep.injected.is_empty());
+    assert_eq!(rep.corruptions_detected, 0);
+    assert_eq!(rep.repairs_served, 0);
+    assert!(rep.dead_ranks.is_empty());
+    assert_eq!((rep.rewinds, rep.steps_rolled_back, rep.degraded_steps), (0, 0, 0));
+    assert_eq!(rep.committed_steps, 3);
+    assert_eq!(rep.final_dp, 2);
+}
+
+#[test]
+fn rewind_free_faults_are_absorbed_without_changing_the_trajectory() {
+    let spec = ChaosSpec::parse("drop=1,corrupt=1,stall=1").unwrap();
+    let plan = FaultPlan::generate(&spec, 21, 2, 2, 2, 4, 2).unwrap();
+    assert_eq!(plan.faults.len(), 3);
+
+    let clean = chaotic(4, 21, None);
+    let faulted = chaotic(4, 21, Some(&plan));
+
+    // No fail-stop fault => no rewind, no retirement, and the recovered
+    // trajectory equals the fault-free one bit-for-bit.
+    for (a, b) in clean.report.steps.iter().zip(&faulted.report.steps) {
+        assert_eq!(a.ce_loss.to_bits(), b.ce_loss.to_bits(), "step {}", a.step);
+    }
+    let rep = faulted.chaos.expect("report");
+    assert_eq!(rep.injected.get("drop"), Some(&1));
+    assert_eq!(rep.injected.get("corrupt"), Some(&1));
+    assert_eq!(rep.injected.get("stall"), Some(&1));
+    assert_eq!(rep.corruptions_detected, 1, "checksum must catch the bit-flip");
+    let modeled = modeled_recovery(&plan, 4);
+    assert_eq!(rep.repairs_served, modeled.expected_repairs, "one repair per message fault");
+    assert!(rep.dead_ranks.is_empty());
+    assert_eq!((rep.rewinds, rep.steps_rolled_back, rep.degraded_steps), (0, 0, 0));
+    assert_eq!(rep.committed_steps, 4);
+    assert_eq!(rep.final_dp, 2);
+    // The faults leave their trail in the flight recorder's chaos track.
+    let marks: usize = faulted
+        .recordings
+        .iter()
+        .map(|r| r.instants.iter().filter(|(_, cat, _)| cat == "chaos").count())
+        .sum();
+    assert!(marks >= 3, "expected one chaos instant per fired fault, got {marks}");
+}
+
+#[test]
+fn crash_recovery_terminates_inside_the_modeled_band_and_reproduces() {
+    let spec = ChaosSpec::parse("crash=1,drop=1").unwrap();
+    let steps = 8;
+    let plan = FaultPlan::generate(&spec, 5, 2, 2, 2, steps, 2).unwrap();
+
+    let out = chaotic(steps, 5, Some(&plan));
+    // Termination with a full log: the survivors rewound and committed
+    // every step despite losing a DP replica.
+    assert_eq!(out.report.steps.len(), steps);
+    let rep = out.chaos.expect("report");
+    assert_eq!(rep.dead_ranks.len(), 1, "exactly the planned crash victim dies");
+    assert_eq!(rep.final_dp, 1);
+    assert_eq!(rep.rewinds, 1);
+    assert!(rep.steps_rolled_back >= 1 && rep.steps_rolled_back <= rep.ckpt_every);
+    assert_eq!(rep.committed_steps, steps);
+    assert!(rep.degraded_steps >= 1);
+
+    // Executed degraded-step ratio sits inside the resilience model's
+    // calibrated band (K / (2 * steps) per crash).
+    let modeled = modeled_recovery(&plan, steps);
+    let gap = (rep.degraded_ratio() - modeled.expected_degraded_ratio).abs();
+    assert!(
+        gap <= modeled.ratio_band,
+        "executed ratio {} vs modeled {} exceeds band {}",
+        rep.degraded_ratio(),
+        modeled.expected_degraded_ratio,
+        modeled.ratio_band
+    );
+    assert_eq!(rep.repairs_served, modeled.expected_repairs);
+
+    // Reproducibility: the recovery report is a pure function of the
+    // plan — a rerun (any thread interleaving) is byte-identical.
+    let again = chaotic(steps, 5, Some(&plan)).chaos.expect("report");
+    assert_eq!(rep, again);
+    assert_eq!(
+        rep.to_json().to_string_compact(),
+        again.to_json().to_string_compact(),
+        "recovery report must serialize byte-identically across reruns"
+    );
+    for (a, b) in out.report.steps.iter().zip(chaotic(steps, 5, Some(&plan)).report.steps.iter()) {
+        assert_eq!(a.ce_loss.to_bits(), b.ce_loss.to_bits(), "step {}", a.step);
+    }
+}

@@ -100,6 +100,7 @@ fn router_feeds_all_to_all_consistently() {
             experts_per_rank: 2,
             capacity: 64,
             max_devices_per_token: None,
+            remap: None,
         };
         let router = Router::new(cfg);
         let mut rng = Rng::new(100 + ep.rank as u64);
@@ -110,11 +111,11 @@ fn router_feeds_all_to_all_consistently() {
             .collect();
         let packed = router.pack_a2a(&routed, &feats);
         let sent_to: Vec<usize> = packed.iter().map(|p| p.len() / d).collect();
-        let received = ep.all_to_all(packed, 0);
+        let received = ep.all_to_all(packed, 0).unwrap();
         let recv_from: Vec<usize> = received.iter().map(|p| p.len() / d).collect();
         // publish counts so rank 0 can cross-check the transpose
         let flat: Vec<f32> = sent_to.iter().chain(recv_from.iter()).map(|&x| x as f32).collect();
-        ep.all_gather(&flat, 1)
+        ep.all_gather(&flat, 1).unwrap()
     });
     // results[0] = [rank0: sent[4] ++ recv[4], rank1: ...]
     let table = &results[0];
@@ -145,21 +146,21 @@ fn pipeline_schedule_composes_with_workers() {
                     let x = if stage == 0 {
                         vec![i as f32]
                     } else {
-                        ep.recv(stage - 1, 10 + i as u64)
+                        ep.recv(stage - 1, 10 + i as u64).unwrap()
                     };
                     seen.push(x[0] as usize);
                     if stage + 1 < pp {
-                        ep.send(stage + 1, 10 + i as u64, x);
+                        ep.send(stage + 1, 10 + i as u64, x).unwrap();
                     }
                 }
                 Action::Backward(i) => {
                     let g = if stage == pp - 1 {
                         vec![i as f32]
                     } else {
-                        ep.recv(stage + 1, 1000 + i as u64)
+                        ep.recv(stage + 1, 1000 + i as u64).unwrap()
                     };
                     if stage > 0 {
-                        ep.send(stage - 1, 1000 + i as u64, g);
+                        ep.send(stage - 1, 1000 + i as u64, g).unwrap();
                     }
                 }
             }
